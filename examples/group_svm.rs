@@ -1,0 +1,58 @@
+//! Group-SVM (Problem 3): column generation on groups with a block-CD
+//! first-order initializer — the Figure 4 winning method in miniature.
+//!
+//!     cargo run --release --example group_svm
+
+use cutgen::backend::NativeBackend;
+use cutgen::coordinator::group::{group_column_generation, initial_groups};
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_group, GroupSpec};
+use cutgen::fom::block_cd::{block_cd, BlockCdParams};
+use cutgen::rng::Xoshiro256;
+
+fn main() {
+    let spec = GroupSpec {
+        n: 100,
+        n_groups: 500,
+        group_size: 10,
+        k0_groups: 3,
+        rho: 0.1,
+        standardize: true,
+    };
+    let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(23));
+    let ds = &gd.data;
+    let lambda = 0.1 * ds.lambda_max_group(&gd.groups);
+    println!(
+        "Group-SVM: n={}, p={} ({} groups of 10), λ = 0.1·λ_max",
+        ds.n(),
+        ds.p(),
+        gd.groups.len()
+    );
+
+    // block-CD warm start → which groups look active?
+    let t0 = std::time::Instant::now();
+    let cd = block_cd(&ds.x, &ds.y, &gd.groups, lambda, &BlockCdParams::default(), None);
+    let active: Vec<usize> = (0..gd.groups.len())
+        .filter(|&g| gd.groups[g].iter().any(|&j| cd.beta[j].abs() > 1e-6))
+        .collect();
+    println!("block CD: {} sweeps, {} candidate groups, {:.3}s", cd.sweeps, active.len(),
+        t0.elapsed().as_secs_f64());
+
+    let init = if active.is_empty() { initial_groups(ds, &gd.groups, 5) } else { active };
+    let backend = NativeBackend::new(&ds.x);
+    let t1 = std::time::Instant::now();
+    let sol = group_column_generation(ds, &backend, &gd.groups, lambda, &init, &GenParams::default());
+    println!(
+        "column generation: objective {:.4}, {} active groups of {}, {:.3}s",
+        sol.objective,
+        sol.cols.len(),
+        gd.groups.len(),
+        t1.elapsed().as_secs_f64()
+    );
+    let informative_found = sol
+        .cols
+        .iter()
+        .filter(|&&g| g < 3)
+        .count();
+    println!("informative groups recovered: {informative_found}/3");
+}

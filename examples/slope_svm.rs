@@ -1,0 +1,52 @@
+//! Slope-SVM (Problem 4) with distinct BH-style weights — the case where
+//! generic solvers crash (the epigraph needs p! cuts) but Algorithm 7
+//! needs only a handful.
+//!
+//!     cargo run --release --example slope_svm
+
+use cutgen::backend::NativeBackend;
+use cutgen::coordinator::slope::slope_column_constraint_generation;
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_l1, SyntheticSpec};
+use cutgen::fom::objective::bh_slope_weights;
+use cutgen::rng::Xoshiro256;
+
+fn main() {
+    let ds = generate_l1(
+        &SyntheticSpec::paper_default(100, 20_000),
+        &mut Xoshiro256::seed_from_u64(31),
+    );
+    let lambda_tilde = 0.01 * ds.lambda_max_l1();
+    let lambda = bh_slope_weights(ds.p(), lambda_tilde);
+    println!(
+        "Slope-SVM: n={}, p={}, λ_j = sqrt(log(2p/j))·{lambda_tilde:.4} (all distinct)",
+        ds.n(),
+        ds.p()
+    );
+    println!("(the A.2 LP reformulation of this problem needs {} rows — hopeless;",
+        ds.n() + ds.p() * ds.p());
+    println!(" the epigraph has p! ≈ 10^77k permutation cuts)");
+
+    let backend = NativeBackend::new(&ds.x);
+    let (init, t_init) = cutgen::exps::common::fo_slope_init(&ds, &lambda, 100);
+    let t0 = std::time::Instant::now();
+    let sol = slope_column_constraint_generation(
+        &ds,
+        &backend,
+        &lambda,
+        &init,
+        &GenParams { eps: 1e-2, max_cols_per_round: 10, ..Default::default() },
+    );
+    println!(
+        "solved in {:.2}s (+{t_init:.2}s FO init): objective {:.4}",
+        t0.elapsed().as_secs_f64(),
+        sol.objective
+    );
+    println!(
+        "  {} nonzeros, working set {} columns, {} permutation cuts, {} rounds",
+        sol.support_size(),
+        sol.cols.len(),
+        sol.stats.rows_added,
+        sol.stats.rounds
+    );
+}

@@ -1,0 +1,96 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits (tile shape TN x TP, f32):
+
+    xtv.hlo.txt          (x[TN,TP], v[TN])            -> (q[TP],)
+    xb.hlo.txt           (x[TN,TP], beta[TP])         -> (m[TN],)
+    hinge_terms.hlo.txt  (z[TN], y[TN], tau[1])       -> (v[TN], f[TN])
+    hinge_grad.hlo.txt   (x, y, beta, beta0[1], tau[1])
+                         -> (value[], grad_beta[TP], grad_b0[])
+    meta.json            tile shape + artifact manifest
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hinge_terms, xb, xtv
+
+# Default artifact tile: 512 x 2048 f32 = 4 MiB resident slab.
+TN = 512
+TP = 2048
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(tn: int = TN, tp: int = TP):
+    """Lower every artifact; returns {name: hlo_text}."""
+    out = {}
+    out["xtv"] = to_hlo_text(
+        jax.jit(lambda x, v: (xtv(x, v),)).lower(_spec((tn, tp)), _spec((tn,)))
+    )
+    out["xb"] = to_hlo_text(
+        jax.jit(lambda x, b: (xb(x, b),)).lower(_spec((tn, tp)), _spec((tp,)))
+    )
+    out["hinge_terms"] = to_hlo_text(
+        jax.jit(lambda z, y, tau: hinge_terms(z, y, tau)).lower(
+            _spec((tn,)), _spec((tn,)), _spec((1,))
+        )
+    )
+    out["hinge_grad"] = to_hlo_text(
+        jax.jit(model.hinge_value_grad).lower(
+            _spec((tn, tp)), _spec((tn,)), _spec((tp,)), _spec((1,)), _spec((1,))
+        )
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tn", type=int, default=TN)
+    ap.add_argument("--tp", type=int, default=TP)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = lower_all(args.tn, args.tp)
+    manifest = {"tn": args.tn, "tp": args.tp, "artifacts": {}}
+    for name, text in arts.items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = fname
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

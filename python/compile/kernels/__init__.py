@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels (build-time only; AOT-lowered to HLO text).
+
+The cutting-plane hot spots are two matvecs against the design matrix and
+one fused elementwise pass for the Nesterov-smoothed hinge:
+
+* ``xtv``   — Xᵀv  (pricing / reduced costs, gradient accumulation)
+* ``xb``    — Xβ   (margins)
+* ``hinge_terms`` — smoothed-hinge weights + per-sample values
+
+All kernels run in ``interpret=True`` mode so the lowered HLO executes on
+the CPU PJRT client that the Rust runtime drives (real-TPU Mosaic
+custom-calls are not loadable there; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .matvec import xb, xtv, hinge_terms  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Pallas tile kernels for the cutting-plane hot paths.
+
+TPU-style structure even though correctness runs under ``interpret=True``
+on CPU: block shapes are multiples of 128 (MXU/VPU lanes), each grid step
+streams one X block HBM->VMEM and reduces it against a resident vector.
+The default artifact tile is ``(TN, TP) = (512, 2048)`` f32 = 4 MiB, well
+inside a TPU core's ~16 MiB VMEM with room for double buffering.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes inside one artifact tile (lane-aligned).
+BLOCK_P = 256
+BLOCK_N = 128
+
+
+def _xtv_kernel(v_ref, x_ref, o_ref):
+    """One output block of q = X^T v: o[bp] = v . X[:, block]."""
+    o_ref[...] = jnp.dot(
+        v_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def xtv(x: jax.Array, v: jax.Array) -> jax.Array:
+    """``X^T v`` for one resident tile ``x`` of shape (TN, TP).
+
+    Grid over column blocks: each program loads an (TN, BLOCK_P) slab of X
+    into VMEM and contracts it against the resident v (TN,).
+    """
+    tn, tp = x.shape
+    assert v.shape == (tn,)
+    assert tp % BLOCK_P == 0, f"tile width {tp} must be a multiple of {BLOCK_P}"
+    grid = (tp // BLOCK_P,)
+    return pl.pallas_call(
+        _xtv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda j: (0,)),
+            pl.BlockSpec((tn, BLOCK_P), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_P,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((tp,), jnp.float32),
+        interpret=True,
+    )(v, x)
+
+
+def _xb_kernel(b_ref, x_ref, o_ref):
+    """One output block of m = X b: o[bn] = X[block, :] . b."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def xb(x: jax.Array, beta: jax.Array) -> jax.Array:
+    """``X beta`` for one resident tile ``x`` of shape (TN, TP)."""
+    tn, tp = x.shape
+    assert beta.shape == (tp,)
+    assert tn % BLOCK_N == 0, f"tile height {tn} must be a multiple of {BLOCK_N}"
+    grid = (tn // BLOCK_N,)
+    return pl.pallas_call(
+        _xb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_N, tp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tn,), jnp.float32),
+        interpret=True,
+    )(beta, x)
+
+
+def _hinge_kernel(z_ref, y_ref, tau_ref, v_ref, f_ref):
+    """Fused smoothed-hinge elementwise pass.
+
+    Given margins z = 1 - y(x^T beta + beta0):
+      w  = clip(z / 2tau, -1, 1)
+      v  = y (1 + w) / 2                (the X^T v gradient weights)
+      f  = z (1 + w)/2 - tau w^2 / 2    (per-sample smoothed loss)
+    """
+    z = z_ref[...]
+    y = y_ref[...]
+    tau = tau_ref[0]
+    w = jnp.clip(z / (2.0 * tau), -1.0, 1.0)
+    v_ref[...] = 0.5 * y * (1.0 + w)
+    f_ref[...] = 0.5 * z * (1.0 + w) - 0.5 * tau * w * w
+
+
+def hinge_terms(z: jax.Array, y: jax.Array, tau: jax.Array):
+    """Smoothed-hinge weights and per-sample values for one tile.
+
+    ``tau`` is a shape-(1,) f32 array so the same artifact serves every
+    smoothing level. Returns ``(v, f)`` with the caller summing ``f`` and
+    feeding ``v`` into :func:`xtv`.
+    """
+    (tn,) = z.shape
+    assert y.shape == (tn,)
+    assert tn % BLOCK_N == 0
+    grid = (tn // BLOCK_N,)
+    return pl.pallas_call(
+        _hinge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tn,), jnp.float32),
+            jax.ShapeDtypeStruct((tn,), jnp.float32),
+        ],
+        interpret=True,
+    )(z, y, tau)
+
+
+@partial(jax.jit, static_argnames=())
+def pricing_tile(x, yv):
+    """Convenience jit: q-tile = X^T (y*pi) for one tile (used by tests)."""
+    return xtv(x, yv)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Everything here is deliberately the most obvious possible implementation;
+pytest (with hypothesis sweeps) asserts the Pallas kernels match these to
+float32 tolerance, and the Rust runtime's integration tests compare the
+PJRT execution of the lowered HLO against the same values.
+"""
+
+import jax.numpy as jnp
+
+
+def xtv_ref(x, v):
+    """X^T v."""
+    return jnp.asarray(x, jnp.float32).T @ jnp.asarray(v, jnp.float32)
+
+
+def xb_ref(x, beta):
+    """X beta."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(beta, jnp.float32)
+
+
+def hinge_terms_ref(z, y, tau):
+    """Smoothed-hinge weights and per-sample values (see paper §4.1)."""
+    z = jnp.asarray(z, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    tau = jnp.float32(tau)
+    w = jnp.clip(z / (2.0 * tau), -1.0, 1.0)
+    v = 0.5 * y * (1.0 + w)
+    f = 0.5 * z * (1.0 + w) - 0.5 * tau * w * w
+    return v, f
+
+
+def smoothed_hinge_value_grad_ref(x, y, beta, beta0, tau):
+    """Full smoothed-hinge objective value and gradient (L2 oracle)."""
+    z = 1.0 - y * (xb_ref(x, beta) + beta0)
+    v, f = hinge_terms_ref(z, y, tau)
+    value = f.sum()
+    grad_beta = -xtv_ref(x, v)
+    grad_beta0 = -v.sum()
+    return value, grad_beta, grad_beta0
+
+
+def hinge_loss_ref(x, y, beta, beta0):
+    """Exact (non-smoothed) hinge loss."""
+    z = 1.0 - y * (x @ beta + beta0)
+    return jnp.maximum(z, 0.0).sum()

@@ -1,0 +1,60 @@
+"""Layer-2 JAX model: the Nesterov-smoothed hinge compute graph.
+
+This is the paper's §4.1 objective written as a jax function that calls
+the Layer-1 Pallas kernels, so that a single ``jax.jit(...).lower(...)``
+produces one HLO module containing the whole gradient evaluation. The
+Rust coordinator loads the lowered artifacts and never imports Python.
+
+Two granularities are exported by ``aot.py``:
+
+* the three *tile* kernels (``xtv``/``xb``/``hinge_terms``) at a fixed
+  tile shape — the Rust runtime pads and loops tiles, so one artifact
+  serves every (n, p);
+* the *fused* ``hinge_value_grad`` at a fixed model shape — one
+  round-trip computes value + full gradient (used by the quickstart
+  demo and the runtime integration test).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hinge_terms, xb, xtv
+
+
+def hinge_value_grad(x, y, beta, beta0, tau):
+    """Smoothed-hinge value and gradient, all Pallas-kernel powered.
+
+    Args:
+      x: (N, P) f32 design tile (padded rows/cols must be zero).
+      y: (N,) f32 labels in {-1, +1} (0 on padded rows).
+      beta: (P,) f32 coefficients.
+      beta0: (1,) f32 intercept.
+      tau: (1,) f32 smoothing parameter.
+
+    Returns:
+      (value ()), grad_beta (P,), grad_beta0 ()) — note padded rows
+      contribute 0 to every output because y = 0 there makes z = 1,
+      w = clip(1/2tau) ... NOT zero; padding correctness is instead
+      guaranteed by masking below.
+    """
+    margins = xb(x, beta)
+    z = 1.0 - y * (margins + beta0[0])
+    v, f = hinge_terms(z, y, tau)
+    # mask out padded rows (y == 0): their v and f must not contribute.
+    live = (y != 0.0).astype(jnp.float32)
+    v = v * live
+    f = f * live
+    value = jnp.sum(f)
+    grad_beta = -xtv(x, v)
+    grad_beta0 = -jnp.sum(v)
+    return value, grad_beta, grad_beta0
+
+
+def pricing(x, y, pi):
+    """Column pricing q = X^T (y ∘ π) for one tile (eq. 14's hot product)."""
+    return xtv(x, y * pi)
+
+
+def margins(x, beta, beta0):
+    """Margins Xβ + β₀ for one tile."""
+    return xb(x, beta) + beta0[0]

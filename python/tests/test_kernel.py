@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps tile shapes (multiples of the block sizes) and data
+distributions; every property asserts allclose against ``kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hinge_terms, xb, xtv
+from compile.kernels import ref
+from compile.kernels.matvec import BLOCK_N, BLOCK_P
+
+RNG = np.random.default_rng
+
+
+def make_tile(seed, tn, tp, scale=1.0, dtype=np.float32):
+    r = RNG(seed)
+    x = (r.standard_normal((tn, tp)) * scale).astype(dtype)
+    return x
+
+
+# --- fixed-shape smoke tests ------------------------------------------------
+
+
+def test_xtv_matches_ref_basic():
+    x = make_tile(0, BLOCK_N, BLOCK_P)
+    v = RNG(1).standard_normal(BLOCK_N).astype(np.float32)
+    got = np.asarray(xtv(x, v))
+    want = np.asarray(ref.xtv_ref(x, v))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_xb_matches_ref_basic():
+    x = make_tile(2, BLOCK_N, BLOCK_P)
+    b = RNG(3).standard_normal(BLOCK_P).astype(np.float32)
+    got = np.asarray(xb(x, b))
+    want = np.asarray(ref.xb_ref(x, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hinge_terms_matches_ref_basic():
+    r = RNG(4)
+    z = r.standard_normal(BLOCK_N).astype(np.float32) * 2
+    y = np.where(r.standard_normal(BLOCK_N) > 0, 1.0, -1.0).astype(np.float32)
+    tau = np.array([0.2], np.float32)
+    v, f = hinge_terms(z, y, tau)
+    vr, fr = ref.hinge_terms_ref(z, y, 0.2)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=1e-6, atol=1e-6)
+
+
+# --- hypothesis sweeps over shapes / dtypes / scales ------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    p_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_xtv_shape_sweep(n_blocks, p_blocks, seed, scale):
+    tn, tp = n_blocks * BLOCK_N, p_blocks * BLOCK_P
+    x = make_tile(seed, tn, tp, scale)
+    v = RNG(seed + 1).standard_normal(tn).astype(np.float32)
+    got = np.asarray(xtv(x, v))
+    want = np.asarray(ref.xtv_ref(x, v))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    p_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_xb_shape_sweep(n_blocks, p_blocks, seed, scale):
+    tn, tp = n_blocks * BLOCK_N, p_blocks * BLOCK_P
+    x = make_tile(seed, tn, tp, scale)
+    b = RNG(seed + 2).standard_normal(tp).astype(np.float32)
+    got = np.asarray(xb(x, b))
+    want = np.asarray(ref.xb_ref(x, b))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    tau=st.sampled_from([0.05, 0.2, 1.0, 5.0]),
+)
+def test_hinge_terms_sweep(n_blocks, seed, tau):
+    tn = n_blocks * BLOCK_N
+    r = RNG(seed)
+    z = (r.standard_normal(tn) * 3).astype(np.float32)
+    y = np.where(r.standard_normal(tn) > 0, 1.0, -1.0).astype(np.float32)
+    v, f = hinge_terms(z, y, np.array([tau], np.float32))
+    vr, fr = ref.hinge_terms_ref(z, y, tau)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), rtol=1e-5, atol=1e-6)
+
+
+# --- dtype robustness --------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_xtv_accepts_float_inputs(dtype):
+    # jax will cast f64 -> f32 under default x64-disabled config; the
+    # kernel must still match the f32 oracle.
+    x = make_tile(7, BLOCK_N, BLOCK_P, dtype=np.float32).astype(dtype)
+    v = RNG(8).standard_normal(BLOCK_N).astype(dtype)
+    got = np.asarray(xtv(x.astype(np.float32), v.astype(np.float32)))
+    want = np.asarray(ref.xtv_ref(x, v))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# --- special values -----------------------------------------------------------
+
+
+def test_hinge_terms_saturation_edges():
+    # exactly at the clip boundaries z = ±2τ
+    tau = 0.25
+    z = np.array([2 * tau, -2 * tau, 0.0, 4 * tau, -4 * tau] + [0.0] * (BLOCK_N - 5),
+                 np.float32)
+    y = np.ones(BLOCK_N, np.float32)
+    v, f = hinge_terms(z, y, np.array([tau], np.float32))
+    vr, fr = ref.hinge_terms_ref(z, y, tau)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), atol=1e-7)
+
+
+def test_xtv_zero_and_sparse_vectors():
+    x = make_tile(9, BLOCK_N, BLOCK_P)
+    v = np.zeros(BLOCK_N, np.float32)
+    np.testing.assert_allclose(np.asarray(xtv(x, v)), 0.0)
+    v[3] = 2.5  # single support vector
+    got = np.asarray(xtv(x, v))
+    np.testing.assert_allclose(got, 2.5 * x[3], rtol=1e-6)

@@ -1,0 +1,82 @@
+"""Layer-2 model tests: the fused hinge_value_grad graph vs oracle and
+finite differences, plus padding semantics the Rust runtime relies on."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.matvec import BLOCK_N, BLOCK_P
+
+RNG = np.random.default_rng
+TN, TP = 2 * BLOCK_N, BLOCK_P
+
+
+def setup(seed, tn=TN, tp=TP, live_n=None):
+    r = RNG(seed)
+    x = (r.standard_normal((tn, tp)) * 0.3).astype(np.float32)
+    y = np.where(r.standard_normal(tn) > 0, 1.0, -1.0).astype(np.float32)
+    if live_n is not None:
+        # zero-pad rows beyond live_n (the runtime's padding contract)
+        x[live_n:] = 0.0
+        y[live_n:] = 0.0
+    beta = (r.standard_normal(tp) * 0.1).astype(np.float32)
+    beta0 = np.array([0.3], np.float32)
+    tau = np.array([0.2], np.float32)
+    return x, y, beta, beta0, tau
+
+
+def test_fused_grad_matches_oracle():
+    x, y, beta, beta0, tau = setup(0)
+    val, gb, g0 = model.hinge_value_grad(x, y, beta, beta0, tau)
+    vr, gbr, g0r = ref.smoothed_hinge_value_grad_ref(x, y, beta, beta0[0], tau[0])
+    np.testing.assert_allclose(float(val), float(vr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gbr), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(g0), float(g0r), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_grad_finite_differences():
+    x, y, beta, beta0, tau = setup(1)
+    val, gb, g0 = model.hinge_value_grad(x, y, beta, beta0, tau)
+    h = 1e-3  # f32: use a relatively large step
+    for j in [0, 7, TP - 1]:
+        bp = beta.copy()
+        bp[j] += h
+        vp, _, _ = model.hinge_value_grad(x, y, bp, beta0, tau)
+        fd = (float(vp) - float(val)) / h
+        assert abs(fd - float(gb[j])) < 5e-2, (j, fd, float(gb[j]))
+    b0p = beta0 + h
+    vp, _, _ = model.hinge_value_grad(x, y, beta, b0p, tau)
+    fd0 = (float(vp) - float(val)) / h
+    assert abs(fd0 - float(g0)) < 5e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(live_n=st.integers(1, TN), seed=st.integers(0, 10_000))
+def test_padded_rows_contribute_nothing(live_n, seed):
+    """The Rust runtime pads n up to the tile height with x = 0, y = 0;
+    value and gradients must equal the unpadded computation."""
+    x, y, beta, beta0, tau = setup(seed, live_n=live_n)
+    val, gb, g0 = model.hinge_value_grad(x, y, beta, beta0, tau)
+    # oracle on the live slice only
+    vr, gbr, g0r = ref.smoothed_hinge_value_grad_ref(
+        x[:live_n], y[:live_n], beta, beta0[0], tau[0]
+    )
+    np.testing.assert_allclose(float(val), float(vr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gbr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(g0), float(g0r), rtol=1e-4, atol=1e-4)
+
+
+def test_pricing_is_xt_y_pi():
+    x, y, _, _, _ = setup(3)
+    pi = RNG(4).uniform(0, 1, TN).astype(np.float32)
+    q = model.pricing(x, y, pi)
+    want = ref.xtv_ref(x, y * pi)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_margins_offset():
+    x, _, beta, beta0, _ = setup(5)
+    m = model.margins(x, beta, beta0)
+    want = ref.xb_ref(x, beta) + beta0[0]
+    np.testing.assert_allclose(np.asarray(m), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's fig1 (see rust/src/exps/fig1.rs).
+//! Usage: cargo bench --bench fig1_fixed_lambda [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== fig1 (scale {scale:?}) ===");
+    run_experiment("fig1", scale).expect("known experiment id");
+}

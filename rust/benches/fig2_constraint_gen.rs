@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's fig2 (see rust/src/exps/fig2.rs).
+//! Usage: cargo bench --bench fig2_constraint_gen [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== fig2 (scale {scale:?}) ===");
+    run_experiment("fig2", scale).expect("known experiment id");
+}

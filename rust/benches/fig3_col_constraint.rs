@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's fig3 (see rust/src/exps/fig3.rs).
+//! Usage: cargo bench --bench fig3_col_constraint [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== fig3 (scale {scale:?}) ===");
+    run_experiment("fig3", scale).expect("known experiment id");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's fig4 (see rust/src/exps/fig4.rs).
+//! Usage: cargo bench --bench fig4_group_svm [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== fig4 (scale {scale:?}) ===");
+    run_experiment("fig4", scale).expect("known experiment id");
+}

@@ -1,0 +1,146 @@
+//! Micro-benchmarks of the hot paths (hand-rolled harness; the offline
+//! image carries no criterion). Reports ns/op and effective GFLOP/s —
+//! these numbers feed EXPERIMENTS.md §Perf.
+//!
+//! Usage: cargo bench --bench perf_hotpaths [-- smoke]
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use cutgen::backend::{Backend, NativeBackend};
+use cutgen::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+use cutgen::fom::prox::prox_slope;
+use cutgen::linalg::{dot, Lu};
+use cutgen::rng::Xoshiro256;
+
+/// Time `f` adaptively: warm up, then run enough iterations for ≥0.2 s.
+fn bench(name: &str, flops_per_op: f64, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.2 || iters > 1 << 22 {
+            let per_op = dt / iters as f64;
+            let gflops = flops_per_op / per_op / 1e9;
+            println!(
+                "{name:<42} {:>12.2} us/op {:>9.2} GFLOP/s",
+                per_op * 1e6,
+                gflops
+            );
+            return;
+        }
+        iters = ((0.25 / dt.max(1e-9)) as u64).max(iters * 2);
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "smoke");
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    println!("--- perf_hotpaths ({}) ---", if smoke { "smoke" } else { "default" });
+
+    // 1. dot product
+    let n = if smoke { 4096 } else { 65536 };
+    let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    bench(&format!("dot f64 n={n}"), 2.0 * n as f64, || {
+        black_box(dot(black_box(&a), black_box(&b)));
+    });
+
+    // 2. dense Xᵀv / Xβ (the pricing hot path)
+    let (dn, dp) = if smoke { (200, 2000) } else { (1000, 20_000) };
+    let ds = generate_l1(&SyntheticSpec::paper_default(dn, dp), &mut rng);
+    let backend = NativeBackend::new(&ds.x);
+    let v: Vec<f64> = (0..dn).map(|_| rng.uniform()).collect();
+    let mut q = vec![0.0; dp];
+    bench(&format!("dense xtv {dn}x{dp} (pricing)"), 2.0 * (dn * dp) as f64, || {
+        backend.xtv(black_box(&v), black_box(&mut q));
+    });
+    let beta: Vec<f64> = (0..dp).map(|_| rng.normal() * 0.01).collect();
+    let mut m = vec![0.0; dn];
+    bench(&format!("dense xb {dn}x{dp} (margins)"), 2.0 * (dn * dp) as f64, || {
+        backend.xb(black_box(&beta), black_box(&mut m));
+    });
+
+    // 3. sparse pricing
+    let spec = SparseTextSpec {
+        n: if smoke { 2000 } else { 20_000 },
+        p: if smoke { 5000 } else { 40_000 },
+        density: 0.002,
+        k0: 50,
+        zipf: 1.1,
+    };
+    let sds = generate_sparse_text(&spec, &mut rng);
+    let sbackend = NativeBackend::new(&sds.x);
+    let sv: Vec<f64> = (0..sds.n()).map(|_| rng.uniform()).collect();
+    let mut sq = vec![0.0; sds.p()];
+    bench(
+        &format!("sparse xtv {}x{} nnz={}", sds.n(), sds.p(), sds.x.nnz()),
+        2.0 * sds.x.nnz() as f64,
+        || {
+            sbackend.xtv(black_box(&sv), black_box(&mut sq));
+        },
+    );
+
+    // 4. LU factorize + solves (the simplex basis kernel)
+    for mdim in if smoke { vec![100] } else { vec![100, 400, 1000] } {
+        let mut am = vec![0.0; mdim * mdim];
+        for i in 0..mdim {
+            for j in 0..mdim {
+                am[i * mdim + j] = rng.normal() * 0.1;
+            }
+            am[i * mdim + i] += mdim as f64;
+        }
+        bench(
+            &format!("LU factorize m={mdim}"),
+            2.0 / 3.0 * (mdim as f64).powi(3),
+            || {
+                black_box(Lu::factorize_flat(mdim, black_box(&am)));
+            },
+        );
+        let lu = Lu::factorize_flat(mdim, &am);
+        let rhs: Vec<f64> = (0..mdim).map(|_| rng.normal()).collect();
+        bench(&format!("FTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
+            let mut x = rhs.clone();
+            lu.solve(&mut x);
+            black_box(x);
+        });
+        bench(&format!("BTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
+            let mut x = rhs.clone();
+            lu.solve_transposed(&mut x);
+            black_box(x);
+        });
+    }
+
+    // 5. Slope prox (PAVA) — the FOM inner loop for Table 6
+    let pp = if smoke { 2000 } else { 50_000 };
+    let eta: Vec<f64> = (0..pp).map(|_| rng.normal()).collect();
+    let lams = cutgen::fom::objective::bh_slope_weights(pp, 0.1);
+    bench(&format!("prox_slope (PAVA) p={pp}"), (pp as f64) * 20.0, || {
+        black_box(prox_slope(black_box(&eta), &lams, 1.0));
+    });
+
+    // 6. end-to-end column generation (small, fixed)
+    let ds2 =
+        generate_l1(&SyntheticSpec::paper_default(100, if smoke { 1000 } else { 5000 }), &mut rng);
+    let lam = 0.01 * ds2.lambda_max_l1();
+    let be2 = NativeBackend::new(&ds2.x);
+    bench("column_generation n=100 (end-to-end)", 0.0, || {
+        let sol = cutgen::coordinator::l1svm::column_generation(
+            &ds2,
+            &be2,
+            lam,
+            &[0, 1],
+            &cutgen::coordinator::GenParams::default(),
+        );
+        black_box(sol.objective);
+    });
+
+    println!("--- done ---");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table1 (see rust/src/exps/table1.rs).
+//! Usage: cargo bench --bench table1_regpath [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table1 (scale {scale:?}) ===");
+    run_experiment("table1", scale).expect("known experiment id");
+}

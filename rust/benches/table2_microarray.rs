@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table2 (see rust/src/exps/table2.rs).
+//! Usage: cargo bench --bench table2_microarray [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table2 (scale {scale:?}) ===");
+    run_experiment("table2", scale).expect("known experiment id");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table3 (see rust/src/exps/table3.rs).
+//! Usage: cargo bench --bench table3_sparse_real [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table3 (scale {scale:?}) ===");
+    run_experiment("table3", scale).expect("known experiment id");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table4 (see rust/src/exps/table4.rs).
+//! Usage: cargo bench --bench table4_psm [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table4 (scale {scale:?}) ===");
+    run_experiment("table4", scale).expect("known experiment id");
+}

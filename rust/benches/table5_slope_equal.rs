@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table5 (see rust/src/exps/table5.rs).
+//! Usage: cargo bench --bench table5_slope_equal [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table5 (scale {scale:?}) ===");
+    run_experiment("table5", scale).expect("known experiment id");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's table6 (see rust/src/exps/table6.rs).
+//! Usage: cargo bench --bench table6_slope_distinct [-- smoke|default|paper]
+use cutgen::exps::{run_experiment, Scale};
+
+fn main() {
+    let scale = std::env::args()
+        .skip(1)
+        .find_map(|a| Scale::parse(&a))
+        .unwrap_or(Scale::Default);
+    println!("=== table6 (scale {scale:?}) ===");
+    run_experiment("table6", scale).expect("known experiment id");
+}

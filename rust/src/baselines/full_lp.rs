@@ -1,0 +1,132 @@
+//! The “LP solver” baseline: build the complete LP (every column, every
+//! constraint) and solve it in one shot — no column or constraint
+//! generation. This is what the paper runs Gurobi on; the gap between
+//! this and the coordinators is the paper's headline effect.
+
+use crate::coordinator::l1svm::RestrictedL1;
+use crate::coordinator::{GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::simplex::Status;
+
+/// Solve the full L1-SVM LP (Problem 5). `warm` re-solves an existing
+/// model across λ values (the “LP warm-start” row of Table 1).
+pub struct FullL1Lp {
+    inner: RestrictedL1,
+    ds_n: usize,
+    ds_p: usize,
+}
+
+impl FullL1Lp {
+    /// Build the complete model.
+    pub fn new(ds: &Dataset, lambda: f64) -> Self {
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        let all_j: Vec<usize> = (0..ds.p()).collect();
+        Self {
+            inner: RestrictedL1::new(ds, lambda, &all_i, &all_j),
+            ds_n: ds.n(),
+            ds_p: ds.p(),
+        }
+    }
+
+    /// Change λ (for warm-started λ-grids) without rebuilding.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.inner.set_lambda(lambda);
+    }
+
+    /// Solve and package the solution.
+    pub fn solve(&mut self, lambda: f64) -> SvmSolution {
+        let st = self.inner.solve();
+        debug_assert_eq!(st, Status::Optimal, "full LP: {st:?}");
+        let (support, beta0) = self.inner.beta_support();
+        let mut beta = vec![0.0; self.ds_p];
+        for &(j, v) in &support {
+            beta[j] = v;
+        }
+        let _ = lambda;
+        SvmSolution {
+            beta,
+            beta0,
+            objective: self.inner.objective(),
+            stats: GenStats {
+                rounds: 1,
+                cols_added: self.ds_p,
+                rows_added: self.ds_n,
+                simplex_iters: self.inner.simplex_iters(),
+            },
+            cols: (0..self.ds_p).collect(),
+            rows: (0..self.ds_n).collect(),
+        }
+    }
+}
+
+/// One-shot convenience: solve the full L1-SVM LP at a single λ.
+pub fn solve_full_l1(ds: &Dataset, lambda: f64) -> SvmSolution {
+    FullL1Lp::new(ds, lambda).solve(lambda)
+}
+
+/// One-shot full Group-SVM LP (all groups in the model).
+pub fn solve_full_group(ds: &Dataset, groups: &[Vec<usize>], lambda: f64) -> SvmSolution {
+    let all: Vec<usize> = (0..groups.len()).collect();
+    let backend = crate::backend::NativeBackend::new(&ds.x);
+    // with every group present, the pricing loop exits after one round
+    crate::coordinator::group::group_column_generation(
+        ds,
+        &backend,
+        groups,
+        lambda,
+        &all,
+        &crate::coordinator::GenParams::default(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::l1svm::column_generation;
+    use crate::coordinator::GenParams;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn full_lp_matches_column_generation() {
+        let spec = SyntheticSpec { n: 30, p: 50, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(141));
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let full = solve_full_l1(&ds, lambda);
+        let backend = NativeBackend::new(&ds.x);
+        let cg = column_generation(
+            &ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps: 1e-7, ..Default::default() },
+        );
+        assert!(
+            (full.objective - cg.objective).abs() / cg.objective.max(1e-9) < 1e-5,
+            "full {} cg {}",
+            full.objective,
+            cg.objective
+        );
+    }
+
+    #[test]
+    fn warm_start_lambda_grid_is_consistent() {
+        let spec = SyntheticSpec { n: 25, p: 30, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(142));
+        let lmax = ds.lambda_max_l1();
+        let grid = [0.5 * lmax, 0.25 * lmax, 0.1 * lmax];
+        let mut warm = FullL1Lp::new(&ds, grid[0]);
+        for &lam in &grid {
+            warm.set_lambda(lam);
+            let sol = warm.solve(lam);
+            let fresh = solve_full_l1(&ds, lam);
+            assert!(
+                (sol.objective - fresh.objective).abs() / fresh.objective.max(1e-9) < 1e-6,
+                "λ={lam}: warm {} fresh {}",
+                sol.objective,
+                fresh.objective
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Baseline solvers the paper compares against.
+//!
+//! * [`full_lp`] — solve the *full* LP model with no generation: the
+//!   paper's “LP solver” rows (Gurobi on the complete model). Shares
+//!   the simplex substrate with the coordinators, so timing comparisons
+//!   are apples-to-apples (see DESIGN.md §Substitutions).
+//! * [`psm`] — the parametric simplex method of Pang et al. (2017),
+//!   Table 4's state-of-the-art comparator.
+//! * [`admm`] — a linearized-ADMM first-order baseline for L1-SVM
+//!   (the [2]-style comparator mentioned in §1).
+//! * [`slope_full`] — the O(p²) LP reformulation of the Slope norm
+//!   (Appendix A.2), which is what CVXPY canonicalizes Slope-SVM to —
+//!   Table 5/6's comparator.
+
+pub mod admm;
+pub mod full_lp;
+pub mod psm;
+pub mod slope_full;

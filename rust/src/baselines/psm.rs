@@ -1,0 +1,122 @@
+//! PSM — the parametric simplex method for L1-SVM (Pang, Liu, Vanderbei
+//! & Zhao, NeurIPS 2017), the Table 4 comparator.
+//!
+//! PSM treats λ as the parametric cost multiplier of the |β| halves,
+//! starts at λ_max where the trivial basis is optimal, and pivots down
+//! the breakpoint path to the target λ. Unlike the coordinators it holds
+//! the **full model** (all p column pairs), so every breakpoint prices
+//! all 2p+… columns — which is exactly why it loses to column generation
+//! at large p.
+
+use crate::coordinator::{GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::simplex::{LpModel, ParametricSimplex, SimplexSolver, Status, VarId};
+
+/// Result wrapper with the breakpoint count.
+pub struct PsmResult {
+    pub solution: SvmSolution,
+    /// Breakpoints visited on the λ path.
+    pub breakpoints: usize,
+    pub status: Status,
+}
+
+/// Run PSM from λ_max down to `lambda`.
+pub fn psm_l1svm(ds: &Dataset, lambda: f64) -> PsmResult {
+    let n = ds.n();
+    let p = ds.p();
+    let lambda_max = ds.lambda_max_l1();
+    let lambda_start = lambda_max * 1.001;
+
+    // Full model, costs at λ_start.
+    let mut model = LpModel::new();
+    let b0 = model.add_col_free(0.0, &[]);
+    let xi: Vec<VarId> = (0..n).map(|_| model.add_col(1.0, 0.0, f64::INFINITY, &[])).collect();
+    let bp: Vec<VarId> =
+        (0..p).map(|_| model.add_col(lambda_start, 0.0, f64::INFINITY, &[])).collect();
+    let bm: Vec<VarId> =
+        (0..p).map(|_| model.add_col(lambda_start, 0.0, f64::INFINITY, &[])).collect();
+    for i in 0..n {
+        let yi = ds.y[i];
+        let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(2 + 2 * p);
+        coefs.push((xi[i], 1.0));
+        coefs.push((b0, yi));
+        for (j, v) in (0..p).map(|j| (j, ds.x.get(i, j))) {
+            if v != 0.0 {
+                coefs.push((bp[j], yi * v));
+                coefs.push((bm[j], -yi * v));
+            }
+        }
+        model.add_row(1.0, f64::INFINITY, &coefs);
+    }
+    let nvars = model.num_vars();
+    let mut c_fix = vec![0.0; nvars];
+    let mut c_var = vec![0.0; nvars];
+    for &v in &xi {
+        c_fix[v] = 1.0;
+    }
+    for &v in bp.iter().chain(&bm) {
+        c_var[v] = 1.0;
+    }
+    let solver = SimplexSolver::new(model);
+    let mut psm = ParametricSimplex::new(solver, c_fix, c_var);
+    let (path, status) = psm.run(lambda_start, lambda, 100_000);
+
+    let mut beta = vec![0.0; p];
+    for j in 0..p {
+        beta[j] = psm.solver.col_value(bp[j]) - psm.solver.col_value(bm[j]);
+    }
+    let beta0 = psm.solver.col_value(b0);
+    let stats = GenStats {
+        rounds: path.len(),
+        cols_added: p,
+        rows_added: n,
+        simplex_iters: psm.solver.stats.primal_iters + psm.solver.stats.dual_iters,
+    };
+    PsmResult {
+        solution: SvmSolution {
+            beta,
+            beta0,
+            objective: psm.solver.objective(),
+            stats,
+            cols: (0..p).collect(),
+            rows: (0..n).collect(),
+        },
+        breakpoints: path.len(),
+        status,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::full_lp::solve_full_l1;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn psm_matches_direct_solve() {
+        let spec = SyntheticSpec { n: 30, p: 25, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(151));
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let res = psm_l1svm(&ds, lambda);
+        assert_eq!(res.status, Status::Optimal);
+        let direct = solve_full_l1(&ds, lambda);
+        assert!(
+            (res.solution.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-5,
+            "psm {} direct {}",
+            res.solution.objective,
+            direct.objective
+        );
+        assert!(res.breakpoints >= 2, "expected a nontrivial path");
+    }
+
+    #[test]
+    fn psm_null_solution_at_lambda_max() {
+        let spec = SyntheticSpec { n: 20, p: 15, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(152));
+        let lam = ds.lambda_max_l1() * 1.0005;
+        let res = psm_l1svm(&ds, lam);
+        assert_eq!(res.status, Status::Optimal);
+        assert_eq!(res.solution.support_size(), 0);
+    }
+}

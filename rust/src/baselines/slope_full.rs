@@ -1,0 +1,173 @@
+//! The O(p²) LP reformulation of Slope-SVM (Appendix A.2) — the
+//! “CVXPY” comparator of Tables 5–6.
+//!
+//! Writing `λ̃_m = λ_m − λ_{m+1} ≥ 0` (λ_{p+1} := 0), the Slope penalty
+//! telescopes into `Σ_m λ̃_m · (sum of the m largest |β|)`, and each
+//! partial sum is modeled with the classic LP epigraph of a sum-of-top-m:
+//! `m·θ_m + Σᵢ v_{m,i}` with `v_{m,i} + θ_m ≥ |β_i|, v ≥ 0, θ_m ≥ 0`.
+//! Only levels with `λ̃_m > 0` need a block, so:
+//!
+//! * two-level weights (Table 5): 2 blocks → O(p) rows — slow but
+//!   feasible, like CVXPY+Gurobi;
+//! * distinct weights (Table 6): p blocks → O(p²) rows — explodes
+//!   almost immediately, like CVXPY+Ecos (which crashed at p = 200).
+//!
+//! `MAX_ROWS` plays the role of the solver crash: beyond it we return
+//! `None` (reported as “—” in the tables, matching the paper).
+
+use crate::coordinator::{GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
+
+/// Row-count guard standing in for the memory/crash limit of the
+/// canonicalized CVXPY models (our dense-basis simplex factorizes an
+/// m×m LU, so m beyond a few thousand is as fatal as Ecos's crash at
+/// p = 200 in the paper).
+pub const MAX_ROWS: usize = 3_000;
+
+/// Solve Slope-SVM through the A.2 reformulation. Returns `None` when the
+/// canonicalized model exceeds [`MAX_ROWS`] rows (the “CVXPY crashed /
+/// did not converge” case).
+pub fn solve_slope_full(ds: &Dataset, lambda: &[f64]) -> Option<SvmSolution> {
+    let n = ds.n();
+    let p = ds.p();
+    assert_eq!(lambda.len(), p);
+    // active levels: λ̃_m > 0
+    let mut levels: Vec<(usize, f64)> = Vec::new();
+    for m in 0..p {
+        let next = if m + 1 < p { lambda[m + 1] } else { 0.0 };
+        let tilde = lambda[m] - next;
+        if tilde > 1e-12 {
+            levels.push((m + 1, tilde)); // 1-based m
+        }
+    }
+    let total_rows = n + levels.len() * p;
+    if total_rows > MAX_ROWS {
+        return None;
+    }
+
+    let mut model = LpModel::new();
+    let b0 = model.add_col_free(0.0, &[]);
+    let xi: Vec<VarId> = (0..n).map(|_| model.add_col(1.0, 0.0, f64::INFINITY, &[])).collect();
+    let bp: Vec<VarId> = (0..p).map(|_| model.add_col(0.0, 0.0, f64::INFINITY, &[])).collect();
+    let bm: Vec<VarId> = (0..p).map(|_| model.add_col(0.0, 0.0, f64::INFINITY, &[])).collect();
+    // margin rows
+    for i in 0..n {
+        let yi = ds.y[i];
+        let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(2 + 2 * p);
+        coefs.push((xi[i], 1.0));
+        coefs.push((b0, yi));
+        for j in 0..p {
+            let v = ds.x.get(i, j);
+            if v != 0.0 {
+                coefs.push((bp[j], yi * v));
+                coefs.push((bm[j], -yi * v));
+            }
+        }
+        model.add_row(1.0, f64::INFINITY, &coefs);
+    }
+    // sum-of-top-m blocks
+    for &(m, tilde) in &levels {
+        // θ_m costs λ̃_m·m ; each v_{m,i} costs λ̃_m
+        let theta = model.add_col(tilde * m as f64, 0.0, f64::INFINITY, &[]);
+        for j in 0..p {
+            let v = model.add_col(tilde, 0.0, f64::INFINITY, &[]);
+            // v_{m,j} + θ_m − β⁺_j − β⁻_j ≥ 0
+            model.add_row(
+                0.0,
+                f64::INFINITY,
+                &[(v, 1.0), (theta, 1.0), (bp[j], -1.0), (bm[j], -1.0)],
+            );
+        }
+    }
+
+    let mut solver = SimplexSolver::new(model);
+    let st = solver.solve();
+    if st != Status::Optimal {
+        return None;
+    }
+    let mut beta = vec![0.0; p];
+    for j in 0..p {
+        beta[j] = solver.col_value(bp[j]) - solver.col_value(bm[j]);
+    }
+    let beta0 = solver.col_value(b0);
+    Some(SvmSolution {
+        beta,
+        beta0,
+        objective: solver.objective(),
+        stats: GenStats {
+            rounds: 1,
+            cols_added: solver.model().num_vars(),
+            rows_added: solver.model().num_rows(),
+            simplex_iters: solver.stats.primal_iters + solver.stats.dual_iters,
+        },
+        cols: (0..p).collect(),
+        rows: (0..n).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::slope::slope_column_constraint_generation;
+    use crate::coordinator::GenParams;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::fom::objective::{bh_slope_weights, two_level_slope_weights};
+    use crate::rng::Xoshiro256;
+
+    fn ds(n: usize, p: usize, seed: u64) -> Dataset {
+        let spec = SyntheticSpec { n, p, k0: 4.min(p), rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut Xoshiro256::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn full_formulation_matches_cutting_planes_two_level() {
+        let d = ds(20, 15, 171);
+        let lambda = two_level_slope_weights(15, 4, 0.05 * d.lambda_max_l1());
+        let full = solve_slope_full(&d, &lambda).expect("fits in row budget");
+        let backend = NativeBackend::new(&d.x);
+        let cg = slope_column_constraint_generation(
+            &d,
+            &backend,
+            &lambda,
+            &[0, 1],
+            &GenParams { eps: 1e-7, ..Default::default() },
+        );
+        assert!(
+            (full.objective - cg.objective).abs() / cg.objective.max(1e-9) < 1e-4,
+            "full {} cg {}",
+            full.objective,
+            cg.objective
+        );
+    }
+
+    #[test]
+    fn full_formulation_matches_cutting_planes_distinct() {
+        let d = ds(15, 8, 172);
+        let lambda = bh_slope_weights(8, 0.04 * d.lambda_max_l1());
+        let full = solve_slope_full(&d, &lambda).expect("fits");
+        let backend = NativeBackend::new(&d.x);
+        let cg = slope_column_constraint_generation(
+            &d,
+            &backend,
+            &lambda,
+            &[0],
+            &GenParams { eps: 1e-7, ..Default::default() },
+        );
+        assert!(
+            (full.objective - cg.objective).abs() / cg.objective.max(1e-9) < 1e-4,
+            "full {} cg {}",
+            full.objective,
+            cg.objective
+        );
+    }
+
+    #[test]
+    fn row_budget_guard_triggers() {
+        // distinct weights with large p → p² rows → refused, like Ecos.
+        let d = ds(10, 300, 173);
+        let lambda = bh_slope_weights(300, 0.01);
+        assert!(solve_slope_full(&d, &lambda).is_none());
+    }
+}

@@ -1,0 +1,388 @@
+//! Hand-rolled CLI (the offline image carries no clap).
+//!
+//! ```text
+//! cutgen doctor
+//! cutgen datagen  --kind l1|group|sparse --n N --p P [--seed S] --out FILE
+//! cutgen train    --data FILE | --synthetic N,P  [--penalty l1|group|slope]
+//!                 [--lambda-frac F] [--method fo-clg|clg|cng|clcng|full-lp|psm]
+//!                 [--backend native|pjrt] [--eps E] [--group-size G]
+//! cutgen path     --synthetic N,P [--grid K] [--ratio R]
+//! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{Backend, NativeBackend};
+use crate::coordinator::path::{geometric_grid, regularization_path};
+use crate::coordinator::{GenParams, SvmSolution};
+use crate::data::synthetic::{
+    generate_group, generate_l1, generate_sparse_text, GroupSpec, SparseTextSpec, SyntheticSpec,
+};
+use crate::data::{libsvm, Dataset};
+use crate::exps::{run_experiment, Scale, ALL_EXPERIMENTS};
+use crate::rng::Xoshiro256;
+
+/// Parsed command line: subcommand + `--key value` options.
+pub struct Args {
+    /// First positional argument.
+    pub command: String,
+    /// `--key value` pairs (flags get "true").
+    pub opts: BTreeMap<String, String>,
+}
+
+/// Parse `argv[1..]`.
+pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Result<Args> {
+    let command = argv.next().unwrap_or_else(|| "help".to_string());
+    let mut opts = BTreeMap::new();
+    let mut pending: Option<String> = None;
+    for tok in argv {
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some(key) = pending.take() {
+                opts.insert(key, "true".to_string()); // previous was a flag
+            }
+            pending = Some(stripped.to_string());
+        } else if let Some(key) = pending.take() {
+            opts.insert(key, tok);
+        } else {
+            bail!("unexpected positional argument {tok:?}");
+        }
+    }
+    if let Some(key) = pending {
+        opts.insert(key, "true".to_string());
+    }
+    Ok(Args { command, opts })
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number")),
+        }
+    }
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer")),
+        }
+    }
+}
+
+const HELP: &str = "\
+cutgen — column & constraint generation for L1/Group/Slope-SVM LPs
+  (reproduction of Dedieu & Mazumder 2018; see README.md)
+
+USAGE: cutgen <command> [--options]
+
+COMMANDS
+  doctor                 check the PJRT runtime and artifacts
+  datagen                write a synthetic dataset in libsvm format
+  train                  fit one model at a fixed lambda
+  path                   warm-started regularization path
+  bench                  regenerate a paper table/figure (or `--exp all`)
+  help                   this text
+
+Run `cutgen <command>` with no options for that command's defaults.";
+
+/// CLI entry point.
+pub fn main_with(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "doctor" => doctor(),
+        "datagen" => datagen(&args),
+        "train" => train(&args),
+        "path" => path_cmd(&args),
+        "bench" => bench(&args),
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn doctor() -> Result<()> {
+    println!("cutgen doctor");
+    match crate::runtime::smoke() {
+        Ok(platform) => println!("  PJRT CPU client: ok (platform = {platform})"),
+        Err(e) => println!("  PJRT CPU client: FAILED ({e})"),
+    }
+    if crate::runtime::PjrtRuntime::artifacts_available() {
+        let rt = crate::runtime::PjrtRuntime::load(crate::runtime::PjrtRuntime::default_dir())?;
+        println!(
+            "  artifacts: ok (tile {}x{}, dir {})",
+            rt.meta.tn,
+            rt.meta.tp,
+            crate::runtime::PjrtRuntime::default_dir().display()
+        );
+    } else {
+        println!("  artifacts: MISSING — run `make artifacts`");
+    }
+    println!("  simplex self-check: ");
+    let mut m = crate::simplex::LpModel::new();
+    let x = m.add_col_nonneg(1.0, &[]);
+    m.add_row_ge(1.0, &[(x, 1.0)]);
+    let mut s = crate::simplex::SimplexSolver::new(m);
+    anyhow::ensure!(s.solve() == crate::simplex::Status::Optimal, "simplex self-check failed");
+    println!("    ok (min x s.t. x >= 1 -> {})", s.objective());
+    Ok(())
+}
+
+fn datagen(args: &Args) -> Result<()> {
+    let kind = args.get("kind").unwrap_or("l1");
+    let n = args.get_usize("n", 100)?;
+    let p = args.get_usize("p", 1000)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out FILE required"))?;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ds = match kind {
+        "l1" => generate_l1(&SyntheticSpec::paper_default(n, p), &mut rng),
+        "group" => {
+            let gs = args.get_usize("group-size", 10)?;
+            generate_group(
+                &GroupSpec {
+                    n,
+                    n_groups: p / gs,
+                    group_size: gs,
+                    k0_groups: 3,
+                    rho: 0.1,
+                    standardize: true,
+                },
+                &mut rng,
+            )
+            .data
+        }
+        "sparse" => generate_sparse_text(
+            &SparseTextSpec { n, p, density: args.get_f64("density", 0.002)?, k0: 50, zipf: 1.1 },
+            &mut rng,
+        ),
+        other => bail!("unknown --kind {other:?} (l1|group|sparse)"),
+    };
+    libsvm::write_file(&ds, out)?;
+    println!("wrote {} ({} x {}, nnz {})", out, ds.n(), ds.p(), ds.x.nnz());
+    Ok(())
+}
+
+fn load_or_generate(args: &Args) -> Result<Dataset> {
+    if let Some(file) = args.get("data") {
+        let ds = libsvm::read_file(file, 0)?;
+        println!("loaded {} ({} x {}, nnz {})", file, ds.n(), ds.p(), ds.x.nnz());
+        Ok(ds)
+    } else {
+        let spec = args.get("synthetic").unwrap_or("100,1000");
+        let (n, p) = spec
+            .split_once(',')
+            .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
+            .ok_or_else(|| anyhow!("--synthetic expects N,P"))?;
+        let seed = args.get_usize("seed", 0)? as u64;
+        Ok(generate_l1(&SyntheticSpec::paper_default(n, p), &mut Xoshiro256::seed_from_u64(seed)))
+    }
+}
+
+fn report(sol: &SvmSolution, secs: f64) {
+    println!("  objective     {:.6}", sol.objective);
+    println!("  support       {}", sol.support_size());
+    println!("  working set   |J| = {}, |I| = {}", sol.cols.len(), sol.rows.len());
+    println!(
+        "  generation    {} rounds, {} cols, {} rows, {} simplex iters",
+        sol.stats.rounds, sol.stats.cols_added, sol.stats.rows_added, sol.stats.simplex_iters
+    );
+    println!("  time          {secs:.3}s");
+}
+
+fn train(args: &Args) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let lambda_frac = args.get_f64("lambda-frac", 0.01)?;
+    let eps = args.get_f64("eps", 1e-2)?;
+    let method = args.get("method").unwrap_or("fo-clg");
+    let penalty = args.get("penalty").unwrap_or("l1");
+    let use_pjrt = args.get("backend") == Some("pjrt");
+
+    // optional PJRT runtime (owned here so the backend can borrow it)
+    let rt = if use_pjrt {
+        Some(crate::runtime::PjrtRuntime::load(crate::runtime::PjrtRuntime::default_dir())?)
+    } else {
+        None
+    };
+    let pjrt_backend = match &rt {
+        Some(rt) => Some(crate::runtime::PjrtBackend::new(rt, &ds.x)?),
+        None => None,
+    };
+    let native = NativeBackend::new(&ds.x);
+    let backend: &dyn Backend = match &pjrt_backend {
+        Some(b) => b,
+        None => &native,
+    };
+    println!("backend: {}", backend.name());
+
+    match penalty {
+        "l1" => {
+            let lambda = lambda_frac * ds.lambda_max_l1();
+            println!("L1-SVM: n={}, p={}, λ={lambda:.4} ({lambda_frac}·λ_max)", ds.n(), ds.p());
+            let gen = GenParams { eps, ..Default::default() };
+            let (sol, t) = crate::exps::time_it(|| -> Result<SvmSolution> {
+                Ok(match method {
+                    "fo-clg" => crate::exps::common::fo_clg(&ds, lambda, eps, 100).0,
+                    "clg" => crate::coordinator::l1svm::column_generation(
+                        &ds,
+                        backend,
+                        lambda,
+                        &crate::coordinator::path::initial_columns(&ds, 10),
+                        &gen,
+                    ),
+                    "cng" => crate::coordinator::l1svm::constraint_generation(&ds, lambda, &[], &gen),
+                    "clcng" => crate::exps::common::sfo_cl_cng(&ds, lambda, eps, 200, 1).0,
+                    "full-lp" => crate::baselines::full_lp::solve_full_l1(&ds, lambda),
+                    "psm" => crate::baselines::psm::psm_l1svm(&ds, lambda).solution,
+                    other => bail!("unknown --method {other:?}"),
+                })
+            });
+            report(&sol?, t);
+        }
+        "group" => {
+            let gs = args.get_usize("group-size", 10)?;
+            anyhow::ensure!(ds.p() % gs == 0, "p must be a multiple of --group-size");
+            let groups: Vec<Vec<usize>> =
+                (0..ds.p() / gs).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
+            let lambda = lambda_frac * ds.lambda_max_group(&groups);
+            println!("Group-SVM: {} groups of {gs}, λ={lambda:.4}", groups.len());
+            let init = crate::coordinator::group::initial_groups(&ds, &groups, 5);
+            let (sol, t) = crate::exps::time_it(|| {
+                crate::coordinator::group::group_column_generation(
+                    &ds,
+                    backend,
+                    &groups,
+                    lambda,
+                    &init,
+                    &GenParams { eps, ..Default::default() },
+                )
+            });
+            report(&sol, t);
+        }
+        "slope" => {
+            let lt = lambda_frac * ds.lambda_max_l1();
+            let lambda = crate::fom::objective::bh_slope_weights(ds.p(), lt);
+            println!("Slope-SVM (BH weights): λ̃={lt:.4}");
+            let (init, _) = crate::exps::common::fo_slope_init(&ds, &lambda, 100);
+            let (sol, t) = crate::exps::time_it(|| {
+                crate::coordinator::slope::slope_column_constraint_generation(
+                    &ds,
+                    backend,
+                    &lambda,
+                    &init,
+                    &GenParams { eps, max_cols_per_round: 10, ..Default::default() },
+                )
+            });
+            report(&sol, t);
+        }
+        other => bail!("unknown --penalty {other:?} (l1|group|slope)"),
+    }
+    Ok(())
+}
+
+fn path_cmd(args: &Args) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let k = args.get_usize("grid", 20)?;
+    let ratio = args.get_f64("ratio", 0.7)?;
+    let eps = args.get_f64("eps", 1e-2)?;
+    let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
+    let backend = NativeBackend::new(&ds.x);
+    let ((path, _), t) = crate::exps::time_it(|| {
+        regularization_path(&ds, &backend, &grid, 10, &GenParams { eps, ..Default::default() })
+    });
+    println!("{:>12} {:>12} {:>8} {:>8}", "lambda", "objective", "nnz", "|J|");
+    for pt in &path {
+        println!(
+            "{:>12.5} {:>12.5} {:>8} {:>8}",
+            pt.lambda, pt.objective, pt.support, pt.working_set
+        );
+    }
+    println!("total {t:.3}s, {} simplex iterations", path.last().unwrap().stats.simplex_iters);
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let scale = args
+        .get("scale")
+        .map(|s| Scale::parse(s).ok_or_else(|| anyhow!("bad --scale (smoke|default|paper)")))
+        .transpose()?
+        .unwrap_or(Scale::Default);
+    let exp = args.get("exp").unwrap_or("all");
+    if exp == "all" {
+        for id in ALL_EXPERIMENTS {
+            run_experiment(id, scale);
+        }
+    } else {
+        run_experiment(exp, scale)
+            .ok_or_else(|| anyhow!("unknown --exp {exp:?}; one of {ALL_EXPERIMENTS:?} or all"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        parse_args(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parse_basic() {
+        let a = args(&["train", "--lambda-frac", "0.05", "--verbose"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("lambda-frac"), Some("0.05"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.get_f64("lambda-frac", 0.0).unwrap(), 0.05);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_stray_positional() {
+        assert!(parse_args(["train", "oops"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn train_on_tiny_synthetic_runs() {
+        let a = args(&["train", "--synthetic", "30,80", "--method", "clg"]);
+        main_with(a).unwrap();
+    }
+
+    #[test]
+    fn path_on_tiny_synthetic_runs() {
+        let a = args(&["path", "--synthetic", "30,60", "--grid", "5"]);
+        main_with(a).unwrap();
+    }
+
+    #[test]
+    fn datagen_roundtrip() {
+        let out = std::env::temp_dir().join("cutgen_cli_datagen.svm");
+        let a = args(&[
+            "datagen",
+            "--kind",
+            "sparse",
+            "--n",
+            "50",
+            "--p",
+            "200",
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        main_with(a).unwrap();
+        let b = args(&[
+            "train",
+            "--data",
+            out.to_str().unwrap(),
+            "--method",
+            "clg",
+            "--lambda-frac",
+            "0.05",
+        ]);
+        main_with(b).unwrap();
+        std::fs::remove_file(out).ok();
+    }
+}

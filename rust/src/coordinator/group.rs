@@ -1,0 +1,314 @@
+//! Column generation on *groups* for the Group-SVM LP (§2.4).
+//!
+//! The restricted model brings in whole groups: each included group `g`
+//! contributes its L∞-bound variable `v_g` (cost λ), the coefficient
+//! halves `β⁺_j, β⁻_j` for `j ∈ I_g` (cost 0), and the box rows
+//! `v_g − β⁺_j − β⁻_j ≥ 0`. Pricing a left-out group uses eq. (17):
+//! `r̄_g = λ − Σ_{j∈I_g} |q_j|` with `q = Xᵀ(y∘π)` — the same backend
+//! hot path as L1-SVM.
+
+use crate::backend::Backend;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::fom::objective::hinge_loss_support;
+use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
+
+/// Restricted-groups Group-SVM LP.
+pub struct RestrictedGroup<'g> {
+    solver: SimplexSolver,
+    lambda: f64,
+    groups: &'g [Vec<usize>],
+    /// group g → whether included.
+    in_g: Vec<bool>,
+    /// included groups in insertion order.
+    g_list: Vec<usize>,
+    /// per included feature j: (β⁺ id, β⁻ id).
+    beta_vars: Vec<Option<(VarId, VarId)>>,
+    /// v_g variable per included group (aligned with `g_list`).
+    vg_vars: Vec<VarId>,
+    b0: VarId,
+    /// margin row per sample (built for all n once).
+    n: usize,
+}
+
+impl<'g> RestrictedGroup<'g> {
+    /// Build with margin rows for all samples and the given initial groups.
+    pub fn new(ds: &Dataset, groups: &'g [Vec<usize>], lambda: f64, g_init: &[usize]) -> Self {
+        let n = ds.n();
+        let mut model = LpModel::new();
+        let b0 = model.add_col_free(0.0, &[]);
+        let mut xi = Vec::with_capacity(n);
+        for _ in 0..n {
+            xi.push(model.add_col(1.0, 0.0, f64::INFINITY, &[]));
+        }
+        for i in 0..n {
+            model.add_row(1.0, f64::INFINITY, &[(xi[i], 1.0), (b0, ds.y[i])]);
+        }
+        let mut me = Self {
+            solver: SimplexSolver::new(model),
+            lambda,
+            groups,
+            in_g: vec![false; groups.len()],
+            g_list: Vec::new(),
+            vg_vars: Vec::new(),
+            beta_vars: vec![None; ds.p()],
+            b0,
+            n,
+        };
+        me.add_groups(ds, g_init);
+        me
+    }
+
+    /// Included groups (insertion order).
+    pub fn g_set(&self) -> &[usize] {
+        &self.g_list
+    }
+
+    /// Bring groups into the model.
+    pub fn add_groups(&mut self, ds: &Dataset, gs: &[usize]) {
+        for &g in gs {
+            if self.in_g[g] {
+                continue;
+            }
+            self.in_g[g] = true;
+            self.g_list.push(g);
+            let vg = self.solver.add_col(self.lambda, 0.0, f64::INFINITY, &[]);
+            self.vg_vars.push(vg);
+            for &j in &self.groups[g] {
+                // margin-row coefficients of β⁺_j / β⁻_j
+                let mut pos = Vec::new();
+                let mut neg = Vec::new();
+                for (i, v) in ds.x.col_entries(j) {
+                    if v != 0.0 {
+                        pos.push((i, ds.y[i] * v));
+                        neg.push((i, -ds.y[i] * v));
+                    }
+                }
+                let bp = self.solver.add_col(0.0, 0.0, f64::INFINITY, &pos);
+                let bm = self.solver.add_col(0.0, 0.0, f64::INFINITY, &neg);
+                // box row: v_g − β⁺_j − β⁻_j ≥ 0
+                self.solver
+                    .add_row(0.0, f64::INFINITY, &[(vg, 1.0), (bp, -1.0), (bm, -1.0)]);
+                self.beta_vars[j] = Some((bp, bm));
+            }
+        }
+    }
+
+    /// Change λ in place (costs of the v_g variables); keeps the basis
+    /// for primal warm starts along a regularization path.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+        for &vg in &self.vg_vars {
+            self.solver.set_col_cost(vg, lambda);
+        }
+    }
+
+    /// Solve (warm-started).
+    pub fn solve(&mut self) -> Status {
+        self.solver.solve()
+    }
+
+    /// Restricted objective.
+    pub fn objective(&self) -> f64 {
+        self.solver.objective()
+    }
+
+    /// Cumulative simplex iterations.
+    pub fn simplex_iters(&self) -> usize {
+        self.solver.stats.primal_iters + self.solver.stats.dual_iters
+    }
+
+    /// Coefficients on included groups plus intercept.
+    pub fn beta_support(&self) -> (Vec<(usize, f64)>, f64) {
+        let mut out = Vec::new();
+        for &g in &self.g_list {
+            for &j in &self.groups[g] {
+                if let Some((bp, bm)) = self.beta_vars[j] {
+                    let b = self.solver.col_value(bp) - self.solver.col_value(bm);
+                    if b != 0.0 {
+                        out.push((j, b));
+                    }
+                }
+            }
+        }
+        (out, self.solver.col_value(self.b0))
+    }
+
+    /// Margin duals π (rows 0..n are the margin rows).
+    pub fn margin_duals(&self) -> Vec<f64> {
+        (0..self.n).map(|r| self.solver.row_dual(r)).collect()
+    }
+
+    /// Price left-out groups (eq. 17): returns `(g, violation)` with
+    /// violation `= Σ_{j∈I_g} |q_j| − λ > ε`.
+    pub fn price_groups(&self, ds: &Dataset, backend: &dyn Backend, eps: f64) -> Vec<(usize, f64)> {
+        let pi = self.margin_duals();
+        let v: Vec<f64> = pi.iter().zip(&ds.y).map(|(p, y)| p * y).collect();
+        let mut q = vec![0.0; ds.p()];
+        backend.xtv(&v, &mut q);
+        let mut out = Vec::new();
+        for (g, members) in self.groups.iter().enumerate() {
+            if !self.in_g[g] {
+                let score: f64 = members.iter().map(|&j| q[j].abs()).sum();
+                let viol = score - self.lambda;
+                if viol > eps {
+                    out.push((g, viol));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Initial groups at λ_max via eq. (19).
+pub fn initial_groups(ds: &Dataset, groups: &[Vec<usize>], g0: usize) -> Vec<usize> {
+    let q = crate::coordinator::path::lambda_max_scores(ds);
+    let scores: Vec<f64> = groups.iter().map(|g| g.iter().map(|&j| q[j].abs()).sum()).collect();
+    let mut idx: Vec<usize> = (0..groups.len()).collect();
+    idx.sort_unstable_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(g0.min(groups.len()));
+    idx
+}
+
+/// Column generation for Group-SVM (the CG loop of §2.4).
+pub fn group_column_generation(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    groups: &[Vec<usize>],
+    lambda: f64,
+    g_init: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
+    let mut rg = RestrictedGroup::new(ds, groups, lambda, g_init);
+    let mut stats = GenStats { cols_added: g_init.len(), ..Default::default() };
+    for _ in 0..params.max_rounds {
+        stats.rounds += 1;
+        let st = rg.solve();
+        debug_assert_eq!(st, Status::Optimal);
+        let mut viol = rg.price_groups(ds, backend, params.eps);
+        if viol.is_empty() {
+            break;
+        }
+        if params.max_cols_per_round > 0 && viol.len() > params.max_cols_per_round {
+            viol.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            viol.truncate(params.max_cols_per_round);
+        }
+        let add: Vec<usize> = viol.into_iter().map(|(g, _)| g).collect();
+        stats.cols_added += add.len();
+        rg.add_groups(ds, &add);
+    }
+    stats.simplex_iters = rg.simplex_iters();
+
+    let (support, beta0) = rg.beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols_nz, &vals, beta0);
+    let pen: f64 = groups
+        .iter()
+        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
+        .sum();
+    let mut cols = rg.g_set().to_vec();
+    cols.sort_unstable();
+    SvmSolution {
+        beta,
+        beta0,
+        objective: hinge + lambda * pen,
+        stats,
+        cols, // group indices here
+        rows: (0..ds.n()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::{generate_group, GroupSpec};
+    use crate::rng::Xoshiro256;
+
+    fn setup(seed: u64) -> (crate::data::synthetic::GroupDataset, f64) {
+        let spec = GroupSpec {
+            n: 40,
+            n_groups: 15,
+            group_size: 4,
+            k0_groups: 3,
+            rho: 0.2,
+            standardize: true,
+        };
+        let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(seed));
+        let lam = 0.1 * gd.data.lambda_max_group(&gd.groups);
+        (gd, lam)
+    }
+
+    fn full_objective(gd: &crate::data::synthetic::GroupDataset, lam: f64) -> f64 {
+        let all: Vec<usize> = (0..gd.groups.len()).collect();
+        let mut rg = RestrictedGroup::new(&gd.data, &gd.groups, lam, &all);
+        assert_eq!(rg.solve(), Status::Optimal);
+        rg.objective()
+    }
+
+    #[test]
+    fn group_cg_matches_full_lp() {
+        let (gd, lam) = setup(121);
+        let backend = NativeBackend::new(&gd.data.x);
+        let full = full_objective(&gd, lam);
+        let params = GenParams { eps: 1e-6, ..Default::default() };
+        let sol =
+            group_column_generation(&gd.data, &backend, &gd.groups, lam, &[0], &params);
+        assert!(
+            (sol.objective - full).abs() / full.max(1e-9) < 1e-5,
+            "cg {} full {}",
+            sol.objective,
+            full
+        );
+        assert!(sol.cols.len() <= gd.groups.len());
+    }
+
+    #[test]
+    fn group_structure_in_solution() {
+        let (gd, lam) = setup(122);
+        let backend = NativeBackend::new(&gd.data.x);
+        let sol = group_column_generation(
+            &gd.data,
+            &backend,
+            &gd.groups,
+            lam,
+            &initial_groups(&gd.data, &gd.groups, 3),
+            &GenParams { eps: 1e-6, ..Default::default() },
+        );
+        // groups are either fully zero or have at least one active member;
+        // informative groups should hold most mass
+        let mass = |g: &Vec<usize>| g.iter().map(|&j| sol.beta[j].abs()).sum::<f64>();
+        let info: f64 = gd.groups[..3].iter().map(mass).sum();
+        let noise: f64 = gd.groups[3..].iter().map(mass).sum();
+        assert!(info > noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn lambda_above_group_max_gives_zero() {
+        let (gd, _) = setup(123);
+        let lam = 1.01 * gd.data.lambda_max_group(&gd.groups);
+        let backend = NativeBackend::new(&gd.data.x);
+        let sol = group_column_generation(
+            &gd.data,
+            &backend,
+            &gd.groups,
+            lam,
+            &[0, 1],
+            &GenParams::default(),
+        );
+        assert_eq!(sol.support_size(), 0);
+    }
+
+    #[test]
+    fn initial_groups_prefer_informative() {
+        let (gd, _) = setup(124);
+        let init = initial_groups(&gd.data, &gd.groups, 4);
+        let hits = init.iter().filter(|&&g| g < 3).count();
+        assert!(hits >= 2, "init {init:?}");
+    }
+}

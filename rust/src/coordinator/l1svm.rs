@@ -1,0 +1,515 @@
+//! Column and constraint generation for the L1-SVM LP (§2.2–2.3).
+//!
+//! [`RestrictedL1`] owns the restricted model `M_{ℓ1}(I, J)` (Problem 13)
+//! on top of the warm-started simplex; the three driver functions
+//! implement the paper's Algorithms 1, 3 and 4. Pricing of left-out
+//! columns runs through a [`Backend`] (`q = Xᵀ(y∘π)`, eq. 14 — the O(np)
+//! hot path), pricing of left-out constraints uses the working-set margin
+//! kernel (`Xβ` restricted to J).
+
+use crate::backend::Backend;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::fom::objective::hinge_loss_support;
+use crate::fom::screening::top_k_by_abs;
+use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
+
+/// The restricted-columns-and-constraints L1-SVM LP `M_{ℓ1}(I, J)`.
+pub struct RestrictedL1 {
+    solver: SimplexSolver,
+    lambda: f64,
+    /// Sample index handled by LP row position k.
+    rows_i: Vec<usize>,
+    /// sample i → LP row position (None when i ∉ I).
+    row_pos: Vec<Option<usize>>,
+    /// Feature index handled by column-pair position t.
+    cols_j: Vec<usize>,
+    /// feature j → column-pair position.
+    pos_j: Vec<Option<usize>>,
+    /// Hinge slack variables ξ (one per LP row position).
+    xi: Vec<VarId>,
+    /// β⁺ / β⁻ variable ids per column-pair position.
+    bp: Vec<VarId>,
+    bm: Vec<VarId>,
+    /// Intercept variable.
+    b0: VarId,
+}
+
+impl RestrictedL1 {
+    /// Build `M_{ℓ1}(I, J)` for the given working sets.
+    pub fn new(ds: &Dataset, lambda: f64, i_set: &[usize], j_set: &[usize]) -> Self {
+        let n = ds.n();
+        let p = ds.p();
+        let mut model = LpModel::new();
+        let b0 = model.add_col_free(0.0, &[]);
+        let mut me = Self {
+            solver: SimplexSolver::new(model),
+            lambda,
+            rows_i: Vec::new(),
+            row_pos: vec![None; n],
+            cols_j: Vec::new(),
+            pos_j: vec![None; p],
+            xi: Vec::new(),
+            bp: Vec::new(),
+            bm: Vec::new(),
+            b0,
+        };
+        me.add_samples(ds, i_set);
+        me.add_features(ds, j_set);
+        me
+    }
+
+    /// Current working set I (sample indices, insertion order).
+    pub fn i_set(&self) -> &[usize] {
+        &self.rows_i
+    }
+
+    /// Current working set J (feature indices, insertion order).
+    pub fn j_set(&self) -> &[usize] {
+        &self.cols_j
+    }
+
+    /// Bring samples into I: appends the margin rows
+    /// `ξ_i + Σ_{j∈J} y_i x_ij (β⁺_j − β⁻_j) + y_i β₀ ≥ 1`.
+    pub fn add_samples(&mut self, ds: &Dataset, samples: &[usize]) {
+        for &i in samples {
+            if self.row_pos[i].is_some() {
+                continue;
+            }
+            self.row_pos[i] = Some(self.rows_i.len());
+            let yi = ds.y[i];
+            let xi = self.solver.add_col(1.0, 0.0, f64::INFINITY, &[]);
+            let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(2 + 2 * self.cols_j.len());
+            coefs.push((xi, 1.0));
+            coefs.push((self.b0, yi));
+            for (t, &j) in self.cols_j.iter().enumerate() {
+                let v = ds.x.get(i, j);
+                if v != 0.0 {
+                    coefs.push((self.bp[t], yi * v));
+                    coefs.push((self.bm[t], -yi * v));
+                }
+            }
+            self.solver.add_row(1.0, f64::INFINITY, &coefs);
+            self.rows_i.push(i);
+            self.xi.push(xi);
+        }
+    }
+
+    /// Bring features into J: appends the β⁺/β⁻ column pair with
+    /// coefficients `±y_i x_ij` on the existing margin rows.
+    pub fn add_features(&mut self, ds: &Dataset, features: &[usize]) {
+        for &j in features {
+            if self.pos_j[j].is_some() {
+                continue;
+            }
+            let entries = ds.x.col_entries(j);
+            let mut pos_coefs = Vec::new();
+            let mut neg_coefs = Vec::new();
+            for (i, v) in entries {
+                if v == 0.0 {
+                    continue;
+                }
+                if let Some(r) = self.row_pos[i] {
+                    let yi = ds.y[i];
+                    pos_coefs.push((r, yi * v));
+                    neg_coefs.push((r, -yi * v));
+                }
+            }
+            let bp = self.solver.add_col(self.lambda, 0.0, f64::INFINITY, &pos_coefs);
+            let bm = self.solver.add_col(self.lambda, 0.0, f64::INFINITY, &neg_coefs);
+            self.pos_j[j] = Some(self.cols_j.len());
+            self.cols_j.push(j);
+            self.bp.push(bp);
+            self.bm.push(bm);
+        }
+    }
+
+    /// Change λ in place (costs of all β halves); keeps the basis, so the
+    /// next solve warm-starts primal — used by the path driver.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+        for t in 0..self.cols_j.len() {
+            self.solver.set_col_cost(self.bp[t], lambda);
+            self.solver.set_col_cost(self.bm[t], lambda);
+        }
+    }
+
+    /// Solve the restricted LP (warm-started).
+    pub fn solve(&mut self) -> Status {
+        self.solver.solve()
+    }
+
+    /// Restricted-LP objective.
+    pub fn objective(&self) -> f64 {
+        self.solver.objective()
+    }
+
+    /// Simplex iterations so far (primal + dual, cumulative).
+    pub fn simplex_iters(&self) -> usize {
+        self.solver.stats.primal_iters + self.solver.stats.dual_iters
+    }
+
+    /// Coefficients on the working set: `(j, β_j)` pairs plus intercept.
+    pub fn beta_support(&self) -> (Vec<(usize, f64)>, f64) {
+        let mut out = Vec::with_capacity(self.cols_j.len());
+        for (t, &j) in self.cols_j.iter().enumerate() {
+            let b = self.solver.col_value(self.bp[t]) - self.solver.col_value(self.bm[t]);
+            if b != 0.0 {
+                out.push((j, b));
+            }
+        }
+        (out, self.solver.col_value(self.b0))
+    }
+
+    /// Dual vector π scattered over all n samples (zero off I).
+    pub fn duals_full(&self, n: usize) -> Vec<f64> {
+        let mut pi = vec![0.0; n];
+        for (r, &i) in self.rows_i.iter().enumerate() {
+            pi[i] = self.solver.row_dual(r);
+        }
+        pi
+    }
+
+    /// Price left-out columns (eq. 14): returns `(j, |q_j| − λ)` for every
+    /// `j ∉ J` violating by more than ε, i.e. reduced cost < −ε.
+    pub fn price_columns(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        eps: f64,
+    ) -> Vec<(usize, f64)> {
+        let n = ds.n();
+        let pi = self.duals_full(n);
+        // v = y ∘ π
+        let v: Vec<f64> = pi.iter().zip(&ds.y).map(|(p, y)| p * y).collect();
+        let mut q = vec![0.0; ds.p()];
+        backend.xtv(&v, &mut q);
+        let mut out = Vec::new();
+        for (j, &qj) in q.iter().enumerate() {
+            if self.pos_j[j].is_none() {
+                let viol = qj.abs() - self.lambda;
+                if viol > eps {
+                    out.push((j, viol));
+                }
+            }
+        }
+        out
+    }
+
+    /// Price left-out constraints: `π̄_i = 1 − y_i(x_iᵀβ + β₀)`; returns
+    /// `(i, π̄_i)` for every `i ∉ I` with `π̄_i > ε`.
+    pub fn price_rows(&self, ds: &Dataset, eps: f64) -> Vec<(usize, f64)> {
+        let (support, b0) = self.beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let mut xb = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&cols, &vals, &mut xb);
+        let mut out = Vec::new();
+        for i in 0..ds.n() {
+            if self.row_pos[i].is_none() {
+                let rc = 1.0 - ds.y[i] * (xb[i] + b0);
+                if rc > eps {
+                    out.push((i, rc));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Expand a priced violation list into the indices to add, respecting a
+/// per-round cap (keeps the most violated).
+fn select_violators(mut priced: Vec<(usize, f64)>, cap: usize) -> Vec<usize> {
+    if cap > 0 && priced.len() > cap {
+        priced.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        priced.truncate(cap);
+    }
+    priced.into_iter().map(|(idx, _)| idx).collect()
+}
+
+fn finish(
+    ds: &Dataset,
+    rl1: &RestrictedL1,
+    lambda: f64,
+    stats: GenStats,
+) -> SvmSolution {
+    let (support, beta0) = rl1.beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    // true full-problem objective (hinge over ALL samples)
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols_nz, &vals, beta0);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let mut cols = rl1.j_set().to_vec();
+    cols.sort_unstable();
+    let mut rows = rl1.i_set().to_vec();
+    rows.sort_unstable();
+    SvmSolution {
+        beta,
+        beta0,
+        objective: hinge + lambda * l1,
+        stats,
+        cols,
+        rows,
+    }
+}
+
+/// **Algorithm 1** — column generation for L1-SVM (all n constraints, J
+/// grows from `j_init`).
+pub fn column_generation(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda: f64,
+    j_init: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
+    let all_i: Vec<usize> = (0..ds.n()).collect();
+    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, j_init);
+    let mut stats = GenStats::default();
+    stats.cols_added = j_init.len();
+    for _round in 0..params.max_rounds {
+        stats.rounds += 1;
+        let st = rl1.solve();
+        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
+        let viol = rl1.price_columns(ds, backend, params.eps);
+        if viol.is_empty() {
+            break;
+        }
+        let add = select_violators(viol, params.max_cols_per_round);
+        stats.cols_added += add.len();
+        rl1.add_features(ds, &add);
+    }
+    stats.simplex_iters = rl1.simplex_iters();
+    finish(ds, &rl1, lambda, stats)
+}
+
+/// **Algorithm 3** — constraint generation for L1-SVM (all p columns, I
+/// grows from `i_init`).
+pub fn constraint_generation(
+    ds: &Dataset,
+    lambda: f64,
+    i_init: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
+    let all_j: Vec<usize> = (0..ds.p()).collect();
+    let seed: Vec<usize> = if i_init.is_empty() {
+        (0..ds.n().min(10)).collect()
+    } else {
+        i_init.to_vec()
+    };
+    let mut rl1 = RestrictedL1::new(ds, lambda, &seed, &all_j);
+    let mut stats = GenStats::default();
+    stats.rows_added = seed.len();
+    for _round in 0..params.max_rounds {
+        stats.rounds += 1;
+        let st = rl1.solve();
+        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
+        let viol = rl1.price_rows(ds, params.eps);
+        if viol.is_empty() {
+            break;
+        }
+        let add = select_violators(viol, params.max_rows_per_round);
+        stats.rows_added += add.len();
+        rl1.add_samples(ds, &add);
+    }
+    stats.simplex_iters = rl1.simplex_iters();
+    finish(ds, &rl1, lambda, stats)
+}
+
+/// **Algorithm 4** — combined column-and-constraint generation (both I
+/// and J grow).
+pub fn column_constraint_generation(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda: f64,
+    i_init: &[usize],
+    j_init: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
+    let seed_i: Vec<usize> = if i_init.is_empty() {
+        (0..ds.n().min(10)).collect()
+    } else {
+        i_init.to_vec()
+    };
+    let seed_j: Vec<usize> = if j_init.is_empty() {
+        // correlation fallback: top-10 |x_jᵀy|
+        let mut q = vec![0.0; ds.p()];
+        ds.x.tmatvec(&ds.y, &mut q);
+        top_k_by_abs(&q, 10.min(ds.p()))
+    } else {
+        j_init.to_vec()
+    };
+    let mut rl1 = RestrictedL1::new(ds, lambda, &seed_i, &seed_j);
+    let mut stats = GenStats::default();
+    stats.rows_added = seed_i.len();
+    stats.cols_added = seed_j.len();
+    for _round in 0..params.max_rounds {
+        stats.rounds += 1;
+        let st = rl1.solve();
+        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
+        // Step 3: violated constraints; Step 4: violated columns.
+        let viol_rows = rl1.price_rows(ds, params.eps);
+        let viol_cols = rl1.price_columns(ds, backend, params.eps);
+        if viol_rows.is_empty() && viol_cols.is_empty() {
+            break;
+        }
+        let add_rows = select_violators(viol_rows, params.max_rows_per_round);
+        let add_cols = select_violators(viol_cols, params.max_cols_per_round);
+        stats.rows_added += add_rows.len();
+        stats.cols_added += add_cols.len();
+        rl1.add_samples(ds, &add_rows);
+        rl1.add_features(ds, &add_cols);
+    }
+    stats.simplex_iters = rl1.simplex_iters();
+    finish(ds, &rl1, lambda, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    fn small_ds(n: usize, p: usize, seed: u64) -> Dataset {
+        let spec = SyntheticSpec { n, p, k0: 5.min(p), rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut Xoshiro256::seed_from_u64(seed))
+    }
+
+    /// Reference: solve the FULL L1-SVM LP directly.
+    fn full_lp_objective(ds: &Dataset, lambda: f64) -> f64 {
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        let all_j: Vec<usize> = (0..ds.p()).collect();
+        let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &all_j);
+        assert_eq!(rl1.solve(), Status::Optimal);
+        rl1.objective()
+    }
+
+    #[test]
+    fn column_generation_matches_full_lp() {
+        let ds = small_ds(30, 60, 91);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let backend = NativeBackend::new(&ds.x);
+        let full = full_lp_objective(&ds, lambda);
+        let params = GenParams { eps: 1e-6, ..Default::default() };
+        let sol = column_generation(&ds, &backend, lambda, &[0, 1], &params);
+        assert!(
+            (sol.objective - full).abs() / full.max(1e-9) < 1e-5,
+            "cg {} full {}",
+            sol.objective,
+            full
+        );
+        // only a fraction of columns should have been touched
+        assert!(sol.cols.len() < ds.p(), "working set {} of {}", sol.cols.len(), ds.p());
+    }
+
+    #[test]
+    fn constraint_generation_matches_full_lp() {
+        let ds = small_ds(80, 10, 92);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let full = full_lp_objective(&ds, lambda);
+        let params = GenParams { eps: 1e-6, ..Default::default() };
+        let sol = constraint_generation(&ds, lambda, &[0, 1, 2, 3], &params);
+        assert!(
+            (sol.objective - full).abs() / full.max(1e-9) < 1e-5,
+            "cng {} full {}",
+            sol.objective,
+            full
+        );
+        assert!(sol.rows.len() < ds.n(), "used {} of {} samples", sol.rows.len(), ds.n());
+    }
+
+    #[test]
+    fn combined_generation_matches_full_lp() {
+        let ds = small_ds(60, 40, 93);
+        let lambda = 0.03 * ds.lambda_max_l1();
+        let backend = NativeBackend::new(&ds.x);
+        let full = full_lp_objective(&ds, lambda);
+        let params = GenParams { eps: 1e-6, ..Default::default() };
+        let sol = column_constraint_generation(&ds, &backend, lambda, &[], &[], &params);
+        assert!(
+            (sol.objective - full).abs() / full.max(1e-9) < 1e-5,
+            "clcng {} full {}",
+            sol.objective,
+            full
+        );
+    }
+
+    #[test]
+    fn looser_eps_gives_larger_gap_but_fewer_rounds() {
+        let ds = small_ds(40, 80, 94);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let backend = NativeBackend::new(&ds.x);
+        let tight = column_generation(
+            &ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps: 1e-8, ..Default::default() },
+        );
+        let loose = column_generation(
+            &ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps: 0.5, ..Default::default() },
+        );
+        assert!(loose.objective >= tight.objective - 1e-9);
+        assert!(loose.stats.cols_added <= tight.stats.cols_added);
+    }
+
+    #[test]
+    fn lambda_above_max_gives_zero_solution() {
+        let ds = small_ds(25, 15, 95);
+        let lambda = ds.lambda_max_l1() * 1.01;
+        let backend = NativeBackend::new(&ds.x);
+        let sol = column_generation(&ds, &backend, lambda, &[0, 1], &GenParams::default());
+        assert_eq!(sol.support_size(), 0, "beta must be zero above lambda_max");
+    }
+
+    #[test]
+    fn restricted_lp_duals_in_unit_box() {
+        let ds = small_ds(30, 20, 96);
+        let lambda = 0.1 * ds.lambda_max_l1();
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        let mut rl1 = RestrictedL1::new(&ds, lambda, &all_i, &[0, 1, 2]);
+        assert_eq!(rl1.solve(), Status::Optimal);
+        let pi = rl1.duals_full(ds.n());
+        for (i, &v) in pi.iter().enumerate() {
+            assert!(v >= -1e-7 && v <= 1.0 + 1e-7, "π[{i}] = {v} outside [0,1]");
+        }
+        // complementary slackness structure: Σ y_i π_i = 0 (from the free β₀)
+        let s: f64 = pi.iter().zip(&ds.y).map(|(p, y)| p * y).sum();
+        assert!(s.abs() < 1e-6, "y·π = {s}");
+    }
+
+    #[test]
+    fn support_vectors_have_positive_duals() {
+        let ds = small_ds(40, 12, 97);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        let all_j: Vec<usize> = (0..ds.p()).collect();
+        let mut rl1 = RestrictedL1::new(&ds, lambda, &all_i, &all_j);
+        assert_eq!(rl1.solve(), Status::Optimal);
+        let (support, b0) = rl1.beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let mut xb = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&cols, &vals, &mut xb);
+        let pi = rl1.duals_full(ds.n());
+        for i in 0..ds.n() {
+            let margin = ds.y[i] * (xb[i] + b0);
+            if margin > 1.0 + 1e-6 {
+                // strictly satisfied ⇒ π_i = 0 (complementary slackness)
+                assert!(pi[i].abs() < 1e-6, "i={i} margin {margin} π {}", pi[i]);
+            }
+            if margin < 1.0 - 1e-6 {
+                // violated margin ⇒ ξ_i > 0 ⇒ π_i = 1
+                assert!((pi[i] - 1.0).abs() < 1e-6, "i={i} margin {margin} π {}", pi[i]);
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! **Algorithm 2** — regularization path for L1-SVM with warm-started
+//! column generation (§2.2.2).
+//!
+//! The path starts at `λ_max = max_j Σ_i |x_ij|` where `β* = 0`. The
+//! initial working set is picked by the closed-form reduced costs at
+//! `λ_max` (eq. 10, using the analytic dual `π(λ_max)`), and each step
+//! down the grid reuses the previous step's restricted model, basis and
+//! working set — only the β-costs change, so every re-solve is a primal
+//! warm start.
+
+use crate::backend::Backend;
+use crate::coordinator::l1svm::RestrictedL1;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::fom::objective::hinge_loss_support;
+use crate::fom::screening::top_k_by_abs;
+use crate::simplex::Status;
+
+/// Analytic reduced-cost scores at λ_max (the rhs of eq. 10, second
+/// term): features with the largest |·| are the first to activate.
+pub fn lambda_max_scores(ds: &Dataset) -> Vec<f64> {
+    let (npos, nneg) = ds.class_counts();
+    // dual at λ_max: π_i = N−/N+ on the majority class (+1 if N+ ≥ N−),
+    // 1 on the other (§2.2.2).
+    let (w_pos, w_neg) = if npos >= nneg {
+        (nneg as f64 / npos as f64, 1.0)
+    } else {
+        (1.0, npos as f64 / nneg as f64)
+    };
+    let v: Vec<f64> = ds
+        .y
+        .iter()
+        .map(|&yi| if yi > 0.0 { yi * w_pos } else { yi * w_neg })
+        .collect();
+    let mut q = vec![0.0; ds.p()];
+    ds.x.tmatvec(&v, &mut q);
+    q
+}
+
+/// Initial working set at λ slightly below λ_max: the `j0` features
+/// minimizing the reduced cost (10) = maximizing |q_j|.
+pub fn initial_columns(ds: &Dataset, j0: usize) -> Vec<usize> {
+    let q = lambda_max_scores(ds);
+    top_k_by_abs(&q, j0.min(ds.p()))
+}
+
+/// One solved point on the path.
+#[derive(Clone, Debug)]
+pub struct PathSolution {
+    /// λ value.
+    pub lambda: f64,
+    /// Full-problem objective at this λ.
+    pub objective: f64,
+    /// Support size of β*(λ).
+    pub support: usize,
+    /// Size of the working set J after this step.
+    pub working_set: usize,
+    /// Cumulative generation stats up to and including this step.
+    pub stats: GenStats,
+}
+
+/// A geometric λ grid from λ_max down to `lambda_min` with the given
+/// ratio (paper: 20 values, ratio 0.7).
+pub fn geometric_grid(lambda_max: f64, n_values: usize, ratio: f64) -> Vec<f64> {
+    (0..n_values).map(|k| lambda_max * ratio.powi(k as i32)).collect()
+}
+
+/// Run Algorithm 2 over a decreasing λ grid. Returns one entry per grid
+/// point plus the final solution object at the last λ.
+pub fn regularization_path(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambdas: &[f64],
+    j0: usize,
+    params: &GenParams,
+) -> (Vec<PathSolution>, SvmSolution) {
+    assert!(!lambdas.is_empty());
+    debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let all_i: Vec<usize> = (0..ds.n()).collect();
+    let init = initial_columns(ds, j0);
+    let mut rl1 = RestrictedL1::new(ds, lambdas[0], &all_i, &init);
+    let mut stats = GenStats { cols_added: init.len(), ..Default::default() };
+    let mut out = Vec::with_capacity(lambdas.len());
+
+    for &lambda in lambdas {
+        rl1.set_lambda(lambda);
+        // column generation at this λ (warm-started from previous λ)
+        for _ in 0..params.max_rounds {
+            stats.rounds += 1;
+            let st = rl1.solve();
+            debug_assert_eq!(st, Status::Optimal);
+            let mut viol = rl1.price_columns(ds, backend, params.eps);
+            if viol.is_empty() {
+                break;
+            }
+            if params.max_cols_per_round > 0 && viol.len() > params.max_cols_per_round {
+                viol.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                viol.truncate(params.max_cols_per_round);
+            }
+            let add: Vec<usize> = viol.into_iter().map(|(j, _)| j).collect();
+            stats.cols_added += add.len();
+            rl1.add_features(ds, &add);
+        }
+        stats.simplex_iters = rl1.simplex_iters();
+        let (support, b0) = rl1.beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
+        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        out.push(PathSolution {
+            lambda,
+            objective: hinge + lambda * l1,
+            support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+            working_set: rl1.j_set().len(),
+            stats,
+        });
+    }
+
+    // materialize the final solution
+    let (support, beta0) = rl1.beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let mut cols = rl1.j_set().to_vec();
+    cols.sort_unstable();
+    let last = out.last().unwrap();
+    let final_sol = SvmSolution {
+        beta,
+        beta0,
+        objective: last.objective,
+        stats,
+        cols,
+        rows: (0..ds.n()).collect(),
+    };
+    (out, final_sol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::l1svm::column_generation;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    fn ds() -> Dataset {
+        let spec = SyntheticSpec { n: 40, p: 80, k0: 5, rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut Xoshiro256::seed_from_u64(111))
+    }
+
+    #[test]
+    fn grid_is_geometric() {
+        let g = geometric_grid(10.0, 4, 0.5);
+        assert_eq!(g, vec![10.0, 5.0, 2.5, 1.25]);
+    }
+
+    #[test]
+    fn initial_columns_match_analytic_scores() {
+        let d = ds();
+        let cols = initial_columns(&d, 10);
+        assert_eq!(cols.len(), 10);
+        // informative features (0..5) should be heavily represented
+        let hits = cols.iter().filter(|&&j| j < 5).count();
+        assert!(hits >= 4, "only {hits}/5 informative in init set");
+    }
+
+    #[test]
+    fn path_objectives_match_independent_solves() {
+        let d = ds();
+        let backend = NativeBackend::new(&d.x);
+        let lmax = d.lambda_max_l1();
+        let grid = geometric_grid(lmax, 6, 0.6);
+        let params = GenParams { eps: 1e-6, ..Default::default() };
+        let (path, final_sol) = regularization_path(&d, &backend, &grid, 5, &params);
+        assert_eq!(path.len(), 6);
+        // first point: λ = λ_max → zero solution, objective = n·hinge(0) = n
+        assert_eq!(path[0].support, 0);
+        assert!((path[0].objective - d.n() as f64).abs() < 1e-6);
+        // each point must match a from-scratch column generation solve
+        for pt in &path[1..] {
+            let direct = column_generation(&d, &backend, pt.lambda, &[0, 1], &params);
+            assert!(
+                (pt.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-5,
+                "λ={}: path {} direct {}",
+                pt.lambda,
+                pt.objective,
+                direct.objective
+            );
+        }
+        // objective decreases along the path (λ decreasing)
+        for w in path.windows(2) {
+            assert!(w[1].objective <= w[0].objective + 1e-6);
+        }
+        assert_eq!(final_sol.objective, path.last().unwrap().objective);
+    }
+
+    #[test]
+    fn working_set_grows_monotonically() {
+        let d = ds();
+        let backend = NativeBackend::new(&d.x);
+        let grid = geometric_grid(d.lambda_max_l1(), 5, 0.5);
+        let (path, _) = regularization_path(&d, &backend, &grid, 5, &GenParams::default());
+        for w in path.windows(2) {
+            assert!(w[1].working_set >= w[0].working_set);
+        }
+    }
+}

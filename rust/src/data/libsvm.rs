@@ -1,0 +1,183 @@
+//! Reader / writer for the libsvm text format (`label idx:val idx:val …`,
+//! 1-based feature indices), the lingua franca for the sparse datasets the
+//! paper's Table 3 uses (rcv1.binary, real-sim).
+
+use crate::data::{Dataset, Design};
+use crate::sparse::Coo;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Parse errors for the libsvm format.
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: bad label {token:?}")]
+    BadLabel { line: usize, token: String },
+    #[error("line {line}: bad feature token {token:?}")]
+    BadFeature { line: usize, token: String },
+    #[error("line {line}: feature index must be >= 1")]
+    ZeroIndex { line: usize },
+}
+
+/// Parse a libsvm-format reader into a sparse [`Dataset`]. Labels are
+/// mapped to ±1 (any value > 0 → +1). `min_cols` lets callers force the
+/// feature-space width when a split file doesn't mention trailing features.
+pub fn read<R: BufRead>(reader: R, min_cols: usize) -> Result<Dataset, LibsvmError> {
+    let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label_tok = toks.next().unwrap();
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| LibsvmError::BadLabel { line: lineno + 1, token: label_tok.into() })?;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        for t in toks {
+            if t.starts_with('#') {
+                break;
+            }
+            let (idx_s, val_s) = t
+                .split_once(':')
+                .ok_or_else(|| LibsvmError::BadFeature { line: lineno + 1, token: t.into() })?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|_| LibsvmError::BadFeature { line: lineno + 1, token: t.into() })?;
+            if idx == 0 {
+                return Err(LibsvmError::ZeroIndex { line: lineno + 1 });
+            }
+            let val: f64 = val_s
+                .parse()
+                .map_err(|_| LibsvmError::BadFeature { line: lineno + 1, token: t.into() })?;
+            max_col = max_col.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push((label, feats));
+    }
+    let p = max_col.max(min_cols);
+    let mut coo = Coo::new(rows.len(), p);
+    let mut y = Vec::with_capacity(rows.len());
+    for (i, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(label);
+        for (j, v) in feats {
+            coo.push(i, j, v);
+        }
+    }
+    Ok(Dataset { x: Design::sparse(coo.to_csr()), y })
+}
+
+/// Read a libsvm file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P, min_cols: usize) -> Result<Dataset, LibsvmError> {
+    let f = std::fs::File::open(path)?;
+    read(std::io::BufReader::new(f), min_cols)
+}
+
+/// Write a (sparse or dense) dataset in libsvm format.
+pub fn write_file<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<(), LibsvmError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.n() {
+        write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        match &ds.x {
+            Design::Dense(m) => {
+                for (j, v) in m.row(i).iter().enumerate() {
+                    if *v != 0.0 {
+                        write!(w, " {}:{}", j + 1, v)?;
+                    }
+                }
+            }
+            Design::Sparse { csr, .. } => {
+                let (idx, val) = csr.row(i);
+                for (j, v) in idx.iter().zip(val) {
+                    write!(w, " {}:{}", j + 1, v)?;
+                }
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:-2\n-1 2:1.0\n";
+        let ds = read(Cursor::new(text), 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.p(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.get(0, 0), 0.5);
+        assert_eq!(ds.x.get(0, 2), -2.0);
+        assert_eq!(ds.x.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        let text = "# header\n\n+1 1:1\n";
+        let ds = read(Cursor::new(text), 0).unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn parse_respects_min_cols() {
+        let ds = read(Cursor::new("+1 1:1\n"), 10).unwrap();
+        assert_eq!(ds.p(), 10);
+    }
+
+    #[test]
+    fn labels_mapped_to_pm1() {
+        let ds = read(Cursor::new("3 1:1\n0 1:1\n-2 1:1\n"), 0).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(matches!(
+            read(Cursor::new("abc 1:1\n"), 0),
+            Err(LibsvmError::BadLabel { line: 1, .. })
+        ));
+        assert!(matches!(
+            read(Cursor::new("+1 nonsense\n"), 0),
+            Err(LibsvmError::BadFeature { line: 1, .. })
+        ));
+        assert!(matches!(
+            read(Cursor::new("+1 0:2\n"), 0),
+            Err(LibsvmError::ZeroIndex { line: 1 })
+        ));
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let spec = crate::data::synthetic::SparseTextSpec {
+            n: 20,
+            p: 50,
+            density: 0.1,
+            k0: 5,
+            zipf: 1.0,
+        };
+        let ds = crate::data::synthetic::generate_sparse_text(&spec, &mut rng);
+        let path = std::env::temp_dir().join("cutgen_libsvm_roundtrip.txt");
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, ds.p()).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.y, ds.y);
+        for i in 0..ds.n() {
+            for j in 0..ds.p() {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,401 @@
+//! Datasets: design-matrix abstraction, synthetic generators, and the
+//! libsvm text format.
+//!
+//! * [`Design`] — a dense **or** sparse feature matrix behind one set of
+//!   operations; every coordinator and first-order method is written
+//!   against it, so Table 3's sparse runs share all code with the dense
+//!   experiments.
+//! * [`synthetic`] — the paper's generators (§5.1.1 equicorrelated
+//!   Gaussian two-class model; §5.2 group version; sparse text-like data
+//!   standing in for rcv1 / real-sim).
+//! * [`libsvm`] — reader/writer for the standard `label idx:val ...`
+//!   format.
+
+pub mod libsvm;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+use crate::sparse::{Csc, Csr};
+
+/// A binary-classification dataset: features `x` (n × p) and labels
+/// `y ∈ {−1, +1}ⁿ`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Design,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Number of features.
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// L2-standardize every feature column in place (paper's preprocessing).
+    pub fn standardize(&mut self) {
+        self.x.standardize_columns();
+    }
+
+    /// λ_max for the L1-SVM problem: `max_j Σ_i |x_ij|` (§2.2.2).
+    ///
+    /// For λ ≥ λ_max the all-zero coefficient vector is optimal.
+    pub fn lambda_max_l1(&self) -> f64 {
+        let mut colsums = vec![0.0; self.p()];
+        self.x.abs_col_sums(&mut colsums);
+        colsums.iter().fold(0.0f64, |m, &v| m.max(v))
+    }
+
+    /// λ_max for the Group-SVM problem: `max_g Σ_{j∈g} Σ_i |x_ij|` (eq. 18).
+    pub fn lambda_max_group(&self, groups: &[Vec<usize>]) -> f64 {
+        let mut colsums = vec![0.0; self.p()];
+        self.x.abs_col_sums(&mut colsums);
+        groups
+            .iter()
+            .map(|g| g.iter().map(|&j| colsums[j]).sum::<f64>())
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Counts of the two classes `(N₊, N₋)`.
+    pub fn class_counts(&self) -> (usize, usize) {
+        let pos = self.y.iter().filter(|&&v| v > 0.0).count();
+        (pos, self.y.len() - pos)
+    }
+}
+
+/// Dense or sparse design matrix with a unified operation set.
+#[derive(Clone, Debug)]
+pub enum Design {
+    /// Row-major dense storage.
+    Dense(Matrix),
+    /// Dual-layout sparse storage (CSR for row ops, CSC for column ops).
+    Sparse { csr: Csr, csc: Csc },
+}
+
+impl Design {
+    /// Wrap a dense matrix.
+    pub fn dense(m: Matrix) -> Self {
+        Design::Dense(m)
+    }
+
+    /// Wrap a CSR matrix (builds the CSC twin).
+    pub fn sparse(csr: Csr) -> Self {
+        let csc = csr.to_csc();
+        Design::Sparse { csr, csc }
+    }
+
+    /// Number of rows (samples).
+    pub fn rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows(),
+            Design::Sparse { csr, .. } => csr.rows,
+        }
+    }
+
+    /// Number of columns (features).
+    pub fn cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.cols(),
+            Design::Sparse { csr, .. } => csr.cols,
+        }
+    }
+
+    /// Whether the matrix is stored sparse.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Design::Sparse { .. })
+    }
+
+    /// Stored nonzeros (= n·p for dense).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows() * m.cols(),
+            Design::Sparse { csr, .. } => csr.nnz(),
+        }
+    }
+
+    /// Single entry (O(1) dense, O(log nnz_col) sparse).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Design::Dense(m) => m.get(i, j),
+            Design::Sparse { csc, .. } => {
+                let (idx, val) = csc.col(j);
+                match idx.binary_search(&i) {
+                    Ok(k) => val[k],
+                    Err(_) => 0.0,
+                }
+            }
+        }
+    }
+
+    /// `out = X v` (margins).
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.matvec(v, out),
+            Design::Sparse { csr, .. } => csr.matvec(v, out),
+        }
+    }
+
+    /// `out = Xᵀ v` (pricing / gradients).
+    pub fn tmatvec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.tmatvec(v, out),
+            Design::Sparse { csr, .. } => csr.tmatvec(v, out),
+        }
+    }
+
+    /// `out = Xᵀ v` over a row subset (`rows[k]` weighted by `v[k]`).
+    pub fn tmatvec_rows(&self, rows: &[usize], v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.tmatvec_rows(rows, v, out),
+            Design::Sparse { csr, .. } => csr.tmatvec_rows(rows, v, out),
+        }
+    }
+
+    /// `out = Σ_k β[k] · X[:, cols[k]]` — margins when β is supported on a
+    /// column subset (column generation's working set J).
+    pub fn matvec_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), beta.len());
+        assert_eq!(out.len(), self.rows());
+        out.fill(0.0);
+        match self {
+            Design::Dense(m) => {
+                for i in 0..m.rows() {
+                    out[i] = m.row_dot_cols(i, cols, beta);
+                }
+            }
+            Design::Sparse { csc, .. } => {
+                for (k, &j) in cols.iter().enumerate() {
+                    if beta[k] != 0.0 {
+                        csc.col_axpy(j, beta[k], out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// `out += alpha · X[:, j]` (incremental margin updates in block CD).
+    pub fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => {
+                for i in 0..m.rows() {
+                    out[i] += alpha * m.get(i, j);
+                }
+            }
+            Design::Sparse { csc, .. } => csc.col_axpy(j, alpha, out),
+        }
+    }
+
+    /// Column `j` as `(row, value)` pairs (dense: all rows).
+    pub fn col_entries(&self, j: usize) -> Vec<(usize, f64)> {
+        match self {
+            Design::Dense(m) => (0..m.rows()).map(|i| (i, m.get(i, j))).collect(),
+            Design::Sparse { csc, .. } => {
+                let (idx, val) = csc.col(j);
+                idx.iter().copied().zip(val.iter().copied()).collect()
+            }
+        }
+    }
+
+    /// Dot of column `j` with a dense vector over all rows.
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => {
+                let mut s = 0.0;
+                for i in 0..m.rows() {
+                    s += m.get(i, j) * v[i];
+                }
+                s
+            }
+            Design::Sparse { csc, .. } => csc.col_dot(j, v),
+        }
+    }
+
+    /// Per-column sums of absolute values (λ_max computations).
+    pub fn abs_col_sums(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cols());
+        out.fill(0.0);
+        match self {
+            Design::Dense(m) => {
+                for i in 0..m.rows() {
+                    for (j, v) in m.row(i).iter().enumerate() {
+                        out[j] += v.abs();
+                    }
+                }
+            }
+            Design::Sparse { csr, .. } => {
+                for (j, v) in csr.indices.iter().zip(&csr.data) {
+                    out[*j] += v.abs();
+                }
+            }
+        }
+    }
+
+    /// L2-standardize columns in place.
+    pub fn standardize_columns(&mut self) {
+        match self {
+            Design::Dense(m) => {
+                m.standardize_columns();
+            }
+            Design::Sparse { csr, csc } => {
+                let norms = csr.col_norms();
+                let scale: Vec<f64> =
+                    norms.iter().map(|&n| if n > 0.0 { 1.0 / n } else { 1.0 }).collect();
+                csr.scale_columns(&scale);
+                *csc = csr.to_csc();
+            }
+        }
+    }
+
+    /// Restrict to a subset of rows (used by the subsampling heuristics).
+    pub fn subset_rows(&self, rows: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => {
+                let mut out = Matrix::zeros(rows.len(), m.cols());
+                for (k, &i) in rows.iter().enumerate() {
+                    out.row_mut(k).copy_from_slice(m.row(i));
+                }
+                Design::Dense(out)
+            }
+            Design::Sparse { csr, .. } => {
+                let mut coo = crate::sparse::Coo::new(rows.len(), csr.cols);
+                for (k, &i) in rows.iter().enumerate() {
+                    let (idx, val) = csr.row(i);
+                    for (j, v) in idx.iter().zip(val) {
+                        coo.push(k, *j, *v);
+                    }
+                }
+                Design::sparse(coo.to_csr())
+            }
+        }
+    }
+
+    /// Restrict to a subset of columns (correlation screening).
+    pub fn subset_cols(&self, cols: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => {
+                let mut out = Matrix::zeros(m.rows(), cols.len());
+                for i in 0..m.rows() {
+                    let src = m.row(i);
+                    let dst = out.row_mut(i);
+                    for (k, &j) in cols.iter().enumerate() {
+                        dst[k] = src[j];
+                    }
+                }
+                Design::Dense(out)
+            }
+            Design::Sparse { csc, .. } => {
+                let mut coo = crate::sparse::Coo::new(csc.rows, cols.len());
+                for (k, &j) in cols.iter().enumerate() {
+                    let (idx, val) = csc.col(j);
+                    for (i, v) in idx.iter().zip(val) {
+                        coo.push(*i, k, *v);
+                    }
+                }
+                Design::sparse(coo.to_csr())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn dense_ds() -> Dataset {
+        let m = Matrix::from_vec(3, 2, vec![1.0, -2.0, 0.0, 3.0, -1.0, 1.0]);
+        Dataset { x: Design::dense(m), y: vec![1.0, -1.0, 1.0] }
+    }
+
+    fn sparse_ds() -> Dataset {
+        let mut coo = Coo::new(3, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, -2.0);
+        coo.push(1, 1, 3.0);
+        coo.push(2, 0, -1.0);
+        coo.push(2, 1, 1.0);
+        Dataset { x: Design::sparse(coo.to_csr()), y: vec![1.0, -1.0, 1.0] }
+    }
+
+    #[test]
+    fn dense_sparse_op_parity() {
+        let d = dense_ds();
+        let s = sparse_ds();
+        let v = [0.5, -1.5];
+        let mut od = vec![0.0; 3];
+        let mut os = vec![0.0; 3];
+        d.x.matvec(&v, &mut od);
+        s.x.matvec(&v, &mut os);
+        assert_eq!(od, os);
+
+        let w = [1.0, 2.0, 3.0];
+        let mut td = vec![0.0; 2];
+        let mut ts = vec![0.0; 2];
+        d.x.tmatvec(&w, &mut td);
+        s.x.tmatvec(&w, &mut ts);
+        assert_eq!(td, ts);
+
+        let mut rd = vec![0.0; 2];
+        let mut rs = vec![0.0; 2];
+        d.x.tmatvec_rows(&[2, 0], &[1.0, -1.0], &mut rd);
+        s.x.tmatvec_rows(&[2, 0], &[1.0, -1.0], &mut rs);
+        assert_eq!(rd, rs);
+
+        let mut md = vec![0.0; 3];
+        let mut ms = vec![0.0; 3];
+        d.x.matvec_cols(&[1], &[2.0], &mut md);
+        s.x.matvec_cols(&[1], &[2.0], &mut ms);
+        assert_eq!(md, ms);
+
+        assert_eq!(d.x.col_dot(0, &w), s.x.col_dot(0, &w));
+        assert_eq!(d.x.get(1, 1), s.x.get(1, 1));
+        assert_eq!(d.x.get(1, 0), s.x.get(1, 0));
+    }
+
+    #[test]
+    fn lambda_max_matches_definition() {
+        let d = dense_ds();
+        // |col0| sums: 1+0+1 = 2 ; |col1|: 2+3+1 = 6
+        assert!((d.lambda_max_l1() - 6.0).abs() < 1e-12);
+        let lg = d.lambda_max_group(&[vec![0], vec![1]]);
+        assert!((lg - 6.0).abs() < 1e-12);
+        let lg_all = d.lambda_max_group(&[vec![0, 1]]);
+        assert!((lg_all - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subsetting_rows_and_cols() {
+        for ds in [dense_ds(), sparse_ds()] {
+            let r = ds.x.subset_rows(&[2, 0]);
+            assert_eq!(r.rows(), 2);
+            assert_eq!(r.get(0, 1), ds.x.get(2, 1));
+            let c = ds.x.subset_cols(&[1]);
+            assert_eq!(c.cols(), 1);
+            assert_eq!(c.get(1, 0), ds.x.get(1, 1));
+        }
+    }
+
+    #[test]
+    fn standardize_both_layouts() {
+        for mut ds in [dense_ds(), sparse_ds()] {
+            ds.standardize();
+            let mut sums = vec![0.0; 2];
+            // column norms must be 1
+            for j in 0..2 {
+                let col: Vec<f64> = (0..3).map(|i| ds.x.get(i, j)).collect();
+                sums[j] = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+            }
+            assert!((sums[0] - 1.0).abs() < 1e-12);
+            assert!((sums[1] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(dense_ds().class_counts(), (2, 1));
+    }
+}

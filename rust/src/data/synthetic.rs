@@ -1,0 +1,295 @@
+//! Synthetic dataset generators reproducing the paper's experimental
+//! setups (§5.1.1, §5.2) plus sparse text-like data standing in for the
+//! rcv1 / real-sim corpora of Table 3 (see DESIGN.md §Substitutions).
+
+use crate::data::{Dataset, Design};
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+use crate::sparse::Coo;
+
+/// Parameters of the §5.1.1 generator: equicorrelated Gaussian features,
+/// two classes with opposite means on the first `k0` coordinates.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Number of samples (half per class; `n` odd puts the extra in +1).
+    pub n: usize,
+    /// Number of features.
+    pub p: usize,
+    /// Number of informative features (paper uses 10).
+    pub k0: usize,
+    /// Pairwise feature correlation ρ (paper uses 0.1).
+    pub rho: f64,
+    /// Standardize columns to unit L2 norm (paper default: yes).
+    pub standardize: bool,
+}
+
+impl SyntheticSpec {
+    /// The paper's default configuration at a given size.
+    pub fn paper_default(n: usize, p: usize) -> Self {
+        Self { n, p, k0: 10, rho: 0.1, standardize: true }
+    }
+}
+
+/// Draw a dataset from the §5.1.1 model.
+///
+/// Features: `x_i ~ N(±μ, Σ)` with `Σ_jj = 1`, `Σ_jk = ρ (j≠k)`;
+/// `μ = (1_{k0}, 0_{p−k0})`, sign by class. The equicorrelated Gaussian is
+/// sampled as `√ρ·z + √(1−ρ)·ε_j` with a shared `z` per sample — exact and
+/// O(np) instead of a p×p Cholesky.
+pub fn generate_l1(spec: &SyntheticSpec, rng: &mut Xoshiro256) -> Dataset {
+    let SyntheticSpec { n, p, k0, rho, standardize } = *spec;
+    assert!(k0 <= p);
+    let sr = rho.max(0.0).sqrt();
+    let se = (1.0 - rho.max(0.0)).sqrt();
+    let mut m = Matrix::zeros(n, p);
+    let mut y = vec![0.0; n];
+    let n_pos = n - n / 2;
+    for i in 0..n {
+        let label = if i < n_pos { 1.0 } else { -1.0 };
+        y[i] = label;
+        let shared = rng.normal();
+        let row = m.row_mut(i);
+        for j in 0..p {
+            let mean = if j < k0 { label } else { 0.0 };
+            row[j] = mean + sr * shared + se * rng.normal();
+        }
+    }
+    let mut ds = Dataset { x: Design::dense(m), y };
+    if standardize {
+        ds.standardize();
+    }
+    ds
+}
+
+/// Group-structured generator (§5.2): `G` disjoint groups of size `p_g`;
+/// within-group correlation ρ, independence across groups; the first
+/// `k0_groups` groups are informative (mean ±1 on every coordinate).
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    pub n: usize,
+    /// Number of groups.
+    pub n_groups: usize,
+    /// Size of each group.
+    pub group_size: usize,
+    /// Number of informative groups.
+    pub k0_groups: usize,
+    /// Within-group correlation.
+    pub rho: f64,
+    pub standardize: bool,
+}
+
+/// Generated group dataset: the data plus the group index sets.
+pub struct GroupDataset {
+    pub data: Dataset,
+    /// `groups[g]` = column indices of group `g` (disjoint, covering `[p]`).
+    pub groups: Vec<Vec<usize>>,
+}
+
+/// Draw from the group model.
+pub fn generate_group(spec: &GroupSpec, rng: &mut Xoshiro256) -> GroupDataset {
+    let GroupSpec { n, n_groups, group_size, k0_groups, rho, standardize } = *spec;
+    let p = n_groups * group_size;
+    let sr = rho.max(0.0).sqrt();
+    let se = (1.0 - rho.max(0.0)).sqrt();
+    let mut m = Matrix::zeros(n, p);
+    let mut y = vec![0.0; n];
+    let n_pos = n - n / 2;
+    for i in 0..n {
+        let label = if i < n_pos { 1.0 } else { -1.0 };
+        y[i] = label;
+        let row = m.row_mut(i);
+        for g in 0..n_groups {
+            let shared = rng.normal(); // one latent factor per group
+            let mean = if g < k0_groups { label } else { 0.0 };
+            for k in 0..group_size {
+                row[g * group_size + k] = mean + sr * shared + se * rng.normal();
+            }
+        }
+    }
+    let groups: Vec<Vec<usize>> = (0..n_groups)
+        .map(|g| ((g * group_size)..((g + 1) * group_size)).collect())
+        .collect();
+    let mut data = Dataset { x: Design::dense(m), y };
+    if standardize {
+        data.standardize();
+    }
+    GroupDataset { data, groups }
+}
+
+/// Sparse text-classification-like generator standing in for rcv1 /
+/// real-sim (Table 3). Feature document-frequencies follow a power law
+/// (Zipf-like, as in bag-of-words data); a small informative subset
+/// carries class signal; entries are positive tf-idf-like weights.
+#[derive(Clone, Debug)]
+pub struct SparseTextSpec {
+    pub n: usize,
+    pub p: usize,
+    /// Expected fraction of nonzero entries (rcv1 ≈ 0.0016).
+    pub density: f64,
+    /// Number of informative features.
+    pub k0: usize,
+    /// Zipf exponent for feature popularity.
+    pub zipf: f64,
+}
+
+impl SparseTextSpec {
+    /// rcv1.binary-like dimensions, scaled by `scale` (1.0 = full size).
+    pub fn rcv1_like(scale: f64) -> Self {
+        Self {
+            n: (20_242.0 * scale) as usize,
+            p: (47_236.0 * scale) as usize,
+            density: 0.0016,
+            k0: 50,
+            zipf: 1.1,
+        }
+    }
+
+    /// real-sim-like dimensions.
+    pub fn real_sim_like(scale: f64) -> Self {
+        Self {
+            n: (72_309.0 * scale) as usize,
+            p: (20_958.0 * scale) as usize,
+            density: 0.0025,
+            k0: 50,
+            zipf: 1.1,
+        }
+    }
+}
+
+/// Draw a sparse dataset. Each document draws `~density·p` features from a
+/// Zipf popularity distribution; informative features are over-sampled in
+/// one class and carry a signed weight bump.
+pub fn generate_sparse_text(spec: &SparseTextSpec, rng: &mut Xoshiro256) -> Dataset {
+    let SparseTextSpec { n, p, density, k0, zipf } = *spec;
+    // Precompute a Zipf sampler via inverse-CDF on cumulative weights.
+    let mut cum = Vec::with_capacity(p);
+    let mut total = 0.0;
+    for j in 0..p {
+        total += 1.0 / ((j + 1) as f64).powf(zipf);
+        cum.push(total);
+    }
+    let nnz_per_row = ((density * p as f64).round() as usize).max(2);
+    let mut coo = Coo::new(n, p);
+    let mut y = vec![0.0; n];
+    let n_pos = n - n / 2;
+    for i in 0..n {
+        let label = if i < n_pos { 1.0 } else { -1.0 };
+        y[i] = label;
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..nnz_per_row {
+            let u = rng.uniform() * total;
+            let j = match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                Ok(k) => k,
+                Err(k) => k.min(p - 1),
+            };
+            if seen.insert(j) {
+                // tf-idf-like positive weight
+                let w = (1.0 + rng.uniform() * 3.0).ln() + 0.1;
+                let signal = if j < k0 { 0.5 * label } else { 0.0 };
+                coo.push(i, j, w + signal);
+            }
+        }
+        // Guarantee some informative mass in each document.
+        let j_sig = rng.below(k0.max(1));
+        if seen.insert(j_sig) {
+            coo.push(i, j_sig, 0.75 * label + 1.0);
+        }
+    }
+    Dataset { x: Design::sparse(coo.to_csr()), y }
+}
+
+/// Microarray-like dense generator used as the Table 2 stand-in
+/// (leukemia / lung / ovarian / radsens): tiny n, large p, a handful of
+/// differentially-expressed genes, heavier correlation than §5.1.1.
+pub fn generate_microarray_like(n: usize, p: usize, rng: &mut Xoshiro256) -> Dataset {
+    let spec = SyntheticSpec { n, p, k0: 20, rho: 0.3, standardize: true };
+    generate_l1(&spec, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_generator_shapes_and_labels() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let ds = generate_l1(&SyntheticSpec::paper_default(50, 200), &mut rng);
+        assert_eq!(ds.n(), 50);
+        assert_eq!(ds.p(), 200);
+        let (pos, neg) = ds.class_counts();
+        assert_eq!(pos, 25);
+        assert_eq!(neg, 25);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn l1_generator_standardized() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let ds = generate_l1(&SyntheticSpec::paper_default(40, 30), &mut rng);
+        for j in 0..ds.p() {
+            let norm: f64 =
+                (0..ds.n()).map(|i| ds.x.get(i, j).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn informative_features_correlate_with_labels() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let spec = SyntheticSpec { n: 200, p: 50, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        // <x_j, y> should be much larger for informative features.
+        let mut cors = vec![0.0; ds.p()];
+        ds.x.tmatvec(&ds.y, &mut cors);
+        let info: f64 = cors[..5].iter().map(|v| v.abs()).sum::<f64>() / 5.0;
+        let noise: f64 = cors[5..].iter().map(|v| v.abs()).sum::<f64>() / 45.0;
+        assert!(info > 3.0 * noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn group_generator_structure() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let spec = GroupSpec {
+            n: 30,
+            n_groups: 8,
+            group_size: 5,
+            k0_groups: 2,
+            rho: 0.2,
+            standardize: true,
+        };
+        let gd = generate_group(&spec, &mut rng);
+        assert_eq!(gd.data.p(), 40);
+        assert_eq!(gd.groups.len(), 8);
+        let all: Vec<usize> = gd.groups.iter().flatten().copied().collect();
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), 40, "groups must partition [p]");
+    }
+
+    #[test]
+    fn sparse_text_density_and_signal() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let spec = SparseTextSpec { n: 400, p: 2000, density: 0.005, k0: 20, zipf: 1.1 };
+        let ds = generate_sparse_text(&spec, &mut rng);
+        assert!(ds.x.is_sparse());
+        let frac = ds.x.nnz() as f64 / (400.0 * 2000.0);
+        assert!(frac > 0.001 && frac < 0.02, "density {frac}");
+        // informative block carries signal
+        let mut cors = vec![0.0; ds.p()];
+        ds.x.tmatvec(&ds.y, &mut cors);
+        let info: f64 = cors[..20].iter().map(|v| v.abs()).sum::<f64>() / 20.0;
+        let noise: f64 = cors[20..].iter().map(|v| v.abs()).sum::<f64>() / 1980.0;
+        assert!(info > 3.0 * noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec::paper_default(20, 15);
+        let a = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(9));
+        let b = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(9));
+        for i in 0..20 {
+            for j in 0..15 {
+                assert_eq!(a.x.get(i, j), b.x.get(i, j));
+            }
+        }
+    }
+}

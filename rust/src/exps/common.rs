@@ -1,0 +1,199 @@
+//! Shared method runners for the experiment harness — each corresponds to
+//! a labelled method in §5 ("FO+CLG", "SFO+CNG", "RP CLG", …).
+
+use crate::backend::NativeBackend;
+use crate::coordinator::l1svm::{
+    column_constraint_generation, column_generation, constraint_generation,
+};
+use crate::coordinator::path::{geometric_grid, initial_columns, regularization_path};
+use crate::coordinator::{GenParams, SvmSolution};
+use crate::data::Dataset;
+use crate::exps::time_it;
+use crate::fom::fista::{fista, FistaParams, Penalty};
+use crate::fom::screening::{correlation_screen, top_k_by_abs};
+use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
+use crate::rng::Xoshiro256;
+
+/// Timing split of a two-stage method (initializer + cutting planes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SplitTime {
+    /// First-order / screening initialization seconds.
+    pub init: f64,
+    /// Cutting-plane seconds.
+    pub cut: f64,
+}
+
+impl SplitTime {
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.init + self.cut
+    }
+}
+
+/// Method (b) "FO+CLG": correlation-screened FISTA init, then column
+/// generation (§5.1.1). Returns the solution and the timing split.
+pub fn fo_clg(
+    ds: &Dataset,
+    lambda: f64,
+    eps: f64,
+    keep_top: usize,
+) -> (SvmSolution, SplitTime) {
+    let backend = NativeBackend::new(&ds.x);
+    let (init_cols, t_init) = time_it(|| {
+        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+        let xx = ds.x.subset_cols(&screen);
+        let sub_backend = NativeBackend::new(&xx);
+        let res = fista(
+            &sub_backend,
+            &ds.y,
+            &Penalty::L1(lambda),
+            &FistaParams { tau: 0.2, eta: 1e-3, max_iters: 200, power_iters: 20 },
+            None,
+        );
+        // map back + keep the largest coefficients
+        let mut scored = vec![0.0; ds.p()];
+        for (k, &j) in screen.iter().enumerate() {
+            scored[j] = res.beta[k];
+        }
+        top_k_by_abs(&scored, keep_top.min(ds.p()))
+    });
+    let (sol, t_cut) = time_it(|| {
+        column_generation(
+            ds,
+            &backend,
+            lambda,
+            &init_cols,
+            &GenParams { eps, ..Default::default() },
+        )
+    });
+    (sol, SplitTime { init: t_init, cut: t_cut })
+}
+
+/// Method (a) "RP CLG": regularization-path continuation down to λ
+/// (7 grid points in [λ_max/2, λ], §5.1.1).
+pub fn rp_clg(ds: &Dataset, lambda: f64, eps: f64, grid_points: usize) -> (SvmSolution, f64) {
+    let backend = NativeBackend::new(&ds.x);
+    let lmax = ds.lambda_max_l1();
+    let hi = lmax / 2.0;
+    let ratio = (lambda / hi).powf(1.0 / (grid_points.max(2) - 1) as f64);
+    let grid: Vec<f64> = (0..grid_points).map(|k| hi * ratio.powi(k as i32)).collect();
+    let ((_, sol), t) = time_it(|| {
+        regularization_path(ds, &backend, &grid, 10, &GenParams { eps, ..Default::default() })
+    });
+    (sol, t)
+}
+
+/// Method (c)/(d): column generation from a screening or random init.
+pub fn init_clg(
+    ds: &Dataset,
+    lambda: f64,
+    eps: f64,
+    init_size: usize,
+    random: bool,
+    seed: u64,
+) -> (SvmSolution, f64) {
+    let backend = NativeBackend::new(&ds.x);
+    let init: Vec<usize> = if random {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        rng.sample_indices(ds.p(), init_size.min(ds.p()))
+    } else {
+        correlation_screen(&ds.x, &ds.y, init_size.min(ds.p()))
+    };
+    time_it(|| {
+        column_generation(ds, &backend, lambda, &init, &GenParams { eps, ..Default::default() })
+    })
+}
+
+/// Method (f) "SFO+CNG": subsampled first-order init, then constraint
+/// generation (§5.1.3).
+pub fn sfo_cng(ds: &Dataset, lambda: f64, eps: f64, seed: u64) -> (SvmSolution, SplitTime) {
+    let params = SubsampleParams {
+        n0: (10 * ds.p()).clamp(100, ds.n()),
+        mu_tol: 1e-1,
+        q_max: (ds.n() / (10 * ds.p()).max(1)).clamp(2, 12),
+        threads: 4,
+        screen_k: 0,
+        fista: FistaParams { tau: 0.2, eta: 1e-3, max_iters: 150, power_iters: 15 },
+    };
+    let (init_rows, t_init) = time_it(|| {
+        let avg = subsample_average(ds, lambda, &params, seed);
+        violated_samples_capped(ds, &avg.beta, avg.beta0, 0.0, 1500)
+    });
+    let (sol, t_cut) = time_it(|| {
+        constraint_generation(
+            ds,
+            lambda,
+            &init_rows,
+            &GenParams { eps, max_rows_per_round: 1000, ..Default::default() },
+        )
+    });
+    (sol, SplitTime { init: t_init, cut: t_cut })
+}
+
+/// Method (g) "SFO+CL-CNG": subsampled + screened first-order init, then
+/// combined column-and-constraint generation (§5.1.4).
+pub fn sfo_cl_cng(
+    ds: &Dataset,
+    lambda: f64,
+    eps: f64,
+    keep_cols: usize,
+    seed: u64,
+) -> (SvmSolution, SplitTime) {
+    let backend = NativeBackend::new(&ds.x);
+    let params = SubsampleParams {
+        n0: 1000.min(ds.n()),
+        mu_tol: 0.5,
+        q_max: 8,
+        threads: 4,
+        screen_k: (10 * 100).min(ds.p()),
+        fista: FistaParams { tau: 0.2, eta: 1e-3, max_iters: 150, power_iters: 15 },
+    };
+    let ((init_rows, init_cols), t_init) = time_it(|| {
+        let avg = subsample_average(ds, lambda, &params, seed);
+        let rows = violated_samples_capped(ds, &avg.beta, avg.beta0, 0.0, 1500);
+        let cols = top_k_by_abs(&avg.beta, keep_cols.min(ds.p()));
+        (rows, cols)
+    });
+    let (sol, t_cut) = time_it(|| {
+        column_constraint_generation(
+            ds,
+            &backend,
+            lambda,
+            &init_rows,
+            &init_cols,
+            &GenParams { eps, max_rows_per_round: 1000, ..Default::default() },
+        )
+    });
+    (sol, SplitTime { init: t_init, cut: t_cut })
+}
+
+/// First-order initializer for Slope: screened FISTA with the Slope prox.
+pub fn fo_slope_init(ds: &Dataset, lambda: &[f64], keep_top: usize) -> (Vec<usize>, f64) {
+    time_it(|| {
+        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+        let xx = ds.x.subset_cols(&screen);
+        let sub_backend = NativeBackend::new(&xx);
+        let sub_lams: Vec<f64> = lambda[..screen.len()].to_vec();
+        let res = fista(
+            &sub_backend,
+            &ds.y,
+            &Penalty::Slope(sub_lams),
+            &FistaParams { tau: 0.2, eta: 1e-3, max_iters: 200, power_iters: 20 },
+            None,
+        );
+        let mut scored = vec![0.0; ds.p()];
+        for (k, &j) in screen.iter().enumerate() {
+            scored[j] = res.beta[k];
+        }
+        let mut cols = top_k_by_abs(&scored, keep_top.min(ds.p()));
+        if cols.is_empty() {
+            cols = initial_columns(ds, 10);
+        }
+        cols
+    })
+}
+
+/// Paper-standard λ grid for Table 1: 20 values, geometric ratio 0.7.
+pub fn table1_grid(lambda_max: f64, n_values: usize) -> Vec<f64> {
+    geometric_grid(lambda_max, n_values, 0.7)
+}

@@ -1,0 +1,110 @@
+//! **Figure 1** — L1-SVM at fixed λ = 0.01·λ_max, n = 100, varying p:
+//! methods (a) RP-CLG, (b) FO+CLG (and CLG wo FO), (c) correlation-
+//! screening init, (d) random init, (e) full LP solver.
+
+use crate::baselines::full_lp::solve_full_l1;
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::{fo_clg, init_clg, rp_clg};
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::rng::Xoshiro256;
+
+fn sizes(scale: Scale) -> (Vec<usize>, usize, usize, usize) {
+    // (ps, n, reps, lp_cap)
+    match scale {
+        Scale::Smoke => (vec![300], 40, 1, 300),
+        Scale::Default => (vec![1000, 5000, 20_000], 100, 2, 20_000),
+        Scale::Paper => (vec![2000, 10_000, 50_000, 100_000], 100, 5, 100_000),
+    }
+}
+
+/// Run Figure 1 (as a table: one row per (p, method)).
+pub fn run(scale: Scale) -> String {
+    let (ps, n, reps, lp_cap) = sizes(scale);
+    let mut table = Table::new(
+        "Figure 1 — L1-SVM fixed λ = 0.01·λ_max, n = 100, varying p",
+        &["p", "method", "time (s)", "ARA (%)"],
+    );
+    let eps = 1e-2;
+
+    for &p in &ps {
+        let labels =
+            ["(a) RP CLG", "(b) FO+CLG", "(b') CLG wo FO", "(c) Cor. screening", "(d) Random init", "(e) LP solver"];
+        let mut times: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        let mut objs: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+
+        for rep in 0..reps {
+            let spec = SyntheticSpec::paper_default(n, p);
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(2000 + rep as u64));
+            let lambda = 0.01 * ds.lambda_max_l1();
+
+            let (sol, t) = rp_clg(&ds, lambda, eps, 7);
+            times.entry(labels[0]).or_default().push(t);
+            objs.entry(labels[0]).or_default().push(sol.objective);
+
+            let (sol, split) = fo_clg(&ds, lambda, eps, 100);
+            times.entry(labels[1]).or_default().push(split.total());
+            times.entry(labels[2]).or_default().push(split.cut);
+            objs.entry(labels[1]).or_default().push(sol.objective);
+            objs.entry(labels[2]).or_default().push(sol.objective);
+
+            let (sol, t) = init_clg(&ds, lambda, eps, 50, false, 7 + rep as u64);
+            times.entry(labels[3]).or_default().push(t);
+            objs.entry(labels[3]).or_default().push(sol.objective);
+
+            let (sol, t) = init_clg(&ds, lambda, eps, 50, true, 77 + rep as u64);
+            times.entry(labels[4]).or_default().push(t);
+            objs.entry(labels[4]).or_default().push(sol.objective);
+
+            if p <= lp_cap {
+                let (sol, t) = time_it(|| solve_full_l1(&ds, lambda));
+                times.entry(labels[5]).or_default().push(t);
+                objs.entry(labels[5]).or_default().push(sol.objective);
+            }
+        }
+
+        let n_points = reps;
+        let mut best = vec![f64::INFINITY; n_points];
+        for v in objs.values() {
+            if v.len() == n_points {
+                for (b, o) in best.iter_mut().zip(v) {
+                    *b = b.min(*o);
+                }
+            }
+        }
+        for label in labels {
+            match times.get(label) {
+                Some(ts) => {
+                    let (m, s) = mean_std(ts);
+                    let ara = ara_percent(&objs[label], &best);
+                    table.row(vec![
+                        p.to_string(),
+                        label.to_string(),
+                        fmt_time(m, s),
+                        format!("{ara:.2}"),
+                    ]);
+                }
+                None => table.row(vec![
+                    p.to_string(),
+                    label.to_string(),
+                    "— (> cap)".into(),
+                    "—".into(),
+                ]),
+            }
+        }
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("(b) FO+CLG"));
+        assert!(out.contains("(e) LP solver"));
+    }
+}

@@ -1,0 +1,95 @@
+//! **Figure 2** — L1-SVM at fixed λ for n ≫ p (p = 100): SFO+CNG
+//! (subsampled first-order init + constraint generation) vs the full LP.
+//!
+//! The full LP holds all n margin rows, so its basis factorization is
+//! O(n³) — beyond `lp_cap` we report “— (> cap)”, mirroring the paper's
+//! time-outs for the full model.
+
+use crate::baselines::full_lp::solve_full_l1;
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::sfo_cng;
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::rng::Xoshiro256;
+
+fn sizes(scale: Scale) -> (Vec<usize>, usize, usize, usize) {
+    // (ns, p, reps, lp_cap)
+    match scale {
+        Scale::Smoke => (vec![600], 20, 1, 600),
+        Scale::Default => (vec![1000, 5000, 10_000], 100, 1, 2000),
+        Scale::Paper => (vec![1000, 5000, 20_000, 50_000], 100, 3, 3000),
+    }
+}
+
+/// Run Figure 2.
+pub fn run(scale: Scale) -> String {
+    let (ns, p, reps, lp_cap) = sizes(scale);
+    let mut table = Table::new(
+        "Figure 2 — L1-SVM fixed λ = 0.01·λ_max, p = 100, varying n",
+        &["n", "method", "time (s)", "ARA (%)"],
+    );
+    for &n in &ns {
+        let mut t_cng = Vec::new();
+        let mut t_cng_only = Vec::new();
+        let mut t_lp = Vec::new();
+        let mut o_cng = Vec::new();
+        let mut o_lp = Vec::new();
+        for rep in 0..reps {
+            let spec = SyntheticSpec::paper_default(n, p);
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(4000 + rep as u64));
+            let lambda = 0.01 * ds.lambda_max_l1();
+            let (sol, split) = sfo_cng(&ds, lambda, 1e-2, 5 + rep as u64);
+            t_cng.push(split.total());
+            t_cng_only.push(split.cut);
+            o_cng.push(sol.objective);
+            if n <= lp_cap {
+                let (lp, t) = time_it(|| solve_full_l1(&ds, lambda));
+                t_lp.push(t);
+                o_lp.push(lp.objective);
+            }
+        }
+        let best: Vec<f64> = (0..reps)
+            .map(|r| {
+                let mut b = o_cng[r];
+                if r < o_lp.len() {
+                    b = b.min(o_lp[r]);
+                }
+                b
+            })
+            .collect();
+        let (m, s) = mean_std(&t_cng);
+        table.row(vec![
+            n.to_string(),
+            "(f) SFO+CNG".into(),
+            fmt_time(m, s),
+            format!("{:.2}", ara_percent(&o_cng, &best)),
+        ]);
+        let (m, s) = mean_std(&t_cng_only);
+        table.row(vec![n.to_string(), "CNG wo SFO".into(), fmt_time(m, s), "—".into()]);
+        if o_lp.len() == reps {
+            let (m, s) = mean_std(&t_lp);
+            table.row(vec![
+                n.to_string(),
+                "(e) LP solver".into(),
+                fmt_time(m, s),
+                format!("{:.2}", ara_percent(&o_lp, &best)),
+            ]);
+        } else {
+            table.row(vec![n.to_string(), "(e) LP solver".into(), "— (> cap)".into(), "—".into()]);
+        }
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("SFO+CNG"));
+        assert!(out.contains("LP solver"));
+    }
+}

@@ -1,0 +1,92 @@
+//! **Figure 3** — L1-SVM with *both* n and p large, fixed λ =
+//! 0.001·λ_max: the hybrid SFO+CL-CNG (Algorithm 4 + subsampling init)
+//! vs the pure column-generation methods (a) RP-CLG and (b) FO+CLG.
+
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::{fo_clg, rp_clg, sfo_cl_cng};
+use crate::exps::{ara_percent, fmt_time, mean_std, Scale, Table};
+use crate::rng::Xoshiro256;
+
+fn sizes(scale: Scale) -> (usize, Vec<usize>, usize, usize) {
+    // (n, ps, reps, rp_cap: skip RP-CLG beyond this p — it "explodes")
+    match scale {
+        Scale::Smoke => (300, vec![500], 1, 500),
+        Scale::Default => (1000, vec![5000, 20_000], 1, 5000),
+        Scale::Paper => (5000, vec![20_000, 50_000, 100_000], 3, 20_000),
+    }
+}
+
+/// Run Figure 3.
+pub fn run(scale: Scale) -> String {
+    let (n, ps, reps, rp_cap) = sizes(scale);
+    let mut table = Table::new(
+        &format!("Figure 3 — L1-SVM fixed λ = 0.001·λ_max, n = {n}, varying p"),
+        &["p", "method", "time (s)", "ARA (%)"],
+    );
+    for &p in &ps {
+        let mut times: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        let mut objs: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        for rep in 0..reps {
+            let spec = SyntheticSpec::paper_default(n, p);
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(5000 + rep as u64));
+            let lambda = 0.001 * ds.lambda_max_l1();
+
+            if p <= rp_cap {
+                let (sol, t) = rp_clg(&ds, lambda, 1e-2, 7);
+                times.entry("(a) RP CLG").or_default().push(t);
+                objs.entry("(a) RP CLG").or_default().push(sol.objective);
+            }
+            let (sol, split) = fo_clg(&ds, lambda, 1e-2, 200);
+            times.entry("(b) FO+CLG").or_default().push(split.total());
+            objs.entry("(b) FO+CLG").or_default().push(sol.objective);
+
+            let (sol, split) = sfo_cl_cng(&ds, lambda, 1e-2, 200, 13 + rep as u64);
+            times.entry("(g) SFO+CL-CNG").or_default().push(split.total());
+            times.entry("CL-CNG wo SFO").or_default().push(split.cut);
+            objs.entry("(g) SFO+CL-CNG").or_default().push(sol.objective);
+            objs.entry("CL-CNG wo SFO").or_default().push(sol.objective);
+        }
+        let mut best = vec![f64::INFINITY; reps];
+        for v in objs.values() {
+            if v.len() == reps {
+                for (b, o) in best.iter_mut().zip(v) {
+                    *b = b.min(*o);
+                }
+            }
+        }
+        for label in ["(a) RP CLG", "(b) FO+CLG", "(g) SFO+CL-CNG", "CL-CNG wo SFO"] {
+            match times.get(label) {
+                Some(ts) => {
+                    let (m, s) = mean_std(ts);
+                    let ara = ara_percent(&objs[label], &best);
+                    table.row(vec![
+                        p.to_string(),
+                        label.to_string(),
+                        fmt_time(m, s),
+                        format!("{ara:.2}"),
+                    ]);
+                }
+                None => table.row(vec![
+                    p.to_string(),
+                    label.to_string(),
+                    "— (explodes)".into(),
+                    "—".into(),
+                ]),
+            }
+        }
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("SFO+CL-CNG"));
+    }
+}

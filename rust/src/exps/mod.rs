@@ -1,0 +1,202 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5) on this machine's substrate.
+//!
+//! Each submodule owns one table/figure and exposes `run(scale) -> String`
+//! printing the same rows/series the paper reports. Absolute times differ
+//! from the paper (different LP engine, different machine); the
+//! reproduction target is the *shape*: who wins, by what factor, and how
+//! it scales (see EXPERIMENTS.md for paper-vs-measured).
+//!
+//! Sizes are controlled by [`Scale`]: `Smoke` for CI, `Default` for
+//! `cargo bench`, `Paper` for the closest-feasible-to-paper sizes.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use std::time::Instant;
+
+/// Experiment size knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-fast (CI smoke).
+    Smoke,
+    /// Minutes (default for `cargo bench`).
+    Default,
+    /// Closest feasible to the paper's sizes (tens of minutes).
+    Paper,
+}
+
+impl Scale {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// Wall-clock one closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+/// Averaged relative accuracy (§5.1.1): mean over replications of
+/// `(f_alg − f_best)/f_best`, in percent.
+pub fn ara_percent(objs: &[f64], bests: &[f64]) -> f64 {
+    debug_assert_eq!(objs.len(), bests.len());
+    let mut s = 0.0;
+    for (o, b) in objs.iter().zip(bests) {
+        s += (o - b) / b.max(1e-12);
+    }
+    100.0 * s / objs.len().max(1) as f64
+}
+
+/// Format seconds as `x.xx` or `x.xxe-k` compactly.
+pub fn fmt_time(mean: f64, std: f64) -> String {
+    if mean.is_nan() {
+        return "—".to_string();
+    }
+    if mean >= 100.0 {
+        format!("{mean:.0}({std:.0})")
+    } else if mean >= 1.0 {
+        format!("{mean:.2}({std:.2})")
+    } else {
+        format!("{mean:.3}({std:.3})")
+    }
+}
+
+/// Simple fixed-width markdown-ish table renderer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (k, c) in row.iter().enumerate() {
+                widths[k] = widths[k].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Run an experiment by id (used by the CLI and the bench binaries).
+pub fn run_experiment(id: &str, scale: Scale) -> Option<String> {
+    let out = match id {
+        "table1" => table1::run(scale),
+        "table2" => table2::run(scale),
+        "table3" => table3::run(scale),
+        "table4" => table4::run(scale),
+        "table5" => table5::run(scale),
+        "table6" => table6::run(scale),
+        "fig1" => fig1::run(scale),
+        "fig2" => fig2::run(scale),
+        "fig3" => fig3::run(scale),
+        "fig4" => fig4::run(scale),
+        _ => return None,
+    };
+    Some(out)
+}
+
+/// All experiment ids.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table1", "fig1", "table2", "fig2", "fig3", "table3", "table4", "fig4", "table5", "table6",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ara_zero_for_best() {
+        assert_eq!(ara_percent(&[2.0, 4.0], &[2.0, 4.0]), 0.0);
+        assert!((ara_percent(&[2.2, 4.0], &[2.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "method"]);
+        t.row(vec!["1".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| a"));
+    }
+
+    #[test]
+    fn scale_parses() {
+        assert_eq!(Scale::parse("smoke"), Some(Scale::Smoke));
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("zzz"), None);
+    }
+}

@@ -1,0 +1,143 @@
+//! **Table 1** — regularization-path training times for L1-SVM, p ≫ n:
+//! Gurobi-style full LP (with and without warm starts) vs column
+//! generation (CLG) at three tolerance levels, with ARA.
+
+use crate::baselines::full_lp::FullL1Lp;
+use crate::coordinator::path::regularization_path;
+use crate::coordinator::GenParams;
+use crate::backend::NativeBackend;
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::table1_grid;
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::rng::Xoshiro256;
+
+struct Sizes {
+    ps: Vec<usize>,
+    n: usize,
+    n_lambda: usize,
+    reps: usize,
+    /// p cap for the no-warm-start full LP (it is brutally slow).
+    lp_cold_cap: usize,
+}
+
+fn sizes(scale: Scale) -> Sizes {
+    match scale {
+        Scale::Smoke => Sizes { ps: vec![200], n: 40, n_lambda: 6, reps: 1, lp_cold_cap: 200 },
+        Scale::Default => {
+            Sizes { ps: vec![1000, 5000, 10_000], n: 100, n_lambda: 20, reps: 2, lp_cold_cap: 1000 }
+        }
+        Scale::Paper => Sizes {
+            ps: vec![1000, 10_000, 100_000],
+            n: 100,
+            n_lambda: 20,
+            reps: 5,
+            lp_cold_cap: 10_000,
+        },
+    }
+}
+
+/// Run Table 1 and render it.
+pub fn run(scale: Scale) -> String {
+    let sz = sizes(scale);
+    let mut table = Table::new(
+        "Table 1 — L1-SVM regularization path (20 λ values, ratio 0.7)",
+        &["p", "method", "time (s)", "ARA (%)"],
+    );
+
+    for &p in &sz.ps {
+        // per (rep, λ) objective bookkeeping for ARA
+        let mut times: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        let mut objs: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+
+        for rep in 0..sz.reps {
+            let spec = SyntheticSpec::paper_default(sz.n, p);
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(1000 + rep as u64));
+            let grid = table1_grid(ds.lambda_max_l1(), sz.n_lambda);
+            let backend = NativeBackend::new(&ds.x);
+
+            // LP without warm start: rebuild + cold solve per λ.
+            if p <= sz.lp_cold_cap {
+                let (objs_run, t) = time_it(|| {
+                    grid.iter()
+                        .map(|&lam| FullL1Lp::new(&ds, lam).solve(lam).objective)
+                        .collect::<Vec<f64>>()
+                });
+                times.entry("LP wo warm-start").or_default().push(t);
+                objs.entry("LP wo warm-start").or_default().extend(objs_run);
+            }
+            // LP with warm start: one model, λ continuation.
+            {
+                let (objs_run, t) = time_it(|| {
+                    let mut lp = FullL1Lp::new(&ds, grid[0]);
+                    grid.iter()
+                        .map(|&lam| {
+                            lp.set_lambda(lam);
+                            lp.solve(lam).objective
+                        })
+                        .collect::<Vec<f64>>()
+                });
+                times.entry("LP warm-start").or_default().push(t);
+                objs.entry("LP warm-start").or_default().extend(objs_run);
+            }
+            // CLG at three tolerances.
+            for (label, eps) in
+                [("CLG, eps=0.5", 0.5), ("CLG, eps=0.1", 0.1), ("CLG, eps=0.01", 0.01)]
+            {
+                let (path, t) = time_it(|| {
+                    let params = GenParams { eps, ..Default::default() };
+                    regularization_path(&ds, &backend, &grid, 10, &params).0
+                });
+                times.entry(label).or_default().push(t);
+                objs.entry(label).or_default().extend(path.iter().map(|pt| pt.objective));
+            }
+        }
+
+        // per-(rep,λ) best across methods for the ARA denominator
+        let n_points = objs.values().map(|v| v.len()).max().unwrap_or(0);
+        let mut best = vec![f64::INFINITY; n_points];
+        for v in objs.values() {
+            if v.len() == n_points {
+                for (b, o) in best.iter_mut().zip(v) {
+                    *b = b.min(*o);
+                }
+            }
+        }
+        for (label, ts) in &times {
+            let (m, s) = mean_std(ts);
+            let ara = objs
+                .get(label)
+                .filter(|v| v.len() == n_points)
+                .map(|v| ara_percent(v, &best))
+                .unwrap_or(f64::NAN);
+            table.row(vec![
+                p.to_string(),
+                label.to_string(),
+                fmt_time(m, s),
+                if ara.is_nan() { "—".into() } else { format!("{ara:.2}") },
+            ]);
+        }
+        if p > sz.lp_cold_cap {
+            table.row(vec![
+                p.to_string(),
+                "LP wo warm-start".into(),
+                "— (> cap)".into(),
+                "—".into(),
+            ]);
+        }
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("CLG, eps=0.01"));
+        assert!(out.contains("LP warm-start"));
+    }
+}

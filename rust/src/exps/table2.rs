@@ -1,0 +1,81 @@
+//! **Table 2** — L1-SVM at fixed λ on microarray-style real datasets
+//! (p ≫ n): FO+CLG vs the full LP solver.
+//!
+//! The paper's four datasets (leukemia, lung cancer, ovarian, radsens)
+//! are not redistributable in this image; matched-size synthetic
+//! microarray-like data stands in (see DESIGN.md §Substitutions).
+
+use crate::baselines::full_lp::solve_full_l1;
+use crate::data::synthetic::generate_microarray_like;
+use crate::exps::common::fo_clg;
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::rng::Xoshiro256;
+
+fn datasets(scale: Scale) -> Vec<(&'static str, usize, usize)> {
+    match scale {
+        Scale::Smoke => vec![("leukemia-like", 36, 700)],
+        Scale::Default => vec![
+            ("leukemia-like", 72, 7129),
+            ("lung-cancer-like", 181, 12_533),
+            ("ovarian-like", 253, 15_155),
+            ("radsens-like", 58, 12_625),
+        ],
+        Scale::Paper => vec![
+            ("leukemia-like", 72, 7129),
+            ("lung-cancer-like", 181, 12_533),
+            ("ovarian-like", 253, 15_155),
+            ("radsens-like", 58, 12_625),
+        ],
+    }
+}
+
+/// Run Table 2.
+pub fn run(scale: Scale) -> String {
+    let reps = if scale == Scale::Smoke { 1 } else { 3 };
+    let mut table = Table::new(
+        "Table 2 — L1-SVM at λ = 0.01·λ_max on microarray-like data (p ≫ n)",
+        &["dataset", "n", "p", "FO+CLG time (s)", "FO+CLG ARA (%)", "LP solver time (s)"],
+    );
+    for (name, n, p) in datasets(scale) {
+        let mut t_fo = Vec::new();
+        let mut t_lp = Vec::new();
+        let mut o_fo = Vec::new();
+        let mut o_lp = Vec::new();
+        for rep in 0..reps {
+            let ds =
+                generate_microarray_like(n, p, &mut Xoshiro256::seed_from_u64(3000 + rep as u64));
+            let lambda = 0.01 * ds.lambda_max_l1();
+            let (sol, split) = fo_clg(&ds, lambda, 1e-2, 100);
+            t_fo.push(split.total());
+            o_fo.push(sol.objective);
+            let (lp, t) = time_it(|| solve_full_l1(&ds, lambda));
+            t_lp.push(t);
+            o_lp.push(lp.objective);
+        }
+        let best: Vec<f64> = o_fo.iter().zip(&o_lp).map(|(a, b)| a.min(*b)).collect();
+        let (mf, sf) = mean_std(&t_fo);
+        let (ml, sl) = mean_std(&t_lp);
+        table.row(vec![
+            name.to_string(),
+            n.to_string(),
+            p.to_string(),
+            fmt_time(mf, sf),
+            format!("{:.2e}", ara_percent(&o_fo, &best)),
+            fmt_time(ml, sl),
+        ]);
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("leukemia-like"));
+    }
+}

@@ -1,0 +1,101 @@
+//! **Table 4** — the best cutting-plane method vs PSM (parametric simplex
+//! of Pang et al. 2017) on p ≫ n and n ≫ p instances.
+
+use crate::baselines::psm::psm_l1svm;
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::{fo_clg, sfo_cng};
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::rng::Xoshiro256;
+
+struct Case {
+    n: usize,
+    p: usize,
+    method: &'static str,
+}
+
+fn cases(scale: Scale) -> (Vec<Case>, usize) {
+    match scale {
+        Scale::Smoke => (vec![Case { n: 40, p: 300, method: "FO+CLG" }], 1),
+        Scale::Default => (
+            vec![
+                Case { n: 100, p: 5000, method: "FO+CLG" },
+                Case { n: 100, p: 10_000, method: "FO+CLG" },
+                Case { n: 500, p: 100, method: "SFO+CNG" },
+                Case { n: 1000, p: 100, method: "SFO+CNG" },
+            ],
+            2,
+        ),
+        Scale::Paper => (
+            vec![
+                Case { n: 100, p: 10_000, method: "FO+CLG" },
+                Case { n: 100, p: 20_000, method: "FO+CLG" },
+                Case { n: 1000, p: 100, method: "SFO+CNG" },
+                Case { n: 2000, p: 100, method: "SFO+CNG" },
+            ],
+            3,
+        ),
+    }
+}
+
+/// Run Table 4.
+pub fn run(scale: Scale) -> String {
+    let (cases, reps) = cases(scale);
+    let mut table = Table::new(
+        "Table 4 — best cutting-plane method vs PSM at λ = 0.01·λ_max",
+        &["n", "p", "method", "time (s)", "ARA (%)", "PSM time (s)", "PSM ARA (%)"],
+    );
+    for case in cases {
+        let mut t_cp = Vec::new();
+        let mut t_psm = Vec::new();
+        let mut o_cp = Vec::new();
+        let mut o_psm = Vec::new();
+        for rep in 0..reps {
+            let spec = SyntheticSpec::paper_default(case.n, case.p);
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(7000 + rep as u64));
+            let lambda = 0.01 * ds.lambda_max_l1();
+
+            match case.method {
+                "FO+CLG" => {
+                    let (sol, split) = fo_clg(&ds, lambda, 1e-2, 100);
+                    t_cp.push(split.total());
+                    o_cp.push(sol.objective);
+                }
+                _ => {
+                    let (sol, split) = sfo_cng(&ds, lambda, 1e-2, 31 + rep as u64);
+                    t_cp.push(split.total());
+                    o_cp.push(sol.objective);
+                }
+            }
+            let (res, t) = time_it(|| psm_l1svm(&ds, lambda));
+            t_psm.push(t);
+            o_psm.push(res.solution.objective);
+        }
+        let best: Vec<f64> = o_cp.iter().zip(&o_psm).map(|(a, b)| a.min(*b)).collect();
+        let (mc, sc) = mean_std(&t_cp);
+        let (mp, sp) = mean_std(&t_psm);
+        table.row(vec![
+            case.n.to_string(),
+            case.p.to_string(),
+            case.method.to_string(),
+            fmt_time(mc, sc),
+            format!("{:.2}", ara_percent(&o_cp, &best)),
+            fmt_time(mp, sp),
+            format!("{:.2}", ara_percent(&o_psm, &best)),
+        ]);
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("FO+CLG"));
+        assert!(out.contains("PSM"));
+    }
+}

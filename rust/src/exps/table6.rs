@@ -1,0 +1,106 @@
+//! **Table 6** — Slope-SVM with *distinct* BH-style weights
+//! `λ_j = √(log(2p/j))·λ̃`: FO+CL-CNG vs a pure first-order method asked
+//! for a high-accuracy solution (the CVXPY route crashes outright for
+//! distinct weights — our A.2 model exceeds its row budget at p ≈ 80+).
+
+use crate::backend::NativeBackend;
+use crate::baselines::slope_full::solve_slope_full;
+use crate::coordinator::slope::slope_column_constraint_generation;
+use crate::coordinator::GenParams;
+use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::exps::common::fo_slope_init;
+use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
+use crate::fom::fista::{fista, FistaParams, Penalty};
+use crate::fom::objective::{bh_slope_weights, slope_objective};
+use crate::rng::Xoshiro256;
+
+fn sizes(scale: Scale) -> (usize, Vec<usize>, usize) {
+    match scale {
+        Scale::Smoke => (30, vec![150], 1),
+        Scale::Default => (100, vec![1000, 5000, 10_000], 2),
+        Scale::Paper => (100, vec![10_000, 20_000, 50_000], 3),
+    }
+}
+
+/// Run Table 6.
+pub fn run(scale: Scale) -> String {
+    let (n, ps, reps) = sizes(scale);
+    let mut table = Table::new(
+        "Table 6 — Slope-SVM, distinct BH weights λ_j = √(log(2p/j))·λ̃",
+        &["p", "FO+CL-CNG (s)", "ARA (%)", "CL-CNG wo FO (s)", "FO-only (s)", "FO-only ARA (%)", "CVXPY-like"],
+    );
+    for &p in &ps {
+        let mut t_cg = Vec::new();
+        let mut t_cut = Vec::new();
+        let mut t_fo = Vec::new();
+        let mut o_cg = Vec::new();
+        let mut o_fo = Vec::new();
+        let mut cvxpy_ok = false;
+        for rep in 0..reps {
+            let spec = SyntheticSpec { n, p, k0: 10.min(p / 2), rho: 0.1, standardize: true };
+            let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(9500 + rep as u64));
+            let lambda_tilde = 0.01 * ds.lambda_max_l1();
+            let lambda = bh_slope_weights(p, lambda_tilde);
+            let backend = NativeBackend::new(&ds.x);
+
+            let (init, t_init) = fo_slope_init(&ds, &lambda, 100);
+            let (sol, t) = time_it(|| {
+                slope_column_constraint_generation(
+                    &ds,
+                    &backend,
+                    &lambda,
+                    &init,
+                    &GenParams { eps: 1e-2, max_cols_per_round: 10, ..Default::default() },
+                )
+            });
+            t_cg.push(t + t_init);
+            t_cut.push(t);
+            o_cg.push(sol.objective);
+
+            // first-order method pushed for accuracy (full p, many iters)
+            let (fo_obj, t) = time_it(|| {
+                let res = fista(
+                    &backend,
+                    &ds.y,
+                    &Penalty::Slope(lambda.clone()),
+                    &FistaParams { tau: 0.2, eta: 1e-8, max_iters: 1500, power_iters: 25 },
+                    None,
+                );
+                slope_objective(&backend, &ds.y, &res.beta, res.beta0, &lambda)
+            });
+            t_fo.push(t);
+            o_fo.push(fo_obj);
+
+            if rep == 0 {
+                cvxpy_ok = solve_slope_full(&ds, &lambda).is_some();
+            }
+        }
+        let best: Vec<f64> = o_cg.iter().zip(&o_fo).map(|(a, b)| a.min(*b)).collect();
+        let (mc, sc) = mean_std(&t_cg);
+        let (mk, sk) = mean_std(&t_cut);
+        let (mf, sf) = mean_std(&t_fo);
+        table.row(vec![
+            p.to_string(),
+            fmt_time(mc, sc),
+            format!("{:.2}", ara_percent(&o_cg, &best)),
+            fmt_time(mk, sk),
+            fmt_time(mf, sf),
+            format!("{:.2}", ara_percent(&o_fo, &best)),
+            if cvxpy_ok { "ok".into() } else { "— (crashed/row budget)".to_string() },
+        ]);
+    }
+    let out = table.render();
+    println!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_smoke() {
+        let out = run(Scale::Smoke);
+        assert!(out.contains("Table 6"));
+    }
+}

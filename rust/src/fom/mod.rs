@@ -1,0 +1,29 @@
+//! First-order methods (§4 of the paper).
+//!
+//! These produce *low-accuracy* solutions fast; the coordinators use them
+//! purely to guess good initial column/constraint working sets:
+//!
+//! * [`smoothing`] — Nesterov-smoothed hinge loss `F^τ` (value + gradient);
+//! * [`prox`] — thresholding operators for the three regularizers
+//!   (soft-thresholding; L∞ via the Moreau identity and an L1-ball
+//!   projection; Slope via PAVA isotonic regression);
+//! * [`fista`] — accelerated proximal gradient on the composite smoothed
+//!   problem (§4.3);
+//! * [`block_cd`] — cyclical proximal block coordinate descent for the
+//!   Group-SVM regularizer (§4.3);
+//! * [`screening`] — correlation screening (§4.4.1);
+//! * [`subsample`] — subsample-and-average heuristics for large n
+//!   (§4.4.2–4.4.3), parallelized with `std::thread`;
+//! * [`objective`] — exact (non-smoothed) objective evaluators used for
+//!   the ARA metric in the experiment harness.
+
+pub mod block_cd;
+pub mod fista;
+pub mod objective;
+pub mod prox;
+pub mod screening;
+pub mod smoothing;
+pub mod subsample;
+
+pub use fista::{fista, FistaParams, FistaResult, Penalty};
+pub use smoothing::SmoothedHinge;

@@ -1,0 +1,153 @@
+//! Exact (non-smoothed) objective evaluators.
+//!
+//! Used for the ARA (averaged relative accuracy) metric in the benchmark
+//! harness and as the cross-method comparison yardstick: every algorithm
+//! — cutting plane, full LP, PSM, ADMM, FOM — is scored by the true
+//! objective of the problem it solves.
+
+use crate::backend::Backend;
+
+/// Hinge loss `Σ (1 − y_i(x_iᵀβ + β₀))₊`.
+pub fn hinge_loss(backend: &dyn Backend, y: &[f64], beta: &[f64], beta0: f64) -> f64 {
+    let n = backend.rows();
+    let mut xb = vec![0.0; n];
+    backend.xb(beta, &mut xb);
+    let mut s = 0.0;
+    for i in 0..n {
+        s += (1.0 - y[i] * (xb[i] + beta0)).max(0.0);
+    }
+    s
+}
+
+/// Hinge loss when β is supported on a column subset (avoids densifying).
+pub fn hinge_loss_support(
+    design: &crate::data::Design,
+    y: &[f64],
+    cols: &[usize],
+    beta: &[f64],
+    beta0: f64,
+) -> f64 {
+    let n = design.rows();
+    let mut xb = vec![0.0; n];
+    design.matvec_cols(cols, beta, &mut xb);
+    let mut s = 0.0;
+    for i in 0..n {
+        s += (1.0 - y[i] * (xb[i] + beta0)).max(0.0);
+    }
+    s
+}
+
+/// L1-SVM objective (Problem 2).
+pub fn l1_objective(
+    backend: &dyn Backend,
+    y: &[f64],
+    beta: &[f64],
+    beta0: f64,
+    lambda: f64,
+) -> f64 {
+    hinge_loss(backend, y, beta, beta0) + lambda * beta.iter().map(|v| v.abs()).sum::<f64>()
+}
+
+/// Group-SVM objective (Problem 3), `Ω = λ Σ_g ‖β_g‖∞`.
+pub fn group_objective(
+    backend: &dyn Backend,
+    y: &[f64],
+    beta: &[f64],
+    beta0: f64,
+    lambda: f64,
+    groups: &[Vec<usize>],
+) -> f64 {
+    let pen: f64 = groups
+        .iter()
+        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
+        .sum();
+    hinge_loss(backend, y, beta, beta0) + lambda * pen
+}
+
+/// Slope norm `Σ_j λ_j |β|_(j)` for a sorted nonincreasing weight vector.
+pub fn slope_norm(beta: &[f64], lambda: &[f64]) -> f64 {
+    let mut a: Vec<f64> = beta.iter().map(|v| v.abs()).collect();
+    a.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    a.iter().zip(lambda).map(|(v, l)| v * l).sum()
+}
+
+/// Slope-SVM objective (Problem 4).
+pub fn slope_objective(
+    backend: &dyn Backend,
+    y: &[f64],
+    beta: &[f64],
+    beta0: f64,
+    lambda: &[f64],
+) -> f64 {
+    hinge_loss(backend, y, beta, beta0) + slope_norm(beta, lambda)
+}
+
+/// The Benjamini–Hochberg-style Slope weight sequence used in Table 6:
+/// `λ_j = √(log(2p/j)) · λ̃`.
+pub fn bh_slope_weights(p: usize, lambda_tilde: f64) -> Vec<f64> {
+    (1..=p)
+        .map(|j| (2.0 * p as f64 / j as f64).ln().sqrt() * lambda_tilde)
+        .collect()
+}
+
+/// The two-level Slope weights of Table 5: `2λ̃` on the first `k0`,
+/// `λ̃` after.
+pub fn two_level_slope_weights(p: usize, k0: usize, lambda_tilde: f64) -> Vec<f64> {
+    (0..p).map(|j| if j < k0 { 2.0 * lambda_tilde } else { lambda_tilde }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::Design;
+    use crate::linalg::Matrix;
+
+    fn tiny() -> (Design, Vec<f64>) {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        (Design::dense(m), vec![1.0, -1.0])
+    }
+
+    #[test]
+    fn hinge_and_l1_objective() {
+        let (d, y) = tiny();
+        let b = NativeBackend::new(&d);
+        // β = (1, 1), β₀ = 0: margins y(xβ) = (1, -1) → hinge = 0 + 2
+        let obj = l1_objective(&b, &y, &[1.0, 1.0], 0.0, 0.5);
+        assert!((obj - (2.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hinge_support_matches_dense() {
+        let (d, y) = tiny();
+        let b = NativeBackend::new(&d);
+        let full = hinge_loss(&b, &y, &[0.0, 2.0], 0.1);
+        let sup = hinge_loss_support(&d, &y, &[1], &[2.0], 0.1);
+        assert!((full - sup).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_objective_uses_linf() {
+        let (d, y) = tiny();
+        let b = NativeBackend::new(&d);
+        let groups = vec![vec![0, 1]];
+        let obj = group_objective(&b, &y, &[1.0, -3.0], 0.0, 2.0, &groups);
+        let hinge = hinge_loss(&b, &y, &[1.0, -3.0], 0.0);
+        assert!((obj - (hinge + 2.0 * 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slope_norm_sorts() {
+        let lam = vec![2.0, 1.0];
+        assert!((slope_norm(&[1.0, -3.0], &lam) - (2.0 * 3.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_sequences() {
+        let w = bh_slope_weights(4, 1.0);
+        assert!(w.windows(2).all(|x| x[0] >= x[1]));
+        assert!((w[0] - (8.0f64).ln().sqrt()).abs() < 1e-12);
+        let t = two_level_slope_weights(5, 2, 0.5);
+        assert_eq!(t, vec![1.0, 1.0, 0.5, 0.5, 0.5]);
+    }
+}

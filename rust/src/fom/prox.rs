@@ -1,0 +1,301 @@
+//! Thresholding (proximal) operators for the three regularizers (§4.2).
+//!
+//! Each computes `argmin_β ½‖β − η‖² + μ·Ω(β)`:
+//!
+//! * `Ω = ‖·‖₁` — componentwise soft-thresholding;
+//! * `Ω = ‖·‖∞` — via the Moreau identity `prox_{μ‖·‖∞}(η) = η −
+//!   Π_{μ·B₁}(η)` with `Π` the Euclidean projection onto the L1 ball
+//!   (computed by the sort-based method of Duchi et al. / van den Berg &
+//!   Friedlander);
+//! * `Ω = Slope` — reduces to an isotonic-regression-like problem on the
+//!   sorted absolute values, solved exactly by PAVA (§4.2, eq. 46).
+
+/// Scalar soft-threshold: `sign(c)·(|c| − μ)₊`.
+#[inline]
+pub fn soft_threshold_scalar(c: f64, mu: f64) -> f64 {
+    if c > mu {
+        c - mu
+    } else if c < -mu {
+        c + mu
+    } else {
+        0.0
+    }
+}
+
+/// Componentwise soft-thresholding (prox of `μ‖·‖₁`), in place.
+pub fn soft_threshold(eta: &mut [f64], mu: f64) {
+    for v in eta.iter_mut() {
+        *v = soft_threshold_scalar(*v, mu);
+    }
+}
+
+/// Euclidean projection of `eta` onto the L1 ball of radius `radius`.
+///
+/// Sort-based exact algorithm: find the soft-threshold level θ such that
+/// `Σ (|η_i| − θ)₊ = radius` (zero if `‖η‖₁ ≤ radius`).
+pub fn project_l1_ball(eta: &[f64], radius: f64) -> Vec<f64> {
+    assert!(radius >= 0.0);
+    let l1: f64 = eta.iter().map(|v| v.abs()).sum();
+    if l1 <= radius {
+        return eta.to_vec();
+    }
+    if radius == 0.0 {
+        return vec![0.0; eta.len()];
+    }
+    let mut abs: Vec<f64> = eta.iter().map(|v| v.abs()).collect();
+    abs.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0;
+    let mut theta = 0.0;
+    for (k, &a) in abs.iter().enumerate() {
+        cum += a;
+        let t = (cum - radius) / (k as f64 + 1.0);
+        if k + 1 == abs.len() || t >= abs[k + 1] {
+            theta = t;
+            break;
+        }
+    }
+    eta.iter().map(|&v| soft_threshold_scalar(v, theta)).collect()
+}
+
+/// Prox of `μ‖·‖∞` via the Moreau decomposition (eq. 44).
+pub fn prox_linf(eta: &[f64], mu: f64) -> Vec<f64> {
+    let proj = project_l1_ball(eta, mu);
+    eta.iter().zip(&proj).map(|(e, p)| e - p).collect()
+}
+
+/// Prox of the Slope norm `Σ λ_j |β|_(j)` scaled by `mu`
+/// (i.e. weights `μ·λ_j`), for a *sorted nonincreasing nonnegative*
+/// weight vector `lambda`.
+///
+/// Algorithm (Bogdan et al. 2015, eq. 45–46): take the decreasing
+/// rearrangement of |η|, subtract the weights, then project onto the
+/// isotonic cone `u₁ ≥ … ≥ u_p ≥ 0` via PAVA; finally undo sorting and
+/// restore signs.
+pub fn prox_slope(eta: &[f64], lambda: &[f64], mu: f64) -> Vec<f64> {
+    let p = eta.len();
+    assert_eq!(lambda.len(), p);
+    debug_assert!(lambda.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    // order[k] = index of the k-th largest |η|
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_unstable_by(|&a, &b| eta[b].abs().partial_cmp(&eta[a].abs()).unwrap());
+    // PAVA on z_k = |η|_(k) − μ λ_k for the nonincreasing constraint.
+    let z: Vec<f64> = order
+        .iter()
+        .zip(lambda)
+        .map(|(&idx, &l)| eta[idx].abs() - mu * l)
+        .collect();
+    let u = pava_nonincreasing(&z);
+    let mut out = vec![0.0; p];
+    for (k, &idx) in order.iter().enumerate() {
+        out[idx] = eta[idx].signum() * u[k].max(0.0);
+    }
+    out
+}
+
+/// Pool-adjacent-violators for `min ½‖u − z‖²` s.t. `u₁ ≥ u₂ ≥ … ≥ u_p`
+/// (no positivity — callers clamp afterwards, which is exact for this
+/// composite because the objective separates at zero).
+pub fn pava_nonincreasing(z: &[f64]) -> Vec<f64> {
+    // Classic stack of blocks with (sum, count).
+    let mut sums: Vec<f64> = Vec::with_capacity(z.len());
+    let mut counts: Vec<usize> = Vec::with_capacity(z.len());
+    for &v in z {
+        let mut s = v;
+        let mut c = 1usize;
+        // merging while previous block mean is SMALLER than current mean
+        // (violates nonincreasing)
+        while let (Some(&ps), Some(&pc)) = (sums.last(), counts.last()) {
+            if ps / (pc as f64) < s / (c as f64) {
+                s += ps;
+                c += pc;
+                sums.pop();
+                counts.pop();
+            } else {
+                break;
+            }
+        }
+        sums.push(s);
+        counts.push(c);
+    }
+    let mut out = Vec::with_capacity(z.len());
+    for (s, c) in sums.iter().zip(&counts) {
+        let mean = s / *c as f64;
+        out.extend(std::iter::repeat(mean).take(*c));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn slope_norm(beta: &[f64], lambda: &[f64], mu: f64) -> f64 {
+        let mut a: Vec<f64> = beta.iter().map(|v| v.abs()).collect();
+        a.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+        a.iter().zip(lambda).map(|(v, l)| mu * l * v).sum()
+    }
+
+    fn slope_prox_objective(beta: &[f64], eta: &[f64], lambda: &[f64], mu: f64) -> f64 {
+        let quad: f64 = beta.iter().zip(eta).map(|(b, e)| 0.5 * (b - e) * (b - e)).sum();
+        quad + slope_norm(beta, lambda, mu)
+    }
+
+    #[test]
+    fn soft_threshold_basics() {
+        assert_eq!(soft_threshold_scalar(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold_scalar(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold_scalar(0.5, 1.0), 0.0);
+        let mut v = vec![2.0, -0.5, -4.0];
+        soft_threshold(&mut v, 1.0);
+        assert_eq!(v, vec![1.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn l1_projection_inside_ball_is_identity() {
+        let eta = [0.2, -0.3, 0.1];
+        assert_eq!(project_l1_ball(&eta, 1.0), eta.to_vec());
+    }
+
+    #[test]
+    fn l1_projection_known_case() {
+        // Project (3, 1) onto L1 ball radius 2: θ solves (3−θ)+(1−θ)=2 if
+        // both positive → θ=1 → (2, 0).
+        let p = project_l1_ball(&[3.0, 1.0], 2.0);
+        assert!((p[0] - 2.0).abs() < 1e-12);
+        assert!(p[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_projection_properties_random() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for _ in 0..100 {
+            let p = 1 + rng.below(20);
+            let eta: Vec<f64> = (0..p).map(|_| rng.normal() * 3.0).collect();
+            let r = rng.uniform() * 4.0;
+            let proj = project_l1_ball(&eta, r);
+            let l1: f64 = proj.iter().map(|v| v.abs()).sum();
+            assert!(l1 <= r + 1e-9, "outside ball: {l1} > {r}");
+            // projection optimality: for any feasible candidate (scaled
+            // eta), distance must not be smaller
+            let eta_l1: f64 = eta.iter().map(|v| v.abs()).sum();
+            if eta_l1 > 0.0 {
+                let cand: Vec<f64> = eta.iter().map(|v| v * (r / eta_l1).min(1.0)).collect();
+                let d_proj: f64 = proj.iter().zip(&eta).map(|(a, b)| (a - b) * (a - b)).sum();
+                let d_cand: f64 = cand.iter().zip(&eta).map(|(a, b)| (a - b) * (a - b)).sum();
+                assert!(d_proj <= d_cand + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn moreau_identity_holds() {
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        for _ in 0..50 {
+            let p = 1 + rng.below(12);
+            let eta: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+            let mu = 0.1 + rng.uniform() * 2.0;
+            let prox = prox_linf(&eta, mu);
+            let proj = project_l1_ball(&eta, mu);
+            for k in 0..p {
+                assert!((prox[k] + proj[k] - eta[k]).abs() < 1e-12);
+            }
+            // prox result must satisfy: max |prox| appears where it should;
+            // verify optimality by random perturbations
+            let obj = |b: &[f64]| -> f64 {
+                let quad: f64 = b.iter().zip(&eta).map(|(x, e)| 0.5 * (x - e) * (x - e)).sum();
+                let linf = b.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                quad + mu * linf
+            };
+            let base = obj(&prox);
+            for _ in 0..20 {
+                let pert: Vec<f64> =
+                    prox.iter().map(|v| v + rng.normal() * 0.05).collect();
+                assert!(obj(&pert) >= base - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn pava_produces_isotonic_means() {
+        let z = [3.0, 1.0, 2.0];
+        let u = pava_nonincreasing(&z);
+        assert!((u[0] - 3.0).abs() < 1e-12);
+        assert!((u[1] - 1.5).abs() < 1e-12);
+        assert!((u[2] - 1.5).abs() < 1e-12);
+        // already decreasing → identity
+        let z2 = [5.0, 4.0, 1.0];
+        assert_eq!(pava_nonincreasing(&z2), z2.to_vec());
+        // all increasing → single pooled mean
+        let z3 = [1.0, 2.0, 3.0];
+        let u3 = pava_nonincreasing(&z3);
+        for v in u3 {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn slope_prox_equals_soft_threshold_for_equal_weights() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        for _ in 0..30 {
+            let p = 1 + rng.below(15);
+            let eta: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+            let lam = 0.7;
+            let lambda = vec![lam; p];
+            let got = prox_slope(&eta, &lambda, 1.0);
+            let mut want = eta.clone();
+            soft_threshold(&mut want, lam);
+            for k in 0..p {
+                assert!((got[k] - want[k]).abs() < 1e-10, "{got:?} vs {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn slope_prox_is_optimal_against_perturbations() {
+        let mut rng = Xoshiro256::seed_from_u64(34);
+        for trial in 0..40 {
+            let p = 2 + rng.below(10);
+            let eta: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+            let mut lambda: Vec<f64> = (0..p).map(|_| rng.uniform() * 1.5).collect();
+            lambda.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let mu = 0.3 + rng.uniform();
+            let got = prox_slope(&eta, &lambda, mu);
+            let base = slope_prox_objective(&got, &eta, &lambda, mu);
+            // random perturbations must not improve the objective
+            for _ in 0..50 {
+                let pert: Vec<f64> = got.iter().map(|v| v + rng.normal() * 0.03).collect();
+                let o = slope_prox_objective(&pert, &eta, &lambda, mu);
+                assert!(o >= base - 1e-8, "trial {trial}: {o} < {base}");
+            }
+            // coordinate sign pattern must match η where nonzero
+            for k in 0..p {
+                if got[k] != 0.0 {
+                    assert!(got[k] * eta[k] >= 0.0);
+                    assert!(got[k].abs() <= eta[k].abs() + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slope_prox_ordering_preserved() {
+        // |prox| ordering must follow |η| ordering (exchange property).
+        let mut rng = Xoshiro256::seed_from_u64(35);
+        for _ in 0..30 {
+            let p = 3 + rng.below(8);
+            let eta: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+            let mut lambda: Vec<f64> = (0..p).map(|_| rng.uniform()).collect();
+            lambda.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let got = prox_slope(&eta, &lambda, 1.0);
+            let mut idx: Vec<usize> = (0..p).collect();
+            idx.sort_unstable_by(|&a, &b| eta[b].abs().partial_cmp(&eta[a].abs()).unwrap());
+            for w in idx.windows(2) {
+                assert!(
+                    got[w[0]].abs() >= got[w[1]].abs() - 1e-9,
+                    "ordering violated"
+                );
+            }
+        }
+    }
+}

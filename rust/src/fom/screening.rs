@@ -1,0 +1,88 @@
+//! Correlation screening (§4.4.1).
+//!
+//! For standardized features, `|x_jᵀ y|` ranks features by marginal
+//! association with the labels; the paper keeps the top `10n` features
+//! (or top `n` groups) before running a first-order method, and uses the
+//! top `~n` features directly as a column-generation initializer.
+
+use crate::data::Design;
+
+/// Indices of the `k` features with the largest `|x_jᵀ y|`, sorted by
+/// decreasing score.
+pub fn correlation_screen(design: &Design, y: &[f64], k: usize) -> Vec<usize> {
+    let p = design.cols();
+    let mut scores = vec![0.0; p];
+    design.tmatvec(y, &mut scores);
+    top_k_by_abs(&scores, k.min(p))
+}
+
+/// Indices of the `k` groups with the largest `Σ_{j∈g} |x_jᵀ y|`.
+pub fn group_screen(design: &Design, y: &[f64], groups: &[Vec<usize>], k: usize) -> Vec<usize> {
+    let p = design.cols();
+    let mut scores = vec![0.0; p];
+    design.tmatvec(y, &mut scores);
+    let gscores: Vec<f64> = groups
+        .iter()
+        .map(|g| g.iter().map(|&j| scores[j].abs()).sum())
+        .collect();
+    let mut idx: Vec<usize> = (0..groups.len()).collect();
+    idx.sort_unstable_by(|&a, &b| gscores[b].partial_cmp(&gscores[a]).unwrap());
+    idx.truncate(k.min(groups.len()));
+    idx
+}
+
+/// Indices of the `k` largest entries of `scores` by absolute value,
+/// ordered by decreasing |score| (deterministic tie-break by index).
+pub fn top_k_by_abs(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b]
+            .abs()
+            .partial_cmp(&scores[a].abs())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn top_k_orders_by_abs() {
+        let got = top_k_by_abs(&[0.1, -5.0, 3.0, -0.2], 3);
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn screening_finds_informative_features() {
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        let spec = SyntheticSpec { n: 150, p: 300, k0: 8, rho: 0.05, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        let picked = correlation_screen(&ds.x, &ds.y, 20);
+        let hits = picked.iter().filter(|&&j| j < 8).count();
+        assert!(hits >= 7, "screening found only {hits}/8 informative features");
+    }
+
+    #[test]
+    fn group_screening_finds_informative_groups() {
+        use crate::data::synthetic::{generate_group, GroupSpec};
+        let mut rng = Xoshiro256::seed_from_u64(72);
+        let spec = GroupSpec {
+            n: 100,
+            n_groups: 30,
+            group_size: 5,
+            k0_groups: 4,
+            rho: 0.2,
+            standardize: true,
+        };
+        let gd = generate_group(&spec, &mut rng);
+        let picked = group_screen(&gd.data.x, &gd.data.y, &gd.groups, 8);
+        let hits = picked.iter().filter(|&&g| g < 4).count();
+        assert!(hits >= 3, "group screening found only {hits}/4");
+    }
+}

@@ -1,0 +1,178 @@
+//! Nesterov smoothing of the hinge loss (§4.1).
+//!
+//! `F^τ(β, β₀) = max_{‖w‖∞≤1} Σ ½[z_i + w_i z_i] − (τ/2)‖w‖²` with
+//! `z_i = 1 − y_i(x_iᵀβ + β₀)`; the maximizer is
+//! `w_i^τ = clip(z_i / 2τ, −1, 1)` and
+//!
+//! * value: `Σ ½ z_i (1 + w_i^τ) − (τ/2)‖w^τ‖²`
+//! * gradient: `∇_β F = −½ Xᵀ(y ∘ (1 + w^τ))`, `∇_{β₀} F = −½ Σ y_i(1+w_i^τ)`
+//!
+//! The two O(np) products run through a [`Backend`].
+
+use crate::backend::Backend;
+
+/// Smoothed hinge loss with parameter τ.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoothedHinge {
+    /// Smoothing parameter τ > 0 (paper uses 0.2).
+    pub tau: f64,
+}
+
+/// Work buffers reused across gradient evaluations (avoids allocating in
+/// the FISTA loop).
+pub struct HingeWorkspace {
+    /// margins `z = 1 − y∘(Xβ + β₀)`
+    pub z: Vec<f64>,
+    /// smoothed dual weights `w^τ`
+    pub w: Vec<f64>,
+    /// scratch `y ∘ (1 + w)/2`
+    pub v: Vec<f64>,
+}
+
+impl HingeWorkspace {
+    /// Allocate for n samples.
+    pub fn new(n: usize) -> Self {
+        Self { z: vec![0.0; n], w: vec![0.0; n], v: vec![0.0; n] }
+    }
+}
+
+impl SmoothedHinge {
+    /// Evaluate value and gradient at `(β, β₀)`.
+    ///
+    /// Returns `(F^τ, ∇β ∈ ℝᵖ written into grad_beta, ∇β₀)`.
+    pub fn value_grad(
+        &self,
+        backend: &dyn Backend,
+        y: &[f64],
+        beta: &[f64],
+        beta0: f64,
+        ws: &mut HingeWorkspace,
+        grad_beta: &mut [f64],
+    ) -> (f64, f64) {
+        let n = backend.rows();
+        debug_assert_eq!(y.len(), n);
+        debug_assert_eq!(grad_beta.len(), backend.cols());
+        // z = 1 − y∘(Xβ + β₀)
+        backend.xb(beta, &mut ws.z);
+        let tau = self.tau;
+        let mut value = 0.0;
+        let mut grad_b0 = 0.0;
+        for i in 0..n {
+            let z = 1.0 - y[i] * (ws.z[i] + beta0);
+            ws.z[i] = z;
+            let w = (z / (2.0 * tau)).clamp(-1.0, 1.0);
+            ws.w[i] = w;
+            value += 0.5 * z * (1.0 + w) - 0.5 * tau * w * w;
+            let coeff = 0.5 * y[i] * (1.0 + w);
+            ws.v[i] = coeff;
+            grad_b0 -= coeff;
+        }
+        // ∇β = −Xᵀ v with v_i = y_i (1+w_i)/2
+        backend.xtv(&ws.v, grad_beta);
+        for g in grad_beta.iter_mut() {
+            *g = -*g;
+        }
+        (value, grad_b0)
+    }
+
+    /// Value only (cheaper bookkeeping, same matvec cost).
+    pub fn value(
+        &self,
+        backend: &dyn Backend,
+        y: &[f64],
+        beta: &[f64],
+        beta0: f64,
+        ws: &mut HingeWorkspace,
+    ) -> f64 {
+        let n = backend.rows();
+        backend.xb(beta, &mut ws.z);
+        let tau = self.tau;
+        let mut value = 0.0;
+        for i in 0..n {
+            let z = 1.0 - y[i] * (ws.z[i] + beta0);
+            let w = (z / (2.0 * tau)).clamp(-1.0, 1.0);
+            value += 0.5 * z * (1.0 + w) - 0.5 * tau * w * w;
+        }
+        value
+    }
+
+    /// Pointwise smoothed hinge of a scalar margin (test helper; equals
+    /// `max(0, z)` up to O(τ)).
+    pub fn scalar(&self, z: f64) -> f64 {
+        let w = (z / (2.0 * self.tau)).clamp(-1.0, 1.0);
+        0.5 * z * (1.0 + w) - 0.5 * self.tau * w * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::Design;
+    use crate::linalg::Matrix;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn scalar_smoothing_approximates_hinge() {
+        let sh = SmoothedHinge { tau: 0.1 };
+        // saturated regions: F = hinge − τ/2 exactly
+        assert!((sh.scalar(3.0) - (3.0 - 0.05)).abs() < 1e-12);
+        assert!((sh.scalar(-3.0) - (-0.05)).abs() < 1e-12);
+        // Nesterov bound everywhere: hinge − τ/2 ≤ F ≤ hinge
+        for z in [-0.3f64, -0.05, 0.0, 0.05, 0.3, 1.0, -1.0] {
+            let hinge = z.max(0.0);
+            let f = sh.scalar(z);
+            assert!(f <= hinge + 1e-12, "z={z}");
+            assert!(f >= hinge - 0.05 - 1e-12, "z={z}");
+        }
+        // at z = 0: w = 0 → F = 0
+        assert!(sh.scalar(0.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let (n, p) = (15, 7);
+        let mut m = Matrix::zeros(n, p);
+        for i in 0..n {
+            for j in 0..p {
+                m.set(i, j, rng.normal());
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let d = Design::dense(m);
+        let backend = NativeBackend::new(&d);
+        let sh = SmoothedHinge { tau: 0.25 };
+        let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 0.3).collect();
+        let beta0 = 0.2;
+        let mut ws = HingeWorkspace::new(n);
+        let mut grad = vec![0.0; p];
+        let (f0, g0) = sh.value_grad(&backend, &y, &beta, beta0, &mut ws, &mut grad);
+
+        let h = 1e-6;
+        for j in 0..p {
+            let mut bp = beta.clone();
+            bp[j] += h;
+            let fp = sh.value(&backend, &y, &bp, beta0, &mut ws);
+            let fd = (fp - f0) / h;
+            assert!((fd - grad[j]).abs() < 1e-4, "j={j}: fd {fd} grad {}", grad[j]);
+        }
+        let fp = sh.value(&backend, &y, &beta, beta0 + h, &mut ws);
+        let fd0 = (fp - f0) / h;
+        assert!((fd0 - g0).abs() < 1e-4, "b0: fd {fd0} grad {g0}");
+    }
+
+    #[test]
+    fn value_upper_bounds_do_not_exceed_hinge_plus_tau_bound() {
+        // F^τ(z) ∈ [hinge(z) − τ/2·n?, hinge(z)] per-sample bound
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let sh = SmoothedHinge { tau: 0.2 };
+        for _ in 0..200 {
+            let z = rng.normal() * 2.0;
+            let f = sh.scalar(z);
+            let hinge = z.max(0.0);
+            assert!(f <= hinge + 1e-12);
+            assert!(f >= hinge - 0.1 - 1e-12); // τ/2 = 0.1
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Subsample-and-average heuristics for large n (§4.4.2–4.4.3).
+//!
+//! The first-order methods become gradient-bound when n is large; the
+//! paper instead solves the problem on subsamples `A_j` (with λ rescaled
+//! by `|A|/n`), averages the estimators for variance reduction, and stops
+//! once the running average stabilizes. The subsample solves are
+//! embarrassingly parallel — here they run on `std::thread` workers.
+
+use crate::backend::NativeBackend;
+use crate::data::{Dataset, Design};
+use crate::fom::fista::{fista, FistaParams, Penalty};
+use crate::fom::screening::correlation_screen;
+use crate::rng::Xoshiro256;
+
+/// Parameters of the subsampling heuristic.
+#[derive(Clone, Debug)]
+pub struct SubsampleParams {
+    /// Subsample size n₀ (paper: 10·p for the large-n regime).
+    pub n0: usize,
+    /// Stop when ‖β̄_Q − β̄_{Q−1}‖ ≤ μ_tol (paper: 0.1, or 0.5 sparse).
+    pub mu_tol: f64,
+    /// Max number of subsamples (paper: n/n₀).
+    pub q_max: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Optional correlation screening within each subsample (§4.4.3):
+    /// keep the top `screen_k` features (0 = off).
+    pub screen_k: usize,
+    /// FISTA settings for the subsample solves.
+    pub fista: FistaParams,
+}
+
+impl Default for SubsampleParams {
+    fn default() -> Self {
+        Self {
+            n0: 1000,
+            mu_tol: 1e-1,
+            q_max: 16,
+            threads: 4,
+            screen_k: 0,
+            fista: FistaParams::default(),
+        }
+    }
+}
+
+/// Result of the averaged-subsample estimator.
+#[derive(Clone, Debug)]
+pub struct SubsampleResult {
+    /// Averaged coefficients β̄_Q.
+    pub beta: Vec<f64>,
+    /// Averaged intercept.
+    pub beta0: f64,
+    /// Number of subsamples actually used.
+    pub q_used: usize,
+}
+
+/// One subsample solve: draw `n0` rows, rescale λ, FISTA (optionally after
+/// correlation screening), scatter back to ℝᵖ.
+fn solve_subsample(
+    ds: &Dataset,
+    lambda: f64,
+    params: &SubsampleParams,
+    seed: u64,
+) -> (Vec<f64>, f64) {
+    let n = ds.n();
+    let p = ds.p();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let n0 = params.n0.min(n);
+    let rows = rng.sample_indices(n, n0);
+    let sub_x: Design = ds.x.subset_rows(&rows);
+    let sub_y: Vec<f64> = rows.iter().map(|&i| ds.y[i]).collect();
+    let lam_scaled = lambda * n0 as f64 / n as f64;
+
+    if params.screen_k > 0 && params.screen_k < p {
+        let cols = correlation_screen(&sub_x, &sub_y, params.screen_k);
+        let xx = sub_x.subset_cols(&cols);
+        let backend = NativeBackend::new(&xx);
+        let res = fista(&backend, &sub_y, &Penalty::L1(lam_scaled), &params.fista, None);
+        let mut beta = vec![0.0; p];
+        for (k, &j) in cols.iter().enumerate() {
+            beta[j] = res.beta[k];
+        }
+        (beta, res.beta0)
+    } else {
+        let backend = NativeBackend::new(&sub_x);
+        let res = fista(&backend, &sub_y, &Penalty::L1(lam_scaled), &params.fista, None);
+        (res.beta, res.beta0)
+    }
+}
+
+/// Run the subsample-and-average heuristic (§4.4.2; with `screen_k > 0`
+/// this is the large-n-large-p variant of §4.4.3).
+pub fn subsample_average(
+    ds: &Dataset,
+    lambda: f64,
+    params: &SubsampleParams,
+    seed: u64,
+) -> SubsampleResult {
+    let p = ds.p();
+    let mut sum_beta = vec![0.0; p];
+    let mut sum_beta0 = 0.0;
+    let mut prev_avg: Option<Vec<f64>> = None;
+    let mut q_used = 0;
+
+    let mut next_seed = seed;
+    'outer: while q_used < params.q_max {
+        // Launch one batch of worker threads.
+        let batch = params.threads.min(params.q_max - q_used).max(1);
+        let results: Vec<(Vec<f64>, f64)> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let s = next_seed + b as u64;
+                let ds_ref = &*ds;
+                let params_ref = &*params;
+                handles.push(scope.spawn(move || solve_subsample(ds_ref, lambda, params_ref, s)));
+            }
+            handles.into_iter().map(|h| h.join().expect("subsample worker panicked")).collect()
+        });
+        next_seed += batch as u64;
+
+        for (beta, beta0) in results {
+            q_used += 1;
+            for (s, b) in sum_beta.iter_mut().zip(&beta) {
+                *s += b;
+            }
+            sum_beta0 += beta0;
+            let avg: Vec<f64> = sum_beta.iter().map(|s| s / q_used as f64).collect();
+            if let Some(prev) = &prev_avg {
+                let delta: f64 = avg
+                    .iter()
+                    .zip(prev)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                if delta <= params.mu_tol {
+                    prev_avg = Some(avg);
+                    break 'outer;
+                }
+            }
+            prev_avg = Some(avg);
+        }
+    }
+    let beta = prev_avg.unwrap_or_else(|| vec![0.0; p]);
+    SubsampleResult { beta, beta0: sum_beta0 / q_used.max(1) as f64, q_used }
+}
+
+/// Sample indices whose hinge loss is positive at `(β, β₀)` — the paper's
+/// initializer for the constraint-generation working set `I`.
+pub fn violated_samples(ds: &Dataset, beta: &[f64], beta0: f64, slack: f64) -> Vec<usize> {
+    let n = ds.n();
+    let mut xb = vec![0.0; n];
+    ds.x.matvec(beta, &mut xb);
+    (0..n)
+        .filter(|&i| 1.0 - ds.y[i] * (xb[i] + beta0) > -slack)
+        .collect()
+}
+
+/// Like [`violated_samples`] but capped: returns the `cap` *most violated*
+/// samples. A noisy first-order estimate can flag thousands of samples on
+/// large-n data; seeding constraint generation with all of them inflates
+/// the LP basis (O(|I|³) factorizations) for no benefit — the CNG rounds
+/// bring in whatever the initializer missed.
+pub fn violated_samples_capped(
+    ds: &Dataset,
+    beta: &[f64],
+    beta0: f64,
+    slack: f64,
+    cap: usize,
+) -> Vec<usize> {
+    let n = ds.n();
+    let mut xb = vec![0.0; n];
+    ds.x.matvec(beta, &mut xb);
+    let mut scored: Vec<(usize, f64)> = (0..n)
+        .filter_map(|i| {
+            let z = 1.0 - ds.y[i] * (xb[i] + beta0);
+            if z > -slack {
+                Some((i, z))
+            } else {
+                None
+            }
+        })
+        .collect();
+    if scored.len() > cap {
+        scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(cap);
+    }
+    scored.into_iter().map(|(i, _)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+
+    fn big_n_dataset() -> Dataset {
+        let mut rng = Xoshiro256::seed_from_u64(81);
+        let spec = SyntheticSpec { n: 1200, p: 25, k0: 5, rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut rng)
+    }
+
+    #[test]
+    fn subsample_average_stabilizes_and_is_sensible() {
+        let ds = big_n_dataset();
+        let lambda = 0.01 * ds.lambda_max_l1();
+        let params = SubsampleParams { n0: 250, q_max: 8, threads: 4, ..Default::default() };
+        let res = subsample_average(&ds, lambda, &params, 7);
+        assert!(res.q_used >= 2);
+        // informative features should dominate
+        let info: f64 = res.beta[..5].iter().map(|v| v.abs()).sum();
+        let noise: f64 = res.beta[5..].iter().map(|v| v.abs()).sum();
+        assert!(info > noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn subsample_with_screening_matches_support() {
+        let ds = big_n_dataset();
+        let lambda = 0.01 * ds.lambda_max_l1();
+        let params = SubsampleParams {
+            n0: 250,
+            q_max: 6,
+            threads: 3,
+            screen_k: 15,
+            ..Default::default()
+        };
+        let res = subsample_average(&ds, lambda, &params, 11);
+        let info: f64 = res.beta[..5].iter().map(|v| v.abs()).sum();
+        assert!(info > 0.0);
+    }
+
+    #[test]
+    fn violated_samples_detects_margin_violations() {
+        let ds = big_n_dataset();
+        // zero coefficients: every sample violates (hinge = 1)
+        let all = violated_samples(&ds, &vec![0.0; ds.p()], 0.0, 0.0);
+        assert_eq!(all.len(), ds.n());
+        // a good separator from FISTA violates far fewer
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.01 * ds.lambda_max_l1();
+        let res = fista(
+            &backend,
+            &ds.y,
+            &Penalty::L1(lambda),
+            &FistaParams { max_iters: 500, eta: 1e-6, ..Default::default() },
+            None,
+        );
+        let few = violated_samples(&ds, &res.beta, res.beta0, 0.0);
+        assert!(few.len() < ds.n(), "classifier should satisfy some margins");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = big_n_dataset();
+        let lambda = 0.02 * ds.lambda_max_l1();
+        let params = SubsampleParams { n0: 200, q_max: 4, threads: 2, ..Default::default() };
+        let a = subsample_average(&ds, lambda, &params, 3);
+        let b = subsample_average(&ds, lambda, &params, 3);
+        assert_eq!(a.q_used, b.q_used);
+        for (x, y) in a.beta.iter().zip(&b.beta) {
+            assert_eq!(x, y);
+        }
+    }
+}

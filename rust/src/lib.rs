@@ -1,0 +1,13 @@
+//! cutgen: column & constraint generation for L1-regularized SVMs and cousins.
+pub mod backend;
+pub mod baselines;
+pub mod coordinator;
+pub mod cli;
+pub mod data;
+pub mod exps;
+pub mod fom;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod simplex;
+pub mod sparse;

@@ -1,0 +1,208 @@
+//! Row-major dense matrix and the two matvec kernels on the hot path.
+//!
+//! `Matrix` stores `X` row-major (`n` samples × `p` features), which makes
+//! `Xβ` a streaming row·vector loop and `Xᵀv` an axpy accumulation — both
+//! single-pass over the matrix, i.e. memory-bandwidth bound.
+
+use crate::linalg::{axpy, dot};
+
+/// Dense row-major `rows × cols` f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Number of rows (samples).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element write.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major view of the whole buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Column `j` copied into a fresh vector (strided gather).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// `out = X v` (length `rows`).
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), v);
+        }
+    }
+
+    /// `out = Xᵀ v` (length `cols`) via row-wise axpy: single streaming
+    /// pass over X, no strided access.
+    pub fn tmatvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            axpy(v[i], self.row(i), out);
+        }
+    }
+
+    /// `Xᵀ v` restricted to a subset of rows: `out = Σ_{i∈rows} v[k] x_i`
+    /// where `v[k]` aligns with `rows[k]`. Used by restricted-constraint
+    /// pricing where the dual vector π only lives on the working set I.
+    pub fn tmatvec_rows(&self, rows: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), rows.len());
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for (k, &i) in rows.iter().enumerate() {
+            axpy(v[k], self.row(i), out);
+        }
+    }
+
+    /// Dot of one row with a vector indexed by a column subset:
+    /// `Σ_{k} x[i, cols[k]] * beta[k]`.
+    pub fn row_dot_cols(&self, i: usize, cols: &[usize], beta: &[f64]) -> f64 {
+        debug_assert_eq!(cols.len(), beta.len());
+        let r = self.row(i);
+        let mut s = 0.0;
+        for (k, &j) in cols.iter().enumerate() {
+            s += r[j] * beta[k];
+        }
+        s
+    }
+
+    /// Scale every column to unit L2 norm (the paper standardizes features
+    /// this way). Returns the scale factors applied (1/‖col‖).
+    pub fn standardize_columns(&mut self) -> Vec<f64> {
+        let mut scales = vec![1.0; self.cols];
+        for j in 0..self.cols {
+            let mut s = 0.0;
+            for i in 0..self.rows {
+                let v = self.get(i, j);
+                s += v * v;
+            }
+            let nrm = s.sqrt();
+            if nrm > 0.0 {
+                scales[j] = 1.0 / nrm;
+            }
+        }
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for j in 0..row.len() {
+                row[j] *= scales[j];
+            }
+        }
+        scales
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn accessors() {
+        let m = sample();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_and_tmatvec() {
+        let m = sample();
+        let mut out = vec![0.0; 2];
+        m.matvec(&[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![-2.0, -2.0]);
+        let mut out_t = vec![0.0; 3];
+        m.tmatvec(&[1.0, -1.0], &mut out_t);
+        assert_eq!(out_t, vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn tmatvec_rows_subset() {
+        let m = sample();
+        let mut out = vec![0.0; 3];
+        m.tmatvec_rows(&[1], &[2.0], &mut out);
+        assert_eq!(out, vec![8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn row_dot_cols_subset() {
+        let m = sample();
+        let v = m.row_dot_cols(0, &[0, 2], &[2.0, 1.0]);
+        assert_eq!(v, 2.0 + 3.0);
+    }
+
+    #[test]
+    fn standardize_unit_columns() {
+        let mut m = sample();
+        m.standardize_columns();
+        for j in 0..3 {
+            let c = m.col(j);
+            let n: f64 = c.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_handles_zero_column() {
+        let mut m = Matrix::zeros(3, 2);
+        m.set(0, 0, 2.0);
+        let s = m.standardize_columns();
+        assert_eq!(s[1], 1.0); // zero column untouched
+        assert!((m.get(0, 0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,254 @@
+//! LU factorization with partial pivoting.
+//!
+//! The simplex basis matrix `B` is refactorized periodically; in between,
+//! product-form eta updates (see `simplex::basis`) are applied on top of
+//! the triangular solves here. We need both directions:
+//!
+//! * FTRAN: solve `B x = b`   → [`Lu::solve`]
+//! * BTRAN: solve `Bᵀ x = b`  → [`Lu::solve_transposed`]
+
+use crate::linalg::Matrix;
+
+/// LU decomposition `P A = L U` of a square matrix, stored packed
+/// (unit-lower L below the diagonal, U on and above it).
+#[derive(Clone, Debug)]
+pub struct Lu {
+    n: usize,
+    /// Packed LU factors, row-major.
+    lu: Vec<f64>,
+    /// Row permutation: `perm[k]` = original row index in position `k`.
+    perm: Vec<usize>,
+    /// Whether factorization detected (numerical) singularity.
+    singular: bool,
+}
+
+impl Lu {
+    /// Factorize a dense row-major `n×n` matrix given as a flat slice.
+    pub fn factorize_flat(n: usize, a: &[f64]) -> Self {
+        assert_eq!(a.len(), n * n);
+        let mut lu = a.to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut singular = false;
+
+        for k in 0..n {
+            // Partial pivot: largest |entry| in column k, rows k..n.
+            let mut piv = k;
+            let mut best = lu[k * n + k].abs();
+            for i in (k + 1)..n {
+                let v = lu[i * n + k].abs();
+                if v > best {
+                    best = v;
+                    piv = i;
+                }
+            }
+            if best < 1e-13 {
+                singular = true;
+                // Leave a tiny pivot in place so solves don't divide by 0.
+                if lu[k * n + k] == 0.0 {
+                    lu[k * n + k] = 1e-13;
+                }
+                continue;
+            }
+            if piv != k {
+                perm.swap(k, piv);
+                for j in 0..n {
+                    lu.swap(k * n + j, piv * n + j);
+                }
+            }
+            let pivot = lu[k * n + k];
+            for i in (k + 1)..n {
+                let m = lu[i * n + k] / pivot;
+                lu[i * n + k] = m;
+                if m != 0.0 {
+                    // Row update: row_i -= m * row_k  (columns k+1..n)
+                    let (head, tail) = lu.split_at_mut(i * n);
+                    let row_k = &head[k * n + k + 1..k * n + n];
+                    let row_i = &mut tail[k + 1..n];
+                    for (ri, rk) in row_i.iter_mut().zip(row_k) {
+                        *ri -= m * rk;
+                    }
+                }
+            }
+        }
+        Self { n, lu, perm, singular }
+    }
+
+    /// Factorize a [`Matrix`] (must be square).
+    pub fn factorize(a: &Matrix) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        Self::factorize_flat(a.rows(), a.as_slice())
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the matrix was detected singular during elimination.
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// FTRAN: solve `A x = b` in place (`b` becomes `x`).
+    pub fn solve(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        // Apply permutation: x = P b.
+        let mut x = vec![0.0; n];
+        for k in 0..n {
+            x[k] = b[self.perm[k]];
+        }
+        // Forward solve L y = P b (unit diagonal).
+        for i in 1..n {
+            let mut s = x[i];
+            let row = &self.lu[i * n..i * n + i];
+            for (j, lij) in row.iter().enumerate() {
+                s -= lij * x[j];
+            }
+            x[i] = s;
+        }
+        // Back solve U x = y.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            let row = &self.lu[i * n + i + 1..(i + 1) * n];
+            for (off, uij) in row.iter().enumerate() {
+                s -= uij * x[i + 1 + off];
+            }
+            x[i] = s / self.lu[i * n + i];
+        }
+        b.copy_from_slice(&x);
+    }
+
+    /// BTRAN: solve `Aᵀ x = b` in place.
+    ///
+    /// From `P A = L U` we get `Aᵀ Pᵀ = Uᵀ Lᵀ`, so `Aᵀ x = b` is solved by
+    /// `Uᵀ z = b`, `Lᵀ w = z`, `x = Pᵀ w`.
+    ///
+    /// Both substitutions are written *outer-product* style so the inner
+    /// loop streams a contiguous **row** of the packed LU factor — the
+    /// natural `x_i −= Σ_j lu[j·n+i]·x_j` form strides by `n` per element
+    /// and was the top cache-miss site in the dual simplex profile (see
+    /// EXPERIMENTS.md §Perf).
+    pub fn solve_transposed(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut z = b.to_vec();
+        // Forward solve Uᵀ z = b: once z[j] is final, subtract its
+        // contribution from all later equations using U's row j.
+        for j in 0..n {
+            let zj = z[j] / self.lu[j * n + j];
+            z[j] = zj;
+            if zj != 0.0 {
+                let row = &self.lu[j * n + j + 1..(j + 1) * n];
+                let (_, tail) = z.split_at_mut(j + 1);
+                for (zi, uji) in tail.iter_mut().zip(row) {
+                    *zi -= uji * zj;
+                }
+            }
+        }
+        // Back solve Lᵀ w = z (unit diagonal): once w[j] is final,
+        // subtract via L's row j (entries 0..j), contiguous again.
+        for j in (0..n).rev() {
+            let wj = z[j];
+            if wj != 0.0 {
+                let row = &self.lu[j * n..j * n + j];
+                let (head, _) = z.split_at_mut(j);
+                for (zi, lji) in head.iter_mut().zip(row) {
+                    *zi -= lji * wj;
+                }
+            }
+        }
+        // x = Pᵀ w: x[perm[k]] = w[k].
+        for k in 0..n {
+            b[self.perm[k]] = z[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn matvec_flat(n: usize, a: &[f64], x: &[f64]) -> Vec<f64> {
+        (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    fn tmatvec_flat(n: usize, a: &[f64], x: &[f64]) -> Vec<f64> {
+        (0..n)
+            .map(|j| (0..n).map(|i| a[i * n + j] * x[i]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let lu = Lu::factorize_flat(2, &a);
+        let mut b = vec![3.0, -4.0];
+        lu.solve(&mut b);
+        assert_eq!(b, vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn solve_small_known() {
+        // A = [[2,1],[1,3]], b = [5, 10] => x = [1, 3]
+        let a = vec![2.0, 1.0, 1.0, 3.0];
+        let lu = Lu::factorize_flat(2, &a);
+        let mut b = vec![5.0, 10.0];
+        lu.solve(&mut b);
+        assert!((b[0] - 1.0).abs() < 1e-12);
+        assert!((b[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Leading zero pivot forces a row swap.
+        let a = vec![0.0, 1.0, 1.0, 0.0];
+        let lu = Lu::factorize_flat(2, &a);
+        assert!(!lu.is_singular());
+        let mut b = vec![2.0, 3.0];
+        lu.solve(&mut b);
+        assert!((b[0] - 3.0).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_roundtrip_ftran_btran() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        for n in [1usize, 2, 3, 5, 17, 40, 80] {
+            // Diagonally dominated random matrix => well conditioned.
+            let mut a = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    a[i * n + j] = rng.normal();
+                }
+                a[i * n + i] += n as f64;
+            }
+            let lu = Lu::factorize_flat(n, &a);
+            assert!(!lu.is_singular());
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+            // FTRAN
+            let mut b = matvec_flat(n, &a, &x_true);
+            lu.solve(&mut b);
+            for (xi, ti) in b.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-8, "n={n}");
+            }
+            // BTRAN
+            let mut bt = tmatvec_flat(n, &a, &x_true);
+            lu.solve_transposed(&mut bt);
+            for (xi, ti) in bt.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        let lu = Lu::factorize_flat(2, &a);
+        assert!(lu.is_singular());
+    }
+}

@@ -1,0 +1,15 @@
+//! `cutgen` binary — leader entry point for the cutting-plane SVM stack.
+
+fn main() {
+    let args = match cutgen::cli::parse_args(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = cutgen::cli::main_with(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

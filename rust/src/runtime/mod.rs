@@ -1,0 +1,447 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs at serve time: `make artifacts` lowers the JAX/Pallas
+//! kernels once to `artifacts/*.hlo.txt`; this module compiles them on the
+//! PJRT CPU client (`xla` crate) and exposes:
+//!
+//! * [`PjrtRuntime`] — compiled executables (one per artifact);
+//! * [`PjrtBackend`] — a [`Backend`] implementation that keeps the design
+//!   matrix as device-resident f32 tiles and runs `Xβ` / `Xᵀv` through
+//!   the Pallas `xb` / `xtv` executables, padding and looping tiles so a
+//!   single fixed-shape artifact serves every (n, p);
+//! * [`FusedHingeGrad`] — the fused Layer-2 gradient artifact (value +
+//!   ∇β + ∇β₀ in one round-trip) for problems that fit one tile.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::backend::Backend;
+use crate::data::Design;
+
+/// Artifact manifest (parsed from `meta.json`).
+#[derive(Clone, Copy, Debug)]
+pub struct Meta {
+    /// Tile height (samples).
+    pub tn: usize,
+    /// Tile width (features).
+    pub tp: usize,
+}
+
+/// Minimal extraction of `"key": <int>` from the (trusted, machine-
+/// generated) manifest; avoids dragging a JSON crate into the image.
+fn json_usize(text: &str, key: &str) -> Result<usize> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat).ok_or_else(|| anyhow!("meta.json: missing key {key}"))?;
+    let rest = &text[at + pat.len()..];
+    let colon = rest.find(':').ok_or_else(|| anyhow!("meta.json: malformed {key}"))?;
+    let digits: String = rest[colon + 1..]
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().context("meta.json: bad integer")
+}
+
+/// Compiled PJRT executables for all artifacts.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// Tile shape the artifacts were lowered for.
+    pub meta: Meta,
+    xtv: xla::PjRtLoadedExecutable,
+    xb: xla::PjRtLoadedExecutable,
+    hinge_grad: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir` (written by `make
+    /// artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let meta = Meta { tn: json_usize(&meta_text, "tn")?, tp: json_usize(&meta_text, "tp")? };
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        };
+        Ok(Self {
+            xtv: compile("xtv")?,
+            xb: compile("xb")?,
+            hinge_grad: compile("hinge_grad")?,
+            client,
+            meta,
+        })
+    }
+
+    /// Default artifact location: `$CUTGEN_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("CUTGEN_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Whether artifacts exist at the default location.
+    pub fn artifacts_available() -> bool {
+        Self::default_dir().join("meta.json").exists()
+    }
+
+    /// PJRT platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn buffer_1d(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(|e| anyhow!("host→device transfer: {e:?}"))
+    }
+
+    fn buffer_2d(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[rows, cols], None)
+            .map_err(|e| anyhow!("host→device transfer: {e:?}"))
+    }
+}
+
+fn tuple_outputs(mut outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+    let buf = outs
+        .pop()
+        .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+        .ok_or_else(|| anyhow!("executable produced no output"))?;
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("device→host: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("untupling output: {e:?}"))
+}
+
+fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// A [`Backend`] that runs the matvec hot paths through the AOT
+/// executables, with the design matrix resident on the (CPU) device as
+/// f32 tiles of shape `(tn, tp)`.
+pub struct PjrtBackend<'r> {
+    rt: &'r PjrtRuntime,
+    /// `tiles[ti][tj]` — device buffer for row-block ti, col-block tj.
+    tiles: Vec<Vec<xla::PjRtBuffer>>,
+    n: usize,
+    p: usize,
+    nt_rows: usize,
+    nt_cols: usize,
+}
+
+impl<'r> PjrtBackend<'r> {
+    /// Tile, pad (with zeros) and upload a design matrix.
+    pub fn new(rt: &'r PjrtRuntime, design: &Design) -> Result<Self> {
+        let (tn, tp) = (rt.meta.tn, rt.meta.tp);
+        let n = design.rows();
+        let p = design.cols();
+        let nt_rows = n.div_ceil(tn);
+        let nt_cols = p.div_ceil(tp);
+        let mut tiles = Vec::with_capacity(nt_rows);
+        let mut scratch = vec![0f32; tn * tp];
+        for ti in 0..nt_rows {
+            let mut row = Vec::with_capacity(nt_cols);
+            for tj in 0..nt_cols {
+                scratch.fill(0.0);
+                let i_hi = ((ti + 1) * tn).min(n);
+                let j_hi = ((tj + 1) * tp).min(p);
+                for i in ti * tn..i_hi {
+                    let local_i = i - ti * tn;
+                    for j in tj * tp..j_hi {
+                        let v = design.get(i, j);
+                        if v != 0.0 {
+                            scratch[local_i * tp + (j - tj * tp)] = v as f32;
+                        }
+                    }
+                }
+                row.push(rt.buffer_2d(&scratch, tn, tp)?);
+            }
+            tiles.push(row);
+        }
+        Ok(Self { rt, tiles, n, p, nt_rows, nt_cols })
+    }
+
+    fn xb_impl(&self, beta: &[f64], out: &mut [f64]) -> Result<()> {
+        let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
+        out.fill(0.0);
+        let mut beta_tile = vec![0f32; tp];
+        for tj in 0..self.nt_cols {
+            // skip all-zero β tiles (cheap sparsity win on CG iterates)
+            let j_lo = tj * tp;
+            let j_hi = ((tj + 1) * tp).min(self.p);
+            beta_tile.fill(0.0);
+            let mut any = false;
+            for j in j_lo..j_hi {
+                let b = beta[j];
+                if b != 0.0 {
+                    beta_tile[j - j_lo] = b as f32;
+                    any = true;
+                }
+            }
+            if !any {
+                continue;
+            }
+            let beta_buf = self.rt.buffer_1d(&beta_tile)?;
+            for ti in 0..self.nt_rows {
+                let outs = self
+                    .rt
+                    .xb
+                    .execute_b(&[&self.tiles[ti][tj], &beta_buf])
+                    .map_err(|e| anyhow!("xb execute: {e:?}"))?;
+                let parts = tuple_outputs(outs)?;
+                let m = literal_f32(&parts[0])?;
+                let i_lo = ti * tn;
+                let i_hi = ((ti + 1) * tn).min(self.n);
+                for i in i_lo..i_hi {
+                    out[i] += m[i - i_lo] as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn xtv_impl(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+        let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
+        out.fill(0.0);
+        let mut v_tile = vec![0f32; tn];
+        for ti in 0..self.nt_rows {
+            let i_lo = ti * tn;
+            let i_hi = ((ti + 1) * tn).min(self.n);
+            v_tile.fill(0.0);
+            let mut any = false;
+            for i in i_lo..i_hi {
+                if v[i] != 0.0 {
+                    v_tile[i - i_lo] = v[i] as f32;
+                    any = true;
+                }
+            }
+            if !any {
+                continue; // dual vectors are sparse: whole sample blocks skip
+            }
+            let v_buf = self.rt.buffer_1d(&v_tile)?;
+            for tj in 0..self.nt_cols {
+                let outs = self
+                    .rt
+                    .xtv
+                    .execute_b(&[&self.tiles[ti][tj], &v_buf])
+                    .map_err(|e| anyhow!("xtv execute: {e:?}"))?;
+                let parts = tuple_outputs(outs)?;
+                let q = literal_f32(&parts[0])?;
+                let j_lo = tj * tp;
+                let j_hi = ((tj + 1) * tp).min(self.p);
+                for j in j_lo..j_hi {
+                    out[j] += q[j - j_lo] as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn rows(&self) -> usize {
+        self.n
+    }
+    fn cols(&self) -> usize {
+        self.p
+    }
+    fn xb(&self, beta: &[f64], out: &mut [f64]) {
+        self.xb_impl(beta, out).expect("PJRT xb failed");
+    }
+    fn xtv(&self, v: &[f64], out: &mut [f64]) {
+        self.xtv_impl(v, out).expect("PJRT xtv failed");
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// The fused Layer-2 artifact: smoothed-hinge value + gradient for a
+/// problem that fits a single tile (n ≤ tn, p ≤ tp).
+pub struct FusedHingeGrad<'r> {
+    rt: &'r PjrtRuntime,
+    x_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    n: usize,
+    p: usize,
+}
+
+impl<'r> FusedHingeGrad<'r> {
+    /// Upload (padded) data once.
+    pub fn new(rt: &'r PjrtRuntime, design: &Design, y: &[f64]) -> Result<Self> {
+        let (tn, tp) = (rt.meta.tn, rt.meta.tp);
+        let n = design.rows();
+        let p = design.cols();
+        if n > tn || p > tp {
+            return Err(anyhow!("problem ({n}×{p}) exceeds the fused tile ({tn}×{tp})"));
+        }
+        let mut x = vec![0f32; tn * tp];
+        for i in 0..n {
+            for j in 0..p {
+                x[i * tp + j] = design.get(i, j) as f32;
+            }
+        }
+        let mut yy = vec![0f32; tn];
+        for i in 0..n {
+            yy[i] = y[i] as f32;
+        }
+        Ok(Self { x_buf: rt.buffer_2d(&x, tn, tp)?, y_buf: rt.buffer_1d(&yy)?, rt, n, p })
+    }
+
+    /// One fused evaluation: `(F^τ, ∇β, ∇β₀)`.
+    pub fn value_grad(&self, beta: &[f64], beta0: f64, tau: f64) -> Result<(f64, Vec<f64>, f64)> {
+        let tp = self.rt.meta.tp;
+        let mut b = vec![0f32; tp];
+        for j in 0..self.p {
+            b[j] = beta[j] as f32;
+        }
+        let b_buf = self.rt.buffer_1d(&b)?;
+        let b0_buf = self.rt.buffer_1d(&[beta0 as f32])?;
+        let tau_buf = self.rt.buffer_1d(&[tau as f32])?;
+        let outs = self
+            .rt
+            .hinge_grad
+            .execute_b(&[&self.x_buf, &self.y_buf, &b_buf, &b0_buf, &tau_buf])
+            .map_err(|e| anyhow!("hinge_grad execute: {e:?}"))?;
+        let parts = tuple_outputs(outs)?;
+        if parts.len() != 3 {
+            return Err(anyhow!("expected 3 outputs, got {}", parts.len()));
+        }
+        let value = literal_f32(&parts[0])?[0] as f64;
+        let grad_full = literal_f32(&parts[1])?;
+        let grad_beta: Vec<f64> = grad_full[..self.p].iter().map(|&v| v as f64).collect();
+        let grad_b0 = literal_f32(&parts[2])?[0] as f64;
+        Ok((value, grad_beta, grad_b0))
+    }
+
+    /// Number of live samples.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Smoke helper used by the CLI `doctor` command.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    Ok(client.platform_name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::fom::smoothing::{HingeWorkspace, SmoothedHinge};
+    use crate::rng::Xoshiro256;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        if !PjrtRuntime::artifacts_available() {
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::load(PjrtRuntime::default_dir()).expect("load artifacts"))
+    }
+
+    #[test]
+    fn json_usize_extracts() {
+        let t = r#"{"tn": 512, "tp":2048, "artifacts": {}}"#;
+        assert_eq!(json_usize(t, "tn").unwrap(), 512);
+        assert_eq!(json_usize(t, "tp").unwrap(), 2048);
+        assert!(json_usize(t, "zz").is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Xoshiro256::seed_from_u64(181);
+        // deliberately NOT tile-aligned: exercises padding
+        let spec = SyntheticSpec { n: 300, p: 700, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        let pjrt = PjrtBackend::new(&rt, &ds.x).expect("tile upload");
+        let native = NativeBackend::new(&ds.x);
+
+        let beta: Vec<f64> = (0..ds.p()).map(|_| rng.normal() * 0.1).collect();
+        let mut out_p = vec![0.0; ds.n()];
+        let mut out_n = vec![0.0; ds.n()];
+        pjrt.xb(&beta, &mut out_p);
+        native.xb(&beta, &mut out_n);
+        for i in 0..ds.n() {
+            assert!(
+                (out_p[i] - out_n[i]).abs() < 1e-3,
+                "xb[{i}]: pjrt {} native {}",
+                out_p[i],
+                out_n[i]
+            );
+        }
+
+        let v: Vec<f64> = (0..ds.n()).map(|_| rng.uniform()).collect();
+        let mut q_p = vec![0.0; ds.p()];
+        let mut q_n = vec![0.0; ds.p()];
+        pjrt.xtv(&v, &mut q_p);
+        native.xtv(&v, &mut q_n);
+        for j in 0..ds.p() {
+            assert!(
+                (q_p[j] - q_n[j]).abs() < 1e-3,
+                "xtv[{j}]: pjrt {} native {}",
+                q_p[j],
+                q_n[j]
+            );
+        }
+    }
+
+    #[test]
+    fn fused_hinge_grad_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Xoshiro256::seed_from_u64(182);
+        let spec = SyntheticSpec { n: 120, p: 300, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        let fused = FusedHingeGrad::new(&rt, &ds.x, &ds.y).expect("upload");
+        let beta: Vec<f64> = (0..ds.p()).map(|_| rng.normal() * 0.05).collect();
+        let (val, grad, g0) = fused.value_grad(&beta, 0.1, 0.2).expect("exec");
+
+        let native = NativeBackend::new(&ds.x);
+        let sh = SmoothedHinge { tau: 0.2 };
+        let mut ws = HingeWorkspace::new(ds.n());
+        let mut grad_n = vec![0.0; ds.p()];
+        let (val_n, g0_n) = sh.value_grad(&native, &ds.y, &beta, 0.1, &mut ws, &mut grad_n);
+        assert!((val - val_n).abs() / val_n.abs().max(1.0) < 1e-3, "val {val} vs {val_n}");
+        assert!((g0 - g0_n).abs() < 1e-3, "g0 {g0} vs {g0_n}");
+        for j in 0..ds.p() {
+            assert!((grad[j] - grad_n[j]).abs() < 1e-3, "grad[{j}]");
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_drives_fista_to_same_objective() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Xoshiro256::seed_from_u64(183);
+        let spec = SyntheticSpec { n: 100, p: 400, k0: 5, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let params = crate::fom::FistaParams { max_iters: 60, eta: 1e-9, ..Default::default() };
+
+        let native = NativeBackend::new(&ds.x);
+        let res_native =
+            crate::fom::fista(&native, &ds.y, &crate::fom::Penalty::L1(lambda), &params, None);
+
+        let pjrt = PjrtBackend::new(&rt, &ds.x).expect("upload");
+        let res_pjrt =
+            crate::fom::fista(&pjrt, &ds.y, &crate::fom::Penalty::L1(lambda), &params, None);
+
+        let rel = (res_pjrt.objective - res_native.objective).abs()
+            / res_native.objective.max(1e-9);
+        assert!(
+            rel < 5e-3,
+            "objectives diverge: pjrt {} native {}",
+            res_pjrt.objective,
+            res_native.objective
+        );
+    }
+}

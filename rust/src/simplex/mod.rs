@@ -1,0 +1,69 @@
+//! A bounded-variable revised simplex LP solver with warm starting.
+//!
+//! This is the repository's substitute for the commercial LP solver the
+//! paper drives (Gurobi 6.5.2): it provides exactly the capabilities the
+//! cutting-plane framework needs —
+//!
+//! 1. **primal simplex** warm starts after *columns* are added
+//!    (column generation keeps the basis primal feasible);
+//! 2. **dual simplex** warm starts after *rows* are added
+//!    (constraint generation / Slope cuts keep the basis dual feasible);
+//! 3. ranged rows, variable bounds (including free variables such as the
+//!    SVM intercept β₀), dual values and reduced costs.
+//!
+//! # Computational form
+//!
+//! The model `min cᵀx  s.t.  Lᵢ ≤ aᵢᵀx ≤ Uᵢ,  l ≤ x ≤ u` is held as
+//! `Âx̂ = 0` with `Â = [A | −I]` — one *logical* variable per row, bounded
+//! by the row range. A basis is `m` columns of `Â`; between periodic LU
+//! refactorizations the basis inverse is maintained in product form
+//! (eta file). Cold starts use the all-logical basis, which is **dual
+//! feasible** whenever all structural costs are ≥ 0 — true for every LP in
+//! this library (hinge slacks cost 1, |β| halves cost λ ≥ 0, η costs 1,
+//! β₀ is free with cost 0) — so a cold solve is simply a dual-simplex run.
+//!
+//! # References
+//!
+//! Bertsimas & Tsitsiklis, *Introduction to Linear Optimization* (1997),
+//! chapters 3–6; Maros, *Computational Techniques of the Simplex Method*
+//! (2003) for the bounded ratio tests and the product-form update.
+
+mod basis;
+mod model;
+mod parametric;
+mod solver;
+
+pub use basis::Basis;
+pub use model::{LpModel, RowId, VarId};
+pub use parametric::{ParametricSimplex, PathPoint};
+pub use solver::{SimplexSolver, SolveStats, Status, VarStatus};
+
+/// Numerical tolerances shared by the solver components.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerances {
+    /// Primal feasibility tolerance (bound violations).
+    pub feas: f64,
+    /// Dual feasibility tolerance (reduced-cost sign violations).
+    pub opt: f64,
+    /// Minimum admissible pivot magnitude.
+    pub pivot: f64,
+    /// Refactorize after this many eta updates.
+    pub refactor_every: usize,
+    /// Hard iteration limit (per `solve` call).
+    pub max_iters: usize,
+}
+
+impl Default for Tolerances {
+    fn default() -> Self {
+        Self {
+            feas: 1e-7,
+            opt: 1e-7,
+            pivot: 1e-9,
+            refactor_every: 256,
+            max_iters: 2_000_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,180 @@
+//! Parametric-cost simplex: the PSM baseline of Table 4.
+//!
+//! Pang, Liu, Vanderbei & Zhao (NeurIPS 2017) solve the L1-SVM by a
+//! *parametric simplex method*: the objective is `c(λ) = c_fix + λ·c_var`
+//! (hinge slacks in `c_fix`, the |β| halves in `c_var`), the trivial basis
+//! is optimal at `λ = λ_max`, and the method rides the optimal-basis path
+//! downward, pivoting at each breakpoint where a reduced cost
+//! `d_j(λ) = d_fix_j + λ·d_var_j` changes sign. Crucially it operates on
+//! the **full model** (all p columns price at every breakpoint), which is
+//! exactly why column generation beats it at large p — the effect Table 4
+//! measures.
+
+use super::solver::{BVar, SimplexSolver, Status, VarStatus};
+
+/// One breakpoint on the optimal-basis path.
+#[derive(Clone, Copy, Debug)]
+pub struct PathPoint {
+    /// Regularization value at this breakpoint.
+    pub lambda: f64,
+    /// Objective value `c(λ)ᵀx` at the basis.
+    pub objective: f64,
+    /// Pivots performed so far.
+    pub pivots: usize,
+}
+
+/// Parametric-cost driver over a [`SimplexSolver`].
+pub struct ParametricSimplex {
+    /// Underlying solver (model costs are rewritten as λ moves).
+    pub solver: SimplexSolver,
+    /// λ-independent part of the cost (per structural variable).
+    c_fix: Vec<f64>,
+    /// λ-multiplied part of the cost.
+    c_var: Vec<f64>,
+    pivots: usize,
+}
+
+impl ParametricSimplex {
+    /// Build from a solver plus the cost decomposition
+    /// `cost_j(λ) = c_fix[j] + λ·c_var[j]`.
+    pub fn new(solver: SimplexSolver, c_fix: Vec<f64>, c_var: Vec<f64>) -> Self {
+        assert_eq!(c_fix.len(), solver.model().num_vars());
+        assert_eq!(c_var.len(), solver.model().num_vars());
+        Self { solver, c_fix, c_var, pivots: 0 }
+    }
+
+    fn apply_lambda(&mut self, lambda: f64) {
+        for j in 0..self.c_fix.len() {
+            self.solver.model.cost[j] = self.c_fix[j] + lambda * self.c_var[j];
+        }
+    }
+
+    /// Solve to optimality at `lambda_start`, then ride the path down to
+    /// `lambda_target`, recording every breakpoint. Returns the path; the
+    /// solver is left optimal at `lambda_target`.
+    pub fn run(&mut self, lambda_start: f64, lambda_target: f64, max_breakpoints: usize) -> (Vec<PathPoint>, Status) {
+        assert!(lambda_target <= lambda_start);
+        let mut path = Vec::new();
+        self.apply_lambda(lambda_start);
+        let st = self.solver.solve();
+        if st != Status::Optimal {
+            return (path, st);
+        }
+        let mut lambda = lambda_start;
+        path.push(PathPoint { lambda, objective: self.solver.objective(), pivots: self.pivots });
+
+        for _ in 0..max_breakpoints {
+            if lambda <= lambda_target {
+                break;
+            }
+            // Reduced-cost decomposition at the current basis:
+            // d_j(λ) = d_fix_j + λ·d_var_j for every nonbasic j.
+            let c_fix = self.c_fix.clone();
+            let c_var = self.c_var.clone();
+            let y_fix = self.solver.duals_for_costs(&|v| match v {
+                BVar::Col(j) => c_fix[j],
+                BVar::Log(_) => 0.0,
+            });
+            let y_var = self.solver.duals_for_costs(&|v| match v {
+                BVar::Col(j) => c_var[j],
+                BVar::Log(_) => 0.0,
+            });
+            // Find the largest λ' < λ where some nonbasic reduced cost
+            // crosses zero in the violating direction.
+            let mut next: Option<(BVar, f64)> = None;
+            for v in self.solver.nonbasic_vars() {
+                let (dfix, dvar) = match v {
+                    BVar::Col(j) => (
+                        c_fix[j] - self.solver.column_dot(v, &y_fix),
+                        c_var[j] - self.solver.column_dot(v, &y_var),
+                    ),
+                    BVar::Log(r) => (y_fix[r], y_var[r]),
+                };
+                if dvar.abs() < 1e-12 {
+                    continue; // reduced cost does not move with λ
+                }
+                let crossing = -dfix / dvar;
+                if crossing >= lambda - 1e-10 || crossing < lambda_target - 1e-10 {
+                    // ignore crossings outside (target, λ)
+                    if crossing < lambda_target - 1e-10 {
+                        continue;
+                    }
+                    continue;
+                }
+                let violating = match self.solver.status_of_pub(v) {
+                    VarStatus::AtLower => dvar > 0.0,  // d decreases as λ ↓
+                    VarStatus::AtUpper => dvar < 0.0,  // d increases as λ ↓
+                    VarStatus::FreeZero => true,
+                    VarStatus::Basic(_) => false,
+                };
+                if !violating {
+                    continue;
+                }
+                if next.map_or(true, |(_, l)| crossing > l) {
+                    next = Some((v, crossing));
+                }
+            }
+
+            match next {
+                None => {
+                    // Basis optimal all the way to the target.
+                    lambda = lambda_target;
+                    self.apply_lambda(lambda);
+                    path.push(PathPoint {
+                        lambda,
+                        objective: self.solver.objective(),
+                        pivots: self.pivots,
+                    });
+                    break;
+                }
+                Some((_, crossing)) => {
+                    // Move just past the breakpoint and re-optimize with the
+                    // (primal-feasible) warm basis.
+                    lambda = (crossing - 1e-9).max(lambda_target);
+                    self.apply_lambda(lambda);
+                    let st = self.solver.solve();
+                    self.pivots = self.solver.stats.primal_iters + self.solver.stats.dual_iters;
+                    if st != Status::Optimal {
+                        return (path, st);
+                    }
+                    path.push(PathPoint {
+                        lambda,
+                        objective: self.solver.objective(),
+                        pivots: self.pivots,
+                    });
+                }
+            }
+        }
+        if lambda > lambda_target {
+            // Breakpoint budget exhausted: finish with one warm solve.
+            self.apply_lambda(lambda_target);
+            let st = self.solver.solve();
+            path.push(PathPoint {
+                lambda: lambda_target,
+                objective: self.solver.objective(),
+                pivots: self.pivots,
+            });
+            return (path, st);
+        }
+        (path, Status::Optimal)
+    }
+
+    /// Cost of variable `v` at the λ most recently applied.
+    pub fn current_cost(&self, j: usize) -> f64 {
+        self.solver.model().cost[j]
+    }
+
+    /// Access the cost decomposition (for tests).
+    pub fn decomposition(&self) -> (&[f64], &[f64]) {
+        (&self.c_fix, &self.c_var)
+    }
+
+    /// Internal: cost of a basis variable (structural or logical).
+    #[allow(dead_code)]
+    fn cost_at(&self, v: BVar, lambda: f64) -> f64 {
+        match v {
+            BVar::Col(j) => self.c_fix[j] + lambda * self.c_var[j],
+            BVar::Log(_) => self.solver.cost_of_pub(v),
+        }
+    }
+}

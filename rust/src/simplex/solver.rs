@@ -1,0 +1,957 @@
+//! The revised simplex solver: primal and dual iterations over a shared
+//! basis, with incremental column/row additions that preserve warm starts.
+//!
+//! See the module-level docs in `mod.rs` for the computational form and
+//! the warm-start invariants (columns → primal feasible; rows → dual
+//! feasible).
+
+use super::basis::Basis;
+use super::model::{LpModel, RowId, VarId};
+use super::Tolerances;
+
+/// A basis member: a structural column or a row's logical variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BVar {
+    /// Structural variable `j`.
+    Col(usize),
+    /// Logical (slack) of row `r`; its column in `Â` is `−e_r`.
+    Log(usize),
+}
+
+/// Where a variable currently sits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarStatus {
+    /// In the basis, at position `.0` (row of the basis system).
+    Basic(usize),
+    /// Nonbasic at its lower bound.
+    AtLower,
+    /// Nonbasic at its upper bound.
+    AtUpper,
+    /// Nonbasic free variable pinned at zero.
+    FreeZero,
+}
+
+/// Result of a `solve` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// KKT-optimal within tolerances.
+    Optimal,
+    /// Objective unbounded below.
+    Unbounded,
+    /// Primal infeasible (detected by the dual simplex).
+    Infeasible,
+    /// Iteration limit hit.
+    IterLimit,
+}
+
+/// Counters from the last `solve`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    /// Primal simplex iterations performed.
+    pub primal_iters: usize,
+    /// Dual simplex iterations performed.
+    pub dual_iters: usize,
+    /// Basis refactorizations.
+    pub refactors: usize,
+}
+
+/// Bounded-variable revised simplex with warm starting.
+pub struct SimplexSolver {
+    pub(crate) model: LpModel,
+    tol: Tolerances,
+    /// Status of structural variables.
+    col_status: Vec<VarStatus>,
+    /// Status of logical variables (one per row).
+    row_status: Vec<VarStatus>,
+    /// Basis members by position.
+    basis_vars: Vec<BVar>,
+    /// Values of basic variables by position.
+    x_basic: Vec<f64>,
+    /// Factorized basis (None until first solve / after structural reset).
+    factor: Option<Basis>,
+    /// Dual prices y (valid after solve).
+    duals: Vec<f64>,
+    /// Running stats (cumulative across solves).
+    pub stats: SolveStats,
+    /// Bland's-rule mode (anti-cycling), switched on after stalls.
+    bland: bool,
+    /// Consecutive degenerate iterations (stall detector).
+    stall: usize,
+}
+
+const INF: f64 = f64::INFINITY;
+
+impl SimplexSolver {
+    /// Wrap a model; nothing is factorized until the first `solve`.
+    pub fn new(model: LpModel) -> Self {
+        let nv = model.num_vars();
+        let m = model.num_rows();
+        let mut s = Self {
+            model,
+            tol: Tolerances::default(),
+            col_status: Vec::new(),
+            row_status: Vec::new(),
+            basis_vars: Vec::new(),
+            x_basic: Vec::new(),
+            factor: None,
+            duals: vec![0.0; m],
+            stats: SolveStats::default(),
+            bland: false,
+            stall: 0,
+        };
+        s.sync_new_cols(nv);
+        s.sync_new_rows(m);
+        s
+    }
+
+    /// Override tolerances.
+    pub fn with_tolerances(mut self, tol: Tolerances) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Immutable model access.
+    pub fn model(&self) -> &LpModel {
+        &self.model
+    }
+
+    // ------------------------------------------------------------------
+    // Incremental model edits (warm-start preserving)
+    // ------------------------------------------------------------------
+
+    /// Add a column; the basis is untouched, the new variable starts
+    /// nonbasic (at lower bound when finite, else at upper, else free-0),
+    /// so primal feasibility of the current basis is preserved.
+    pub fn add_col(&mut self, cost: f64, lb: f64, ub: f64, coefs: &[(RowId, f64)]) -> VarId {
+        let j = self.model.add_col(cost, lb, ub, coefs);
+        self.sync_new_cols(j + 1);
+        j
+    }
+
+    /// Add a row; its logical enters the basis (keeping the old duals and
+    /// hence dual feasibility intact — the new dual price is exactly 0),
+    /// so the next `solve` warm-starts with the dual simplex.
+    pub fn add_row(&mut self, lo: f64, hi: f64, coefs: &[(VarId, f64)]) -> RowId {
+        let r = self.model.add_row(lo, hi, coefs);
+        self.sync_new_rows(r + 1);
+        r
+    }
+
+    fn sync_new_cols(&mut self, upto: usize) {
+        while self.col_status.len() < upto {
+            let j = self.col_status.len();
+            let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+            let st = if lb.is_finite() {
+                VarStatus::AtLower
+            } else if ub.is_finite() {
+                VarStatus::AtUpper
+            } else {
+                VarStatus::FreeZero
+            };
+            self.col_status.push(st);
+        }
+    }
+
+    fn sync_new_rows(&mut self, upto: usize) {
+        while self.row_status.len() < upto {
+            let r = self.row_status.len();
+            let pos = self.basis_vars.len();
+            self.basis_vars.push(BVar::Log(r));
+            self.row_status.push(VarStatus::Basic(pos));
+            self.x_basic.push(0.0); // recomputed on refactorize
+            self.duals.push(0.0);
+            self.factor = None; // dimensions changed → refactorize lazily
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Variable metadata helpers
+    // ------------------------------------------------------------------
+
+    fn bounds_of(&self, v: BVar) -> (f64, f64) {
+        match v {
+            BVar::Col(j) => (self.model.lb[j], self.model.ub[j]),
+            BVar::Log(r) => (self.model.row_lo[r], self.model.row_hi[r]),
+        }
+    }
+
+    fn cost_of(&self, v: BVar) -> f64 {
+        match v {
+            BVar::Col(j) => self.model.cost[j],
+            BVar::Log(_) => 0.0,
+        }
+    }
+
+    fn status_of(&self, v: BVar) -> VarStatus {
+        match v {
+            BVar::Col(j) => self.col_status[j],
+            BVar::Log(r) => self.row_status[r],
+        }
+    }
+
+    fn set_status(&mut self, v: BVar, st: VarStatus) {
+        match v {
+            BVar::Col(j) => self.col_status[j] = st,
+            BVar::Log(r) => self.row_status[r] = st,
+        }
+    }
+
+    /// Current value of any variable.
+    fn value_of(&self, v: BVar) -> f64 {
+        match self.status_of(v) {
+            VarStatus::Basic(pos) => self.x_basic[pos],
+            VarStatus::AtLower => self.bounds_of(v).0,
+            VarStatus::AtUpper => self.bounds_of(v).1,
+            VarStatus::FreeZero => 0.0,
+        }
+    }
+
+    /// Dense column of `Â` for variable `v` (length m).
+    fn dense_column(&self, v: BVar, out: &mut [f64]) {
+        out.fill(0.0);
+        match v {
+            BVar::Col(j) => {
+                let col = &self.model.cols[j];
+                for (r, val) in col.rows.iter().zip(&col.vals) {
+                    out[*r] = *val;
+                }
+            }
+            BVar::Log(r) => out[r] = -1.0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Basis maintenance
+    // ------------------------------------------------------------------
+
+    fn refactorize(&mut self) {
+        let m = self.model.num_rows();
+        debug_assert_eq!(self.basis_vars.len(), m);
+        let mut cols = Vec::with_capacity(m);
+        let mut buf = vec![0.0; m];
+        for &v in &self.basis_vars {
+            self.dense_column(v, &mut buf);
+            cols.push(buf.clone());
+        }
+        let factor = Basis::factorize(&cols);
+        if factor.is_singular() {
+            // Repair: replace dependent basic columns with their row logicals.
+            self.repair_basis();
+            return;
+        }
+        self.factor = Some(factor);
+        self.stats.refactors += 1;
+        self.recompute_x_basic();
+    }
+
+    /// Fall back to a crash basis keeping as many current basics as
+    /// possible; used only when a singular basis sneaks in numerically.
+    fn repair_basis(&mut self) {
+        let m = self.model.num_rows();
+        // Reset everything nonbasic, then re-seat the all-logical basis.
+        for j in 0..self.model.num_vars() {
+            if matches!(self.col_status[j], VarStatus::Basic(_)) {
+                let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+                self.col_status[j] = if lb.is_finite() {
+                    VarStatus::AtLower
+                } else if ub.is_finite() {
+                    VarStatus::AtUpper
+                } else {
+                    VarStatus::FreeZero
+                };
+            }
+        }
+        self.basis_vars = (0..m).map(BVar::Log).collect();
+        for r in 0..m {
+            self.row_status[r] = VarStatus::Basic(r);
+        }
+        self.x_basic = vec![0.0; m];
+        let mut cols = Vec::with_capacity(m);
+        let mut buf = vec![0.0; m];
+        for &v in &self.basis_vars.clone() {
+            self.dense_column(v, &mut buf);
+            cols.push(buf.clone());
+        }
+        self.factor = Some(Basis::factorize(&cols));
+        self.stats.refactors += 1;
+        self.recompute_x_basic();
+    }
+
+    /// `x_B = B⁻¹ (0 − N x_N)` from scratch.
+    fn recompute_x_basic(&mut self) {
+        let m = self.model.num_rows();
+        let mut rhs = vec![0.0; m];
+        // Structural nonbasic contributions.
+        for j in 0..self.model.num_vars() {
+            let st = self.col_status[j];
+            let val = match st {
+                VarStatus::Basic(_) => continue,
+                VarStatus::AtLower => self.model.lb[j],
+                VarStatus::AtUpper => self.model.ub[j],
+                VarStatus::FreeZero => 0.0,
+            };
+            if val != 0.0 {
+                let col = &self.model.cols[j];
+                for (r, v) in col.rows.iter().zip(&col.vals) {
+                    rhs[*r] -= v * val;
+                }
+            }
+        }
+        // Logical nonbasic contributions (column −e_r).
+        for r in 0..m {
+            let val = match self.row_status[r] {
+                VarStatus::Basic(_) => continue,
+                VarStatus::AtLower => self.model.row_lo[r],
+                VarStatus::AtUpper => self.model.row_hi[r],
+                VarStatus::FreeZero => 0.0,
+            };
+            rhs[r] += val;
+        }
+        self.factor.as_ref().expect("factorized").ftran(&mut rhs);
+        self.x_basic = rhs;
+    }
+
+    /// Dual prices `y = B⁻ᵀ c_B`.
+    fn compute_duals(&mut self) {
+        let m = self.model.num_rows();
+        let mut y = vec![0.0; m];
+        for (pos, &v) in self.basis_vars.iter().enumerate() {
+            y[pos] = self.cost_of(v);
+        }
+        self.factor.as_ref().expect("factorized").btran(&mut y);
+        self.duals = y;
+    }
+
+    /// Reduced cost of a variable given current duals.
+    fn reduced_cost_of(&self, v: BVar) -> f64 {
+        match v {
+            BVar::Col(j) => self.model.cost[j] - self.model.cols[j].dot_dense(&self.duals),
+            BVar::Log(r) => self.duals[r],
+        }
+    }
+
+    fn ensure_factorized(&mut self) {
+        if self.factor.is_none()
+            || self.factor.as_ref().unwrap().m() != self.model.num_rows()
+        {
+            self.refactorize();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Feasibility measures
+    // ------------------------------------------------------------------
+
+    /// Max violation of basic-variable bounds.
+    pub fn primal_infeasibility(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for (pos, &v) in self.basis_vars.iter().enumerate() {
+            let (lb, ub) = self.bounds_of(v);
+            let x = self.x_basic[pos];
+            worst = worst.max(lb - x).max(x - ub);
+        }
+        worst.max(0.0)
+    }
+
+    /// Max reduced-cost sign violation over nonbasic variables.
+    pub fn dual_infeasibility(&mut self) -> f64 {
+        self.compute_duals();
+        let mut worst = 0.0f64;
+        let all = self.iter_all_vars();
+        for v in all {
+            let st = self.status_of(v);
+            let d = self.reduced_cost_of(v);
+            let (lb, ub) = self.bounds_of(v);
+            match st {
+                VarStatus::Basic(_) => {}
+                VarStatus::AtLower => {
+                    // may increase ⇒ need d ≥ 0, unless it could also
+                    // decrease (lb == ub handled as fixed: any d fine)
+                    if lb < ub {
+                        worst = worst.max(-d);
+                    }
+                }
+                VarStatus::AtUpper => {
+                    if lb < ub {
+                        worst = worst.max(d);
+                    }
+                }
+                VarStatus::FreeZero => worst = worst.max(d.abs()),
+            }
+        }
+        worst
+    }
+
+    fn iter_all_vars(&self) -> Vec<BVar> {
+        let mut v: Vec<BVar> = (0..self.model.num_vars()).map(BVar::Col).collect();
+        v.extend((0..self.model.num_rows()).map(BVar::Log));
+        v
+    }
+
+    // ------------------------------------------------------------------
+    // Solve dispatch
+    // ------------------------------------------------------------------
+
+    /// Optimize from the current basis. Chooses the primal or dual simplex
+    /// from the warm-start state automatically.
+    pub fn solve(&mut self) -> Status {
+        if self.model.num_rows() == 0 {
+            return self.solve_unconstrained();
+        }
+        self.ensure_factorized();
+        self.recompute_x_basic();
+        self.bland = false;
+        self.stall = 0;
+
+        let pinf = self.primal_infeasibility();
+        if pinf <= self.tol.feas {
+            return self.primal_simplex();
+        }
+        let dinf = self.dual_infeasibility();
+        if dinf <= self.tol.opt {
+            let st = self.dual_simplex();
+            if st != Status::Optimal {
+                return st;
+            }
+            // Clean up any residual dual infeasibility (tolerance drift).
+            return self.primal_simplex();
+        }
+        // Neither feasible: reset to the all-logical crash basis, which is
+        // dual feasible whenever every cost is ≥ 0 (all LPs in this
+        // library) or the offending variables have finite opposite bounds.
+        self.crash_basis();
+        let dinf = self.dual_infeasibility();
+        if dinf <= self.tol.opt {
+            let st = self.dual_simplex();
+            if st != Status::Optimal {
+                return st;
+            }
+            return self.primal_simplex();
+        }
+        // Generic phase-1 is out of scope (never reached by this library's
+        // models); fail loudly rather than silently.
+        panic!(
+            "SimplexSolver: cold start is neither primal nor dual feasible \
+             (a structural cost is negative with an infinite opposite bound); \
+             generic phase-1 is not implemented"
+        );
+    }
+
+    fn solve_unconstrained(&mut self) -> Status {
+        for j in 0..self.model.num_vars() {
+            let c = self.model.cost[j];
+            let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+            let st = if c > 0.0 {
+                if !lb.is_finite() {
+                    return Status::Unbounded;
+                }
+                VarStatus::AtLower
+            } else if c < 0.0 {
+                if !ub.is_finite() {
+                    return Status::Unbounded;
+                }
+                VarStatus::AtUpper
+            } else if lb.is_finite() {
+                VarStatus::AtLower
+            } else if ub.is_finite() {
+                VarStatus::AtUpper
+            } else {
+                VarStatus::FreeZero
+            };
+            self.col_status[j] = st;
+        }
+        Status::Optimal
+    }
+
+    fn crash_basis(&mut self) {
+        let m = self.model.num_rows();
+        for j in 0..self.model.num_vars() {
+            let c = self.model.cost[j];
+            let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+            self.col_status[j] = if c >= 0.0 {
+                if lb.is_finite() {
+                    VarStatus::AtLower
+                } else if c == 0.0 {
+                    if ub.is_finite() { VarStatus::AtUpper } else { VarStatus::FreeZero }
+                } else if ub.is_finite() {
+                    VarStatus::AtUpper
+                } else {
+                    VarStatus::FreeZero // dual-infeasible; caught by caller
+                }
+            } else if ub.is_finite() {
+                VarStatus::AtUpper
+            } else {
+                VarStatus::FreeZero // dual-infeasible; caught by caller
+            };
+        }
+        self.basis_vars = (0..m).map(BVar::Log).collect();
+        for r in 0..m {
+            self.row_status[r] = VarStatus::Basic(r);
+        }
+        self.x_basic = vec![0.0; m];
+        self.refactorize();
+    }
+
+    // ------------------------------------------------------------------
+    // Primal simplex
+    // ------------------------------------------------------------------
+
+    fn primal_simplex(&mut self) -> Status {
+        let m = self.model.num_rows();
+        let mut w = vec![0.0; m];
+        for _iter in 0..self.tol.max_iters {
+            if self.factor.as_ref().unwrap().num_etas() >= self.tol.refactor_every {
+                self.refactorize();
+            }
+            self.stats.primal_iters += 1;
+            self.compute_duals();
+
+            // --- pricing: entering variable ---
+            let mut entering: Option<(BVar, f64, f64)> = None; // (var, d, score)
+            let nv = self.model.num_vars();
+            let consider = |this: &Self,
+                            v: BVar,
+                            entering: &mut Option<(BVar, f64, f64)>| {
+                let st = this.status_of(v);
+                let (lb, ub) = this.bounds_of(v);
+                if lb == ub {
+                    return; // fixed
+                }
+                let d = this.reduced_cost_of(v);
+                let score = match st {
+                    VarStatus::Basic(_) => return,
+                    VarStatus::AtLower => -d,
+                    VarStatus::AtUpper => d,
+                    VarStatus::FreeZero => d.abs(),
+                };
+                if score > this.tol.opt {
+                    if this.bland {
+                        if entering.is_none() {
+                            *entering = Some((v, d, score));
+                        }
+                    } else if entering.map_or(true, |(_, _, s)| score > s) {
+                        *entering = Some((v, d, score));
+                    }
+                }
+            };
+            for j in 0..nv {
+                consider(self, BVar::Col(j), &mut entering);
+            }
+            for r in 0..m {
+                consider(self, BVar::Log(r), &mut entering);
+            }
+            let Some((q, d_q, _)) = entering else {
+                return Status::Optimal;
+            };
+
+            // --- direction and FTRAN ---
+            let sigma = match self.status_of(q) {
+                VarStatus::AtUpper => -1.0,
+                VarStatus::FreeZero => {
+                    if d_q < 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                }
+                _ => 1.0,
+            };
+            self.dense_column(q, &mut w);
+            self.factor.as_ref().unwrap().ftran(&mut w);
+
+            // --- bounded ratio test ---
+            let (lb_q, ub_q) = self.bounds_of(q);
+            let mut t_best = if lb_q.is_finite() && ub_q.is_finite() {
+                ub_q - lb_q // bound flip distance
+            } else {
+                INF
+            };
+            let mut leaving: Option<(usize, bool)> = None; // (pos, hit_lower)
+            for (k, &wk) in w.iter().enumerate() {
+                if wk.abs() < self.tol.pivot {
+                    continue;
+                }
+                let delta = sigma * wk;
+                let bv = self.basis_vars[k];
+                let (lbk, ubk) = self.bounds_of(bv);
+                let xk = self.x_basic[k];
+                let (t, hit_lower) = if delta > 0.0 {
+                    if !lbk.is_finite() {
+                        continue;
+                    }
+                    (((xk - lbk) / delta).max(0.0), true)
+                } else {
+                    if !ubk.is_finite() {
+                        continue;
+                    }
+                    (((xk - ubk) / delta).max(0.0), false)
+                };
+                let better = if self.bland {
+                    t < t_best - 1e-12
+                        || (t < t_best + 1e-12 && leaving.is_none())
+                } else {
+                    t < t_best - 1e-9
+                        || (t < t_best + 1e-9
+                            && leaving.map_or(t < t_best, |(kb, _)| {
+                                wk.abs() > w[kb].abs()
+                            }))
+                };
+                if better {
+                    t_best = t;
+                    leaving = Some((k, hit_lower));
+                }
+            }
+
+            if !t_best.is_finite() {
+                return Status::Unbounded;
+            }
+
+            // stall detection → Bland's rule
+            if t_best < 1e-11 {
+                self.stall += 1;
+                if self.stall > 500 + 10 * m {
+                    self.bland = true;
+                }
+            } else {
+                self.stall = 0;
+            }
+
+            match leaving {
+                None => {
+                    // Bound flip: q jumps to its opposite bound.
+                    let t = t_best;
+                    for (k, &wk) in w.iter().enumerate() {
+                        self.x_basic[k] -= sigma * wk * t;
+                    }
+                    let new_st = if sigma > 0.0 { VarStatus::AtUpper } else { VarStatus::AtLower };
+                    self.set_status(q, new_st);
+                }
+                Some((r, hit_lower)) => {
+                    if !self.factor.as_mut().unwrap().push_eta(r, &w) {
+                        // numerically bad pivot → refactorize & retry
+                        self.refactorize();
+                        continue;
+                    }
+                    let t = t_best;
+                    let v_q = self.value_of(q);
+                    for (k, &wk) in w.iter().enumerate() {
+                        self.x_basic[k] -= sigma * wk * t;
+                    }
+                    let leaving_var = self.basis_vars[r];
+                    let (lbl, ubl) = self.bounds_of(leaving_var);
+                    self.set_status(
+                        leaving_var,
+                        if hit_lower {
+                            debug_assert!(lbl.is_finite());
+                            VarStatus::AtLower
+                        } else {
+                            debug_assert!(ubl.is_finite());
+                            VarStatus::AtUpper
+                        },
+                    );
+                    self.basis_vars[r] = q;
+                    self.x_basic[r] = v_q + sigma * t;
+                    self.set_status(q, VarStatus::Basic(r));
+                }
+            }
+        }
+        Status::IterLimit
+    }
+
+    // ------------------------------------------------------------------
+    // Dual simplex
+    // ------------------------------------------------------------------
+
+    fn dual_simplex(&mut self) -> Status {
+        let m = self.model.num_rows();
+        let nv = self.model.num_vars();
+        let mut rho = vec![0.0; m];
+        let mut w = vec![0.0; m];
+        // Incrementally-maintained reduced costs (the textbook dual
+        // update d ← d − θ·α after each pivot): saves one BTRAN and one
+        // column pass per iteration vs recomputing from duals — the
+        // pricing loop dominated the profile (EXPERIMENTS.md §Perf).
+        let mut d_struct = vec![0.0; nv];
+        let mut d_log = vec![0.0; m];
+        let mut alpha_struct = vec![0.0; nv];
+        let mut alpha_log = vec![0.0; m];
+        self.refresh_reduced_costs(&mut d_struct, &mut d_log);
+        for _iter in 0..self.tol.max_iters {
+            if self.factor.as_ref().unwrap().num_etas() >= self.tol.refactor_every {
+                self.refactorize();
+                self.refresh_reduced_costs(&mut d_struct, &mut d_log);
+            }
+            self.stats.dual_iters += 1;
+
+            // --- leaving: most infeasible basic variable ---
+            let mut leaving: Option<(usize, f64, bool)> = None; // (pos, viol, below_lb)
+            for (pos, &v) in self.basis_vars.iter().enumerate() {
+                let (lb, ub) = self.bounds_of(v);
+                let x = self.x_basic[pos];
+                let below = lb - x;
+                let above = x - ub;
+                let (viol, is_below) = if below >= above { (below, true) } else { (above, false) };
+                if viol > self.tol.feas
+                    && leaving.map_or(true, |(_, bv, _)| viol > bv)
+                {
+                    leaving = Some((pos, viol, is_below));
+                }
+            }
+            let Some((r, _, below_lb)) = leaving else {
+                return Status::Optimal;
+            };
+
+            // --- pricing row ρ = B⁻ᵀ e_r, α_j = ρᵀ â_j ---
+            rho.fill(0.0);
+            rho[r] = 1.0;
+            self.factor.as_ref().unwrap().btran(&mut rho);
+
+            // admissibility by leaving direction:
+            //   x_r below lb ⇒ x_r must increase; dx_r/dx_q = −α_q
+            //   at-lower q (Δ>0) needs α_q<0; at-upper q (Δ<0) needs α_q>0
+            //   (signs mirror when x_r is above ub)
+            let need_neg_alpha_for_lower = below_lb;
+            let nv = self.model.num_vars();
+            let mut best: Option<(BVar, f64, f64)> = None; // (var, alpha, ratio)
+            let consider = |this: &Self,
+                            v: BVar,
+                            st: VarStatus,
+                            alpha: f64,
+                            d: f64,
+                            best: &mut Option<(BVar, f64, f64)>| {
+                let admissible = match st {
+                    VarStatus::Basic(_) => false,
+                    VarStatus::AtLower => {
+                        if need_neg_alpha_for_lower { alpha < -this.tol.pivot } else { alpha > this.tol.pivot }
+                    }
+                    VarStatus::AtUpper => {
+                        if need_neg_alpha_for_lower { alpha > this.tol.pivot } else { alpha < -this.tol.pivot }
+                    }
+                    VarStatus::FreeZero => alpha.abs() > this.tol.pivot,
+                };
+                if !admissible {
+                    return;
+                }
+                let ratio = (d / alpha).abs();
+                let better = if this.bland {
+                    best.is_none()
+                } else {
+                    match best {
+                        None => true,
+                        Some((_, ba, br)) => {
+                            ratio < *br - 1e-10
+                                || (ratio < *br + 1e-10 && alpha.abs() > ba.abs())
+                        }
+                    }
+                };
+                if better {
+                    *best = Some((v, alpha, ratio));
+                }
+            };
+            // Structural columns: status-check *before* touching the column
+            // data, then a single pass computing α = colᵀρ; reduced costs
+            // come from the incremental cache.
+            for j in 0..nv {
+                let st = self.col_status[j];
+                if matches!(st, VarStatus::Basic(_)) || self.model.lb[j] == self.model.ub[j] {
+                    alpha_struct[j] = 0.0;
+                    continue;
+                }
+                let alpha = self.model.cols[j].dot_dense(&rho);
+                alpha_struct[j] = alpha;
+                consider(self, BVar::Col(j), st, alpha, d_struct[j], &mut best);
+            }
+            for rr in 0..m {
+                let st = self.row_status[rr];
+                if matches!(st, VarStatus::Basic(_))
+                    || self.model.row_lo[rr] == self.model.row_hi[rr]
+                {
+                    alpha_log[rr] = 0.0;
+                    continue;
+                }
+                let alpha = -rho[rr];
+                alpha_log[rr] = alpha;
+                consider(self, BVar::Log(rr), st, alpha, d_log[rr], &mut best);
+            }
+            let Some((q, alpha_q, ratio)) = best else {
+                return Status::Infeasible;
+            };
+
+            if ratio < 1e-11 {
+                self.stall += 1;
+                if self.stall > 500 + 10 * m {
+                    self.bland = true;
+                }
+            } else {
+                self.stall = 0;
+            }
+
+            // --- FTRAN of entering column; consistency check ---
+            self.dense_column(q, &mut w);
+            self.factor.as_ref().unwrap().ftran(&mut w);
+            if (w[r] - alpha_q).abs() > 1e-6 * (1.0 + alpha_q.abs()) {
+                self.refactorize();
+                continue;
+            }
+            if !self.factor.as_mut().unwrap().push_eta(r, &w) {
+                self.refactorize();
+                continue;
+            }
+
+            // --- pivot: drive x_r to its violated bound ---
+            let leaving_var = self.basis_vars[r];
+            let (lbl, ubl) = self.bounds_of(leaving_var);
+            let target = if below_lb { lbl } else { ubl };
+            let x_r = self.x_basic[r];
+            let dxq = (x_r - target) / alpha_q;
+            let v_q = self.value_of(q);
+            for (k, &wk) in w.iter().enumerate() {
+                self.x_basic[k] -= dxq * wk;
+            }
+            self.set_status(
+                leaving_var,
+                if below_lb { VarStatus::AtLower } else { VarStatus::AtUpper },
+            );
+            self.basis_vars[r] = q;
+            self.x_basic[r] = v_q + dxq;
+            self.set_status(q, VarStatus::Basic(r));
+
+            // --- incremental dual update: d ← d − θ·α (θ = d_q/α_q) ---
+            let theta = match q {
+                BVar::Col(j) => d_struct[j],
+                BVar::Log(rr) => d_log[rr],
+            } / alpha_q;
+            if theta != 0.0 {
+                for j in 0..nv {
+                    let a = alpha_struct[j];
+                    if a != 0.0 {
+                        d_struct[j] -= theta * a;
+                    }
+                }
+                for rr in 0..m {
+                    let a = alpha_log[rr];
+                    if a != 0.0 {
+                        d_log[rr] -= theta * a;
+                    }
+                }
+            }
+            // entering variable is now basic (d = 0); leaving var takes −θ
+            match q {
+                BVar::Col(j) => d_struct[j] = 0.0,
+                BVar::Log(rr) => d_log[rr] = 0.0,
+            }
+            match leaving_var {
+                BVar::Col(j) => d_struct[j] = -theta,
+                BVar::Log(rr) => d_log[rr] = -theta,
+            }
+        }
+        Status::IterLimit
+    }
+
+    /// Rebuild the dual-simplex reduced-cost cache from the current basis.
+    fn refresh_reduced_costs(&mut self, d_struct: &mut [f64], d_log: &mut [f64]) {
+        self.compute_duals();
+        for j in 0..self.model.num_vars() {
+            d_struct[j] = self.model.cost[j] - self.model.cols[j].dot_dense(&self.duals);
+        }
+        for r in 0..self.model.num_rows() {
+            d_log[r] = self.duals[r];
+        }
+    }
+
+    /// Change a structural cost in place. Primal feasibility of the
+    /// current basis is unaffected, so the next `solve` warm-starts with
+    /// the primal simplex — this is how the regularization-path driver
+    /// moves λ without rebuilding the model.
+    pub fn set_col_cost(&mut self, j: VarId, cost: f64) {
+        self.model.cost[j] = cost;
+    }
+
+    // ------------------------------------------------------------------
+    // Solution accessors
+    // ------------------------------------------------------------------
+
+    /// Value of structural variable `j`.
+    pub fn col_value(&self, j: VarId) -> f64 {
+        self.value_of(BVar::Col(j))
+    }
+
+    /// All structural values.
+    pub fn col_values(&self) -> Vec<f64> {
+        (0..self.model.num_vars()).map(|j| self.col_value(j)).collect()
+    }
+
+    /// Row activity `aᵢᵀx` (= the logical's value).
+    pub fn row_activity(&self, r: RowId) -> f64 {
+        self.value_of(BVar::Log(r))
+    }
+
+    /// Dual price of row `r` (valid after `solve`).
+    pub fn row_dual(&self, r: RowId) -> f64 {
+        self.duals[r]
+    }
+
+    /// All dual prices.
+    pub fn duals(&self) -> &[f64] {
+        &self.duals
+    }
+
+    /// Reduced cost of structural variable `j` (valid after `solve`).
+    pub fn col_reduced_cost(&self, j: VarId) -> f64 {
+        self.reduced_cost_of(BVar::Col(j))
+    }
+
+    /// Objective value at the current point.
+    pub fn objective(&self) -> f64 {
+        let mut obj = 0.0;
+        for j in 0..self.model.num_vars() {
+            obj += self.model.cost[j] * self.col_value(j);
+        }
+        obj
+    }
+
+    /// Whether variable `j` is basic.
+    pub fn is_basic(&self, j: VarId) -> bool {
+        matches!(self.col_status[j], VarStatus::Basic(_))
+    }
+
+    /// Status of structural variable `j`.
+    pub fn col_status(&self, j: VarId) -> VarStatus {
+        self.col_status[j]
+    }
+
+    // Internal hooks for the parametric simplex (same crate only).
+    pub(crate) fn duals_for_costs(&mut self, costs: &dyn Fn(BVar) -> f64) -> Vec<f64> {
+        let m = self.model.num_rows();
+        let mut y = vec![0.0; m];
+        for (pos, &v) in self.basis_vars.iter().enumerate() {
+            y[pos] = costs(v);
+        }
+        self.ensure_factorized();
+        self.factor.as_ref().unwrap().btran(&mut y);
+        y
+    }
+
+    pub(crate) fn nonbasic_vars(&self) -> Vec<BVar> {
+        self.iter_all_vars()
+            .into_iter()
+            .filter(|&v| !matches!(self.status_of(v), VarStatus::Basic(_)))
+            .collect()
+    }
+
+    pub(crate) fn status_of_pub(&self, v: BVar) -> VarStatus {
+        self.status_of(v)
+    }
+
+    pub(crate) fn column_dot(&self, v: BVar, y: &[f64]) -> f64 {
+        match v {
+            BVar::Col(j) => self.model.cols[j].dot_dense(y),
+            BVar::Log(r) => -y[r],
+        }
+    }
+
+    pub(crate) fn cost_of_pub(&self, v: BVar) -> f64 {
+        self.cost_of(v)
+    }
+
+}

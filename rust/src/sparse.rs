@@ -1,0 +1,341 @@
+//! Compressed sparse matrices (CSR + CSC).
+//!
+//! Table 3 of the paper runs on large sparse text-classification data
+//! (rcv1, real-sim); the LP model coefficient matrices and the pricing
+//! matvecs must exploit that sparsity. We keep *both* layouts around:
+//! CSR for row-oriented kernels (`Xβ`, sample subsetting) and CSC for
+//! column-oriented ones (building LP columns, per-column reduced costs).
+
+/// Triplet (COO) builder — accumulate entries in any order, then convert.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    /// New empty builder with fixed dimensions.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    /// Record `A[i, j] = v` (duplicates are summed on conversion).
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        if v != 0.0 {
+            self.entries.push((i, j, v));
+        }
+    }
+
+    /// Convert to CSR (sorts by row, then column; sums duplicates).
+    pub fn to_csr(&self) -> Csr {
+        let mut ent = self.entries.clone();
+        ent.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(ent.len());
+        let mut data: Vec<f64> = Vec::with_capacity(ent.len());
+        for &(i, j, v) in &ent {
+            indices.push(j);
+            data.push(v);
+            indptr[i + 1] = indices.len();
+        }
+        // Empty rows inherit the previous offset.
+        for i in 0..self.rows {
+            indptr[i + 1] = indptr[i + 1].max(indptr[i]);
+        }
+        let mut csr = Csr { rows: self.rows, cols: self.cols, indptr, indices, data };
+        csr.merge_duplicates();
+        csr
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Merge adjacent duplicate column indices within each row (assumes
+    /// indices sorted within rows).
+    fn merge_duplicates(&mut self) {
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.indices.len());
+        let mut data = Vec::with_capacity(self.data.len());
+        for i in 0..self.rows {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            let mut k = s;
+            while k < e {
+                let j = self.indices[k];
+                let mut v = self.data[k];
+                let mut k2 = k + 1;
+                while k2 < e && self.indices[k2] == j {
+                    v += self.data[k2];
+                    k2 += 1;
+                }
+                if v != 0.0 {
+                    indices.push(j);
+                    data.push(v);
+                }
+                k = k2;
+            }
+            indptr[i + 1] = indices.len();
+        }
+        self.indptr = indptr;
+        self.indices = indices;
+        self.data = data;
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` as (column indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// `out = A v`.
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut s = 0.0;
+            for (j, a) in idx.iter().zip(val) {
+                s += a * v[*j];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// `out = Aᵀ v`.
+    pub fn tmatvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            let (idx, val) = self.row(i);
+            for (j, a) in idx.iter().zip(val) {
+                out[*j] += a * vi;
+            }
+        }
+    }
+
+    /// `out = Aᵀ v` over a row subset: rows[k] weighted by v[k].
+    pub fn tmatvec_rows(&self, rows: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), rows.len());
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for (k, &i) in rows.iter().enumerate() {
+            let vi = v[k];
+            if vi == 0.0 {
+                continue;
+            }
+            let (idx, val) = self.row(i);
+            for (j, a) in idx.iter().zip(val) {
+                out[*j] += a * vi;
+            }
+        }
+    }
+
+    /// Transpose into CSC layout (same matrix, column-compressed).
+    pub fn to_csc(&self) -> Csc {
+        let mut counts = vec![0usize; self.cols];
+        for &j in &self.indices {
+            counts[j] += 1;
+        }
+        let mut indptr = vec![0usize; self.cols + 1];
+        for j in 0..self.cols {
+            indptr[j + 1] = indptr[j] + counts[j];
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut next = indptr.clone();
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (j, a) in idx.iter().zip(val) {
+                let pos = next[*j];
+                indices[pos] = i;
+                data[pos] = *a;
+                next[*j] += 1;
+            }
+        }
+        Csc { rows: self.rows, cols: self.cols, indptr, indices, data }
+    }
+
+    /// Per-column L2 norms.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for (j, v) in self.indices.iter().zip(&self.data) {
+            s[*j] += v * v;
+        }
+        s.iter().map(|x| x.sqrt()).collect()
+    }
+
+    /// Scale column `j` by `scale[j]` in place (feature standardization).
+    pub fn scale_columns(&mut self, scale: &[f64]) {
+        assert_eq!(scale.len(), self.cols);
+        for (j, v) in self.indices.iter().zip(self.data.iter_mut()) {
+            *v *= scale[*j];
+        }
+    }
+
+    /// Dense row-major copy (tests / small problems only).
+    pub fn to_dense(&self) -> crate::linalg::Matrix {
+        let mut m = crate::linalg::Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (j, a) in idx.iter().zip(val) {
+                m.set(i, *j, *a);
+            }
+        }
+        m
+    }
+}
+
+/// Compressed sparse column matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csc {
+    /// Column `j` as (row indices, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Dot of column `j` with a dense vector of length `rows`.
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut s = 0.0;
+        for (i, a) in idx.iter().zip(val) {
+            s += a * v[*i];
+        }
+        s
+    }
+
+    /// `out += alpha * A[:, j]` scattered into a dense vector.
+    pub fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        let (idx, val) = self.col(j);
+        for (i, a) in idx.iter().zip(val) {
+            out[*i] += alpha * a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_csr() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(2, 1, 4.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn coo_roundtrip_with_empty_row() {
+        let a = sample_csr();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.row(1), (&[][..], &[][..]));
+        assert_eq!(a.row(2), (&[0usize, 1][..], &[3.0, 4.0][..]));
+    }
+
+    #[test]
+    fn coo_sums_duplicates() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.5);
+        let a = coo.to_csr();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.row(0), (&[1usize][..], &[3.5][..]));
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample_csr();
+        let d = a.to_dense();
+        let v = [1.0, -2.0, 0.5];
+        let mut out_s = vec![0.0; 3];
+        let mut out_d = vec![0.0; 3];
+        a.matvec(&v, &mut out_s);
+        d.matvec(&v, &mut out_d);
+        assert_eq!(out_s, out_d);
+    }
+
+    #[test]
+    fn tmatvec_matches_dense() {
+        let a = sample_csr();
+        let d = a.to_dense();
+        let v = [1.0, 5.0, -1.0];
+        let mut out_s = vec![0.0; 3];
+        let mut out_d = vec![0.0; 3];
+        a.tmatvec(&v, &mut out_s);
+        d.tmatvec(&v, &mut out_d);
+        assert_eq!(out_s, out_d);
+    }
+
+    #[test]
+    fn tmatvec_rows_subset() {
+        let a = sample_csr();
+        let mut out = vec![0.0; 3];
+        a.tmatvec_rows(&[2, 0], &[1.0, 10.0], &mut out);
+        assert_eq!(out, vec![13.0, 4.0, 20.0]);
+    }
+
+    #[test]
+    fn csc_roundtrip_and_col_ops() {
+        let a = sample_csr();
+        let c = a.to_csc();
+        assert_eq!(c.nnz(), a.nnz());
+        assert_eq!(c.col(0), (&[0usize, 2][..], &[1.0, 3.0][..]));
+        assert_eq!(c.col_dot(0, &[1.0, 1.0, 2.0]), 7.0);
+        let mut out = vec![0.0; 3];
+        c.col_axpy(1, 2.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn col_norms_and_scaling() {
+        let mut a = sample_csr();
+        let norms = a.col_norms();
+        assert!((norms[0] - (10.0f64).sqrt()).abs() < 1e-12);
+        let scale: Vec<f64> = norms.iter().map(|&n| if n > 0.0 { 1.0 / n } else { 1.0 }).collect();
+        a.scale_columns(&scale);
+        let after = a.col_norms();
+        assert!((after[0] - 1.0).abs() < 1e-12);
+        assert!((after[1] - 1.0).abs() < 1e-12);
+        assert!((after[2] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module integration tests: exercise the public API the way a
+//! downstream user would — data generation → first-order init → cutting
+//! planes → solution checks — plus cross-method agreement and failure
+//! injection.
+
+use cutgen::backend::{Backend, NativeBackend};
+use cutgen::baselines::admm::{admm_l1svm, AdmmParams};
+use cutgen::baselines::full_lp::solve_full_l1;
+use cutgen::baselines::psm::psm_l1svm;
+use cutgen::coordinator::l1svm::{column_generation, constraint_generation};
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+use cutgen::data::{libsvm, Dataset};
+use cutgen::fom::fista::{fista, FistaParams, Penalty};
+use cutgen::fom::objective::l1_objective;
+use cutgen::rng::Xoshiro256;
+
+fn synth(n: usize, p: usize, seed: u64) -> Dataset {
+    generate_l1(&SyntheticSpec::paper_default(n, p), &mut Xoshiro256::seed_from_u64(seed))
+}
+
+/// Every solver in the repo must agree on the L1-SVM optimum.
+#[test]
+fn all_l1_methods_agree_on_objective() {
+    let ds = synth(40, 60, 1);
+    let lambda = 0.05 * ds.lambda_max_l1();
+    let backend = NativeBackend::new(&ds.x);
+    let tight = GenParams { eps: 1e-7, ..Default::default() };
+
+    let full = solve_full_l1(&ds, lambda).objective;
+    let cg = column_generation(&ds, &backend, lambda, &[0], &tight).objective;
+    let cng = constraint_generation(&ds, lambda, &[0, 1, 2], &tight).objective;
+    let psm = psm_l1svm(&ds, lambda).solution.objective;
+    let admm = {
+        let r = admm_l1svm(
+            &backend,
+            &ds.y,
+            lambda,
+            &AdmmParams { max_iters: 10_000, tol: 1e-8, ..Default::default() },
+        );
+        l1_objective(&backend, &ds.y, &r.beta, r.beta0, lambda)
+    };
+    let fo = {
+        let r = fista(
+            &backend,
+            &ds.y,
+            &Penalty::L1(lambda),
+            &FistaParams { max_iters: 4000, eta: 1e-10, tau: 0.05, ..Default::default() },
+            None,
+        );
+        l1_objective(&backend, &ds.y, &r.beta, r.beta0, lambda)
+    };
+
+    let rel = |a: f64| (a - full).abs() / full;
+    assert!(rel(cg) < 1e-5, "cg {cg} vs full {full}");
+    assert!(rel(cng) < 1e-5, "cng {cng} vs full {full}");
+    assert!(rel(psm) < 1e-5, "psm {psm} vs full {full}");
+    // first-order methods are approximate but must be close from above
+    assert!(admm >= full - 1e-7 && rel(admm) < 0.03, "admm {admm} vs {full}");
+    assert!(fo >= full - 1e-7 && rel(fo) < 0.08, "fista {fo} vs {full}"); // FOM = low accuracy by design (§4)
+}
+
+/// Sparse and dense storage must produce identical coordinators' output.
+#[test]
+fn sparse_dense_coordinator_parity() {
+    // build a dataset, write libsvm, reload (sparse), compare solutions
+    let ds_dense = synth(30, 40, 2);
+    let path = std::env::temp_dir().join("cutgen_integration_parity.svm");
+    libsvm::write_file(&ds_dense, &path).unwrap();
+    let ds_sparse = libsvm::read_file(&path, ds_dense.p()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(ds_sparse.x.is_sparse());
+
+    let lambda = 0.05 * ds_dense.lambda_max_l1();
+    let tight = GenParams { eps: 1e-7, ..Default::default() };
+    let bd = NativeBackend::new(&ds_dense.x);
+    let bs = NativeBackend::new(&ds_sparse.x);
+    let a = column_generation(&ds_dense, &bd, lambda, &[0], &tight);
+    let b = column_generation(&ds_sparse, &bs, lambda, &[0], &tight);
+    assert!(
+        (a.objective - b.objective).abs() / a.objective < 1e-6,
+        "dense {} sparse {}",
+        a.objective,
+        b.objective
+    );
+}
+
+/// The ε guarantee: a CG solution's true suboptimality is bounded by the
+/// pricing slack — ε·(number of columns) is a crude but valid bound; we
+/// check the much stronger empirical property rel-gap ≤ ε.
+#[test]
+fn eps_controls_suboptimality() {
+    let ds = synth(50, 120, 3);
+    let lambda = 0.03 * ds.lambda_max_l1();
+    let backend = NativeBackend::new(&ds.x);
+    let exact = solve_full_l1(&ds, lambda).objective;
+    for eps in [0.5, 0.1, 0.01] {
+        let sol = column_generation(
+            &ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps, ..Default::default() },
+        );
+        let gap = (sol.objective - exact) / exact;
+        assert!(gap >= -1e-7, "cannot beat the optimum");
+        assert!(gap <= eps, "eps {eps}: gap {gap}");
+    }
+}
+
+/// Failure injection: degenerate datasets must not break the pipeline.
+#[test]
+fn degenerate_inputs_are_handled() {
+    // (a) all labels equal → LP still solves (β=0, β₀ = +1 side)
+    let mut ds = synth(20, 10, 4);
+    ds.y = vec![1.0; 20];
+    let backend = NativeBackend::new(&ds.x);
+    let sol = column_generation(&ds, &backend, 1.0, &[0], &GenParams::default());
+    assert!(sol.objective <= 1e-6, "separable by intercept: {}", sol.objective);
+
+    // (b) duplicated features → CG must still terminate
+    let base = generate_l1(
+        &SyntheticSpec { n: 20, p: 5, k0: 3, rho: 0.1, standardize: true },
+        &mut Xoshiro256::seed_from_u64(5),
+    );
+    let mut cols = Vec::new();
+    for rep in 0..4 {
+        let _ = rep;
+        for j in 0..5 {
+            cols.push(base.x.col_entries(j));
+        }
+    }
+    let mut coo = cutgen::sparse::Coo::new(20, 20);
+    for (j, entries) in cols.iter().enumerate() {
+        for &(i, v) in entries {
+            coo.push(i, j, v);
+        }
+    }
+    let dup = Dataset { x: cutgen::data::Design::sparse(coo.to_csr()), y: base.y.clone() };
+    let backend = NativeBackend::new(&dup.x);
+    let lambda = 0.05 * dup.lambda_max_l1();
+    let sol = column_generation(&dup, &backend, lambda, &[0], &GenParams::default());
+    assert!(sol.objective.is_finite());
+
+    // (c) a feature that is identically zero
+    let mut coo = cutgen::sparse::Coo::new(10, 3);
+    for i in 0..10 {
+        coo.push(i, 0, 1.0);
+        coo.push(i, 1, if i % 2 == 0 { 1.0 } else { -1.0 });
+        // column 2 stays empty
+    }
+    let y: Vec<f64> = (0..10).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let zed = Dataset { x: cutgen::data::Design::sparse(coo.to_csr()), y };
+    let backend = NativeBackend::new(&zed.x);
+    let sol = column_generation(&zed, &backend, 0.1, &[2], &GenParams::default());
+    assert!(sol.objective.is_finite());
+}
+
+/// Prediction consistency: the fitted classifier must separate a strongly
+/// signalled dataset almost perfectly in-sample.
+#[test]
+fn classifier_predicts_training_data() {
+    let ds = synth(80, 50, 6);
+    let backend = NativeBackend::new(&ds.x);
+    let lambda = 0.01 * ds.lambda_max_l1();
+    let sol = column_generation(&ds, &backend, lambda, &[0, 1], &GenParams::default());
+    let mut correct = 0;
+    for i in 0..ds.n() {
+        let xi: Vec<f64> = (0..ds.p()).map(|j| ds.x.get(i, j)).collect();
+        if sol.predict(&xi) == ds.y[i] {
+            correct += 1;
+        }
+    }
+    assert!(correct as f64 >= 0.95 * ds.n() as f64, "{correct}/{}", ds.n());
+}
+
+/// Sparse text workloads run the whole hybrid pipeline.
+#[test]
+fn sparse_hybrid_pipeline_runs() {
+    let spec = SparseTextSpec { n: 600, p: 1500, density: 0.01, k0: 25, zipf: 1.1 };
+    let ds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(7));
+    let lambda = 0.05 * ds.lambda_max_l1();
+    let (sol, split) = cutgen::exps::common::sfo_cl_cng(&ds, lambda, 1e-2, 100, 9);
+    assert!(sol.objective.is_finite());
+    assert!(split.total() > 0.0);
+    assert!(sol.rows.len() <= ds.n());
+    assert!(sol.cols.len() < ds.p());
+}
+
+/// PJRT backend (when artifacts exist) must drive column generation to
+/// the same answer as the native backend.
+#[test]
+fn pjrt_coordinator_parity() {
+    use cutgen::runtime::{PjrtBackend, PjrtRuntime};
+    if !PjrtRuntime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::load(PjrtRuntime::default_dir()).unwrap();
+    let ds = synth(60, 300, 8);
+    let lambda = 0.02 * ds.lambda_max_l1();
+    let tight = GenParams { eps: 1e-6, ..Default::default() };
+    let native = NativeBackend::new(&ds.x);
+    let pjrt = PjrtBackend::new(&rt, &ds.x).unwrap();
+    assert_eq!(pjrt.name(), "pjrt");
+    let a = column_generation(&ds, &native, lambda, &[0], &tight);
+    let b = column_generation(&ds, &pjrt, lambda, &[0], &tight);
+    assert!(
+        (a.objective - b.objective).abs() / a.objective < 1e-4,
+        "native {} pjrt {}",
+        a.objective,
+        b.objective
+    );
+}
