@@ -1,20 +1,33 @@
 //! Micro-benchmarks of the hot paths (hand-rolled harness; the offline
 //! image carries no criterion). Reports ns/op and effective GFLOP/s —
-//! these numbers feed EXPERIMENTS.md §Perf.
+//! these numbers feed EXPERIMENTS.md §Perf, and the serial-vs-parallel
+//! pricing section tracks the engine's threaded `Xᵀv` chunking.
 //!
-//! Usage: cargo bench --bench perf_hotpaths [-- smoke]
+//! Usage: cargo bench --bench perf_hotpaths [-- smoke] [-- json]
+//!
+//! With `json`, results are also written to `BENCH_hotpaths.json` in the
+//! working directory, so the perf trajectory is machine-readable across
+//! PRs.
 
 use std::hint::black_box;
 use std::time::Instant;
 
 use cutgen::backend::{Backend, NativeBackend};
 use cutgen::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+use cutgen::engine::{BackendPricer, Pricer};
 use cutgen::fom::prox::prox_slope;
 use cutgen::linalg::{dot, Lu};
 use cutgen::rng::Xoshiro256;
 
+/// One measured result.
+struct Record {
+    name: String,
+    us_per_op: f64,
+    gflops: f64,
+}
+
 /// Time `f` adaptively: warm up, then run enough iterations for ≥0.2 s.
-fn bench(name: &str, flops_per_op: f64, mut f: impl FnMut()) {
+fn bench(records: &mut Vec<Record>, name: &str, flops_per_op: f64, mut f: impl FnMut()) {
     // warmup
     for _ in 0..3 {
         f();
@@ -34,22 +47,54 @@ fn bench(name: &str, flops_per_op: f64, mut f: impl FnMut()) {
                 per_op * 1e6,
                 gflops
             );
+            records.push(Record {
+                name: name.to_string(),
+                us_per_op: per_op * 1e6,
+                gflops,
+            });
             return;
         }
         iters = ((0.25 / dt.max(1e-9)) as u64).max(iters * 2);
     }
 }
 
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(records: &[Record], mode: &str) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"perf_hotpaths\",\n  \"mode\": \"{mode}\",\n"));
+    out.push_str("  \"results\": [\n");
+    for (k, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"us_per_op\": {:.3}, \"gflops\": {:.4}}}{}\n",
+            json_escape(&r.name),
+            r.us_per_op,
+            r.gflops,
+            if k + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_hotpaths.json", &out) {
+        Ok(()) => println!("wrote BENCH_hotpaths.json ({} results)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpaths.json: {e}"),
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "smoke");
+    let json = std::env::args().any(|a| a == "json");
     let mut rng = Xoshiro256::seed_from_u64(42);
+    let mut recs: Vec<Record> = Vec::new();
     println!("--- perf_hotpaths ({}) ---", if smoke { "smoke" } else { "default" });
 
     // 1. dot product
     let n = if smoke { 4096 } else { 65536 };
     let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    bench(&format!("dot f64 n={n}"), 2.0 * n as f64, || {
+    bench(&mut recs, &format!("dot f64 n={n}"), 2.0 * n as f64, || {
         black_box(dot(black_box(&a), black_box(&b)));
     });
 
@@ -59,14 +104,34 @@ fn main() {
     let backend = NativeBackend::new(&ds.x);
     let v: Vec<f64> = (0..dn).map(|_| rng.uniform()).collect();
     let mut q = vec![0.0; dp];
-    bench(&format!("dense xtv {dn}x{dp} (pricing)"), 2.0 * (dn * dp) as f64, || {
+    bench(&mut recs, &format!("dense xtv {dn}x{dp} (pricing)"), 2.0 * (dn * dp) as f64, || {
         backend.xtv(black_box(&v), black_box(&mut q));
     });
     let beta: Vec<f64> = (0..dp).map(|_| rng.normal() * 0.01).collect();
     let mut m = vec![0.0; dn];
-    bench(&format!("dense xb {dn}x{dp} (margins)"), 2.0 * (dn * dp) as f64, || {
+    bench(&mut recs, &format!("dense xb {dn}x{dp} (margins)"), 2.0 * (dn * dp) as f64, || {
         backend.xb(black_box(&beta), black_box(&mut m));
     });
+
+    // 2b. serial vs parallel pricing through the engine's BackendPricer —
+    // n·p = 4M (smoke: 0.4M) and 20M, the sizes the engine refactor targets.
+    for (pn, pp) in if smoke { vec![(200, 2000)] } else { vec![(200, 20_000), (1000, 20_000)] } {
+        let pds = generate_l1(&SyntheticSpec::paper_default(pn, pp), &mut rng);
+        let pbackend = NativeBackend::new(&pds.x);
+        let pv: Vec<f64> = (0..pn).map(|_| rng.uniform()).collect();
+        let mut pq = vec![0.0; pp];
+        for threads in [1usize, 2, 4] {
+            let pricer = BackendPricer::new(&pbackend, threads);
+            bench(
+                &mut recs,
+                &format!("pricing xtv {pn}x{pp} threads={threads}"),
+                2.0 * (pn * pp) as f64,
+                || {
+                    pricer.score(black_box(&pv), black_box(&mut pq));
+                },
+            );
+        }
+    }
 
     // 3. sparse pricing
     let spec = SparseTextSpec {
@@ -81,12 +146,25 @@ fn main() {
     let sv: Vec<f64> = (0..sds.n()).map(|_| rng.uniform()).collect();
     let mut sq = vec![0.0; sds.p()];
     bench(
+        &mut recs,
         &format!("sparse xtv {}x{} nnz={}", sds.n(), sds.p(), sds.x.nnz()),
         2.0 * sds.x.nnz() as f64,
         || {
             sbackend.xtv(black_box(&sv), black_box(&mut sq));
         },
     );
+    // sparse serial vs parallel pricing
+    for threads in [1usize, 4] {
+        let pricer = BackendPricer::new(&sbackend, threads);
+        bench(
+            &mut recs,
+            &format!("sparse pricing nnz={} threads={threads}", sds.x.nnz()),
+            2.0 * sds.x.nnz() as f64,
+            || {
+                pricer.score(black_box(&sv), black_box(&mut sq));
+            },
+        );
+    }
 
     // 4. LU factorize + solves (the simplex basis kernel)
     for mdim in if smoke { vec![100] } else { vec![100, 400, 1000] } {
@@ -98,6 +176,7 @@ fn main() {
             am[i * mdim + i] += mdim as f64;
         }
         bench(
+            &mut recs,
             &format!("LU factorize m={mdim}"),
             2.0 / 3.0 * (mdim as f64).powi(3),
             || {
@@ -106,12 +185,12 @@ fn main() {
         );
         let lu = Lu::factorize_flat(mdim, &am);
         let rhs: Vec<f64> = (0..mdim).map(|_| rng.normal()).collect();
-        bench(&format!("FTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
+        bench(&mut recs, &format!("FTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
             let mut x = rhs.clone();
             lu.solve(&mut x);
             black_box(x);
         });
-        bench(&format!("BTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
+        bench(&mut recs, &format!("BTRAN m={mdim}"), 2.0 * (mdim as f64).powi(2), || {
             let mut x = rhs.clone();
             lu.solve_transposed(&mut x);
             black_box(x);
@@ -122,7 +201,7 @@ fn main() {
     let pp = if smoke { 2000 } else { 50_000 };
     let eta: Vec<f64> = (0..pp).map(|_| rng.normal()).collect();
     let lams = cutgen::fom::objective::bh_slope_weights(pp, 0.1);
-    bench(&format!("prox_slope (PAVA) p={pp}"), (pp as f64) * 20.0, || {
+    bench(&mut recs, &format!("prox_slope (PAVA) p={pp}"), (pp as f64) * 20.0, || {
         black_box(prox_slope(black_box(&eta), &lams, 1.0));
     });
 
@@ -131,7 +210,7 @@ fn main() {
         generate_l1(&SyntheticSpec::paper_default(100, if smoke { 1000 } else { 5000 }), &mut rng);
     let lam = 0.01 * ds2.lambda_max_l1();
     let be2 = NativeBackend::new(&ds2.x);
-    bench("column_generation n=100 (end-to-end)", 0.0, || {
+    bench(&mut recs, "column_generation n=100 (end-to-end)", 0.0, || {
         let sol = cutgen::coordinator::l1svm::column_generation(
             &ds2,
             &be2,
@@ -142,5 +221,8 @@ fn main() {
         black_box(sol.objective);
     });
 
+    if json {
+        write_json(&recs, if smoke { "smoke" } else { "default" });
+    }
     println!("--- done ---");
 }

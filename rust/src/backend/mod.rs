@@ -13,7 +13,12 @@
 use crate::data::Design;
 
 /// Matrix–vector products against a fixed design matrix.
-pub trait Backend {
+///
+/// `Sync` is a supertrait so a `&dyn Backend` can be shared across the
+/// scoped worker threads of the parallel pricer
+/// (`engine::BackendPricer`); every backend is immutable after
+/// construction, so this costs nothing.
+pub trait Backend: Sync {
     /// Number of samples (rows of X).
     fn rows(&self) -> usize;
     /// Number of features (columns of X).
@@ -22,6 +27,26 @@ pub trait Backend {
     fn xb(&self, beta: &[f64], out: &mut [f64]);
     /// `out = Xᵀ v` (length p).
     fn xtv(&self, v: &[f64], out: &mut [f64]);
+    /// Column-range slice of `Xᵀ v`: `out[k] = (Xᵀv)[j0 + k]`.
+    ///
+    /// The parallel pricer partitions the feature axis into ranges, one
+    /// per worker. The default implementation computes the full product
+    /// and copies the slice — correct for any backend, but O(np) per
+    /// call; backends that override it with a real range kernel must also
+    /// return `true` from [`Backend::supports_range_pricing`] so the
+    /// pricer knows chunking is worthwhile.
+    fn xtv_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
+        let mut full = vec![0.0; self.cols()];
+        self.xtv(v, &mut full);
+        out.copy_from_slice(&full[j0..j0 + out.len()]);
+    }
+    /// Whether [`Backend::xtv_range`] is a genuine column-range kernel
+    /// (cost proportional to the range). When `false`, the parallel
+    /// pricer degrades to a single serial `xtv` instead of multiplying
+    /// the full matvec across workers.
+    fn supports_range_pricing(&self) -> bool {
+        false
+    }
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str {
         "unknown"
@@ -52,6 +77,12 @@ impl Backend for NativeBackend<'_> {
     }
     fn xtv(&self, v: &[f64], out: &mut [f64]) {
         self.design.tmatvec(v, out);
+    }
+    fn xtv_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
+        self.design.tmatvec_range(v, j0, out);
+    }
+    fn supports_range_pricing(&self) -> bool {
+        true
     }
     fn name(&self) -> &'static str {
         "native"

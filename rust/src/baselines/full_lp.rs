@@ -52,6 +52,8 @@ impl FullL1Lp {
                 cols_added: self.ds_p,
                 rows_added: self.ds_n,
                 simplex_iters: self.inner.simplex_iters(),
+                converged: true,
+                ..Default::default()
             },
             cols: (0..self.ds_p).collect(),
             rows: (0..self.ds_n).collect(),

@@ -71,6 +71,8 @@ pub fn psm_l1svm(ds: &Dataset, lambda: f64) -> PsmResult {
         cols_added: p,
         rows_added: n,
         simplex_iters: psm.solver.stats.primal_iters + psm.solver.stats.dual_iters,
+        converged: true,
+        ..Default::default()
     };
     PsmResult {
         solution: SvmSolution {

@@ -100,6 +100,8 @@ pub fn solve_slope_full(ds: &Dataset, lambda: &[f64]) -> Option<SvmSolution> {
             cols_added: solver.model().num_vars(),
             rows_added: solver.model().num_rows(),
             simplex_iters: solver.stats.primal_iters + solver.stats.dual_iters,
+            converged: true,
+            ..Default::default()
         },
         cols: (0..p).collect(),
         rows: (0..n).collect(),

@@ -6,13 +6,15 @@
 //! cutgen train    --data FILE | --synthetic N,P  [--penalty l1|group|slope]
 //!                 [--lambda-frac F] [--method fo-clg|clg|cng|clcng|full-lp|psm]
 //!                 [--backend native|pjrt] [--eps E] [--group-size G]
-//! cutgen path     --synthetic N,P [--grid K] [--ratio R]
+//!                 [--threads T] [--trace]
+//! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--threads T]
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{bail, ensure, err};
 
 use crate::backend::{Backend, NativeBackend};
 use crate::coordinator::path::{geometric_grid, regularization_path};
@@ -127,7 +129,7 @@ fn doctor() -> Result<()> {
     let x = m.add_col_nonneg(1.0, &[]);
     m.add_row_ge(1.0, &[(x, 1.0)]);
     let mut s = crate::simplex::SimplexSolver::new(m);
-    anyhow::ensure!(s.solve() == crate::simplex::Status::Optimal, "simplex self-check failed");
+    ensure!(s.solve() == crate::simplex::Status::Optimal, "simplex self-check failed");
     println!("    ok (min x s.t. x >= 1 -> {})", s.objective());
     Ok(())
 }
@@ -137,7 +139,7 @@ fn datagen(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 100)?;
     let p = args.get_usize("p", 1000)?;
     let seed = args.get_usize("seed", 0)? as u64;
-    let out = args.get("out").ok_or_else(|| anyhow!("--out FILE required"))?;
+    let out = args.get("out").ok_or_else(|| err!("--out FILE required"))?;
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let ds = match kind {
         "l1" => generate_l1(&SyntheticSpec::paper_default(n, p), &mut rng),
@@ -177,7 +179,7 @@ fn load_or_generate(args: &Args) -> Result<Dataset> {
         let (n, p) = spec
             .split_once(',')
             .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
-            .ok_or_else(|| anyhow!("--synthetic expects N,P"))?;
+            .ok_or_else(|| err!("--synthetic expects N,P"))?;
         let seed = args.get_usize("seed", 0)? as u64;
         Ok(generate_l1(&SyntheticSpec::paper_default(n, p), &mut Xoshiro256::seed_from_u64(seed)))
     }
@@ -198,9 +200,14 @@ fn train(args: &Args) -> Result<()> {
     let ds = load_or_generate(args)?;
     let lambda_frac = args.get_f64("lambda-frac", 0.01)?;
     let eps = args.get_f64("eps", 1e-2)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
+    let trace = args.get("trace").is_some();
     let method = args.get("method").unwrap_or("fo-clg");
     let penalty = args.get("penalty").unwrap_or("l1");
     let use_pjrt = args.get("backend") == Some("pjrt");
+    // The shared method runners (fo-clg, clcng, slope init) build their own
+    // GenParams; the env knob routes the thread count to them too.
+    std::env::set_var("CUTGEN_THREADS", threads.to_string());
 
     // optional PJRT runtime (owned here so the backend can borrow it)
     let rt = if use_pjrt {
@@ -223,7 +230,7 @@ fn train(args: &Args) -> Result<()> {
         "l1" => {
             let lambda = lambda_frac * ds.lambda_max_l1();
             println!("L1-SVM: n={}, p={}, λ={lambda:.4} ({lambda_frac}·λ_max)", ds.n(), ds.p());
-            let gen = GenParams { eps, ..Default::default() };
+            let gen = GenParams { eps, threads, trace, ..Default::default() };
             let (sol, t) = crate::exps::time_it(|| -> Result<SvmSolution> {
                 Ok(match method {
                     "fo-clg" => crate::exps::common::fo_clg(&ds, lambda, eps, 100).0,
@@ -234,7 +241,9 @@ fn train(args: &Args) -> Result<()> {
                         &crate::coordinator::path::initial_columns(&ds, 10),
                         &gen,
                     ),
-                    "cng" => crate::coordinator::l1svm::constraint_generation(&ds, lambda, &[], &gen),
+                    "cng" => {
+                        crate::coordinator::l1svm::constraint_generation(&ds, lambda, &[], &gen)
+                    }
                     "clcng" => crate::exps::common::sfo_cl_cng(&ds, lambda, eps, 200, 1).0,
                     "full-lp" => crate::baselines::full_lp::solve_full_l1(&ds, lambda),
                     "psm" => crate::baselines::psm::psm_l1svm(&ds, lambda).solution,
@@ -245,7 +254,7 @@ fn train(args: &Args) -> Result<()> {
         }
         "group" => {
             let gs = args.get_usize("group-size", 10)?;
-            anyhow::ensure!(ds.p() % gs == 0, "p must be a multiple of --group-size");
+            ensure!(ds.p() % gs == 0, "p must be a multiple of --group-size");
             let groups: Vec<Vec<usize>> =
                 (0..ds.p() / gs).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
             let lambda = lambda_frac * ds.lambda_max_group(&groups);
@@ -258,7 +267,7 @@ fn train(args: &Args) -> Result<()> {
                     &groups,
                     lambda,
                     &init,
-                    &GenParams { eps, ..Default::default() },
+                    &GenParams { eps, threads, trace, ..Default::default() },
                 )
             });
             report(&sol, t);
@@ -274,7 +283,13 @@ fn train(args: &Args) -> Result<()> {
                     backend,
                     &lambda,
                     &init,
-                    &GenParams { eps, max_cols_per_round: 10, ..Default::default() },
+                    &GenParams {
+                        eps,
+                        max_cols_per_round: 10,
+                        threads,
+                        trace,
+                        ..Default::default()
+                    },
                 )
             });
             report(&sol, t);
@@ -289,10 +304,17 @@ fn path_cmd(args: &Args) -> Result<()> {
     let k = args.get_usize("grid", 20)?;
     let ratio = args.get_f64("ratio", 0.7)?;
     let eps = args.get_f64("eps", 1e-2)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
     let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
     let backend = NativeBackend::new(&ds.x);
     let ((path, _), t) = crate::exps::time_it(|| {
-        regularization_path(&ds, &backend, &grid, 10, &GenParams { eps, ..Default::default() })
+        regularization_path(
+            &ds,
+            &backend,
+            &grid,
+            10,
+            &GenParams { eps, threads, ..Default::default() },
+        )
     });
     println!("{:>12} {:>12} {:>8} {:>8}", "lambda", "objective", "nnz", "|J|");
     for pt in &path {
@@ -308,7 +330,7 @@ fn path_cmd(args: &Args) -> Result<()> {
 fn bench(args: &Args) -> Result<()> {
     let scale = args
         .get("scale")
-        .map(|s| Scale::parse(s).ok_or_else(|| anyhow!("bad --scale (smoke|default|paper)")))
+        .map(|s| Scale::parse(s).ok_or_else(|| err!("bad --scale (smoke|default|paper)")))
         .transpose()?
         .unwrap_or(Scale::Default);
     let exp = args.get("exp").unwrap_or("all");
@@ -318,7 +340,7 @@ fn bench(args: &Args) -> Result<()> {
         }
     } else {
         run_experiment(exp, scale)
-            .ok_or_else(|| anyhow!("unknown --exp {exp:?}; one of {ALL_EXPERIMENTS:?} or all"))?;
+            .ok_or_else(|| err!("unknown --exp {exp:?}; one of {ALL_EXPERIMENTS:?} or all"))?;
     }
     Ok(())
 }

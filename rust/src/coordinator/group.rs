@@ -4,12 +4,14 @@
 //! contributes its L∞-bound variable `v_g` (cost λ), the coefficient
 //! halves `β⁺_j, β⁻_j` for `j ∈ I_g` (cost 0), and the box rows
 //! `v_g − β⁺_j − β⁻_j ≥ 0`. Pricing a left-out group uses eq. (17):
-//! `r̄_g = λ − Σ_{j∈I_g} |q_j|` with `q = Xᵀ(y∘π)` — the same backend
-//! hot path as L1-SVM.
+//! `r̄_g = λ − Σ_{j∈I_g} |q_j|` with `q = Xᵀ(y∘π)` — the same pricing
+//! hot path as L1-SVM, driven by the shared [`crate::engine::GenEngine`]
+//! through [`GroupProblem`].
 
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
 use crate::fom::objective::hinge_loss_support;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
@@ -141,11 +143,11 @@ impl<'g> RestrictedGroup<'g> {
 
     /// Price left-out groups (eq. 17): returns `(g, violation)` with
     /// violation `= Σ_{j∈I_g} |q_j| − λ > ε`.
-    pub fn price_groups(&self, ds: &Dataset, backend: &dyn Backend, eps: f64) -> Vec<(usize, f64)> {
+    pub fn price_groups(&self, ds: &Dataset, pricer: &dyn Pricer, eps: f64) -> Vec<(usize, f64)> {
         let pi = self.margin_duals();
         let v: Vec<f64> = pi.iter().zip(&ds.y).map(|(p, y)| p * y).collect();
         let mut q = vec![0.0; ds.p()];
-        backend.xtv(&v, &mut q);
+        pricer.score(&v, &mut q);
         let mut out = Vec::new();
         for (g, members) in self.groups.iter().enumerate() {
             if !self.in_g[g] {
@@ -157,6 +159,54 @@ impl<'g> RestrictedGroup<'g> {
             }
         }
         out
+    }
+}
+
+/// [`RestrictedGroup`] adapted to the generic engine: pure column (group)
+/// generation — the constraint channel is empty.
+pub struct GroupProblem<'a, 'g> {
+    rg: RestrictedGroup<'g>,
+    ds: &'a Dataset,
+    pricer: &'a dyn Pricer,
+}
+
+impl<'a, 'g> GroupProblem<'a, 'g> {
+    /// Wrap a restricted group model.
+    pub fn new(rg: RestrictedGroup<'g>, ds: &'a Dataset, pricer: &'a dyn Pricer) -> Self {
+        Self { rg, ds, pricer }
+    }
+
+    /// The wrapped restricted model.
+    pub fn inner(&self) -> &RestrictedGroup<'g> {
+        &self.rg
+    }
+
+    /// Change λ in place (warm-start preserving) — for path-style drivers
+    /// that re-run the engine across a λ grid on one model.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.rg.set_lambda(lambda);
+    }
+}
+
+impl RestrictedProblem for GroupProblem<'_, '_> {
+    fn solve(&mut self) -> Status {
+        self.rg.solve()
+    }
+    fn objective(&self) -> f64 {
+        self.rg.objective()
+    }
+    fn simplex_iters(&self) -> usize {
+        self.rg.simplex_iters()
+    }
+    fn price_rows(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+        Vec::new()
+    }
+    fn price_cols(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        self.rg.price_groups(self.ds, self.pricer, eps)
+    }
+    fn add_rows(&mut self, _idx: &[usize]) {}
+    fn add_cols(&mut self, idx: &[usize]) {
+        self.rg.add_groups(self.ds, idx);
     }
 }
 
@@ -179,25 +229,11 @@ pub fn group_column_generation(
     g_init: &[usize],
     params: &GenParams,
 ) -> SvmSolution {
-    let mut rg = RestrictedGroup::new(ds, groups, lambda, g_init);
-    let mut stats = GenStats { cols_added: g_init.len(), ..Default::default() };
-    for _ in 0..params.max_rounds {
-        stats.rounds += 1;
-        let st = rg.solve();
-        debug_assert_eq!(st, Status::Optimal);
-        let mut viol = rg.price_groups(ds, backend, params.eps);
-        if viol.is_empty() {
-            break;
-        }
-        if params.max_cols_per_round > 0 && viol.len() > params.max_cols_per_round {
-            viol.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-            viol.truncate(params.max_cols_per_round);
-        }
-        let add: Vec<usize> = viol.into_iter().map(|(g, _)| g).collect();
-        stats.cols_added += add.len();
-        rg.add_groups(ds, &add);
-    }
-    stats.simplex_iters = rg.simplex_iters();
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob = GroupProblem::new(RestrictedGroup::new(ds, groups, lambda, g_init), ds, &pricer);
+    let mut stats: GenStats = GenEngine::new(params).run(&mut prob);
+    stats.cols_added += g_init.len();
+    let rg = prob.inner();
 
     let (support, beta0) = rg.beta_support();
     let mut beta = vec![0.0; ds.p()];

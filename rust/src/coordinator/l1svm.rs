@@ -1,15 +1,18 @@
 //! Column and constraint generation for the L1-SVM LP (§2.2–2.3).
 //!
 //! [`RestrictedL1`] owns the restricted model `M_{ℓ1}(I, J)` (Problem 13)
-//! on top of the warm-started simplex; the three driver functions
-//! implement the paper's Algorithms 1, 3 and 4. Pricing of left-out
-//! columns runs through a [`Backend`] (`q = Xᵀ(y∘π)`, eq. 14 — the O(np)
-//! hot path), pricing of left-out constraints uses the working-set margin
-//! kernel (`Xβ` restricted to J).
+//! on top of the warm-started simplex; [`L1Problem`] adapts it to the
+//! shared [`crate::engine::GenEngine`], and the three driver functions
+//! implement the paper's Algorithms 1, 3 and 4 as engine configurations.
+//! Pricing of left-out columns runs through a [`Pricer`]
+//! (`q = Xᵀ(y∘π)`, eq. 14 — the O(np) hot path, parallel when
+//! `GenParams::threads > 1`), pricing of left-out constraints uses the
+//! working-set margin kernel (`Xβ` restricted to J).
 
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
+use crate::engine::{BackendPricer, GenEngine, NullPricer, Pricer, RestrictedProblem};
 use crate::fom::objective::hinge_loss_support;
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
@@ -175,7 +178,7 @@ impl RestrictedL1 {
     pub fn price_columns(
         &self,
         ds: &Dataset,
-        backend: &dyn Backend,
+        pricer: &dyn Pricer,
         eps: f64,
     ) -> Vec<(usize, f64)> {
         let n = ds.n();
@@ -183,7 +186,7 @@ impl RestrictedL1 {
         // v = y ∘ π
         let v: Vec<f64> = pi.iter().zip(&ds.y).map(|(p, y)| p * y).collect();
         let mut q = vec![0.0; ds.p()];
-        backend.xtv(&v, &mut q);
+        pricer.score(&v, &mut q);
         let mut out = Vec::new();
         for (j, &qj) in q.iter().enumerate() {
             if self.pos_j[j].is_none() {
@@ -217,14 +220,70 @@ impl RestrictedL1 {
     }
 }
 
-/// Expand a priced violation list into the indices to add, respecting a
-/// per-round cap (keeps the most violated).
-fn select_violators(mut priced: Vec<(usize, f64)>, cap: usize) -> Vec<usize> {
-    if cap > 0 && priced.len() > cap {
-        priced.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        priced.truncate(cap);
+/// [`RestrictedL1`] adapted to the generic engine: which of the two
+/// pricing channels are live distinguishes Algorithms 1, 3 and 4.
+pub struct L1Problem<'a> {
+    rl1: RestrictedL1,
+    ds: &'a Dataset,
+    pricer: &'a dyn Pricer,
+    gen_rows: bool,
+    gen_cols: bool,
+}
+
+impl<'a> L1Problem<'a> {
+    /// Wrap a restricted model; `gen_rows`/`gen_cols` enable constraint
+    /// and column generation respectively.
+    pub fn new(
+        rl1: RestrictedL1,
+        ds: &'a Dataset,
+        pricer: &'a dyn Pricer,
+        gen_rows: bool,
+        gen_cols: bool,
+    ) -> Self {
+        Self { rl1, ds, pricer, gen_rows, gen_cols }
     }
-    priced.into_iter().map(|(idx, _)| idx).collect()
+
+    /// The wrapped restricted model.
+    pub fn inner(&self) -> &RestrictedL1 {
+        &self.rl1
+    }
+
+    /// Change λ in place (warm-start preserving) — the path driver's hook.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.rl1.set_lambda(lambda);
+    }
+}
+
+impl RestrictedProblem for L1Problem<'_> {
+    fn solve(&mut self) -> Status {
+        self.rl1.solve()
+    }
+    fn objective(&self) -> f64 {
+        self.rl1.objective()
+    }
+    fn simplex_iters(&self) -> usize {
+        self.rl1.simplex_iters()
+    }
+    fn price_rows(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        if self.gen_rows {
+            self.rl1.price_rows(self.ds, eps)
+        } else {
+            Vec::new()
+        }
+    }
+    fn price_cols(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        if self.gen_cols {
+            self.rl1.price_columns(self.ds, self.pricer, eps)
+        } else {
+            Vec::new()
+        }
+    }
+    fn add_rows(&mut self, idx: &[usize]) {
+        self.rl1.add_samples(self.ds, idx);
+    }
+    fn add_cols(&mut self, idx: &[usize]) {
+        self.rl1.add_features(self.ds, idx);
+    }
 }
 
 fn finish(
@@ -267,23 +326,12 @@ pub fn column_generation(
     params: &GenParams,
 ) -> SvmSolution {
     let all_i: Vec<usize> = (0..ds.n()).collect();
-    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, j_init);
-    let mut stats = GenStats::default();
-    stats.cols_added = j_init.len();
-    for _round in 0..params.max_rounds {
-        stats.rounds += 1;
-        let st = rl1.solve();
-        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
-        let viol = rl1.price_columns(ds, backend, params.eps);
-        if viol.is_empty() {
-            break;
-        }
-        let add = select_violators(viol, params.max_cols_per_round);
-        stats.cols_added += add.len();
-        rl1.add_features(ds, &add);
-    }
-    stats.simplex_iters = rl1.simplex_iters();
-    finish(ds, &rl1, lambda, stats)
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob =
+        L1Problem::new(RestrictedL1::new(ds, lambda, &all_i, j_init), ds, &pricer, false, true);
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.cols_added += j_init.len();
+    finish(ds, prob.inner(), lambda, stats)
 }
 
 /// **Algorithm 3** — constraint generation for L1-SVM (all p columns, I
@@ -300,23 +348,13 @@ pub fn constraint_generation(
     } else {
         i_init.to_vec()
     };
-    let mut rl1 = RestrictedL1::new(ds, lambda, &seed, &all_j);
-    let mut stats = GenStats::default();
-    stats.rows_added = seed.len();
-    for _round in 0..params.max_rounds {
-        stats.rounds += 1;
-        let st = rl1.solve();
-        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
-        let viol = rl1.price_rows(ds, params.eps);
-        if viol.is_empty() {
-            break;
-        }
-        let add = select_violators(viol, params.max_rows_per_round);
-        stats.rows_added += add.len();
-        rl1.add_samples(ds, &add);
-    }
-    stats.simplex_iters = rl1.simplex_iters();
-    finish(ds, &rl1, lambda, stats)
+    // column channel disabled: every column is already in the model
+    let pricer = NullPricer;
+    let mut prob =
+        L1Problem::new(RestrictedL1::new(ds, lambda, &seed, &all_j), ds, &pricer, true, false);
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.rows_added += seed.len();
+    finish(ds, prob.inner(), lambda, stats)
 }
 
 /// **Algorithm 4** — combined column-and-constraint generation (both I
@@ -342,29 +380,13 @@ pub fn column_constraint_generation(
     } else {
         j_init.to_vec()
     };
-    let mut rl1 = RestrictedL1::new(ds, lambda, &seed_i, &seed_j);
-    let mut stats = GenStats::default();
-    stats.rows_added = seed_i.len();
-    stats.cols_added = seed_j.len();
-    for _round in 0..params.max_rounds {
-        stats.rounds += 1;
-        let st = rl1.solve();
-        debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
-        // Step 3: violated constraints; Step 4: violated columns.
-        let viol_rows = rl1.price_rows(ds, params.eps);
-        let viol_cols = rl1.price_columns(ds, backend, params.eps);
-        if viol_rows.is_empty() && viol_cols.is_empty() {
-            break;
-        }
-        let add_rows = select_violators(viol_rows, params.max_rows_per_round);
-        let add_cols = select_violators(viol_cols, params.max_cols_per_round);
-        stats.rows_added += add_rows.len();
-        stats.cols_added += add_cols.len();
-        rl1.add_samples(ds, &add_rows);
-        rl1.add_features(ds, &add_cols);
-    }
-    stats.simplex_iters = rl1.simplex_iters();
-    finish(ds, &rl1, lambda, stats)
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob =
+        L1Problem::new(RestrictedL1::new(ds, lambda, &seed_i, &seed_j), ds, &pricer, true, true);
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.rows_added += seed_i.len();
+    stats.cols_added += seed_j.len();
+    finish(ds, prob.inner(), lambda, stats)
 }
 
 #[cfg(test)]
@@ -404,6 +426,7 @@ mod tests {
         );
         // only a fraction of columns should have been touched
         assert!(sol.cols.len() < ds.p(), "working set {} of {}", sol.cols.len(), ds.p());
+        assert!(sol.stats.converged, "engine must report ε-optimality");
     }
 
     #[test]
@@ -469,6 +492,9 @@ mod tests {
         let sol = column_generation(&ds, &backend, lambda, &[0, 1], &GenParams::default());
         assert_eq!(sol.support_size(), 0, "beta must be zero above lambda_max");
     }
+
+    // threads=1 vs threads=4 equivalence is covered end-to-end (dense and
+    // sparse) by tests/integration.rs::parallel_pricing_produces_identical_working_sets.
 
     #[test]
     fn restricted_lp_duals_in_unit_box() {

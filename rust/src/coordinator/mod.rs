@@ -1,10 +1,12 @@
 //! The paper's contribution: cutting-plane coordinators.
 //!
-//! Each coordinator manages a *restricted* LP (a subset of columns and/or
-//! constraints of the full SVM linear program), repeatedly: solve the
-//! restricted LP with the warm-started simplex, price the left-out
-//! columns/constraints through a [`crate::backend::Backend`] (the O(np)
-//! hot path), and expand the working sets until optimality within ε:
+//! Each coordinator describes a *restricted* LP (a subset of columns
+//! and/or constraints of the full SVM linear program) as an
+//! implementation of [`crate::engine::RestrictedProblem`]; the shared
+//! [`crate::engine::GenEngine`] drives the solve → price → expand loop,
+//! pricing left-out columns/constraints through a
+//! [`crate::engine::Pricer`] (the O(np) hot path) until optimality
+//! within ε:
 //!
 //! * [`l1svm`] — Algorithms 1 (column generation), 3 (constraint
 //!   generation), 4 (combined) for the L1-SVM LP (Problems 5/8/11/13);
@@ -13,43 +15,16 @@
 //! * [`slope`] — Algorithms 5–7 for Slope-SVM: permutation cuts for the
 //!   exponential epigraph (§3.1) paired with column generation using the
 //!   O(|J|) pricing rule (eq. 34).
+//!
+//! [`GenParams`] and [`GenStats`] live in [`crate::engine`] and are
+//! re-exported here for compatibility.
 
 pub mod group;
 pub mod l1svm;
 pub mod path;
 pub mod slope;
 
-/// Shared knobs for the generation loops.
-#[derive(Clone, Debug)]
-pub struct GenParams {
-    /// Reduced-cost tolerance ε (paper: 1e-2).
-    pub eps: f64,
-    /// Maximum generation rounds (solve/price cycles).
-    pub max_rounds: usize,
-    /// Cap on columns added per round (0 = unlimited; Slope uses 10).
-    pub max_cols_per_round: usize,
-    /// Cap on constraints added per round (0 = unlimited).
-    pub max_rows_per_round: usize,
-}
-
-impl Default for GenParams {
-    fn default() -> Self {
-        Self { eps: 1e-2, max_rounds: 200, max_cols_per_round: 0, max_rows_per_round: 0 }
-    }
-}
-
-/// Progress counters common to all coordinators.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct GenStats {
-    /// Solve/price rounds executed.
-    pub rounds: usize,
-    /// Columns brought into the model.
-    pub cols_added: usize,
-    /// Constraints (rows or cuts) brought into the model.
-    pub rows_added: usize,
-    /// Total simplex iterations across re-solves.
-    pub simplex_iters: usize,
-}
+pub use crate::engine::{GenParams, GenStats};
 
 /// A fitted SVM-type model from any coordinator.
 #[derive(Clone, Debug)]

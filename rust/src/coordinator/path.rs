@@ -6,15 +6,16 @@
 //! `λ_max` (eq. 10, using the analytic dual `π(λ_max)`), and each step
 //! down the grid reuses the previous step's restricted model, basis and
 //! working set — only the β-costs change, so every re-solve is a primal
-//! warm start.
+//! warm start. Each grid point is one [`crate::engine::GenEngine`] run
+//! on the same [`L1Problem`].
 
 use crate::backend::Backend;
-use crate::coordinator::l1svm::RestrictedL1;
+use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
+use crate::engine::{BackendPricer, GenEngine};
 use crate::fom::objective::hinge_loss_support;
 use crate::fom::screening::top_k_by_abs;
-use crate::simplex::Status;
 
 /// Analytic reduced-cost scores at λ_max (the rhs of eq. 10, second
 /// term): features with the largest |·| are the first to activate.
@@ -78,31 +79,29 @@ pub fn regularization_path(
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
     let all_i: Vec<usize> = (0..ds.n()).collect();
     let init = initial_columns(ds, j0);
-    let mut rl1 = RestrictedL1::new(ds, lambdas[0], &all_i, &init);
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob = L1Problem::new(
+        RestrictedL1::new(ds, lambdas[0], &all_i, &init),
+        ds,
+        &pricer,
+        false,
+        true,
+    );
+    let engine = GenEngine::new(params);
     let mut stats = GenStats { cols_added: init.len(), ..Default::default() };
     let mut out = Vec::with_capacity(lambdas.len());
 
     for &lambda in lambdas {
-        rl1.set_lambda(lambda);
+        prob.set_lambda(lambda);
         // column generation at this λ (warm-started from previous λ)
-        for _ in 0..params.max_rounds {
-            stats.rounds += 1;
-            let st = rl1.solve();
-            debug_assert_eq!(st, Status::Optimal);
-            let mut viol = rl1.price_columns(ds, backend, params.eps);
-            if viol.is_empty() {
-                break;
-            }
-            if params.max_cols_per_round > 0 && viol.len() > params.max_cols_per_round {
-                viol.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-                viol.truncate(params.max_cols_per_round);
-            }
-            let add: Vec<usize> = viol.into_iter().map(|(j, _)| j).collect();
-            stats.cols_added += add.len();
-            rl1.add_features(ds, &add);
-        }
-        stats.simplex_iters = rl1.simplex_iters();
-        let (support, b0) = rl1.beta_support();
+        let step = engine.run(&mut prob);
+        stats.rounds += step.rounds;
+        stats.cols_added += step.cols_added;
+        stats.rows_added += step.rows_added;
+        stats.simplex_iters += step.simplex_iters;
+        stats.converged = step.converged;
+        stats.stalled = step.stalled;
+        let (support, b0) = prob.inner().beta_support();
         let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
         let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
         let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
@@ -111,18 +110,18 @@ pub fn regularization_path(
             lambda,
             objective: hinge + lambda * l1,
             support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
-            working_set: rl1.j_set().len(),
+            working_set: prob.inner().j_set().len(),
             stats,
         });
     }
 
     // materialize the final solution
-    let (support, beta0) = rl1.beta_support();
+    let (support, beta0) = prob.inner().beta_support();
     let mut beta = vec![0.0; ds.p()];
     for &(j, v) in &support {
         beta[j] = v;
     }
-    let mut cols = rl1.j_set().to_vec();
+    let mut cols = prob.inner().j_set().to_vec();
     cols.sort_unstable();
     let last = out.last().unwrap();
     let final_sol = SvmSolution {

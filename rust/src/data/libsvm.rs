@@ -8,16 +8,48 @@ use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 /// Parse errors for the libsvm format.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: bad label {token:?}")]
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Unparseable label token.
     BadLabel { line: usize, token: String },
-    #[error("line {line}: bad feature token {token:?}")]
+    /// Unparseable `idx:val` token.
     BadFeature { line: usize, token: String },
-    #[error("line {line}: feature index must be >= 1")]
+    /// Feature indices are 1-based in the format.
     ZeroIndex { line: usize },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io error: {e}"),
+            LibsvmError::BadLabel { line, token } => {
+                write!(f, "line {line}: bad label {token:?}")
+            }
+            LibsvmError::BadFeature { line, token } => {
+                write!(f, "line {line}: bad feature token {token:?}")
+            }
+            LibsvmError::ZeroIndex { line } => {
+                write!(f, "line {line}: feature index must be >= 1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse a libsvm-format reader into a sparse [`Dataset`]. Labels are

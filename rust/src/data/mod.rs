@@ -147,6 +147,36 @@ impl Design {
         }
     }
 
+    /// Column-range slice of `Xᵀ v`: `out[k] = (Xᵀv)[j0 + k]`.
+    ///
+    /// This is the worker kernel of parallel pricing: each thread owns a
+    /// contiguous feature range. Every output accumulates over samples in
+    /// ascending row order (dense: row-major sweep; sparse: CSC column
+    /// dot), so results are independent of how the range is chunked.
+    pub fn tmatvec_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows());
+        assert!(j0 + out.len() <= self.cols());
+        match self {
+            Design::Dense(m) => {
+                out.fill(0.0);
+                for i in 0..m.rows() {
+                    let vi = v[i];
+                    if vi != 0.0 {
+                        let row = &m.row(i)[j0..j0 + out.len()];
+                        for (o, x) in out.iter_mut().zip(row) {
+                            *o += vi * x;
+                        }
+                    }
+                }
+            }
+            Design::Sparse { csc, .. } => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = csc.col_dot(j0 + k, v);
+                }
+            }
+        }
+    }
+
     /// `out = Xᵀ v` over a row subset (`rows[k]` weighted by `v[k]`).
     pub fn tmatvec_rows(&self, rows: &[usize], v: &[f64], out: &mut [f64]) {
         match self {
@@ -354,6 +384,28 @@ mod tests {
         assert_eq!(d.x.col_dot(0, &w), s.x.col_dot(0, &w));
         assert_eq!(d.x.get(1, 1), s.x.get(1, 1));
         assert_eq!(d.x.get(1, 0), s.x.get(1, 0));
+    }
+
+    #[test]
+    fn tmatvec_range_matches_full() {
+        for ds in [dense_ds(), sparse_ds()] {
+            let v = [1.0, 2.0, -0.5];
+            let mut full = vec![0.0; 2];
+            ds.x.tmatvec(&v, &mut full);
+            // single-column ranges
+            for j0 in 0..2 {
+                let mut one = vec![0.0; 1];
+                ds.x.tmatvec_range(&v, j0, &mut one);
+                assert_eq!(one[0], full[j0]);
+            }
+            // whole range in one chunk
+            let mut all = vec![0.0; 2];
+            ds.x.tmatvec_range(&v, 0, &mut all);
+            assert_eq!(all, full);
+            // empty range is a no-op
+            let mut none: Vec<f64> = Vec::new();
+            ds.x.tmatvec_range(&v, 2, &mut none);
+        }
     }
 
     #[test]

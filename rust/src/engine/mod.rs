@@ -1,0 +1,369 @@
+//! The unified cut-generation engine.
+//!
+//! The paper's three coordinators (L1-SVM Algorithms 1/3/4, Group-SVM
+//! §2.4, Slope-SVM Algorithms 5–7) and the warm-started regularization
+//! path (Algorithm 2) all instantiate one pattern: solve a *restricted*
+//! LP, price the left-out columns/constraints through an O(np) matvec,
+//! expand the working sets, repeat until no violation exceeds ε. This
+//! module owns that pattern once:
+//!
+//! * [`RestrictedProblem`] — what the engine needs from a restricted LP:
+//!   warm-started re-solve, objective/iteration introspection, pricing of
+//!   left-out columns and rows, and working-set expansion;
+//! * [`Pricer`] — scores all candidate columns from the restricted LP's
+//!   duals (`q = Xᵀv`); [`BackendPricer`] is the standard implementation,
+//!   chunking the matvec over `std::thread::scope` workers when
+//!   [`GenParams::threads`] > 1;
+//! * [`GenEngine`] — the solve → price → expand driver, with per-round
+//!   instrumentation ([`GenParams::trace`]), a round cap, and stall
+//!   detection ([`GenParams::stall_rounds`]).
+//!
+//! New LP workloads (RankSVM, Dantzig-selector-type estimators, …) plug in
+//! by implementing [`RestrictedProblem`] — roughly 200 lines of model
+//! bookkeeping instead of a forked generation loop.
+
+use crate::backend::Backend;
+use crate::simplex::Status;
+
+/// Shared knobs for the generation loops.
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    /// Reduced-cost tolerance ε (paper: 1e-2).
+    pub eps: f64,
+    /// Maximum generation rounds (solve/price cycles).
+    pub max_rounds: usize,
+    /// Cap on columns added per round (0 = unlimited; Slope uses 10).
+    pub max_cols_per_round: usize,
+    /// Cap on constraints added per round (0 = unlimited).
+    pub max_rows_per_round: usize,
+    /// Worker threads for pricing matvecs (1 = serial). Results are
+    /// identical for any thread count; see [`BackendPricer`].
+    pub threads: usize,
+    /// Abort after this many consecutive expanding rounds with an exactly
+    /// unchanged restricted objective (0 = never). Protects against
+    /// numerically stuck generation loops re-pricing the same cuts.
+    pub stall_rounds: usize,
+    /// Print one line per round to stderr.
+    pub trace: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        Self {
+            eps: 1e-2,
+            max_rounds: 200,
+            max_cols_per_round: 0,
+            max_rows_per_round: 0,
+            threads: 1,
+            stall_rounds: 60,
+            trace: false,
+        }
+    }
+}
+
+/// Progress counters common to all coordinators.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenStats {
+    /// Solve/price rounds executed.
+    pub rounds: usize,
+    /// Columns brought into the model.
+    pub cols_added: usize,
+    /// Constraints (rows or cuts) brought into the model.
+    pub rows_added: usize,
+    /// Total simplex iterations across re-solves.
+    pub simplex_iters: usize,
+    /// Terminated with no violation above ε (as opposed to hitting the
+    /// round cap or stalling).
+    pub converged: bool,
+    /// Aborted by stall detection (see [`GenParams::stall_rounds`]).
+    pub stalled: bool,
+}
+
+/// What the engine needs from a restricted LP.
+///
+/// `price_*` return `(index, violation)` pairs for every candidate whose
+/// violation exceeds ε; the engine keeps the most-violated subset (per the
+/// round caps) and hands the surviving indices back to `add_*`. The index
+/// space is the implementation's own (features, samples, groups, or cuts).
+pub trait RestrictedProblem {
+    /// Re-solve the restricted LP (warm-started).
+    fn solve(&mut self) -> Status;
+    /// Objective of the last solve.
+    fn objective(&self) -> f64;
+    /// Cumulative simplex iterations (primal + dual) so far.
+    fn simplex_iters(&self) -> usize;
+    /// Price left-out rows/constraints/cuts.
+    fn price_rows(&mut self, eps: f64) -> Vec<(usize, f64)>;
+    /// Price left-out columns.
+    fn price_cols(&mut self, eps: f64) -> Vec<(usize, f64)>;
+    /// Bring the selected rows into the model.
+    fn add_rows(&mut self, idx: &[usize]);
+    /// Bring the selected columns into the model.
+    fn add_cols(&mut self, idx: &[usize]);
+}
+
+/// Scores candidate columns from a dual-derived vector: `q = Xᵀv`.
+///
+/// Kept as a trait so workloads can swap in structured pricers (e.g. a
+/// group-collapsed or screened scorer) without touching the coordinators.
+pub trait Pricer {
+    /// Number of candidate columns (length of `q`).
+    fn cols(&self) -> usize;
+    /// `q = Xᵀ v` over all candidates.
+    fn score(&self, v: &[f64], q: &mut [f64]);
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str {
+        "pricer"
+    }
+}
+
+/// The standard pricer: `Xᵀv` through a [`Backend`], chunked over column
+/// ranges across `threads` scoped workers.
+///
+/// Determinism: every column's dot product accumulates over samples in
+/// ascending row order regardless of the chunking, so the scores — and
+/// therefore the selected working sets — are identical for any thread
+/// count.
+pub struct BackendPricer<'a> {
+    backend: &'a dyn Backend,
+    threads: usize,
+}
+
+impl<'a> BackendPricer<'a> {
+    /// Wrap a backend with a worker count (clamped to ≥ 1).
+    pub fn new(backend: &'a dyn Backend, threads: usize) -> Self {
+        Self { backend, threads: threads.max(1) }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Pricer for BackendPricer<'_> {
+    fn cols(&self) -> usize {
+        self.backend.cols()
+    }
+
+    fn score(&self, v: &[f64], q: &mut [f64]) {
+        let p = q.len();
+        if p == 0 {
+            return;
+        }
+        let t = self.threads.min(p);
+        // Chunking only pays when the backend has a genuine range kernel;
+        // otherwise each worker would recompute the full O(np) matvec.
+        if t <= 1 || !self.backend.supports_range_pricing() {
+            self.backend.xtv(v, q);
+            return;
+        }
+        let chunk = p.div_ceil(t);
+        let backend = self.backend;
+        std::thread::scope(|scope| {
+            for (c, slice) in q.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || backend.xtv_range(v, c * chunk, slice));
+            }
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "backend"
+    }
+}
+
+/// The pricer for problems whose column channel is disabled (pure
+/// constraint generation): zero candidates, never called.
+pub struct NullPricer;
+
+impl Pricer for NullPricer {
+    fn cols(&self) -> usize {
+        0
+    }
+    fn score(&self, _v: &[f64], _q: &mut [f64]) {}
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
+/// Keep the `cap` most-violated entries (0 = unlimited) and return their
+/// indices.
+pub fn select_violators(mut priced: Vec<(usize, f64)>, cap: usize) -> Vec<usize> {
+    if cap > 0 && priced.len() > cap {
+        priced.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        priced.truncate(cap);
+    }
+    priced.into_iter().map(|(idx, _)| idx).collect()
+}
+
+/// The generic solve → price → expand driver.
+pub struct GenEngine<'p> {
+    params: &'p GenParams,
+}
+
+impl<'p> GenEngine<'p> {
+    /// Bind the engine to a parameter set.
+    pub fn new(params: &'p GenParams) -> Self {
+        Self { params }
+    }
+
+    /// Run the generation loop to ε-optimality (or the round cap / stall
+    /// guard) and return the counters. `simplex_iters` in the result is
+    /// the *delta* accumulated by this run, so callers can sum stats
+    /// across several runs on one warm model (the regularization path).
+    pub fn run(&self, prob: &mut dyn RestrictedProblem) -> GenStats {
+        let p = self.params;
+        let iters0 = prob.simplex_iters();
+        let mut stats = GenStats::default();
+        let mut last_obj = f64::NAN;
+        let mut stall = 0usize;
+        for round in 0..p.max_rounds {
+            stats.rounds += 1;
+            let st = prob.solve();
+            debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
+            let obj = prob.objective();
+            let viol_rows = prob.price_rows(p.eps);
+            let viol_cols = prob.price_cols(p.eps);
+            if p.trace {
+                eprintln!(
+                    "[engine] round {:>4}: obj {obj:.6e}, viol rows/cols {}/{}, simplex {}",
+                    round + 1,
+                    viol_rows.len(),
+                    viol_cols.len(),
+                    prob.simplex_iters() - iters0,
+                );
+            }
+            if viol_rows.is_empty() && viol_cols.is_empty() {
+                stats.converged = true;
+                break;
+            }
+            let add_rows = select_violators(viol_rows, p.max_rows_per_round);
+            let add_cols = select_violators(viol_cols, p.max_cols_per_round);
+            stats.rows_added += add_rows.len();
+            stats.cols_added += add_cols.len();
+            prob.add_rows(&add_rows);
+            prob.add_cols(&add_cols);
+            // Stall guard: the restricted objective is monotone under
+            // expansion; many consecutive rounds with an exactly unchanged
+            // objective while still generating means the loop is stuck.
+            if obj == last_obj {
+                stall += 1;
+                if p.stall_rounds > 0 && stall >= p.stall_rounds {
+                    stats.stalled = true;
+                    if p.trace {
+                        eprintln!("[engine] stalled after {} flat rounds", stall);
+                    }
+                    break;
+                }
+            } else {
+                stall = 0;
+            }
+            last_obj = obj;
+        }
+        stats.simplex_iters = prob.simplex_iters() - iters0;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn parallel_pricing_matches_serial_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(311);
+        let dense_spec = SyntheticSpec { n: 57, p: 203, k0: 5, rho: 0.2, standardize: true };
+        let dense = generate_l1(&dense_spec, &mut rng);
+        let sparse = generate_sparse_text(
+            &SparseTextSpec { n: 120, p: 331, density: 0.05, k0: 10, zipf: 1.1 },
+            &mut rng,
+        );
+        for ds in [&dense, &sparse] {
+            let backend = NativeBackend::new(&ds.x);
+            let v: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
+            let mut q1 = vec![0.0; ds.p()];
+            BackendPricer::new(&backend, 1).score(&v, &mut q1);
+            for t in [2, 3, 4, 7] {
+                let mut qt = vec![0.0; ds.p()];
+                let pricer = BackendPricer::new(&backend, t);
+                assert_eq!(pricer.cols(), ds.p());
+                pricer.score(&v, &mut qt);
+                for j in 0..ds.p() {
+                    assert_eq!(q1[j], qt[j], "q[{j}] differs at {t} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pricer_handles_more_threads_than_columns() {
+        let mut rng = Xoshiro256::seed_from_u64(312);
+        let spec = SyntheticSpec { n: 10, p: 3, k0: 2, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut rng);
+        let backend = NativeBackend::new(&ds.x);
+        let v: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        BackendPricer::new(&backend, 1).score(&v, &mut a);
+        BackendPricer::new(&backend, 16).score(&v, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn select_violators_keeps_most_violated() {
+        let priced = vec![(0, 0.1), (1, 0.9), (2, 0.5), (3, 0.7)];
+        let top2 = select_violators(priced.clone(), 2);
+        assert_eq!(top2, vec![1, 3]);
+        let all = select_violators(priced, 0);
+        assert_eq!(all.len(), 4);
+    }
+
+    /// A tiny synthetic RestrictedProblem that stops improving: the stall
+    /// guard must cut the loop short of the round cap.
+    struct Flat {
+        solves: usize,
+    }
+    impl RestrictedProblem for Flat {
+        fn solve(&mut self) -> Status {
+            self.solves += 1;
+            Status::Optimal
+        }
+        fn objective(&self) -> f64 {
+            1.0
+        }
+        fn simplex_iters(&self) -> usize {
+            self.solves
+        }
+        fn price_rows(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+            Vec::new()
+        }
+        fn price_cols(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+            vec![(0, 1.0)] // always claims a violation
+        }
+        fn add_rows(&mut self, _idx: &[usize]) {}
+        fn add_cols(&mut self, _idx: &[usize]) {}
+    }
+
+    #[test]
+    fn stall_guard_breaks_flat_loops() {
+        let params = GenParams { stall_rounds: 5, max_rounds: 1000, ..Default::default() };
+        let mut prob = Flat { solves: 0 };
+        let stats = GenEngine::new(&params).run(&mut prob);
+        assert!(stats.stalled);
+        assert!(!stats.converged);
+        assert!(stats.rounds <= 7, "ran {} rounds", stats.rounds);
+    }
+
+    #[test]
+    fn round_cap_is_respected() {
+        let params = GenParams { stall_rounds: 0, max_rounds: 13, ..Default::default() };
+        let mut prob = Flat { solves: 0 };
+        let stats = GenEngine::new(&params).run(&mut prob);
+        assert_eq!(stats.rounds, 13);
+        assert!(!stats.converged);
+        assert!(!stats.stalled);
+    }
+}

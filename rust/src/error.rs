@@ -1,0 +1,129 @@
+//! Minimal error plumbing (the offline image carries no `anyhow`).
+//!
+//! [`Error`] is a string-message error that any `std::error::Error` converts
+//! into via `?`; [`Context`] adds `anyhow`-style `.context(..)` /
+//! `.with_context(..)` on `Result` and `Option`. The [`err!`], [`bail!`]
+//! and [`ensure!`] macros mirror their `anyhow` namesakes.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed human-readable error message.
+///
+/// Deliberately does **not** implement `std::error::Error` so that the
+/// blanket `From<E: std::error::Error>` conversion below stays coherent
+/// (the same trick `anyhow::Error` uses).
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Context`-style message attachment.
+pub trait Context<T> {
+    /// Replace/wrap the error with `msg: <original>`.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_int(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not an integer")?;
+        ensure!(v >= 0, "negative: {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn conversions_and_context() {
+        assert_eq!(parse_int("7").unwrap(), 7);
+        let e = parse_int("abc").unwrap_err();
+        assert!(e.to_string().starts_with("not an integer:"), "{e}");
+        let e = parse_int("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -3");
+    }
+
+    #[test]
+    fn option_context_and_io_from() {
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().is_err());
+    }
+}

@@ -30,6 +30,17 @@ impl SplitTime {
     }
 }
 
+/// Pricing thread count used by the shared method runners: the
+/// `CUTGEN_THREADS` env var (set by `cutgen train --threads T`), else 1.
+/// Thread count never changes results — see `engine::BackendPricer`.
+pub fn pricing_threads() -> usize {
+    std::env::var("CUTGEN_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
 /// Method (b) "FO+CLG": correlation-screened FISTA init, then column
 /// generation (§5.1.1). Returns the solution and the timing split.
 pub fn fo_clg(
@@ -63,7 +74,7 @@ pub fn fo_clg(
             &backend,
             lambda,
             &init_cols,
-            &GenParams { eps, ..Default::default() },
+            &GenParams { eps, threads: pricing_threads(), ..Default::default() },
         )
     });
     (sol, SplitTime { init: t_init, cut: t_cut })
@@ -78,7 +89,8 @@ pub fn rp_clg(ds: &Dataset, lambda: f64, eps: f64, grid_points: usize) -> (SvmSo
     let ratio = (lambda / hi).powf(1.0 / (grid_points.max(2) - 1) as f64);
     let grid: Vec<f64> = (0..grid_points).map(|k| hi * ratio.powi(k as i32)).collect();
     let ((_, sol), t) = time_it(|| {
-        regularization_path(ds, &backend, &grid, 10, &GenParams { eps, ..Default::default() })
+        let params = GenParams { eps, threads: pricing_threads(), ..Default::default() };
+        regularization_path(ds, &backend, &grid, 10, &params)
     });
     (sol, t)
 }
@@ -100,7 +112,8 @@ pub fn init_clg(
         correlation_screen(&ds.x, &ds.y, init_size.min(ds.p()))
     };
     time_it(|| {
-        column_generation(ds, &backend, lambda, &init, &GenParams { eps, ..Default::default() })
+        let params = GenParams { eps, threads: pricing_threads(), ..Default::default() };
+        column_generation(ds, &backend, lambda, &init, &params)
     })
 }
 
@@ -124,7 +137,12 @@ pub fn sfo_cng(ds: &Dataset, lambda: f64, eps: f64, seed: u64) -> (SvmSolution, 
             ds,
             lambda,
             &init_rows,
-            &GenParams { eps, max_rows_per_round: 1000, ..Default::default() },
+            &GenParams {
+                eps,
+                max_rows_per_round: 1000,
+                threads: pricing_threads(),
+                ..Default::default()
+            },
         )
     });
     (sol, SplitTime { init: t_init, cut: t_cut })
@@ -161,7 +179,12 @@ pub fn sfo_cl_cng(
             lambda,
             &init_rows,
             &init_cols,
-            &GenParams { eps, max_rows_per_round: 1000, ..Default::default() },
+            &GenParams {
+                eps,
+                max_rows_per_round: 1000,
+                threads: pricing_threads(),
+                ..Default::default()
+            },
         )
     });
     (sol, SplitTime { init: t_init, cut: t_cut })

@@ -7,9 +7,12 @@
 //! three orders of magnitude slower than the CG methods.
 
 use crate::backend::NativeBackend;
-use crate::coordinator::group::{group_column_generation, initial_groups, RestrictedGroup};
+use crate::coordinator::group::{
+    group_column_generation, initial_groups, GroupProblem, RestrictedGroup,
+};
 use crate::coordinator::GenParams;
 use crate::data::synthetic::{generate_group, GroupSpec};
+use crate::engine::{BackendPricer, GenEngine};
 use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
 use crate::fom::block_cd::{block_cd, BlockCdParams};
 use crate::fom::fista::{fista, FistaParams, Penalty};
@@ -109,25 +112,20 @@ pub fn run(scale: Scale) -> String {
                     .map(|k| lmax / 2.0 - (lmax / 2.0 - lambda) * k as f64 / 5.0)
                     .collect();
                 let (obj, t) = time_it(|| {
-                    let mut rg = RestrictedGroup::new(
+                    let pricer = BackendPricer::new(&backend, params.threads);
+                    let rg = RestrictedGroup::new(
                         ds,
                         &gd.groups,
                         grid[0],
                         &initial_groups(ds, &gd.groups, 5),
                     );
+                    let mut prob = GroupProblem::new(rg, ds, &pricer);
+                    let engine = GenEngine::new(&params);
                     let mut last_obj = f64::NAN;
                     for &lam in &grid {
-                        rg.set_lambda(lam);
-                        for _ in 0..params.max_rounds {
-                            rg.solve();
-                            let viol = rg.price_groups(ds, &backend, eps);
-                            if viol.is_empty() {
-                                break;
-                            }
-                            let add: Vec<usize> = viol.into_iter().map(|(g, _)| g).collect();
-                            rg.add_groups(ds, &add);
-                        }
-                        last_obj = rg.objective();
+                        prob.set_lambda(lam);
+                        engine.run(&mut prob);
+                        last_obj = prob.inner().objective();
                     }
                     last_obj
                 });

@@ -4,6 +4,8 @@ pub mod baselines;
 pub mod coordinator;
 pub mod cli;
 pub mod data;
+pub mod engine;
+pub mod error;
 pub mod exps;
 pub mod fom;
 pub mod linalg;

@@ -12,13 +12,18 @@
 //!   single fixed-shape artifact serves every (n, p);
 //! * [`FusedHingeGrad`] — the fused Layer-2 gradient artifact (value +
 //!   ∇β + ∇β₀ in one round-trip) for problems that fit one tile.
+//!
+//! The whole XLA-touching surface is gated behind the **`pjrt` cargo
+//! feature** (the offline image carries no `xla` crate). Without it, an
+//! API-compatible stub is compiled instead: `artifacts_available()`
+//! reports `false`, constructors return a descriptive error, and every
+//! caller — `cutgen doctor`, `--backend pjrt`, the parity tests — degrades
+//! gracefully. The artifact-manifest parser below is always built (and
+//! unit-tested) regardless of the feature.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::backend::Backend;
-use crate::data::Design;
+use crate::error::{Context, Result};
 
 /// Artifact manifest (parsed from `meta.json`).
 #[derive(Clone, Copy, Debug)]
@@ -29,314 +34,541 @@ pub struct Meta {
     pub tp: usize,
 }
 
-/// Minimal extraction of `"key": <int>` from the (trusted, machine-
-/// generated) manifest; avoids dragging a JSON crate into the image.
-fn json_usize(text: &str, key: &str) -> Result<usize> {
+/// Minimal extraction of `"key": <int>` from the machine-generated
+/// manifest; avoids dragging a JSON crate into the image. Strict about
+/// shape: the value must be a bare unsigned integer terminated by a JSON
+/// delimiter (`,`, `}`, `]`) or whitespace/EOF — `512abc`, `"512"`, or a
+/// missing number are errors, not silent truncations.
+pub(crate) fn json_usize(text: &str, key: &str) -> Result<usize> {
     let pat = format!("\"{key}\"");
-    let at = text.find(&pat).ok_or_else(|| anyhow!("meta.json: missing key {key}"))?;
-    let rest = &text[at + pat.len()..];
-    let colon = rest.find(':').ok_or_else(|| anyhow!("meta.json: malformed {key}"))?;
-    let digits: String = rest[colon + 1..]
-        .trim_start()
-        .chars()
-        .take_while(|c| c.is_ascii_digit())
-        .collect();
-    digits.parse().context("meta.json: bad integer")
-}
-
-/// Compiled PJRT executables for all artifacts.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    /// Tile shape the artifacts were lowered for.
-    pub meta: Meta,
-    xtv: xla::PjRtLoadedExecutable,
-    xb: xla::PjRtLoadedExecutable,
-    hinge_grad: xla::PjRtLoadedExecutable,
-}
-
-impl PjrtRuntime {
-    /// Load and compile every artifact in `dir` (written by `make
-    /// artifacts`).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
-        let meta = Meta { tn: json_usize(&meta_text, "tn")?, tp: json_usize(&meta_text, "tp")? };
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
-        };
-        Ok(Self {
-            xtv: compile("xtv")?,
-            xb: compile("xb")?,
-            hinge_grad: compile("hinge_grad")?,
-            client,
-            meta,
-        })
+    let at = text.find(&pat).with_context(|| format!("meta.json: missing key {key}"))?;
+    let rest = text[at + pat.len()..].trim_start();
+    let rest = rest
+        .strip_prefix(':')
+        .with_context(|| format!("meta.json: expected ':' after key {key}"))?
+        .trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    if end == 0 {
+        crate::bail!("meta.json: no integer value for key {key}");
     }
-
-    /// Default artifact location: `$CUTGEN_ARTIFACTS` or `<repo>/artifacts`.
-    pub fn default_dir() -> PathBuf {
-        if let Ok(dir) = std::env::var("CUTGEN_ARTIFACTS") {
-            return PathBuf::from(dir);
+    let (digits, tail) = rest.split_at(end);
+    if let Some(c) = tail.chars().next() {
+        if !matches!(c, ',' | '}' | ']') && !c.is_ascii_whitespace() {
+            crate::bail!("meta.json: trailing garbage {c:?} after value of key {key}");
         }
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
-
-    /// Whether artifacts exist at the default location.
-    pub fn artifacts_available() -> bool {
-        Self::default_dir().join("meta.json").exists()
-    }
-
-    /// PJRT platform name (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn buffer_1d(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[data.len()], None)
-            .map_err(|e| anyhow!("host→device transfer: {e:?}"))
-    }
-
-    fn buffer_2d(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[rows, cols], None)
-            .map_err(|e| anyhow!("host→device transfer: {e:?}"))
-    }
+    digits.parse().with_context(|| format!("meta.json: bad integer for key {key}"))
 }
 
-fn tuple_outputs(mut outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
-    let buf = outs
-        .pop()
-        .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
-        .ok_or_else(|| anyhow!("executable produced no output"))?;
-    let lit = buf.to_literal_sync().map_err(|e| anyhow!("device→host: {e:?}"))?;
-    lit.to_tuple().map_err(|e| anyhow!("untupling output: {e:?}"))
+/// Parse the tile-shape manifest written by `make artifacts`.
+pub fn parse_meta(text: &str) -> Result<Meta> {
+    Ok(Meta { tn: json_usize(text, "tn")?, tp: json_usize(text, "tp")? })
 }
 
-fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+/// Default artifact location: `$CUTGEN_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CUTGEN_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A [`Backend`] that runs the matvec hot paths through the AOT
-/// executables, with the design matrix resident on the (CPU) device as
-/// f32 tiles of shape `(tn, tp)`.
-pub struct PjrtBackend<'r> {
-    rt: &'r PjrtRuntime,
-    /// `tiles[ti][tj]` — device buffer for row-block ti, col-block tj.
-    tiles: Vec<Vec<xla::PjRtBuffer>>,
-    n: usize,
-    p: usize,
-    nt_rows: usize,
-    nt_cols: usize,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
 
-impl<'r> PjrtBackend<'r> {
-    /// Tile, pad (with zeros) and upload a design matrix.
-    pub fn new(rt: &'r PjrtRuntime, design: &Design) -> Result<Self> {
-        let (tn, tp) = (rt.meta.tn, rt.meta.tp);
-        let n = design.rows();
-        let p = design.cols();
-        let nt_rows = n.div_ceil(tn);
-        let nt_cols = p.div_ceil(tp);
-        let mut tiles = Vec::with_capacity(nt_rows);
-        let mut scratch = vec![0f32; tn * tp];
-        for ti in 0..nt_rows {
-            let mut row = Vec::with_capacity(nt_cols);
-            for tj in 0..nt_cols {
-                scratch.fill(0.0);
-                let i_hi = ((ti + 1) * tn).min(n);
-                let j_hi = ((tj + 1) * tp).min(p);
-                for i in ti * tn..i_hi {
-                    let local_i = i - ti * tn;
-                    for j in tj * tp..j_hi {
-                        let v = design.get(i, j);
-                        if v != 0.0 {
-                            scratch[local_i * tp + (j - tj * tp)] = v as f32;
+    use super::Meta;
+    use crate::backend::Backend;
+    use crate::data::Design;
+    use crate::err;
+    use crate::error::{Context, Result};
+
+    /// Compiled PJRT executables for all artifacts.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        /// Tile shape the artifacts were lowered for.
+        pub meta: Meta,
+        xtv: xla::PjRtLoadedExecutable,
+        xb: xla::PjRtLoadedExecutable,
+        hinge_grad: xla::PjRtLoadedExecutable,
+    }
+
+    impl PjrtRuntime {
+        /// Load and compile every artifact in `dir` (written by `make
+        /// artifacts`).
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref();
+            let meta_text = std::fs::read_to_string(dir.join("meta.json")).with_context(
+                || format!("reading {}/meta.json — run `make artifacts`", dir.display()),
+            )?;
+            let meta = super::parse_meta(&meta_text)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err!("creating PJRT CPU client: {e:?}"))?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| err!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(|e| err!("compiling {name}: {e:?}"))
+            };
+            Ok(Self {
+                xtv: compile("xtv")?,
+                xb: compile("xb")?,
+                hinge_grad: compile("hinge_grad")?,
+                client,
+                meta,
+            })
+        }
+
+        /// Default artifact location: `$CUTGEN_ARTIFACTS` or `<crate>/artifacts`.
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        /// Whether artifacts exist at the default location.
+        pub fn artifacts_available() -> bool {
+            Self::default_dir().join("meta.json").exists()
+        }
+
+        /// PJRT platform name (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn buffer_1d(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[data.len()], None)
+                .map_err(|e| err!("host→device transfer: {e:?}"))
+        }
+
+        fn buffer_2d(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[rows, cols], None)
+                .map_err(|e| err!("host→device transfer: {e:?}"))
+        }
+    }
+
+    fn tuple_outputs(mut outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let buf = outs
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| err!("executable produced no output"))?;
+        let lit = buf.to_literal_sync().map_err(|e| err!("device→host: {e:?}"))?;
+        lit.to_tuple().map_err(|e| err!("untupling output: {e:?}"))
+    }
+
+    fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| err!("literal to_vec: {e:?}"))
+    }
+
+    /// A [`Backend`] that runs the matvec hot paths through the AOT
+    /// executables, with the design matrix resident on the (CPU) device as
+    /// f32 tiles of shape `(tn, tp)`.
+    pub struct PjrtBackend<'r> {
+        rt: &'r PjrtRuntime,
+        /// `tiles[ti][tj]` — device buffer for row-block ti, col-block tj.
+        tiles: Vec<Vec<xla::PjRtBuffer>>,
+        n: usize,
+        p: usize,
+        nt_rows: usize,
+        nt_cols: usize,
+    }
+
+    impl<'r> PjrtBackend<'r> {
+        /// Tile, pad (with zeros) and upload a design matrix.
+        pub fn new(rt: &'r PjrtRuntime, design: &Design) -> Result<Self> {
+            let (tn, tp) = (rt.meta.tn, rt.meta.tp);
+            let n = design.rows();
+            let p = design.cols();
+            let nt_rows = n.div_ceil(tn);
+            let nt_cols = p.div_ceil(tp);
+            let mut tiles = Vec::with_capacity(nt_rows);
+            let mut scratch = vec![0f32; tn * tp];
+            for ti in 0..nt_rows {
+                let mut row = Vec::with_capacity(nt_cols);
+                for tj in 0..nt_cols {
+                    scratch.fill(0.0);
+                    let i_hi = ((ti + 1) * tn).min(n);
+                    let j_hi = ((tj + 1) * tp).min(p);
+                    for i in ti * tn..i_hi {
+                        let local_i = i - ti * tn;
+                        for j in tj * tp..j_hi {
+                            let v = design.get(i, j);
+                            if v != 0.0 {
+                                scratch[local_i * tp + (j - tj * tp)] = v as f32;
+                            }
                         }
                     }
+                    row.push(rt.buffer_2d(&scratch, tn, tp)?);
                 }
-                row.push(rt.buffer_2d(&scratch, tn, tp)?);
+                tiles.push(row);
             }
-            tiles.push(row);
+            Ok(Self { rt, tiles, n, p, nt_rows, nt_cols })
         }
-        Ok(Self { rt, tiles, n, p, nt_rows, nt_cols })
-    }
 
-    fn xb_impl(&self, beta: &[f64], out: &mut [f64]) -> Result<()> {
-        let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
-        out.fill(0.0);
-        let mut beta_tile = vec![0f32; tp];
-        for tj in 0..self.nt_cols {
-            // skip all-zero β tiles (cheap sparsity win on CG iterates)
-            let j_lo = tj * tp;
-            let j_hi = ((tj + 1) * tp).min(self.p);
-            beta_tile.fill(0.0);
-            let mut any = false;
-            for j in j_lo..j_hi {
-                let b = beta[j];
-                if b != 0.0 {
-                    beta_tile[j - j_lo] = b as f32;
-                    any = true;
-                }
-            }
-            if !any {
-                continue;
-            }
-            let beta_buf = self.rt.buffer_1d(&beta_tile)?;
-            for ti in 0..self.nt_rows {
-                let outs = self
-                    .rt
-                    .xb
-                    .execute_b(&[&self.tiles[ti][tj], &beta_buf])
-                    .map_err(|e| anyhow!("xb execute: {e:?}"))?;
-                let parts = tuple_outputs(outs)?;
-                let m = literal_f32(&parts[0])?;
-                let i_lo = ti * tn;
-                let i_hi = ((ti + 1) * tn).min(self.n);
-                for i in i_lo..i_hi {
-                    out[i] += m[i - i_lo] as f64;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    fn xtv_impl(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
-        let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
-        out.fill(0.0);
-        let mut v_tile = vec![0f32; tn];
-        for ti in 0..self.nt_rows {
-            let i_lo = ti * tn;
-            let i_hi = ((ti + 1) * tn).min(self.n);
-            v_tile.fill(0.0);
-            let mut any = false;
-            for i in i_lo..i_hi {
-                if v[i] != 0.0 {
-                    v_tile[i - i_lo] = v[i] as f32;
-                    any = true;
-                }
-            }
-            if !any {
-                continue; // dual vectors are sparse: whole sample blocks skip
-            }
-            let v_buf = self.rt.buffer_1d(&v_tile)?;
+        fn xb_impl(&self, beta: &[f64], out: &mut [f64]) -> Result<()> {
+            let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
+            out.fill(0.0);
+            let mut beta_tile = vec![0f32; tp];
             for tj in 0..self.nt_cols {
-                let outs = self
-                    .rt
-                    .xtv
-                    .execute_b(&[&self.tiles[ti][tj], &v_buf])
-                    .map_err(|e| anyhow!("xtv execute: {e:?}"))?;
-                let parts = tuple_outputs(outs)?;
-                let q = literal_f32(&parts[0])?;
+                // skip all-zero β tiles (cheap sparsity win on CG iterates)
                 let j_lo = tj * tp;
                 let j_hi = ((tj + 1) * tp).min(self.p);
+                beta_tile.fill(0.0);
+                let mut any = false;
                 for j in j_lo..j_hi {
-                    out[j] += q[j - j_lo] as f64;
+                    let b = beta[j];
+                    if b != 0.0 {
+                        beta_tile[j - j_lo] = b as f32;
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue;
+                }
+                let beta_buf = self.rt.buffer_1d(&beta_tile)?;
+                for ti in 0..self.nt_rows {
+                    let outs = self
+                        .rt
+                        .xb
+                        .execute_b(&[&self.tiles[ti][tj], &beta_buf])
+                        .map_err(|e| err!("xb execute: {e:?}"))?;
+                    let parts = tuple_outputs(outs)?;
+                    let m = literal_f32(&parts[0])?;
+                    let i_lo = ti * tn;
+                    let i_hi = ((ti + 1) * tn).min(self.n);
+                    for i in i_lo..i_hi {
+                        out[i] += m[i - i_lo] as f64;
+                    }
                 }
             }
+            Ok(())
         }
-        Ok(())
-    }
-}
 
-impl Backend for PjrtBackend<'_> {
-    fn rows(&self) -> usize {
-        self.n
-    }
-    fn cols(&self) -> usize {
-        self.p
-    }
-    fn xb(&self, beta: &[f64], out: &mut [f64]) {
-        self.xb_impl(beta, out).expect("PJRT xb failed");
-    }
-    fn xtv(&self, v: &[f64], out: &mut [f64]) {
-        self.xtv_impl(v, out).expect("PJRT xtv failed");
-    }
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
-/// The fused Layer-2 artifact: smoothed-hinge value + gradient for a
-/// problem that fits a single tile (n ≤ tn, p ≤ tp).
-pub struct FusedHingeGrad<'r> {
-    rt: &'r PjrtRuntime,
-    x_buf: xla::PjRtBuffer,
-    y_buf: xla::PjRtBuffer,
-    n: usize,
-    p: usize,
-}
-
-impl<'r> FusedHingeGrad<'r> {
-    /// Upload (padded) data once.
-    pub fn new(rt: &'r PjrtRuntime, design: &Design, y: &[f64]) -> Result<Self> {
-        let (tn, tp) = (rt.meta.tn, rt.meta.tp);
-        let n = design.rows();
-        let p = design.cols();
-        if n > tn || p > tp {
-            return Err(anyhow!("problem ({n}×{p}) exceeds the fused tile ({tn}×{tp})"));
-        }
-        let mut x = vec![0f32; tn * tp];
-        for i in 0..n {
-            for j in 0..p {
-                x[i * tp + j] = design.get(i, j) as f32;
+        fn xtv_impl(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+            let (tn, tp) = (self.rt.meta.tn, self.rt.meta.tp);
+            out.fill(0.0);
+            let mut v_tile = vec![0f32; tn];
+            for ti in 0..self.nt_rows {
+                let i_lo = ti * tn;
+                let i_hi = ((ti + 1) * tn).min(self.n);
+                v_tile.fill(0.0);
+                let mut any = false;
+                for i in i_lo..i_hi {
+                    if v[i] != 0.0 {
+                        v_tile[i - i_lo] = v[i] as f32;
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue; // dual vectors are sparse: whole sample blocks skip
+                }
+                let v_buf = self.rt.buffer_1d(&v_tile)?;
+                for tj in 0..self.nt_cols {
+                    let outs = self
+                        .rt
+                        .xtv
+                        .execute_b(&[&self.tiles[ti][tj], &v_buf])
+                        .map_err(|e| err!("xtv execute: {e:?}"))?;
+                    let parts = tuple_outputs(outs)?;
+                    let q = literal_f32(&parts[0])?;
+                    let j_lo = tj * tp;
+                    let j_hi = ((tj + 1) * tp).min(self.p);
+                    for j in j_lo..j_hi {
+                        out[j] += q[j - j_lo] as f64;
+                    }
+                }
             }
+            Ok(())
         }
-        let mut yy = vec![0f32; tn];
-        for i in 0..n {
-            yy[i] = y[i] as f32;
-        }
-        Ok(Self { x_buf: rt.buffer_2d(&x, tn, tp)?, y_buf: rt.buffer_1d(&yy)?, rt, n, p })
     }
 
-    /// One fused evaluation: `(F^τ, ∇β, ∇β₀)`.
-    pub fn value_grad(&self, beta: &[f64], beta0: f64, tau: f64) -> Result<(f64, Vec<f64>, f64)> {
-        let tp = self.rt.meta.tp;
-        let mut b = vec![0f32; tp];
-        for j in 0..self.p {
-            b[j] = beta[j] as f32;
+    // NOTE: `Backend: Sync` is a supertrait (for parallel pricing), so
+    // this impl only compiles if the vendored `xla` bindings mark the
+    // buffer/executable types `Sync`. If they do not, re-enabling the
+    // `pjrt` feature requires either an `unsafe impl Sync` here (justified
+    // by PJRT's thread-compatible execution contract) or dropping this
+    // Backend impl in favor of a dedicated single-threaded path. The
+    // pricer itself never chunks this backend across threads anyway:
+    // `supports_range_pricing()` is false (the default), so pricing
+    // degrades to one serial `xtv` call.
+    impl Backend for PjrtBackend<'_> {
+        fn rows(&self) -> usize {
+            self.n
         }
-        let b_buf = self.rt.buffer_1d(&b)?;
-        let b0_buf = self.rt.buffer_1d(&[beta0 as f32])?;
-        let tau_buf = self.rt.buffer_1d(&[tau as f32])?;
-        let outs = self
-            .rt
-            .hinge_grad
-            .execute_b(&[&self.x_buf, &self.y_buf, &b_buf, &b0_buf, &tau_buf])
-            .map_err(|e| anyhow!("hinge_grad execute: {e:?}"))?;
-        let parts = tuple_outputs(outs)?;
-        if parts.len() != 3 {
-            return Err(anyhow!("expected 3 outputs, got {}", parts.len()));
+        fn cols(&self) -> usize {
+            self.p
         }
-        let value = literal_f32(&parts[0])?[0] as f64;
-        let grad_full = literal_f32(&parts[1])?;
-        let grad_beta: Vec<f64> = grad_full[..self.p].iter().map(|&v| v as f64).collect();
-        let grad_b0 = literal_f32(&parts[2])?[0] as f64;
-        Ok((value, grad_beta, grad_b0))
+        fn xb(&self, beta: &[f64], out: &mut [f64]) {
+            self.xb_impl(beta, out).expect("PJRT xb failed");
+        }
+        fn xtv(&self, v: &[f64], out: &mut [f64]) {
+            self.xtv_impl(v, out).expect("PJRT xtv failed");
+        }
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 
-    /// Number of live samples.
-    pub fn n(&self) -> usize {
-        self.n
+    /// The fused Layer-2 artifact: smoothed-hinge value + gradient for a
+    /// problem that fits a single tile (n ≤ tn, p ≤ tp).
+    pub struct FusedHingeGrad<'r> {
+        rt: &'r PjrtRuntime,
+        x_buf: xla::PjRtBuffer,
+        y_buf: xla::PjRtBuffer,
+        n: usize,
+        p: usize,
+    }
+
+    impl<'r> FusedHingeGrad<'r> {
+        /// Upload (padded) data once.
+        pub fn new(rt: &'r PjrtRuntime, design: &Design, y: &[f64]) -> Result<Self> {
+            let (tn, tp) = (rt.meta.tn, rt.meta.tp);
+            let n = design.rows();
+            let p = design.cols();
+            if n > tn || p > tp {
+                return Err(err!("problem ({n}×{p}) exceeds the fused tile ({tn}×{tp})"));
+            }
+            let mut x = vec![0f32; tn * tp];
+            for i in 0..n {
+                for j in 0..p {
+                    x[i * tp + j] = design.get(i, j) as f32;
+                }
+            }
+            let mut yy = vec![0f32; tn];
+            for i in 0..n {
+                yy[i] = y[i] as f32;
+            }
+            Ok(Self { x_buf: rt.buffer_2d(&x, tn, tp)?, y_buf: rt.buffer_1d(&yy)?, rt, n, p })
+        }
+
+        /// One fused evaluation: `(F^τ, ∇β, ∇β₀)`.
+        pub fn value_grad(
+            &self,
+            beta: &[f64],
+            beta0: f64,
+            tau: f64,
+        ) -> Result<(f64, Vec<f64>, f64)> {
+            let tp = self.rt.meta.tp;
+            let mut b = vec![0f32; tp];
+            for j in 0..self.p {
+                b[j] = beta[j] as f32;
+            }
+            let b_buf = self.rt.buffer_1d(&b)?;
+            let b0_buf = self.rt.buffer_1d(&[beta0 as f32])?;
+            let tau_buf = self.rt.buffer_1d(&[tau as f32])?;
+            let outs = self
+                .rt
+                .hinge_grad
+                .execute_b(&[&self.x_buf, &self.y_buf, &b_buf, &b0_buf, &tau_buf])
+                .map_err(|e| err!("hinge_grad execute: {e:?}"))?;
+            let parts = tuple_outputs(outs)?;
+            if parts.len() != 3 {
+                return Err(err!("expected 3 outputs, got {}", parts.len()));
+            }
+            let value = literal_f32(&parts[0])?[0] as f64;
+            let grad_full = literal_f32(&parts[1])?;
+            let grad_beta: Vec<f64> = grad_full[..self.p].iter().map(|&v| v as f64).collect();
+            let grad_b0 = literal_f32(&parts[2])?[0] as f64;
+            Ok((value, grad_beta, grad_b0))
+        }
+
+        /// Number of live samples.
+        pub fn n(&self) -> usize {
+            self.n
+        }
+    }
+
+    /// Smoke helper used by the CLI `doctor` command.
+    pub fn smoke() -> Result<String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("{e:?}"))?;
+        Ok(client.platform_name())
     }
 }
 
-/// Smoke helper used by the CLI `doctor` command.
-pub fn smoke() -> Result<String> {
-    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
-    Ok(client.platform_name())
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{smoke, FusedHingeGrad, PjrtBackend, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::{Path, PathBuf};
+
+    use super::Meta;
+    use crate::backend::Backend;
+    use crate::data::Design;
+    use crate::error::Result;
+
+    const MSG: &str = "cutgen was built without the `pjrt` feature; rebuild with \
+                       `--features pjrt` (requires the vendored `xla` crate)";
+
+    /// Stub runtime: same API surface, always unavailable.
+    pub struct PjrtRuntime {
+        /// Tile shape placeholder (never populated — `load` always fails).
+        pub meta: Meta,
+    }
+
+    impl PjrtRuntime {
+        /// Always fails: the build carries no PJRT client.
+        pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+            Err(crate::err!("{MSG}"))
+        }
+
+        /// Default artifact location: `$CUTGEN_ARTIFACTS` or `<crate>/artifacts`.
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        /// Artifacts are never usable without the runtime.
+        pub fn artifacts_available() -> bool {
+            false
+        }
+
+        /// PJRT platform name (for logs).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+    }
+
+    /// Stub backend: cannot be constructed.
+    pub struct PjrtBackend<'r> {
+        _rt: &'r PjrtRuntime,
+    }
+
+    impl<'r> PjrtBackend<'r> {
+        /// Always fails: the build carries no PJRT client.
+        pub fn new(_rt: &'r PjrtRuntime, _design: &Design) -> Result<Self> {
+            Err(crate::err!("{MSG}"))
+        }
+    }
+
+    impl Backend for PjrtBackend<'_> {
+        fn rows(&self) -> usize {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
+        fn cols(&self) -> usize {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
+        fn xb(&self, _beta: &[f64], _out: &mut [f64]) {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
+        fn xtv(&self, _v: &[f64], _out: &mut [f64]) {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+
+    /// Stub fused-gradient artifact: cannot be constructed.
+    pub struct FusedHingeGrad<'r> {
+        _rt: &'r PjrtRuntime,
+    }
+
+    impl<'r> FusedHingeGrad<'r> {
+        /// Always fails: the build carries no PJRT client.
+        pub fn new(_rt: &'r PjrtRuntime, _design: &Design, _y: &[f64]) -> Result<Self> {
+            Err(crate::err!("{MSG}"))
+        }
+
+        /// Unreachable on the stub.
+        pub fn value_grad(
+            &self,
+            _beta: &[f64],
+            _beta0: f64,
+            _tau: f64,
+        ) -> Result<(f64, Vec<f64>, f64)> {
+            unreachable!("stub FusedHingeGrad cannot be constructed")
+        }
+
+        /// Unreachable on the stub.
+        pub fn n(&self) -> usize {
+            unreachable!("stub FusedHingeGrad cannot be constructed")
+        }
+    }
+
+    /// Smoke helper used by the CLI `doctor` command.
+    pub fn smoke() -> Result<String> {
+        Err(crate::err!("{MSG}"))
+    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{smoke, FusedHingeGrad, PjrtBackend, PjrtRuntime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::NativeBackend;
+
+    #[test]
+    fn json_usize_extracts() {
+        let t = r#"{"tn": 512, "tp":2048, "artifacts": {}}"#;
+        assert_eq!(json_usize(t, "tn").unwrap(), 512);
+        assert_eq!(json_usize(t, "tp").unwrap(), 2048);
+        assert!(json_usize(t, "zz").is_err());
+    }
+
+    #[test]
+    fn json_usize_accepts_whitespace_and_terminators() {
+        assert_eq!(json_usize("{\"tn\"  :  7 }", "tn").unwrap(), 7);
+        assert_eq!(json_usize("{\"tn\":7}", "tn").unwrap(), 7);
+        assert_eq!(json_usize("{\"tn\":7,\"tp\":9}", "tn").unwrap(), 7);
+        assert_eq!(json_usize("{\"a\":[1],\"tn\":3]", "tn").unwrap(), 3);
+        assert_eq!(json_usize("\"tn\": 42", "tn").unwrap(), 42);
+    }
+
+    #[test]
+    fn json_usize_rejects_missing_digits() {
+        let e = json_usize(r#"{"tn": , "tp": 4}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("no integer"), "{e}");
+        let e = json_usize(r#"{"tn": "512"}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("no integer"), "{e}");
+        let e = json_usize(r#"{"tn": null}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("no integer"), "{e}");
+        let e = json_usize(r#"{"tn": -5}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("no integer"), "{e}");
+    }
+
+    #[test]
+    fn json_usize_rejects_trailing_garbage() {
+        let e = json_usize(r#"{"tn": 512abc}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("trailing garbage"), "{e}");
+        let e = json_usize(r#"{"tn": 3.5}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("trailing garbage"), "{e}");
+    }
+
+    #[test]
+    fn json_usize_rejects_missing_colon() {
+        let e = json_usize(r#"{"tn" 512}"#, "tn").unwrap_err();
+        assert!(e.to_string().contains("expected ':'"), "{e}");
+    }
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let m = parse_meta(r#"{"tn": 512, "tp": 2048}"#).unwrap();
+        assert_eq!(m.tn, 512);
+        assert_eq!(m.tp, 2048);
+        assert!(parse_meta(r#"{"tn": 512}"#).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!PjrtRuntime::artifacts_available());
+        assert!(PjrtRuntime::load(PjrtRuntime::default_dir()).is_err());
+        assert!(smoke().is_err());
+        let msg = smoke().unwrap_err().to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}
+
+/// Numeric-parity tests for the real PJRT runtime (f32 tiling/padding of
+/// `xb`/`xtv`, the fused hinge gradient, and FISTA end-to-end). Compiled
+/// only with the `pjrt` feature; they skip at runtime when `make
+/// artifacts` has not produced the HLO files.
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
+    use super::*;
+    use crate::backend::{Backend, NativeBackend};
     use crate::data::synthetic::{generate_l1, SyntheticSpec};
     use crate::fom::smoothing::{HingeWorkspace, SmoothedHinge};
     use crate::rng::Xoshiro256;
@@ -347,14 +579,6 @@ mod tests {
             return None;
         }
         Some(PjrtRuntime::load(PjrtRuntime::default_dir()).expect("load artifacts"))
-    }
-
-    #[test]
-    fn json_usize_extracts() {
-        let t = r#"{"tn": 512, "tp":2048, "artifacts": {}}"#;
-        assert_eq!(json_usize(t, "tn").unwrap(), 512);
-        assert_eq!(json_usize(t, "tp").unwrap(), 2048);
-        assert!(json_usize(t, "zz").is_err());
     }
 
     #[test]

@@ -5,14 +5,19 @@
 
 use cutgen::backend::{Backend, NativeBackend};
 use cutgen::baselines::admm::{admm_l1svm, AdmmParams};
-use cutgen::baselines::full_lp::solve_full_l1;
+use cutgen::baselines::full_lp::{solve_full_group, solve_full_l1};
 use cutgen::baselines::psm::psm_l1svm;
+use cutgen::baselines::slope_full::solve_slope_full;
+use cutgen::coordinator::group::{group_column_generation, initial_groups};
 use cutgen::coordinator::l1svm::{column_generation, constraint_generation};
+use cutgen::coordinator::slope::slope_column_constraint_generation;
 use cutgen::coordinator::GenParams;
-use cutgen::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+use cutgen::data::synthetic::{
+    generate_group, generate_l1, generate_sparse_text, GroupSpec, SparseTextSpec, SyntheticSpec,
+};
 use cutgen::data::{libsvm, Dataset};
 use cutgen::fom::fista::{fista, FistaParams, Penalty};
-use cutgen::fom::objective::l1_objective;
+use cutgen::fom::objective::{bh_slope_weights, l1_objective};
 use cutgen::rng::Xoshiro256;
 
 fn synth(n: usize, p: usize, seed: u64) -> Dataset {
@@ -185,6 +190,101 @@ fn sparse_hybrid_pipeline_runs() {
     assert!(split.total() > 0.0);
     assert!(sol.rows.len() <= ds.n());
     assert!(sol.cols.len() < ds.p());
+}
+
+/// Group-SVM through the engine-based coordinator must match the full LP
+/// (every group in the model) at tight ε.
+#[test]
+fn group_engine_matches_full_lp() {
+    let spec = GroupSpec {
+        n: 45,
+        n_groups: 18,
+        group_size: 4,
+        k0_groups: 3,
+        rho: 0.15,
+        standardize: true,
+    };
+    let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(51));
+    let lambda = 0.08 * gd.data.lambda_max_group(&gd.groups);
+    let full = solve_full_group(&gd.data, &gd.groups, lambda).objective;
+    let backend = NativeBackend::new(&gd.data.x);
+    let init = initial_groups(&gd.data, &gd.groups, 2);
+    let sol = group_column_generation(
+        &gd.data,
+        &backend,
+        &gd.groups,
+        lambda,
+        &init,
+        &GenParams { eps: 1e-7, ..Default::default() },
+    );
+    assert!(
+        (sol.objective - full).abs() / full.max(1e-9) < 1e-5,
+        "engine {} full {}",
+        sol.objective,
+        full
+    );
+    assert!(sol.cols.len() <= gd.groups.len());
+}
+
+/// Slope-SVM through the engine-based coordinator must match the
+/// independent A.2 sum-of-top-m reformulation at tight ε.
+#[test]
+fn slope_engine_matches_full_reformulation() {
+    let ds = synth(25, 12, 52);
+    let lambda = bh_slope_weights(12, 0.05 * ds.lambda_max_l1());
+    let full = solve_slope_full(&ds, &lambda)
+        .expect("reformulation within row budget")
+        .objective;
+    let backend = NativeBackend::new(&ds.x);
+    let sol = slope_column_constraint_generation(
+        &ds,
+        &backend,
+        &lambda,
+        &[0, 1],
+        &GenParams { eps: 1e-7, ..Default::default() },
+    );
+    assert!(
+        (sol.objective - full).abs() / full.max(1e-9) < 1e-4,
+        "engine {} reformulation {}",
+        sol.objective,
+        full
+    );
+}
+
+/// Parallel pricing must be a pure speed knob: identical working sets and
+/// objectives at 1 and 4 threads, on dense and sparse data.
+#[test]
+fn parallel_pricing_produces_identical_working_sets() {
+    let dense = synth(60, 250, 53);
+    let sparse = generate_sparse_text(
+        &SparseTextSpec { n: 200, p: 600, density: 0.02, k0: 20, zipf: 1.1 },
+        &mut Xoshiro256::seed_from_u64(54),
+    );
+    for ds in [&dense, &sparse] {
+        let lambda = 0.04 * ds.lambda_max_l1();
+        let backend = NativeBackend::new(&ds.x);
+        let serial = column_generation(
+            ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps: 1e-6, threads: 1, ..Default::default() },
+        );
+        let parallel = column_generation(
+            ds,
+            &backend,
+            lambda,
+            &[0],
+            &GenParams { eps: 1e-6, threads: 4, ..Default::default() },
+        );
+        assert_eq!(serial.cols, parallel.cols, "working set J must be identical");
+        assert_eq!(serial.rows, parallel.rows, "working set I must be identical");
+        assert_eq!(
+            serial.stats.rounds, parallel.stats.rounds,
+            "generation trajectory must be identical"
+        );
+        assert_eq!(serial.objective, parallel.objective);
+    }
 }
 
 /// PJRT backend (when artifacts exist) must drive column generation to
