@@ -205,7 +205,62 @@ fn main() {
         black_box(prox_slope(black_box(&eta), &lams, 1.0));
     });
 
-    // 6. end-to-end column generation (small, fixed)
+    // 6. workload pricing — the two estimators added on the GenEngine.
+    // Dantzig: both channels are one chunked Xᵀv through BackendPricer
+    // (rows: Xᵀ(y − Xβ); cols: XᵀXμ̄ via w = Σ μ_i x_i). RankSVM: the
+    // row channel is a margin matvec + an O(|P|) pair scan.
+    {
+        use cutgen::data::synthetic::{generate_dantzig, generate_ranksvm, DantzigSpec, RankSpec};
+        use cutgen::workloads::dantzig::{initial_features, lambda_max_dantzig, RestrictedDantzig};
+        use cutgen::workloads::ranksvm::{
+            initial_pairs, initial_rank_features, lambda_max_rank, ranking_pairs, RestrictedRank,
+        };
+
+        let (wn, wp) = if smoke { (100, 1000) } else { (400, 8000) };
+        let dspec =
+            DantzigSpec { n: wn, p: wp, k0: 10, rho: 0.1, sigma: 0.5, standardize: true };
+        let dds = generate_dantzig(&dspec, &mut rng);
+        let dbackend = NativeBackend::new(&dds.x);
+        let dlam = 0.3 * lambda_max_dantzig(&dds);
+        let mut rd = RestrictedDantzig::new(&dds, dlam, &initial_features(&dds, 10));
+        rd.solve();
+        for threads in [1usize, 4] {
+            let pricer = BackendPricer::new(&dbackend, threads);
+            bench(
+                &mut recs,
+                &format!("dantzig row pricing {wn}x{wp} threads={threads}"),
+                2.0 * (wn * wp) as f64,
+                || {
+                    black_box(rd.price_constraints(&dds, &pricer, 1e-2));
+                },
+            );
+        }
+
+        let rn = if smoke { 120 } else { 400 };
+        let rp = if smoke { 500 } else { 2000 };
+        let rspec = RankSpec { n: rn, p: rp, k0: 10, rho: 0.1, noise: 0.3, standardize: true };
+        let rds = generate_ranksvm(&rspec, &mut rng);
+        let pairs = ranking_pairs(&rds.y);
+        let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
+        let mut rr = RestrictedRank::new(
+            &rds,
+            &pairs,
+            rlam,
+            &initial_pairs(pairs.len(), 10),
+            &initial_rank_features(&rds, &pairs, 10),
+        );
+        rr.solve();
+        bench(
+            &mut recs,
+            &format!("ranksvm pair scan n={rn} |P|={}", pairs.len()),
+            2.0 * pairs.len() as f64,
+            || {
+                black_box(rr.price_pairs(&rds, 1e-2));
+            },
+        );
+    }
+
+    // 7. end-to-end column generation (small, fixed)
     let ds2 =
         generate_l1(&SyntheticSpec::paper_default(100, if smoke { 1000 } else { 5000 }), &mut rng);
     let lam = 0.01 * ds2.lambda_max_l1();
@@ -220,6 +275,51 @@ fn main() {
         );
         black_box(sol.objective);
     });
+
+    // 8. end-to-end workload generation (small, fixed)
+    {
+        use cutgen::data::synthetic::{generate_dantzig, generate_ranksvm, DantzigSpec, RankSpec};
+        use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
+        use cutgen::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
+
+        let dp = if smoke { 200 } else { 800 };
+        let dspec = DantzigSpec { n: 60, p: dp, k0: 8, rho: 0.1, sigma: 0.5, standardize: true };
+        let dds = generate_dantzig(&dspec, &mut rng);
+        let dbe = NativeBackend::new(&dds.x);
+        let dlam = 0.3 * lambda_max_dantzig(&dds);
+        bench(&mut recs, &format!("dantzig ccg n=60 p={dp} (end-to-end)"), 0.0, || {
+            let sol = dantzig_generation(
+                &dds,
+                &dbe,
+                dlam,
+                &[],
+                &cutgen::coordinator::GenParams::default(),
+            );
+            black_box(sol.objective);
+        });
+
+        let rn = if smoke { 40 } else { 80 };
+        let rspec = RankSpec { n: rn, p: 200, k0: 8, rho: 0.1, noise: 0.3, standardize: true };
+        let rds = generate_ranksvm(&rspec, &mut rng);
+        let rbe = NativeBackend::new(&rds.x);
+        let pairs = ranking_pairs(&rds.y);
+        let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
+        bench(
+            &mut recs,
+            &format!("ranksvm ccg n={rn} |P|={} (end-to-end)", pairs.len()),
+            0.0,
+            || {
+                let sol = ranksvm_generation(
+                    &rds,
+                    &rbe,
+                    &pairs,
+                    rlam,
+                    &cutgen::coordinator::GenParams::default(),
+                );
+                black_box(sol.objective);
+            },
+        );
+    }
 
     if json {
         write_json(&recs, if smoke { "smoke" } else { "default" });

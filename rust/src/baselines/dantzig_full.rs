@@ -1,0 +1,110 @@
+//! Full-LP baseline for the Dantzig selector: build the complete model —
+//! all `p` ranged correlation rows, all `2p` coefficient columns, Gram
+//! entries formed explicitly — and solve it in one shot. O(p²n) build,
+//! O(p²) memory; the point of comparison for the column-and-constraint
+//! generation in [`crate::workloads::dantzig`], constructed independently
+//! of that module so agreement is a genuine cross-check.
+
+use crate::coordinator::{GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::simplex::{LpModel, SimplexSolver, Status};
+
+/// Solve the full Dantzig-selector LP at one λ:
+/// `min Σ_j (β⁺_j + β⁻_j)` s.t. `c_i − λ ≤ Σ_j A_ij (β_j⁺ − β_j⁻) ≤ c_i + λ`
+/// with `c = Xᵀy`, `A = XᵀX`.
+pub fn solve_full_dantzig(ds: &Dataset, lambda: f64) -> SvmSolution {
+    let n = ds.n();
+    let p = ds.p();
+    let mut c = vec![0.0; p];
+    ds.x.tmatvec(&ds.y, &mut c);
+
+    // densify X column by column once: gram[i][j] needs every pair
+    let cols_dense: Vec<Vec<f64>> = (0..p)
+        .map(|j| {
+            let mut col = vec![0.0; n];
+            for (i, v) in ds.x.col_entries(j) {
+                col[i] = v;
+            }
+            col
+        })
+        .collect();
+
+    let mut model = LpModel::new();
+    let bp: Vec<_> = (0..p).map(|_| model.add_col_nonneg(1.0, &[])).collect();
+    let bm: Vec<_> = (0..p).map(|_| model.add_col_nonneg(1.0, &[])).collect();
+    for i in 0..p {
+        let mut coefs = Vec::with_capacity(2 * p);
+        for j in 0..p {
+            let a: f64 =
+                cols_dense[i].iter().zip(&cols_dense[j]).map(|(u, v)| u * v).sum();
+            if a != 0.0 {
+                coefs.push((bp[j], a));
+                coefs.push((bm[j], -a));
+            }
+        }
+        model.add_row(c[i] - lambda, c[i] + lambda, &coefs);
+    }
+
+    let mut solver = SimplexSolver::new(model);
+    let st = solver.solve();
+    if st != Status::Optimal {
+        eprintln!("[dantzig_full] solve did not reach optimality: {st:?}");
+    }
+    let mut beta = vec![0.0; p];
+    for j in 0..p {
+        beta[j] = solver.col_value(bp[j]) - solver.col_value(bm[j]);
+    }
+    SvmSolution {
+        beta,
+        beta0: 0.0,
+        objective: solver.objective(),
+        stats: GenStats {
+            rounds: 1,
+            cols_added: p,
+            rows_added: p,
+            simplex_iters: solver.stats.primal_iters + solver.stats.dual_iters,
+            converged: st == Status::Optimal,
+            ..Default::default()
+        },
+        cols: (0..p).collect(),
+        rows: (0..p).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_dantzig, DantzigSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn full_lp_feasible_and_sparse() {
+        let spec = DantzigSpec { n: 40, p: 20, k0: 4, rho: 0.1, sigma: 0.4, standardize: true };
+        let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(171));
+        let lmax = crate::workloads::dantzig::lambda_max_dantzig(&ds);
+        let sol = solve_full_dantzig(&ds, 0.3 * lmax);
+        // the constraint ‖Xᵀ(y − Xβ)‖∞ ≤ λ must hold at the solution
+        let mut xb = vec![0.0; ds.n()];
+        ds.x.matvec(&sol.beta, &mut xb);
+        let u: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, m)| y - m).collect();
+        let mut r = vec![0.0; ds.p()];
+        ds.x.tmatvec(&u, &mut r);
+        let linf = r.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!(linf <= 0.3 * lmax + 1e-6, "‖Xᵀu‖∞ = {linf}");
+        // objective is exactly ‖β‖₁
+        let l1: f64 = sol.beta.iter().map(|v| v.abs()).sum();
+        assert!((sol.objective - l1).abs() < 1e-8);
+    }
+
+    #[test]
+    fn objective_shrinks_as_lambda_grows() {
+        let spec = DantzigSpec { n: 30, p: 15, k0: 3, rho: 0.1, sigma: 0.3, standardize: true };
+        let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(172));
+        let lmax = crate::workloads::dantzig::lambda_max_dantzig(&ds);
+        let tight = solve_full_dantzig(&ds, 0.2 * lmax).objective;
+        let loose = solve_full_dantzig(&ds, 0.6 * lmax).objective;
+        let zero = solve_full_dantzig(&ds, 1.01 * lmax).objective;
+        assert!(tight >= loose - 1e-9, "tight {tight} loose {loose}");
+        assert!(zero.abs() < 1e-9, "λ > λ_max must give β = 0, got {zero}");
+    }
+}

@@ -11,8 +11,14 @@
 //! * [`slope_full`] — the O(p²) LP reformulation of the Slope norm
 //!   (Appendix A.2), which is what CVXPY canonicalizes Slope-SVM to —
 //!   Table 5/6's comparator.
+//! * [`ranksvm_full`] / [`dantzig_full`] — complete-model baselines for
+//!   the [`crate::workloads`] estimators (every comparison pair / every
+//!   correlation row materialized), built independently of the
+//!   generation code so cross-method agreement is a genuine check.
 
 pub mod admm;
+pub mod dantzig_full;
 pub mod full_lp;
 pub mod psm;
+pub mod ranksvm_full;
 pub mod slope_full;

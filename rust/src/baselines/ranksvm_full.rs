@@ -1,0 +1,105 @@
+//! Full-LP baseline for RankSVM: materialize every comparison pair — one
+//! hinge slack and one margin row per pair, O(|P|·p) coefficients — and
+//! solve in one shot. The point of comparison for the constraint
+//! generation in [`crate::workloads::ranksvm`], constructed independently
+//! of that module so agreement is a genuine cross-check.
+
+use crate::coordinator::{GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::simplex::{LpModel, SimplexSolver, Status};
+
+/// Solve the full pairwise-hinge L1 ranking LP at one λ:
+/// `min Σ_t ξ_t + λ Σ_j (β⁺_j + β⁻_j)` s.t.
+/// `ξ_t + Σ_j (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ 1` for every pair `t = (i,k)`.
+pub fn solve_full_ranksvm(
+    ds: &Dataset,
+    pairs: &[(usize, usize)],
+    lambda: f64,
+) -> SvmSolution {
+    let p = ds.p();
+    let mut model = LpModel::new();
+    let bp: Vec<_> = (0..p).map(|_| model.add_col_nonneg(lambda, &[])).collect();
+    let bm: Vec<_> = (0..p).map(|_| model.add_col_nonneg(lambda, &[])).collect();
+    for &(i, k) in pairs {
+        let xi = model.add_col_nonneg(1.0, &[]);
+        let mut coefs = Vec::with_capacity(1 + 2 * p);
+        coefs.push((xi, 1.0));
+        for j in 0..p {
+            let d = ds.x.get(i, j) - ds.x.get(k, j);
+            if d != 0.0 {
+                coefs.push((bp[j], d));
+                coefs.push((bm[j], -d));
+            }
+        }
+        model.add_row_ge(1.0, &coefs);
+    }
+
+    let mut solver = SimplexSolver::new(model);
+    let st = solver.solve();
+    if st != Status::Optimal {
+        eprintln!("[ranksvm_full] solve did not reach optimality: {st:?}");
+    }
+    let mut beta = vec![0.0; p];
+    for j in 0..p {
+        beta[j] = solver.col_value(bp[j]) - solver.col_value(bm[j]);
+    }
+    SvmSolution {
+        beta,
+        beta0: 0.0,
+        objective: solver.objective(),
+        stats: GenStats {
+            rounds: 1,
+            cols_added: p,
+            rows_added: pairs.len(),
+            simplex_iters: solver.stats.primal_iters + solver.stats.dual_iters,
+            converged: st == Status::Optimal,
+            ..Default::default()
+        },
+        cols: (0..p).collect(),
+        rows: (0..pairs.len()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_ranksvm, RankSpec};
+    use crate::rng::Xoshiro256;
+    use crate::workloads::ranksvm::{lambda_max_rank, pairwise_hinge_support, ranking_pairs};
+
+    #[test]
+    fn full_lp_objective_decomposes() {
+        let spec = RankSpec { n: 15, p: 10, k0: 3, rho: 0.1, noise: 0.3, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(181));
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 0.1 * lambda_max_rank(&ds, &pairs);
+        let sol = solve_full_ranksvm(&ds, &pairs, lambda);
+        // LP objective = pairwise hinge + λ‖β‖₁ recomputed from scratch
+        let support: Vec<(usize, f64)> = sol
+            .beta
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(j, v)| (j, *v))
+            .collect();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let hinge = pairwise_hinge_support(&ds, &pairs, &cols, &vals);
+        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        assert!(
+            (sol.objective - (hinge + lambda * l1)).abs() < 1e-6,
+            "lp {} recomputed {}",
+            sol.objective,
+            hinge + lambda * l1
+        );
+    }
+
+    #[test]
+    fn empty_pair_set_gives_zero() {
+        let spec = RankSpec { n: 8, p: 5, k0: 2, rho: 0.0, noise: 0.1, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(182));
+        let sol = solve_full_ranksvm(&ds, &[], 0.5);
+        assert_eq!(sol.support_size(), 0);
+        assert!(sol.objective.abs() < 1e-12);
+    }
+}

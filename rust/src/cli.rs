@@ -8,6 +8,10 @@
 //!                 [--backend native|pjrt] [--eps E] [--group-size G]
 //!                 [--threads T] [--trace]
 //! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--threads T]
+//! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
+//!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
+//! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
+//!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
 
@@ -20,7 +24,8 @@ use crate::backend::{Backend, NativeBackend};
 use crate::coordinator::path::{geometric_grid, regularization_path};
 use crate::coordinator::{GenParams, SvmSolution};
 use crate::data::synthetic::{
-    generate_group, generate_l1, generate_sparse_text, GroupSpec, SparseTextSpec, SyntheticSpec,
+    generate_dantzig, generate_group, generate_l1, generate_ranksvm, generate_sparse_text,
+    DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use crate::data::{libsvm, Dataset};
 use crate::exps::{run_experiment, Scale, ALL_EXPERIMENTS};
@@ -86,6 +91,8 @@ COMMANDS
   datagen                write a synthetic dataset in libsvm format
   train                  fit one model at a fixed lambda
   path                   warm-started regularization path
+  ranksvm                pairwise-hinge L1 ranking (constraint generation)
+  dantzig                Dantzig selector (column-and-constraint generation)
   bench                  regenerate a paper table/figure (or `--exp all`)
   help                   this text
 
@@ -102,6 +109,8 @@ pub fn main_with(args: Args) -> Result<()> {
         "datagen" => datagen(&args),
         "train" => train(&args),
         "path" => path_cmd(&args),
+        "ranksvm" => ranksvm_cmd(&args),
+        "dantzig" => dantzig_cmd(&args),
         "bench" => bench(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -316,14 +325,136 @@ fn path_cmd(args: &Args) -> Result<()> {
             &GenParams { eps, threads, ..Default::default() },
         )
     });
+    report_path(&path, t);
+    Ok(())
+}
+
+/// `--data FILE` or a workload-specific synthetic draw (`--synthetic N,P`
+/// with real-valued responses — RankSVM and the Dantzig selector are not
+/// two-class problems, so `train`'s ±1 generator does not apply).
+fn load_or_generate_regression(args: &Args, rank: bool) -> Result<Dataset> {
+    if let Some(file) = args.get("data") {
+        let ds = libsvm::read_file(file, 0)?;
+        println!("loaded {} ({} x {}, nnz {})", file, ds.n(), ds.p(), ds.x.nnz());
+        return Ok(ds);
+    }
+    let spec = args.get("synthetic").unwrap_or("60,200");
+    let (n, p) = spec
+        .split_once(',')
+        .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
+        .ok_or_else(|| err!("--synthetic expects N,P"))?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Ok(if rank {
+        generate_ranksvm(
+            &RankSpec { n, p, k0: 10.min(p), rho: 0.1, noise: 0.3, standardize: true },
+            &mut rng,
+        )
+    } else {
+        generate_dantzig(
+            &DantzigSpec { n, p, k0: 10.min(p), rho: 0.1, sigma: 0.5, standardize: true },
+            &mut rng,
+        )
+    })
+}
+
+/// Print a decreasing-λ path table.
+fn report_path(path: &[crate::coordinator::path::PathSolution], secs: f64) {
     println!("{:>12} {:>12} {:>8} {:>8}", "lambda", "objective", "nnz", "|J|");
-    for pt in &path {
+    for pt in path {
         println!(
             "{:>12.5} {:>12.5} {:>8} {:>8}",
             pt.lambda, pt.objective, pt.support, pt.working_set
         );
     }
-    println!("total {t:.3}s, {} simplex iterations", path.last().unwrap().stats.simplex_iters);
+    println!(
+        "total {secs:.3}s, {} simplex iterations",
+        path.last().unwrap().stats.simplex_iters
+    );
+}
+
+fn ranksvm_cmd(args: &Args) -> Result<()> {
+    let ds = load_or_generate_regression(args, true)?;
+    let pairs = crate::workloads::ranksvm::ranking_pairs(&ds.y);
+    ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+    let lmax = crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
+    let lambda_frac = args.get_f64("lambda-frac", 0.05)?;
+    let eps = args.get_f64("eps", 1e-2)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
+    let trace = args.get("trace").is_some();
+    let backend = NativeBackend::new(&ds.x);
+    let gen = GenParams { eps, threads, trace, ..Default::default() };
+    println!(
+        "RankSVM: n={}, p={}, |P|={} pairs, λ_max={lmax:.4}",
+        ds.n(),
+        ds.p(),
+        pairs.len()
+    );
+    if let Some(k) = args.get("grid") {
+        ensure!(
+            matches!(args.get("method"), None | Some("gen")),
+            "--grid runs the warm-started generation path; drop --method"
+        );
+        let k: usize = k.parse().with_context(|| "--grid expects an integer")?;
+        let ratio = args.get_f64("ratio", 0.7)?;
+        let grid = geometric_grid(lmax, k, ratio);
+        let (path, t) = crate::exps::time_it(|| {
+            crate::coordinator::path::ranksvm_path(&ds, &backend, &pairs, &grid, 10, &gen)
+        });
+        report_path(&path, t);
+        return Ok(());
+    }
+    let lambda = lambda_frac * lmax;
+    println!("λ = {lambda:.4} ({lambda_frac}·λ_max)");
+    let (sol, t) = match args.get("method").unwrap_or("gen") {
+        "gen" => crate::exps::time_it(|| {
+            crate::workloads::ranksvm::ranksvm_generation(&ds, &backend, &pairs, lambda, &gen)
+        }),
+        "full-lp" => crate::exps::time_it(|| {
+            crate::baselines::ranksvm_full::solve_full_ranksvm(&ds, &pairs, lambda)
+        }),
+        other => bail!("unknown --method {other:?} (gen|full-lp)"),
+    };
+    report(&sol, t);
+    Ok(())
+}
+
+fn dantzig_cmd(args: &Args) -> Result<()> {
+    let ds = load_or_generate_regression(args, false)?;
+    let lmax = crate::workloads::dantzig::lambda_max_dantzig(&ds);
+    let lambda_frac = args.get_f64("lambda-frac", 0.3)?;
+    let eps = args.get_f64("eps", 1e-2)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
+    let trace = args.get("trace").is_some();
+    let backend = NativeBackend::new(&ds.x);
+    let gen = GenParams { eps, threads, trace, ..Default::default() };
+    println!("Dantzig selector: n={}, p={}, λ_max={lmax:.4}", ds.n(), ds.p());
+    if let Some(k) = args.get("grid") {
+        ensure!(
+            matches!(args.get("method"), None | Some("gen")),
+            "--grid runs the warm-started generation path; drop --method"
+        );
+        let k: usize = k.parse().with_context(|| "--grid expects an integer")?;
+        let ratio = args.get_f64("ratio", 0.7)?;
+        let grid = geometric_grid(lmax, k, ratio);
+        let (path, t) = crate::exps::time_it(|| {
+            crate::coordinator::path::dantzig_path(&ds, &backend, &grid, 10, &gen)
+        });
+        report_path(&path, t);
+        return Ok(());
+    }
+    let lambda = lambda_frac * lmax;
+    println!("λ = {lambda:.4} ({lambda_frac}·λ_max)");
+    let (sol, t) = match args.get("method").unwrap_or("gen") {
+        "gen" => crate::exps::time_it(|| {
+            crate::workloads::dantzig::dantzig_generation(&ds, &backend, lambda, &[], &gen)
+        }),
+        "full-lp" => crate::exps::time_it(|| {
+            crate::baselines::dantzig_full::solve_full_dantzig(&ds, lambda)
+        }),
+        other => bail!("unknown --method {other:?} (gen|full-lp)"),
+    };
+    report(&sol, t);
     Ok(())
 }
 
@@ -378,6 +509,27 @@ mod tests {
     fn path_on_tiny_synthetic_runs() {
         let a = args(&["path", "--synthetic", "30,60", "--grid", "5"]);
         main_with(a).unwrap();
+    }
+
+    #[test]
+    fn ranksvm_on_tiny_synthetic_runs() {
+        let a = args(&["ranksvm", "--synthetic", "20,30", "--lambda-frac", "0.05"]);
+        main_with(a).unwrap();
+        let b = args(&["ranksvm", "--synthetic", "15,20", "--grid", "3"]);
+        main_with(b).unwrap();
+    }
+
+    #[test]
+    fn dantzig_on_tiny_synthetic_runs() {
+        let a = args(&["dantzig", "--synthetic", "25,20", "--lambda-frac", "0.3"]);
+        main_with(a).unwrap();
+        let b = args(&["dantzig", "--synthetic", "25,15", "--grid", "3"]);
+        main_with(b).unwrap();
+        let c = args(&["dantzig", "--synthetic", "20,12", "--method", "full-lp"]);
+        main_with(c).unwrap();
+        // --grid and an explicit non-gen --method conflict loudly
+        let d = args(&["dantzig", "--synthetic", "20,12", "--grid", "3", "--method", "full-lp"]);
+        assert!(main_with(d).is_err());
     }
 
     #[test]

@@ -16,6 +16,10 @@ use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine};
 use crate::fom::objective::hinge_loss_support;
 use crate::fom::screening::top_k_by_abs;
+use crate::workloads::dantzig::{initial_features, DantzigProblem, RestrictedDantzig};
+use crate::workloads::ranksvm::{
+    initial_pairs, initial_rank_features, pairwise_hinge_support, RankProblem, RestrictedRank,
+};
 
 /// Analytic reduced-cost scores at λ_max (the rhs of eq. 10, second
 /// term): features with the largest |·| are the first to activate.
@@ -94,13 +98,7 @@ pub fn regularization_path(
     for &lambda in lambdas {
         prob.set_lambda(lambda);
         // column generation at this λ (warm-started from previous λ)
-        let step = engine.run(&mut prob);
-        stats.rounds += step.rounds;
-        stats.cols_added += step.cols_added;
-        stats.rows_added += step.rows_added;
-        stats.simplex_iters += step.simplex_iters;
-        stats.converged = step.converged;
-        stats.stalled = step.stalled;
+        accumulate(&mut stats, engine.run(&mut prob));
         let (support, b0) = prob.inner().beta_support();
         let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
         let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
@@ -133,6 +131,102 @@ pub fn regularization_path(
         rows: (0..ds.n()).collect(),
     };
     (out, final_sol)
+}
+
+/// Fold one engine run's counters into the path-cumulative stats.
+fn accumulate(stats: &mut GenStats, step: GenStats) {
+    stats.rounds += step.rounds;
+    stats.cols_added += step.cols_added;
+    stats.rows_added += step.rows_added;
+    stats.simplex_iters += step.simplex_iters;
+    stats.converged = step.converged;
+    stats.stalled = step.stalled;
+}
+
+/// Warm-started λ-path for the **Dantzig selector** over a decreasing
+/// grid. One restricted model is reused down the whole path: moving λ
+/// rewrites every correlation row's range in place
+/// ([`crate::simplex::SimplexSolver::set_row_bounds`]), which keeps the
+/// basis and duals — a dual-simplex warm start at every grid point —
+/// while the working sets only ever grow.
+pub fn dantzig_path(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambdas: &[f64],
+    j0: usize,
+    params: &GenParams,
+) -> Vec<PathSolution> {
+    assert!(!lambdas.is_empty());
+    debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let seed = initial_features(ds, j0);
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob =
+        DantzigProblem::new(RestrictedDantzig::new(ds, lambdas[0], &seed), ds, &pricer);
+    let engine = GenEngine::new(params);
+    let mut stats =
+        GenStats { cols_added: seed.len(), rows_added: seed.len(), ..Default::default() };
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        prob.set_lambda(lambda);
+        accumulate(&mut stats, engine.run(&mut prob));
+        let support = prob.inner().beta_support();
+        out.push(PathSolution {
+            lambda,
+            objective: prob.inner().objective(),
+            support: support.iter().filter(|(_, v)| v.abs() > 1e-9).count(),
+            working_set: prob.inner().j_set().len(),
+            stats,
+        });
+    }
+    out
+}
+
+/// Warm-started λ-path for **RankSVM** over a decreasing grid. λ only
+/// appears in the β-costs, so each step is a primal-simplex warm start on
+/// the same restricted model (exactly Algorithm 2's mechanics, with
+/// comparison pairs in place of samples).
+pub fn ranksvm_path(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &[(usize, usize)],
+    lambdas: &[f64],
+    j0: usize,
+    params: &GenParams,
+) -> Vec<PathSolution> {
+    assert!(!lambdas.is_empty());
+    debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let t_init = initial_pairs(pairs.len(), j0);
+    let j_init = initial_rank_features(ds, pairs, j0);
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob = RankProblem::new(
+        RestrictedRank::new(ds, pairs, lambdas[0], &t_init, &j_init),
+        ds,
+        &pricer,
+    );
+    let engine = GenEngine::new(params);
+    let mut stats = GenStats {
+        cols_added: j_init.len(),
+        rows_added: t_init.len(),
+        ..Default::default()
+    };
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        prob.set_lambda(lambda);
+        accumulate(&mut stats, engine.run(&mut prob));
+        let support = prob.inner().beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
+        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        out.push(PathSolution {
+            lambda,
+            objective: hinge + lambda * l1,
+            support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+            working_set: prob.inner().j_set().len(),
+            stats,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -202,6 +296,62 @@ mod tests {
         let (path, _) = regularization_path(&d, &backend, &grid, 5, &GenParams::default());
         for w in path.windows(2) {
             assert!(w[1].working_set >= w[0].working_set);
+        }
+    }
+
+    #[test]
+    fn dantzig_path_matches_independent_solves() {
+        use crate::data::synthetic::{generate_dantzig, DantzigSpec};
+        use crate::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
+        let spec =
+            DantzigSpec { n: 30, p: 20, k0: 4, rho: 0.1, sigma: 0.4, standardize: true };
+        let d = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(112));
+        let backend = NativeBackend::new(&d.x);
+        let grid = geometric_grid(lambda_max_dantzig(&d), 5, 0.6);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let path = dantzig_path(&d, &backend, &grid, 5, &params);
+        assert_eq!(path.len(), 5);
+        // first point: λ = λ_max → β = 0, objective 0
+        assert_eq!(path[0].support, 0);
+        assert!(path[0].objective.abs() < 1e-9);
+        // ‖β‖₁ grows as λ shrinks; every point matches a fresh solve
+        for w in path.windows(2) {
+            assert!(w[1].objective >= w[0].objective - 1e-9);
+        }
+        for pt in &path[1..] {
+            let direct = dantzig_generation(&d, &backend, pt.lambda, &[], &params);
+            assert!(
+                (pt.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-6,
+                "λ={}: path {} direct {}",
+                pt.lambda,
+                pt.objective,
+                direct.objective
+            );
+        }
+    }
+
+    #[test]
+    fn ranksvm_path_matches_independent_solves() {
+        use crate::data::synthetic::{generate_ranksvm, RankSpec};
+        use crate::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
+        let spec = RankSpec { n: 16, p: 14, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
+        let d = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(113));
+        let pairs = ranking_pairs(&d.y);
+        let backend = NativeBackend::new(&d.x);
+        let grid = geometric_grid(lambda_max_rank(&d, &pairs), 5, 0.5);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let path = ranksvm_path(&d, &backend, &pairs, &grid, 8, &params);
+        assert_eq!(path.len(), 5);
+        assert_eq!(path[0].support, 0, "β must be zero at λ_max");
+        for pt in &path[1..] {
+            let direct = ranksvm_generation(&d, &backend, &pairs, pt.lambda, &params);
+            assert!(
+                (pt.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-5,
+                "λ={}: path {} direct {}",
+                pt.lambda,
+                pt.objective,
+                direct.objective
+            );
         }
     }
 }

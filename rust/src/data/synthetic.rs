@@ -198,6 +198,101 @@ pub fn generate_sparse_text(spec: &SparseTextSpec, rng: &mut Xoshiro256) -> Data
     Dataset { x: Design::sparse(coo.to_csr()), y }
 }
 
+/// Parameters of the RankSVM generator: equicorrelated Gaussian features
+/// and a *real-valued* relevance score `y_i = Σ_{j<k0} x_ij + noise·ε_i`
+/// — `y` is an ordering signal, not a ±1 class label.
+#[derive(Clone, Debug)]
+pub struct RankSpec {
+    /// Number of samples.
+    pub n: usize,
+    /// Number of features.
+    pub p: usize,
+    /// Number of informative features (relevance drivers).
+    pub k0: usize,
+    /// Pairwise feature correlation ρ.
+    pub rho: f64,
+    /// Standard deviation of the additive relevance noise.
+    pub noise: f64,
+    /// Standardize columns to unit L2 norm.
+    pub standardize: bool,
+}
+
+/// Draw a ranking dataset: features as in §5.1.1 (equicorrelated
+/// Gaussian, zero mean), relevance `y` from a sparse linear model. The
+/// relevance is computed on the raw features *before* standardization —
+/// only the ordering of `y` matters to RankSVM.
+pub fn generate_ranksvm(spec: &RankSpec, rng: &mut Xoshiro256) -> Dataset {
+    let RankSpec { n, p, k0, rho, noise, standardize } = *spec;
+    assert!(k0 <= p);
+    let sr = rho.max(0.0).sqrt();
+    let se = (1.0 - rho.max(0.0)).sqrt();
+    let mut m = Matrix::zeros(n, p);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let shared = rng.normal();
+        let row = m.row_mut(i);
+        for j in 0..p {
+            row[j] = sr * shared + se * rng.normal();
+        }
+        let signal: f64 = row[..k0].iter().sum();
+        y[i] = signal + noise * rng.normal();
+    }
+    let mut ds = Dataset { x: Design::dense(m), y };
+    if standardize {
+        ds.standardize();
+    }
+    ds
+}
+
+/// Parameters of the Dantzig-selector generator: a sparse linear
+/// regression `y = Xβ* + σ·ε` with `β*_j = (−1)^j` on the first `k0`
+/// coordinates — the setting of Mazumder, Wright & Zheng
+/// (arXiv:1908.06515). `y` is a real-valued response.
+#[derive(Clone, Debug)]
+pub struct DantzigSpec {
+    /// Number of samples.
+    pub n: usize,
+    /// Number of features.
+    pub p: usize,
+    /// Support size of β*.
+    pub k0: usize,
+    /// Pairwise feature correlation ρ.
+    pub rho: f64,
+    /// Noise standard deviation σ.
+    pub sigma: f64,
+    /// Standardize columns to unit L2 norm.
+    pub standardize: bool,
+}
+
+/// Draw a regression dataset from the Dantzig-selector model. The
+/// response is computed on the raw features before standardization (the
+/// estimator never needs the true β* back on the standardized scale).
+pub fn generate_dantzig(spec: &DantzigSpec, rng: &mut Xoshiro256) -> Dataset {
+    let DantzigSpec { n, p, k0, rho, sigma, standardize } = *spec;
+    assert!(k0 <= p);
+    let sr = rho.max(0.0).sqrt();
+    let se = (1.0 - rho.max(0.0)).sqrt();
+    let mut m = Matrix::zeros(n, p);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let shared = rng.normal();
+        let row = m.row_mut(i);
+        for j in 0..p {
+            row[j] = sr * shared + se * rng.normal();
+        }
+        let mut signal = 0.0;
+        for j in 0..k0 {
+            signal += if j % 2 == 0 { row[j] } else { -row[j] };
+        }
+        y[i] = signal + sigma * rng.normal();
+    }
+    let mut ds = Dataset { x: Design::dense(m), y };
+    if standardize {
+        ds.standardize();
+    }
+    ds
+}
+
 /// Microarray-like dense generator used as the Table 2 stand-in
 /// (leukemia / lung / ovarian / radsens): tiny n, large p, a handful of
 /// differentially-expressed genes, heavier correlation than §5.1.1.
@@ -278,6 +373,43 @@ mod tests {
         ds.x.tmatvec(&ds.y, &mut cors);
         let info: f64 = cors[..20].iter().map(|v| v.abs()).sum::<f64>() / 20.0;
         let noise: f64 = cors[20..].iter().map(|v| v.abs()).sum::<f64>() / 1980.0;
+        assert!(info > 3.0 * noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn ranksvm_generator_relevance_signal() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        // ρ = 0 here: with all-positive relevance weights, the shared
+        // equicorrelation factor leaks signal into every feature, which
+        // would blur the informative/noise contrast this test checks.
+        let spec = RankSpec { n: 150, p: 40, k0: 5, rho: 0.0, noise: 0.2, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut rng);
+        assert_eq!(ds.n(), 150);
+        assert_eq!(ds.p(), 40);
+        // y is real-valued (not ±1) and correlates with informative features
+        assert!(ds.y.iter().any(|&v| v != 1.0 && v != -1.0));
+        let mut cors = vec![0.0; ds.p()];
+        ds.x.tmatvec(&ds.y, &mut cors);
+        let info: f64 = cors[..5].iter().map(|v| v.abs()).sum::<f64>() / 5.0;
+        let noise: f64 = cors[5..].iter().map(|v| v.abs()).sum::<f64>() / 35.0;
+        assert!(info > 3.0 * noise, "info {info} noise {noise}");
+    }
+
+    #[test]
+    fn dantzig_generator_signed_support() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let spec = DantzigSpec { n: 200, p: 50, k0: 6, rho: 0.1, sigma: 0.3, standardize: true };
+        let ds = generate_dantzig(&spec, &mut rng);
+        let mut cors = vec![0.0; ds.p()];
+        ds.x.tmatvec(&ds.y, &mut cors);
+        // alternating-sign support: correlations of the first k0 features
+        // carry the sign pattern of β* = (+,−,+,−,…)
+        for j in 0..6 {
+            let expect = if j % 2 == 0 { 1.0 } else { -1.0 };
+            assert!(cors[j] * expect > 0.0, "cors[{j}] = {} sign mismatch", cors[j]);
+        }
+        let info: f64 = cors[..6].iter().map(|v| v.abs()).sum::<f64>() / 6.0;
+        let noise: f64 = cors[6..].iter().map(|v| v.abs()).sum::<f64>() / 44.0;
         assert!(info > 3.0 * noise, "info {info} noise {noise}");
     }
 

@@ -18,9 +18,12 @@
 //!   instrumentation ([`GenParams::trace`]), a round cap, and stall
 //!   detection ([`GenParams::stall_rounds`]).
 //!
-//! New LP workloads (RankSVM, Dantzig-selector-type estimators, …) plug in
-//! by implementing [`RestrictedProblem`] — roughly 200 lines of model
-//! bookkeeping instead of a forked generation loop.
+//! New LP workloads plug in by implementing [`RestrictedProblem`] —
+//! roughly 200 lines of model bookkeeping instead of a forked generation
+//! loop; `crate::workloads::{ranksvm, dantzig}` are worked examples, and
+//! `docs/adding-a-workload.md` is the step-by-step guide.
+
+#![warn(missing_docs)]
 
 use crate::backend::Backend;
 use crate::simplex::Status;
@@ -197,6 +200,55 @@ pub fn select_violators(mut priced: Vec<(usize, f64)>, cap: usize) -> Vec<usize>
 }
 
 /// The generic solve → price → expand driver.
+///
+/// # Example
+///
+/// Any [`RestrictedProblem`] can be driven to ε-optimality. The toy
+/// problem below claims one violated column per round until three are in
+/// the model, then reports clean pricing — the engine detects
+/// convergence and counts the expansions:
+///
+/// ```
+/// use cutgen::engine::{GenEngine, GenParams, RestrictedProblem};
+/// use cutgen::simplex::Status;
+///
+/// struct Toy {
+///     cols_in: usize,
+/// }
+///
+/// impl RestrictedProblem for Toy {
+///     fn solve(&mut self) -> Status {
+///         Status::Optimal
+///     }
+///     fn objective(&self) -> f64 {
+///         -(self.cols_in as f64)
+///     }
+///     fn simplex_iters(&self) -> usize {
+///         self.cols_in
+///     }
+///     fn price_rows(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+///         Vec::new()
+///     }
+///     fn price_cols(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+///         if self.cols_in < 3 {
+///             vec![(self.cols_in, 1.0)] // one violation left
+///         } else {
+///             Vec::new() // priced out: optimal
+///         }
+///     }
+///     fn add_rows(&mut self, _idx: &[usize]) {}
+///     fn add_cols(&mut self, idx: &[usize]) {
+///         self.cols_in += idx.len();
+///     }
+/// }
+///
+/// let params = GenParams::default();
+/// let mut prob = Toy { cols_in: 0 };
+/// let stats = GenEngine::new(&params).run(&mut prob);
+/// assert!(stats.converged);
+/// assert_eq!(stats.cols_added, 3);
+/// assert_eq!(stats.rounds, 4); // three expanding rounds + the clean one
+/// ```
 pub struct GenEngine<'p> {
     params: &'p GenParams,
 }

@@ -2,8 +2,9 @@
 //!
 //! [`Error`] is a string-message error that any `std::error::Error` converts
 //! into via `?`; [`Context`] adds `anyhow`-style `.context(..)` /
-//! `.with_context(..)` on `Result` and `Option`. The [`err!`], [`bail!`]
-//! and [`ensure!`] macros mirror their `anyhow` namesakes.
+//! `.with_context(..)` on `Result` and `Option`. The [`crate::err!`],
+//! [`crate::bail!`] and [`crate::ensure!`] macros mirror their `anyhow`
+//! namesakes.
 
 use std::fmt;
 

@@ -13,3 +13,4 @@ pub mod rng;
 pub mod runtime;
 pub mod simplex;
 pub mod sparse;
+pub mod workloads;

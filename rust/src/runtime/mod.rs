@@ -6,7 +6,7 @@
 //! PJRT CPU client (`xla` crate) and exposes:
 //!
 //! * [`PjrtRuntime`] — compiled executables (one per artifact);
-//! * [`PjrtBackend`] — a [`Backend`] implementation that keeps the design
+//! * [`PjrtBackend`] — a [`crate::backend::Backend`] implementation that keeps the design
 //!   matrix as device-resident f32 tiles and runs `Xβ` / `Xᵀv` through
 //!   the Pallas `xb` / `xtv` executables, padding and looping tiles so a
 //!   single fixed-shape artifact serves every (n, p);

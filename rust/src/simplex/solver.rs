@@ -867,6 +867,33 @@ impl SimplexSolver {
         self.model.cost[j] = cost;
     }
 
+    /// Change a row's range in place. The basis, costs and duals are
+    /// untouched, so dual feasibility is preserved (a nonbasic logical
+    /// stays on the *same side* it was on, keeping its reduced-cost sign
+    /// valid); primal feasibility may break and is repaired by the dual
+    /// simplex on the next `solve` — this is how the Dantzig-selector
+    /// path driver moves λ without rebuilding the model.
+    pub fn set_row_bounds(&mut self, r: RowId, lo: f64, hi: f64) {
+        assert!(lo <= hi, "row bounds crossed");
+        self.model.row_lo[r] = lo;
+        self.model.row_hi[r] = hi;
+        match self.row_status[r] {
+            VarStatus::Basic(_) => {}
+            VarStatus::AtLower if lo.is_finite() => {}
+            VarStatus::AtUpper if hi.is_finite() => {}
+            _ => {
+                // the bound this logical sat on vanished: re-snap
+                self.row_status[r] = if lo.is_finite() {
+                    VarStatus::AtLower
+                } else if hi.is_finite() {
+                    VarStatus::AtUpper
+                } else {
+                    VarStatus::FreeZero
+                };
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // Solution accessors
     // ------------------------------------------------------------------

@@ -269,6 +269,78 @@ fn warm_start_add_row_reoptimizes_dual() {
 }
 
 #[test]
+fn warm_start_set_row_bounds_reoptimizes_dual() {
+    // min x + y s.t. 1 ≤ x + y ≤ 5 → obj 1; tighten to 3 ≤ · ≤ 5 → obj 3.
+    let mut m = LpModel::new();
+    let x = m.add_col_nonneg(1.0, &[]);
+    let y = m.add_col_nonneg(1.0, &[]);
+    let r = m.add_row(1.0, 5.0, &[(x, 1.0), (y, 1.0)]);
+    let mut s = SimplexSolver::new(m);
+    assert_eq!(s.solve(), Status::Optimal);
+    assert!((s.objective() - 1.0).abs() < TOL);
+
+    s.set_row_bounds(r, 3.0, 5.0);
+    assert_eq!(s.solve(), Status::Optimal);
+    assert!((s.objective() - 3.0).abs() < TOL, "obj {}", s.objective());
+    assert_kkt(&mut s);
+
+    // relax back down: primal simplex resumes from the tightened basis
+    s.set_row_bounds(r, 0.5, 5.0);
+    assert_eq!(s.solve(), Status::Optimal);
+    assert!((s.objective() - 0.5).abs() < TOL, "obj {}", s.objective());
+    assert_kkt(&mut s);
+}
+
+#[test]
+fn set_row_bounds_matches_cold_solve_on_random_instances() {
+    for seed in 0..10 {
+        let mut rng = Xoshiro256::seed_from_u64(3000 + seed);
+        let (mut warm, _) = random_feasible_lp(&mut rng, 6, 4);
+        assert_eq!(warm.solve(), Status::Optimal);
+        // shift every row range by a small random amount (keeping lo ≤ hi
+        // and a known feasible interior point, see random_feasible_lp)
+        let shifts: Vec<f64> = (0..4).map(|_| rng.uniform_in(-0.4, 0.4)).collect();
+        let mut cold_model = warm.model().clone();
+        for r in 0..4 {
+            let lo = warm.model().row_lo[r] + shifts[r];
+            let hi = warm.model().row_hi[r] + shifts[r];
+            warm.set_row_bounds(r, lo, hi);
+            cold_model.row_lo[r] = lo;
+            cold_model.row_hi[r] = hi;
+        }
+        let ws = warm.solve();
+        let mut cold = SimplexSolver::new(cold_model);
+        let cs = cold.solve();
+        assert_eq!(ws, cs, "seed {seed}: warm {ws:?} cold {cs:?}");
+        if ws == Status::Optimal {
+            assert!(
+                (warm.objective() - cold.objective()).abs() < 1e-6,
+                "seed {seed}: warm {} cold {}",
+                warm.objective(),
+                cold.objective()
+            );
+            assert_kkt(&mut warm);
+        }
+    }
+}
+
+/// A small random LP with wide ranged rows around a known interior point,
+/// so moderate bound shifts keep it feasible.
+fn random_feasible_lp(rng: &mut Xoshiro256, nv: usize, nr: usize) -> (SimplexSolver, Vec<f64>) {
+    let mut m = LpModel::new();
+    let vars: Vec<_> =
+        (0..nv).map(|_| m.add_col(rng.uniform_in(0.1, 2.0), 0.0, 3.0, &[])).collect();
+    let x0: Vec<f64> = (0..nv).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+    for _ in 0..nr {
+        let coefs: Vec<(VarId, f64)> =
+            vars.iter().map(|&v| (v, rng.uniform_in(-1.0, 1.0))).collect();
+        let act: f64 = coefs.iter().map(|&(v, c)| c * x0[v]).sum();
+        m.add_row(act - 2.0, act + 2.0, &coefs);
+    }
+    (SimplexSolver::new(m), x0)
+}
+
+#[test]
 fn warm_start_matches_cold_solve_on_random_instances() {
     for seed in 0..15 {
         let mut rng = Xoshiro256::seed_from_u64(1000 + seed);

@@ -1,0 +1,531 @@
+//! Column-and-constraint generation for the **Dantzig selector** LP.
+//!
+//! The estimator (Candès & Tao 2007; CCG treatment in Mazumder, Wright &
+//! Zheng, arXiv:1908.06515) is
+//!
+//! ```text
+//! min ‖β‖₁   s.t.   ‖Xᵀ(y − Xβ)‖∞ ≤ λ
+//! ```
+//!
+//! Splitting `β = β⁺ − β⁻` gives an LP with `2p` columns and `p` ranged
+//! rows: writing `c = Xᵀy` and `A = XᵀX` (the Gram matrix, never formed
+//! explicitly),
+//!
+//! ```text
+//! min Σ_j (β⁺_j + β⁻_j)   s.t.   c_i − λ ≤ Σ_j A_ij (β⁺_j − β⁻_j) ≤ c_i + λ.
+//! ```
+//!
+//! Both the row and the column index sets range over the *features*, so
+//! the working sets I (rows) and J (columns) live in the same index
+//! space. [`RestrictedDantzig`] maintains the invariant **I ⊆ J**: every
+//! correlation row in the model has its coefficient pair present. That
+//! guarantees the restricted LP is always feasible — pick `β_J` with
+//! `X_J β_J = proj_{col(X_J)} y`; then the residual is orthogonal to every
+//! `x_i` with `i ∈ I ⊆ J`, so all restricted rows hold with activity
+//! exactly `c_i`.
+//!
+//! Both pricing channels are one [`Pricer`] pass (the chunked parallel
+//! `Xᵀv` of [`crate::engine::BackendPricer`]):
+//!
+//! * **rows** — the full residual correlation `r = Xᵀ(y − Xβ)` prices
+//!   every left-out constraint: `i ∉ I` is violated by `|r_i| − λ`;
+//! * **columns** — with row duals μ, the reduced cost of `β⁺_j/β⁻_j` is
+//!   `1 ∓ (XᵀXμ̄)_j` where `μ̄` scatters μ over the features in I, so
+//!   `s = Xᵀw` with `w = Σ_{i∈I} μ_i x_i` prices every `j ∉ J` by
+//!   `|s_j| − 1`.
+
+use crate::backend::Backend;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
+use crate::fom::screening::top_k_by_abs;
+use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
+
+/// λ above which `β = 0` is optimal: `‖Xᵀy‖∞`.
+pub fn lambda_max_dantzig(ds: &Dataset) -> f64 {
+    let mut c = vec![0.0; ds.p()];
+    ds.x.tmatvec(&ds.y, &mut c);
+    c.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Initial working set: the `k` features with the largest `|c_i| = |x_iᵀy|`
+/// (the constraints that bind first as λ drops below λ_max).
+pub fn initial_features(ds: &Dataset, k: usize) -> Vec<usize> {
+    let mut c = vec![0.0; ds.p()];
+    ds.x.tmatvec(&ds.y, &mut c);
+    top_k_by_abs(&c, k.min(ds.p()))
+}
+
+/// The restricted Dantzig-selector LP over working sets `I ⊆ J` of
+/// features.
+pub struct RestrictedDantzig {
+    solver: SimplexSolver,
+    lambda: f64,
+    /// `c = Xᵀy` over all p features (row right-hand sides).
+    c: Vec<f64>,
+    /// Feature whose correlation row sits at LP row position r.
+    rows_i: Vec<usize>,
+    /// feature i → LP row position (None when i ∉ I).
+    row_pos: Vec<Option<usize>>,
+    /// Feature handled by column-pair position t.
+    cols_j: Vec<usize>,
+    /// feature j → column-pair position.
+    pos_j: Vec<Option<usize>>,
+    /// β⁺ / β⁻ variable ids per column-pair position.
+    bp: Vec<VarId>,
+    bm: Vec<VarId>,
+}
+
+impl RestrictedDantzig {
+    /// Build the restricted model seeded with the given features (used as
+    /// both rows and columns, preserving `I ⊆ J`).
+    pub fn new(ds: &Dataset, lambda: f64, seed: &[usize]) -> Self {
+        let p = ds.p();
+        let mut c = vec![0.0; p];
+        ds.x.tmatvec(&ds.y, &mut c);
+        let mut me = Self {
+            solver: SimplexSolver::new(LpModel::new()),
+            lambda,
+            c,
+            rows_i: Vec::new(),
+            row_pos: vec![None; p],
+            cols_j: Vec::new(),
+            pos_j: vec![None; p],
+            bp: Vec::new(),
+            bm: Vec::new(),
+        };
+        me.add_constraint_rows(ds, seed);
+        me
+    }
+
+    /// Current row working set I (feature indices, insertion order).
+    pub fn i_set(&self) -> &[usize] {
+        &self.rows_i
+    }
+
+    /// Current column working set J (feature indices, insertion order).
+    pub fn j_set(&self) -> &[usize] {
+        &self.cols_j
+    }
+
+    /// Bring features into the column set J: appends the `β⁺_j/β⁻_j` pair
+    /// (cost 1 each) with coefficients `±A_ij = ±x_iᵀx_j` on the existing
+    /// correlation rows.
+    pub fn add_coef_cols(&mut self, ds: &Dataset, features: &[usize]) {
+        for &j in features {
+            if self.pos_j[j].is_some() {
+                continue;
+            }
+            // densify column j once, then one Gram dot per existing row
+            let mut xj = vec![0.0; ds.n()];
+            for (i, v) in ds.x.col_entries(j) {
+                xj[i] = v;
+            }
+            let mut pos_coefs = Vec::with_capacity(self.rows_i.len());
+            let mut neg_coefs = Vec::with_capacity(self.rows_i.len());
+            for (r, &i) in self.rows_i.iter().enumerate() {
+                let a = ds.x.col_dot(i, &xj);
+                if a != 0.0 {
+                    pos_coefs.push((r, a));
+                    neg_coefs.push((r, -a));
+                }
+            }
+            let bp = self.solver.add_col(1.0, 0.0, f64::INFINITY, &pos_coefs);
+            let bm = self.solver.add_col(1.0, 0.0, f64::INFINITY, &neg_coefs);
+            self.pos_j[j] = Some(self.cols_j.len());
+            self.cols_j.push(j);
+            self.bp.push(bp);
+            self.bm.push(bm);
+        }
+    }
+
+    /// Bring features into the row set I: appends the ranged row
+    /// `c_i − λ ≤ Σ_{j∈J} A_ij (β⁺_j − β⁻_j) ≤ c_i + λ`. Each new row's
+    /// own coefficient pair is added first, preserving `I ⊆ J` (the
+    /// feasibility invariant — see the module docs).
+    pub fn add_constraint_rows(&mut self, ds: &Dataset, features: &[usize]) {
+        for &i in features {
+            if self.row_pos[i].is_some() {
+                continue;
+            }
+            self.add_coef_cols(ds, &[i]);
+            let mut xi = vec![0.0; ds.n()];
+            for (r, v) in ds.x.col_entries(i) {
+                xi[r] = v;
+            }
+            let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(2 * self.cols_j.len());
+            for (t, &j) in self.cols_j.iter().enumerate() {
+                let a = ds.x.col_dot(j, &xi);
+                if a != 0.0 {
+                    coefs.push((self.bp[t], a));
+                    coefs.push((self.bm[t], -a));
+                }
+            }
+            self.solver.add_row(self.c[i] - self.lambda, self.c[i] + self.lambda, &coefs);
+            self.row_pos[i] = Some(self.rows_i.len());
+            self.rows_i.push(i);
+        }
+    }
+
+    /// Change λ in place: every row's range becomes `[c_i − λ, c_i + λ]`.
+    /// The basis and duals are untouched (dual warm start; the next solve
+    /// repairs primal feasibility with the dual simplex) — the λ-path
+    /// driver's hook.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+        for (r, &i) in self.rows_i.iter().enumerate() {
+            self.solver.set_row_bounds(r, self.c[i] - lambda, self.c[i] + lambda);
+        }
+    }
+
+    /// Solve the restricted LP (warm-started).
+    pub fn solve(&mut self) -> Status {
+        self.solver.solve()
+    }
+
+    /// Restricted-LP objective (= `‖β‖₁` of the restricted solution).
+    pub fn objective(&self) -> f64 {
+        self.solver.objective()
+    }
+
+    /// Simplex iterations so far (primal + dual, cumulative).
+    pub fn simplex_iters(&self) -> usize {
+        self.solver.stats.primal_iters + self.solver.stats.dual_iters
+    }
+
+    /// Coefficients on the working set: `(j, β_j)` pairs.
+    pub fn beta_support(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::with_capacity(self.cols_j.len());
+        for (t, &j) in self.cols_j.iter().enumerate() {
+            let b = self.solver.col_value(self.bp[t]) - self.solver.col_value(self.bm[t]);
+            if b != 0.0 {
+                out.push((j, b));
+            }
+        }
+        out
+    }
+
+    /// Price left-out constraint rows: `r = Xᵀ(y − Xβ)` through the
+    /// pricer; returns `(i, |r_i| − λ)` for every `i ∉ I` violating by
+    /// more than ε.
+    pub fn price_constraints(
+        &self,
+        ds: &Dataset,
+        pricer: &dyn Pricer,
+        eps: f64,
+    ) -> Vec<(usize, f64)> {
+        let support = self.beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let mut xb = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&cols, &vals, &mut xb);
+        let u: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, m)| y - m).collect();
+        let mut r = vec![0.0; ds.p()];
+        pricer.score(&u, &mut r);
+        let mut out = Vec::new();
+        for (i, &ri) in r.iter().enumerate() {
+            if self.row_pos[i].is_none() {
+                let viol = ri.abs() - self.lambda;
+                if viol > eps {
+                    out.push((i, viol));
+                }
+            }
+        }
+        out
+    }
+
+    /// Price left-out coefficient columns: with row duals μ, the reduced
+    /// cost of the cheaper β half of `j` is `1 − |(XᵀXμ̄)_j|`, computed as
+    /// `s = Xᵀw`, `w = Σ_{i∈I} μ_i x_i`. Returns `(j, |s_j| − 1)` for
+    /// every `j ∉ J` violating by more than ε.
+    pub fn price_coef_cols(
+        &self,
+        ds: &Dataset,
+        pricer: &dyn Pricer,
+        eps: f64,
+    ) -> Vec<(usize, f64)> {
+        let mu: Vec<f64> = (0..self.rows_i.len()).map(|r| self.solver.row_dual(r)).collect();
+        let mut w = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&self.rows_i, &mu, &mut w);
+        let mut s = vec![0.0; ds.p()];
+        pricer.score(&w, &mut s);
+        let mut out = Vec::new();
+        for (j, &sj) in s.iter().enumerate() {
+            if self.pos_j[j].is_none() {
+                let viol = sj.abs() - 1.0;
+                if viol > eps {
+                    out.push((j, viol));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// [`RestrictedDantzig`] adapted to the generic engine: both channels
+/// live (column-and-constraint generation).
+pub struct DantzigProblem<'a> {
+    rd: RestrictedDantzig,
+    ds: &'a Dataset,
+    pricer: &'a dyn Pricer,
+}
+
+impl<'a> DantzigProblem<'a> {
+    /// Wrap a restricted model.
+    pub fn new(rd: RestrictedDantzig, ds: &'a Dataset, pricer: &'a dyn Pricer) -> Self {
+        Self { rd, ds, pricer }
+    }
+
+    /// The wrapped restricted model.
+    pub fn inner(&self) -> &RestrictedDantzig {
+        &self.rd
+    }
+
+    /// Change λ in place (warm-start preserving) — the path driver's hook.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.rd.set_lambda(lambda);
+    }
+}
+
+impl RestrictedProblem for DantzigProblem<'_> {
+    fn solve(&mut self) -> Status {
+        self.rd.solve()
+    }
+    fn objective(&self) -> f64 {
+        self.rd.objective()
+    }
+    fn simplex_iters(&self) -> usize {
+        self.rd.simplex_iters()
+    }
+    fn price_rows(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        self.rd.price_constraints(self.ds, self.pricer, eps)
+    }
+    fn price_cols(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        self.rd.price_coef_cols(self.ds, self.pricer, eps)
+    }
+    fn add_rows(&mut self, idx: &[usize]) {
+        self.rd.add_constraint_rows(self.ds, idx);
+    }
+    fn add_cols(&mut self, idx: &[usize]) {
+        self.rd.add_coef_cols(self.ds, idx);
+    }
+}
+
+/// Package the restricted solution as an [`SvmSolution`] (`beta0` is 0 —
+/// the Dantzig selector has no intercept; `objective` is `‖β‖₁`).
+fn finish(ds: &Dataset, rd: &RestrictedDantzig, stats: GenStats) -> SvmSolution {
+    let support = rd.beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let mut cols = rd.j_set().to_vec();
+    cols.sort_unstable();
+    let mut rows = rd.i_set().to_vec();
+    rows.sort_unstable();
+    SvmSolution { beta, beta0: 0.0, objective: rd.objective(), stats, cols, rows }
+}
+
+/// Column-and-constraint generation for the Dantzig selector. `seed` is
+/// the initial feature working set (empty ⇒ top-10 `|x_iᵀy|`).
+pub fn dantzig_generation(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda: f64,
+    seed: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
+    let mut rd = RestrictedDantzig::new(ds, lambda, &[]);
+    // default seed from the c = Xᵀy the model just computed (no second
+    // O(np) pass): the top-|c| features bind first below λ_max
+    let seed: Vec<usize> = if seed.is_empty() {
+        top_k_by_abs(&rd.c, 10.min(ds.p()))
+    } else {
+        seed.to_vec()
+    };
+    rd.add_constraint_rows(ds, &seed);
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob = DantzigProblem::new(rd, ds, &pricer);
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.rows_added += seed.len();
+    stats.cols_added += seed.len();
+    finish(ds, prob.inner(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::baselines::dantzig_full::solve_full_dantzig;
+    use crate::data::synthetic::{generate_dantzig, DantzigSpec};
+    use crate::rng::Xoshiro256;
+
+    fn small_ds(n: usize, p: usize, seed: u64) -> Dataset {
+        let spec = DantzigSpec { n, p, k0: 5.min(p), rho: 0.1, sigma: 0.5, standardize: true };
+        generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn ccg_matches_full_lp() {
+        let ds = small_ds(40, 25, 501);
+        let lambda = 0.3 * lambda_max_dantzig(&ds);
+        let backend = NativeBackend::new(&ds.x);
+        let full = solve_full_dantzig(&ds, lambda);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let sol = dantzig_generation(&ds, &backend, lambda, &[], &params);
+        assert!(sol.stats.converged, "engine must report ε-optimality");
+        assert!(
+            (sol.objective - full.objective).abs() / full.objective.max(1e-9) < 1e-6,
+            "ccg {} full {}",
+            sol.objective,
+            full.objective
+        );
+    }
+
+    #[test]
+    fn ccg_matches_full_lp_high_dimensional() {
+        // p > n: the Gram matrix is singular; the working sets stay small
+        let ds = small_ds(25, 60, 502);
+        let lambda = 0.4 * lambda_max_dantzig(&ds);
+        let backend = NativeBackend::new(&ds.x);
+        let full = solve_full_dantzig(&ds, lambda);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let sol = dantzig_generation(&ds, &backend, lambda, &[], &params);
+        assert!(
+            (sol.objective - full.objective).abs() / full.objective.max(1e-9) < 1e-6,
+            "ccg {} full {}",
+            sol.objective,
+            full.objective
+        );
+        assert!(sol.cols.len() < ds.p(), "working set {} of {}", sol.cols.len(), ds.p());
+    }
+
+    #[test]
+    fn lambda_above_max_gives_zero_solution() {
+        let ds = small_ds(30, 20, 503);
+        let lambda = 1.01 * lambda_max_dantzig(&ds);
+        let backend = NativeBackend::new(&ds.x);
+        let sol = dantzig_generation(&ds, &backend, lambda, &[], &GenParams::default());
+        assert_eq!(sol.support_size(), 0, "beta must be zero above lambda_max");
+        assert!(sol.objective.abs() < 1e-9);
+    }
+
+    /// The pricer-based column pricing must agree with a brute-force O(p)
+    /// reduced-cost scan that forms each Gram entry explicitly.
+    #[test]
+    fn column_pricing_matches_brute_force_scan() {
+        let ds = small_ds(30, 40, 504);
+        let lambda = 0.35 * lambda_max_dantzig(&ds);
+        let seed = initial_features(&ds, 6);
+        let mut rd = RestrictedDantzig::new(&ds, lambda, &seed);
+        assert_eq!(rd.solve(), Status::Optimal);
+
+        let backend = NativeBackend::new(&ds.x);
+        let pricer = BackendPricer::new(&backend, 1);
+        let fast = rd.price_coef_cols(&ds, &pricer, 1e-9);
+
+        // brute force: s_j = Σ_{i∈I} μ_i <x_i, x_j> entry by entry
+        let mu: Vec<f64> =
+            (0..rd.i_set().len()).map(|r| rd.solver.row_dual(r)).collect();
+        let mut slow = Vec::new();
+        for j in 0..ds.p() {
+            if rd.pos_j[j].is_some() {
+                continue;
+            }
+            let mut sj = 0.0;
+            for (r, &i) in rd.i_set().iter().enumerate() {
+                let mut a = 0.0;
+                for row in 0..ds.n() {
+                    a += ds.x.get(row, i) * ds.x.get(row, j);
+                }
+                sj += mu[r] * a;
+            }
+            let viol = sj.abs() - 1.0;
+            if viol > 1e-9 {
+                slow.push((j, viol));
+            }
+        }
+        assert_eq!(fast.len(), slow.len(), "fast {fast:?} slow {slow:?}");
+        for (&(jf, vf), &(js, vs)) in fast.iter().zip(&slow) {
+            assert_eq!(jf, js);
+            assert!((vf - vs).abs() < 1e-8, "j={jf}: fast {vf} slow {vs}");
+        }
+    }
+
+    /// Row pricing likewise: r_i = <x_i, y − Xβ> entry by entry.
+    #[test]
+    fn row_pricing_matches_brute_force_scan() {
+        let ds = small_ds(25, 35, 505);
+        let lambda = 0.5 * lambda_max_dantzig(&ds);
+        let seed = initial_features(&ds, 5);
+        let mut rd = RestrictedDantzig::new(&ds, lambda, &seed);
+        assert_eq!(rd.solve(), Status::Optimal);
+
+        let backend = NativeBackend::new(&ds.x);
+        let pricer = BackendPricer::new(&backend, 1);
+        let fast = rd.price_constraints(&ds, &pricer, 1e-9);
+
+        let support = rd.beta_support();
+        let mut slow = Vec::new();
+        for i in 0..ds.p() {
+            if rd.row_pos[i].is_some() {
+                continue;
+            }
+            let mut ri = 0.0;
+            for row in 0..ds.n() {
+                let mut xb = 0.0;
+                for &(j, b) in &support {
+                    xb += ds.x.get(row, j) * b;
+                }
+                ri += ds.x.get(row, i) * (ds.y[row] - xb);
+            }
+            let viol = ri.abs() - lambda;
+            if viol > 1e-9 {
+                slow.push((i, viol));
+            }
+        }
+        assert_eq!(fast.len(), slow.len(), "fast {fast:?} slow {slow:?}");
+        for (&(ifa, vf), &(isl, vs)) in fast.iter().zip(&slow) {
+            assert_eq!(ifa, isl);
+            assert!((vf - vs).abs() < 1e-8, "i={ifa}: fast {vf} slow {vs}");
+        }
+    }
+
+    #[test]
+    fn restricted_model_is_always_feasible() {
+        // I ⊆ J invariant: even a tiny λ keeps every restricted solve optimal
+        let ds = small_ds(20, 30, 506);
+        let lambda = 1e-3 * lambda_max_dantzig(&ds);
+        let mut rd = RestrictedDantzig::new(&ds, lambda, &initial_features(&ds, 4));
+        assert_eq!(rd.solve(), Status::Optimal);
+        rd.add_constraint_rows(&ds, &[0, 1, 2]);
+        assert_eq!(rd.solve(), Status::Optimal);
+        for &i in rd.i_set() {
+            assert!(rd.pos_j[i].is_some(), "row {i} lacks its column pair");
+        }
+    }
+
+    #[test]
+    fn warm_lambda_path_matches_fresh_solves() {
+        let ds = small_ds(30, 20, 507);
+        let lmax = lambda_max_dantzig(&ds);
+        let backend = NativeBackend::new(&ds.x);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let pricer = BackendPricer::new(&backend, 1);
+        let seed = initial_features(&ds, 5);
+        let mut prob =
+            DantzigProblem::new(RestrictedDantzig::new(&ds, 0.6 * lmax, &seed), &ds, &pricer);
+        let engine = GenEngine::new(&params);
+        for frac in [0.6, 0.4, 0.25] {
+            let lambda = frac * lmax;
+            prob.set_lambda(lambda);
+            engine.run(&mut prob);
+            let warm = prob.inner().objective();
+            let fresh = dantzig_generation(&ds, &backend, lambda, &[], &params).objective;
+            assert!(
+                (warm - fresh).abs() / fresh.max(1e-9) < 1e-6,
+                "λ={lambda}: warm {warm} fresh {fresh}"
+            );
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! LP workloads beyond the paper's three SVM coordinators — external
+//! validation that the [`crate::engine`] trait boundary generalizes.
+//!
+//! Each workload is a [`crate::engine::RestrictedProblem`] implementation
+//! plus model bookkeeping; the solve → price → expand loop, round caps,
+//! stall guard, tracing, and parallel pricing are all inherited from
+//! [`crate::engine::GenEngine`]. See `docs/adding-a-workload.md` for a
+//! step-by-step guide (RankSVM is the worked example).
+//!
+//! * [`ranksvm`] — pairwise-hinge L1 ranking: constraint generation over
+//!   the O(n²) comparison pairs, column generation over features;
+//! * [`dantzig`] — the Dantzig selector `min ‖β‖₁ s.t. ‖Xᵀ(y − Xβ)‖∞ ≤ λ`:
+//!   column-and-constraint generation over the p×p correlation system
+//!   (Mazumder, Wright & Zheng, arXiv:1908.06515).
+
+pub mod dantzig;
+pub mod ranksvm;

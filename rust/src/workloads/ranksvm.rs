@@ -1,0 +1,564 @@
+//! Constraint generation for **RankSVM** — the pairwise-hinge L1 LP.
+//!
+//! Given samples with real-valued relevance scores `y`, RankSVM learns a
+//! linear scoring function `x ↦ xᵀβ` that orders the samples like `y`
+//! does, with an L1 penalty for feature selection:
+//!
+//! ```text
+//! min Σ_{(i,k)∈P} max(0, 1 − (x_i − x_k)ᵀβ) + λ‖β‖₁,
+//! P = {(i,k) : y_i > y_k}.
+//! ```
+//!
+//! The LP form mirrors L1-SVM with the samples replaced by the **O(n²)
+//! comparison pairs** — one hinge slack `ξ_ik` and one margin row
+//! `ξ_ik + (x_i − x_k)ᵀ(β⁺ − β⁻) ≥ 1` per pair — which is exactly the
+//! regime where constraint generation shines: the restricted model only
+//! ever materializes the pairs that bind. There is no intercept (it
+//! cancels in score differences).
+//!
+//! Pricing:
+//!
+//! * **rows (pairs)** — one margin matvec `m = Xβ` over the support, then
+//!   an O(|P|) scan: pair `(i,k) ∉ P'` is violated by `1 − (m_i − m_k)`;
+//! * **columns (features)** — with pair duals `π ∈ [0,1]`, the reduced
+//!   cost of `β⁺_j/β⁻_j` is `λ ∓ q_j` with `q = Xᵀv` and
+//!   `v_i = Σ_{(i,·)} π − Σ_{(·,i)} π` (duals scattered +winner/−loser),
+//!   so one [`Pricer`] pass — the chunked parallel `Xᵀv` of
+//!   [`crate::engine::BackendPricer`] — prices all left-out features.
+
+use crate::backend::Backend;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
+use crate::fom::screening::top_k_by_abs;
+use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
+
+/// All comparison pairs `(i, k)` with `y_i > y_k`, in lexicographic
+/// order. O(n²) — callers on large data should subsample or bucket ties.
+pub fn ranking_pairs(y: &[f64]) -> Vec<(usize, usize)> {
+    let n = y.len();
+    let mut out = Vec::new();
+    for i in 0..n {
+        for k in 0..n {
+            if y[i] > y[k] {
+                out.push((i, k));
+            }
+        }
+    }
+    out
+}
+
+/// The all-ones-dual pricing vector: `v_i = #{k : (i,k) ∈ P} − #{k :
+/// (k,i) ∈ P}`. At `β = 0` every pair's slack is strictly positive, so
+/// complementary slackness forces every dual to 1 — this `v` yields the
+/// exact `λ_max` and the initial column scores.
+fn ones_dual_vector(n: usize, pairs: &[(usize, usize)]) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    for &(i, k) in pairs {
+        v[i] += 1.0;
+        v[k] -= 1.0;
+    }
+    v
+}
+
+/// λ above which `β = 0` is optimal: `‖Xᵀv₁‖∞` with `v₁` the all-ones
+/// dual scatter (see [`ranking_pairs`]).
+pub fn lambda_max_rank(ds: &Dataset, pairs: &[(usize, usize)]) -> f64 {
+    let v = ones_dual_vector(ds.n(), pairs);
+    let mut q = vec![0.0; ds.p()];
+    ds.x.tmatvec(&v, &mut q);
+    q.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+}
+
+/// Initial feature working set: top `k` scores `|q_j|` at `β = 0`.
+pub fn initial_rank_features(ds: &Dataset, pairs: &[(usize, usize)], k: usize) -> Vec<usize> {
+    let v = ones_dual_vector(ds.n(), pairs);
+    let mut q = vec![0.0; ds.p()];
+    ds.x.tmatvec(&v, &mut q);
+    top_k_by_abs(&q, k.min(ds.p()))
+}
+
+/// Initial pair working set: `k` pairs spread evenly over `P` (at `β = 0`
+/// all pairs are equally violated, so coverage beats scoring).
+pub fn initial_pairs(n_pairs: usize, k: usize) -> Vec<usize> {
+    if n_pairs == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n_pairs).max(1);
+    let stride = (n_pairs / k).max(1);
+    (0..n_pairs).step_by(stride).take(k).collect()
+}
+
+/// Pairwise hinge loss of a support-sparse β over ALL candidate pairs.
+pub fn pairwise_hinge_support(
+    ds: &Dataset,
+    pairs: &[(usize, usize)],
+    cols: &[usize],
+    vals: &[f64],
+) -> f64 {
+    let mut m = vec![0.0; ds.n()];
+    ds.x.matvec_cols(cols, vals, &mut m);
+    pairs.iter().map(|&(i, k)| (1.0 - (m[i] - m[k])).max(0.0)).sum()
+}
+
+/// The restricted RankSVM LP over a pair working set P′ and feature
+/// working set J.
+pub struct RestrictedRank<'p> {
+    solver: SimplexSolver,
+    lambda: f64,
+    /// The full candidate pair list (index space of the row channel).
+    pairs: &'p [(usize, usize)],
+    /// Pair index handled by LP row position r.
+    rows_t: Vec<usize>,
+    /// pair t → LP row position (None when t ∉ P′).
+    row_pos: Vec<Option<usize>>,
+    /// Feature handled by column-pair position.
+    cols_j: Vec<usize>,
+    /// feature j → column-pair position.
+    pos_j: Vec<Option<usize>>,
+    /// β⁺ / β⁻ variable ids per column-pair position.
+    bp: Vec<VarId>,
+    bm: Vec<VarId>,
+}
+
+impl<'p> RestrictedRank<'p> {
+    /// Build the restricted model for the given pair / feature working
+    /// sets.
+    pub fn new(
+        ds: &Dataset,
+        pairs: &'p [(usize, usize)],
+        lambda: f64,
+        t_init: &[usize],
+        j_init: &[usize],
+    ) -> Self {
+        let mut me = Self {
+            solver: SimplexSolver::new(LpModel::new()),
+            lambda,
+            pairs,
+            rows_t: Vec::new(),
+            row_pos: vec![None; pairs.len()],
+            cols_j: Vec::new(),
+            pos_j: vec![None; ds.p()],
+            bp: Vec::new(),
+            bm: Vec::new(),
+        };
+        me.add_pairs(ds, t_init);
+        me.add_features(ds, j_init);
+        me
+    }
+
+    /// Current pair working set P′ (pair indices, insertion order).
+    pub fn t_set(&self) -> &[usize] {
+        &self.rows_t
+    }
+
+    /// Current feature working set J (insertion order).
+    pub fn j_set(&self) -> &[usize] {
+        &self.cols_j
+    }
+
+    /// Bring pairs into P′: appends the margin rows
+    /// `ξ_ik + Σ_{j∈J} (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ 1`.
+    pub fn add_pairs(&mut self, ds: &Dataset, ts: &[usize]) {
+        for &t in ts {
+            if self.row_pos[t].is_some() {
+                continue;
+            }
+            let (i, k) = self.pairs[t];
+            let xi = self.solver.add_col(1.0, 0.0, f64::INFINITY, &[]);
+            let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(1 + 2 * self.cols_j.len());
+            coefs.push((xi, 1.0));
+            for (pos, &j) in self.cols_j.iter().enumerate() {
+                let d = ds.x.get(i, j) - ds.x.get(k, j);
+                if d != 0.0 {
+                    coefs.push((self.bp[pos], d));
+                    coefs.push((self.bm[pos], -d));
+                }
+            }
+            self.solver.add_row(1.0, f64::INFINITY, &coefs);
+            self.row_pos[t] = Some(self.rows_t.len());
+            self.rows_t.push(t);
+        }
+    }
+
+    /// Bring features into J: appends the `β⁺_j/β⁻_j` pair (cost λ) with
+    /// coefficients `±(x_ij − x_kj)` on the existing margin rows.
+    pub fn add_features(&mut self, ds: &Dataset, features: &[usize]) {
+        for &j in features {
+            if self.pos_j[j].is_some() {
+                continue;
+            }
+            // densify column j once, then O(1) per existing pair row
+            let mut xj = vec![0.0; ds.n()];
+            for (i, v) in ds.x.col_entries(j) {
+                xj[i] = v;
+            }
+            let mut pos_coefs = Vec::with_capacity(self.rows_t.len());
+            let mut neg_coefs = Vec::with_capacity(self.rows_t.len());
+            for (r, &t) in self.rows_t.iter().enumerate() {
+                let (i, k) = self.pairs[t];
+                let d = xj[i] - xj[k];
+                if d != 0.0 {
+                    pos_coefs.push((r, d));
+                    neg_coefs.push((r, -d));
+                }
+            }
+            let bp = self.solver.add_col(self.lambda, 0.0, f64::INFINITY, &pos_coefs);
+            let bm = self.solver.add_col(self.lambda, 0.0, f64::INFINITY, &neg_coefs);
+            self.pos_j[j] = Some(self.cols_j.len());
+            self.cols_j.push(j);
+            self.bp.push(bp);
+            self.bm.push(bm);
+        }
+    }
+
+    /// Change λ in place (costs of all β halves); keeps the basis for
+    /// primal warm starts — the λ-path driver's hook.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+        for t in 0..self.cols_j.len() {
+            self.solver.set_col_cost(self.bp[t], lambda);
+            self.solver.set_col_cost(self.bm[t], lambda);
+        }
+    }
+
+    /// Solve the restricted LP (warm-started).
+    pub fn solve(&mut self) -> Status {
+        self.solver.solve()
+    }
+
+    /// Restricted-LP objective.
+    pub fn objective(&self) -> f64 {
+        self.solver.objective()
+    }
+
+    /// Simplex iterations so far (primal + dual, cumulative).
+    pub fn simplex_iters(&self) -> usize {
+        self.solver.stats.primal_iters + self.solver.stats.dual_iters
+    }
+
+    /// Coefficients on the working set: `(j, β_j)` pairs.
+    pub fn beta_support(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::with_capacity(self.cols_j.len());
+        for (t, &j) in self.cols_j.iter().enumerate() {
+            let b = self.solver.col_value(self.bp[t]) - self.solver.col_value(self.bm[t]);
+            if b != 0.0 {
+                out.push((j, b));
+            }
+        }
+        out
+    }
+
+    /// Price left-out pairs: one margin matvec `m = Xβ`, then an O(|P|)
+    /// scan; returns `(t, 1 − (m_i − m_k))` for every violated `t ∉ P′`.
+    pub fn price_pairs(&self, ds: &Dataset, eps: f64) -> Vec<(usize, f64)> {
+        let support = self.beta_support();
+        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+        let mut m = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&cols, &vals, &mut m);
+        let mut out = Vec::new();
+        for (t, &(i, k)) in self.pairs.iter().enumerate() {
+            if self.row_pos[t].is_none() {
+                let viol = 1.0 - (m[i] - m[k]);
+                if viol > eps {
+                    out.push((t, viol));
+                }
+            }
+        }
+        out
+    }
+
+    /// Price left-out features: scatter the pair duals into
+    /// `v_i = Σ π_{(i,·)} − Σ π_{(·,i)}`, then `q = Xᵀv` through the
+    /// pricer; returns `(j, |q_j| − λ)` for every `j ∉ J` violating by
+    /// more than ε.
+    pub fn price_features(
+        &self,
+        ds: &Dataset,
+        pricer: &dyn Pricer,
+        eps: f64,
+    ) -> Vec<(usize, f64)> {
+        let mut v = vec![0.0; ds.n()];
+        for (r, &t) in self.rows_t.iter().enumerate() {
+            let pi = self.solver.row_dual(r);
+            if pi != 0.0 {
+                let (i, k) = self.pairs[t];
+                v[i] += pi;
+                v[k] -= pi;
+            }
+        }
+        let mut q = vec![0.0; ds.p()];
+        pricer.score(&v, &mut q);
+        let mut out = Vec::new();
+        for (j, &qj) in q.iter().enumerate() {
+            if self.pos_j[j].is_none() {
+                let viol = qj.abs() - self.lambda;
+                if viol > eps {
+                    out.push((j, viol));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// [`RestrictedRank`] adapted to the generic engine: both channels live
+/// (pairs are the constraint channel, features the column channel).
+pub struct RankProblem<'a, 'p> {
+    rr: RestrictedRank<'p>,
+    ds: &'a Dataset,
+    pricer: &'a dyn Pricer,
+}
+
+impl<'a, 'p> RankProblem<'a, 'p> {
+    /// Wrap a restricted model.
+    pub fn new(rr: RestrictedRank<'p>, ds: &'a Dataset, pricer: &'a dyn Pricer) -> Self {
+        Self { rr, ds, pricer }
+    }
+
+    /// The wrapped restricted model.
+    pub fn inner(&self) -> &RestrictedRank<'p> {
+        &self.rr
+    }
+
+    /// Change λ in place (warm-start preserving) — the path driver's hook.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.rr.set_lambda(lambda);
+    }
+}
+
+impl RestrictedProblem for RankProblem<'_, '_> {
+    fn solve(&mut self) -> Status {
+        self.rr.solve()
+    }
+    fn objective(&self) -> f64 {
+        self.rr.objective()
+    }
+    fn simplex_iters(&self) -> usize {
+        self.rr.simplex_iters()
+    }
+    fn price_rows(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        self.rr.price_pairs(self.ds, eps)
+    }
+    fn price_cols(&mut self, eps: f64) -> Vec<(usize, f64)> {
+        self.rr.price_features(self.ds, self.pricer, eps)
+    }
+    fn add_rows(&mut self, idx: &[usize]) {
+        self.rr.add_pairs(self.ds, idx);
+    }
+    fn add_cols(&mut self, idx: &[usize]) {
+        self.rr.add_features(self.ds, idx);
+    }
+}
+
+/// Package the restricted solution as an [`SvmSolution`]: `beta0` is 0
+/// (no intercept), `objective` is the FULL problem's value — pairwise
+/// hinge over every candidate pair plus `λ‖β‖₁`; `rows` holds the pair
+/// indices of the final working set.
+fn finish(
+    ds: &Dataset,
+    pairs: &[(usize, usize)],
+    rr: &RestrictedRank<'_>,
+    lambda: f64,
+    stats: GenStats,
+) -> SvmSolution {
+    let support = rr.beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = pairwise_hinge_support(ds, pairs, &cols_nz, &vals);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let mut cols = rr.j_set().to_vec();
+    cols.sort_unstable();
+    let mut rows = rr.t_set().to_vec();
+    rows.sort_unstable();
+    SvmSolution { beta, beta0: 0.0, objective: hinge + lambda * l1, stats, cols, rows }
+}
+
+/// Column-and-constraint generation for RankSVM over the given candidate
+/// pair set (typically [`ranking_pairs`]). Empty seeds default to 10
+/// spread pairs and the top-10 `|q_j|` features.
+pub fn ranksvm_generation(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &[(usize, usize)],
+    lambda: f64,
+    params: &GenParams,
+) -> SvmSolution {
+    let t_init = initial_pairs(pairs.len(), 10);
+    let j_init = initial_rank_features(ds, pairs, 10);
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut prob = RankProblem::new(
+        RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init),
+        ds,
+        &pricer,
+    );
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.rows_added += t_init.len();
+    stats.cols_added += j_init.len();
+    finish(ds, pairs, prob.inner(), lambda, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::baselines::ranksvm_full::solve_full_ranksvm;
+    use crate::data::synthetic::{generate_ranksvm, RankSpec};
+    use crate::rng::Xoshiro256;
+
+    fn small_ds(n: usize, p: usize, seed: u64) -> Dataset {
+        let spec = RankSpec { n, p, k0: 5.min(p), rho: 0.1, noise: 0.3, standardize: true };
+        generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn pairs_enumeration_is_correct() {
+        let pairs = ranking_pairs(&[3.0, 1.0, 2.0]);
+        assert_eq!(pairs, vec![(0, 1), (0, 2), (2, 1)]);
+        assert!(ranking_pairs(&[1.0, 1.0]).is_empty(), "ties produce no pairs");
+    }
+
+    #[test]
+    fn cg_matches_full_pairwise_lp() {
+        let ds = small_ds(20, 30, 601);
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 0.05 * lambda_max_rank(&ds, &pairs);
+        let backend = NativeBackend::new(&ds.x);
+        let full = solve_full_ranksvm(&ds, &pairs, lambda);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &params);
+        assert!(sol.stats.converged, "engine must report ε-optimality");
+        assert!(
+            (sol.objective - full.objective).abs() / full.objective.max(1e-9) < 1e-6,
+            "cg {} full {}",
+            sol.objective,
+            full.objective
+        );
+        // only a fraction of the O(n²) pairs should have been materialized
+        assert!(
+            sol.rows.len() < pairs.len(),
+            "working set {} of {} pairs",
+            sol.rows.len(),
+            pairs.len()
+        );
+    }
+
+    #[test]
+    fn lambda_above_max_gives_zero_solution() {
+        let ds = small_ds(15, 12, 602);
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 1.01 * lambda_max_rank(&ds, &pairs);
+        let backend = NativeBackend::new(&ds.x);
+        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &GenParams::default());
+        assert_eq!(sol.support_size(), 0, "beta must be zero above lambda_max");
+    }
+
+    #[test]
+    fn solution_orders_informative_pairs() {
+        let ds = small_ds(30, 20, 603);
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 0.02 * lambda_max_rank(&ds, &pairs);
+        let backend = NativeBackend::new(&ds.x);
+        let params = GenParams { eps: 1e-7, ..Default::default() };
+        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &params);
+        // scoring function must get most pairs right (concordance)
+        let mut m = vec![0.0; ds.n()];
+        ds.x.matvec(&sol.beta, &mut m);
+        let good = pairs.iter().filter(|&&(i, k)| m[i] > m[k]).count();
+        assert!(
+            good * 10 >= pairs.len() * 7,
+            "only {good}/{} pairs concordant",
+            pairs.len()
+        );
+    }
+
+    #[test]
+    fn feature_pricing_matches_brute_force() {
+        let ds = small_ds(15, 25, 604);
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 0.1 * lambda_max_rank(&ds, &pairs);
+        let t_init = initial_pairs(pairs.len(), 8);
+        let j_init = initial_rank_features(&ds, &pairs, 4);
+        let mut rr = RestrictedRank::new(&ds, &pairs, lambda, &t_init, &j_init);
+        assert_eq!(rr.solve(), Status::Optimal);
+
+        let backend = NativeBackend::new(&ds.x);
+        let pricer = BackendPricer::new(&backend, 1);
+        let fast = rr.price_features(&ds, &pricer, 1e-9);
+
+        // brute force: q_j = Σ_rows π_t (x_ij − x_kj) feature by feature
+        let mut slow = Vec::new();
+        for j in 0..ds.p() {
+            if rr.pos_j[j].is_some() {
+                continue;
+            }
+            let mut qj = 0.0;
+            for (r, &t) in rr.t_set().iter().enumerate() {
+                let (i, k) = pairs[t];
+                qj += rr.solver.row_dual(r) * (ds.x.get(i, j) - ds.x.get(k, j));
+            }
+            let viol = qj.abs() - lambda;
+            if viol > 1e-9 {
+                slow.push((j, viol));
+            }
+        }
+        assert_eq!(fast.len(), slow.len(), "fast {fast:?} slow {slow:?}");
+        for (&(jf, vf), &(js, vs)) in fast.iter().zip(&slow) {
+            assert_eq!(jf, js);
+            assert!((vf - vs).abs() < 1e-8, "j={jf}: fast {vf} slow {vs}");
+        }
+    }
+
+    #[test]
+    fn pair_duals_in_unit_box() {
+        let ds = small_ds(12, 10, 605);
+        let pairs = ranking_pairs(&ds.y);
+        let lambda = 0.1 * lambda_max_rank(&ds, &pairs);
+        let all_t: Vec<usize> = (0..pairs.len()).collect();
+        let all_j: Vec<usize> = (0..ds.p()).collect();
+        let mut rr = RestrictedRank::new(&ds, &pairs, lambda, &all_t, &all_j);
+        assert_eq!(rr.solve(), Status::Optimal);
+        for r in 0..rr.t_set().len() {
+            let pi = rr.solver.row_dual(r);
+            assert!((-1e-7..=1.0 + 1e-7).contains(&pi), "π[{r}] = {pi} outside [0,1]");
+        }
+    }
+
+    #[test]
+    fn warm_lambda_path_matches_fresh_solves() {
+        let ds = small_ds(18, 15, 606);
+        let pairs = ranking_pairs(&ds.y);
+        let lmax = lambda_max_rank(&ds, &pairs);
+        let backend = NativeBackend::new(&ds.x);
+        let params = GenParams { eps: 1e-9, ..Default::default() };
+        let pricer = BackendPricer::new(&backend, 1);
+        let t_init = initial_pairs(pairs.len(), 10);
+        let j_init = initial_rank_features(&ds, &pairs, 5);
+        let mut prob = RankProblem::new(
+            RestrictedRank::new(&ds, &pairs, 0.5 * lmax, &t_init, &j_init),
+            &ds,
+            &pricer,
+        );
+        let engine = GenEngine::new(&params);
+        for frac in [0.5, 0.2, 0.08] {
+            let lambda = frac * lmax;
+            prob.set_lambda(lambda);
+            engine.run(&mut prob);
+            let support = prob.inner().beta_support();
+            let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+            let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+            let warm = pairwise_hinge_support(&ds, &pairs, &cols, &vals)
+                + lambda * vals.iter().map(|v| v.abs()).sum::<f64>();
+            let fresh = ranksvm_generation(&ds, &backend, &pairs, lambda, &params).objective;
+            assert!(
+                (warm - fresh).abs() / fresh.max(1e-9) < 1e-5,
+                "λ={lambda}: warm {warm} fresh {fresh}"
+            );
+        }
+    }
+}

@@ -5,20 +5,25 @@
 
 use cutgen::backend::{Backend, NativeBackend};
 use cutgen::baselines::admm::{admm_l1svm, AdmmParams};
+use cutgen::baselines::dantzig_full::solve_full_dantzig;
 use cutgen::baselines::full_lp::{solve_full_group, solve_full_l1};
 use cutgen::baselines::psm::psm_l1svm;
+use cutgen::baselines::ranksvm_full::solve_full_ranksvm;
 use cutgen::baselines::slope_full::solve_slope_full;
 use cutgen::coordinator::group::{group_column_generation, initial_groups};
 use cutgen::coordinator::l1svm::{column_generation, constraint_generation};
 use cutgen::coordinator::slope::slope_column_constraint_generation;
 use cutgen::coordinator::GenParams;
 use cutgen::data::synthetic::{
-    generate_group, generate_l1, generate_sparse_text, GroupSpec, SparseTextSpec, SyntheticSpec,
+    generate_dantzig, generate_group, generate_l1, generate_ranksvm, generate_sparse_text,
+    DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use cutgen::data::{libsvm, Dataset};
 use cutgen::fom::fista::{fista, FistaParams, Penalty};
 use cutgen::fom::objective::{bh_slope_weights, l1_objective};
 use cutgen::rng::Xoshiro256;
+use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
+use cutgen::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
 
 fn synth(n: usize, p: usize, seed: u64) -> Dataset {
     generate_l1(&SyntheticSpec::paper_default(n, p), &mut Xoshiro256::seed_from_u64(seed))
@@ -285,6 +290,112 @@ fn parallel_pricing_produces_identical_working_sets() {
         );
         assert_eq!(serial.objective, parallel.objective);
     }
+}
+
+/// RankSVM through the engine must match the independent full pairwise
+/// LP (every comparison pair materialized) to ≤1e-6 relative objective
+/// gap at tight ε.
+#[test]
+fn ranksvm_engine_matches_full_pairwise_lp() {
+    let spec = RankSpec { n: 22, p: 25, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+    let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(61));
+    let pairs = ranking_pairs(&ds.y);
+    let lambda = 0.05 * lambda_max_rank(&ds, &pairs);
+    let full = solve_full_ranksvm(&ds, &pairs, lambda).objective;
+    let backend = NativeBackend::new(&ds.x);
+    let sol = ranksvm_generation(
+        &ds,
+        &backend,
+        &pairs,
+        lambda,
+        &GenParams { eps: 1e-9, ..Default::default() },
+    );
+    assert!(
+        (sol.objective - full).abs() / full.max(1e-9) <= 1e-6,
+        "engine {} full {}",
+        sol.objective,
+        full
+    );
+    assert!(
+        sol.rows.len() < pairs.len(),
+        "only {} of {} pairs should be materialized",
+        sol.rows.len(),
+        pairs.len()
+    );
+}
+
+/// Dantzig selector through the engine must match the independent full
+/// LP (all p correlation rows, explicit Gram) to ≤1e-6 relative gap.
+#[test]
+fn dantzig_engine_matches_full_lp() {
+    let spec = DantzigSpec { n: 35, p: 30, k0: 5, rho: 0.1, sigma: 0.4, standardize: true };
+    let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(62));
+    let lambda = 0.3 * lambda_max_dantzig(&ds);
+    let full = solve_full_dantzig(&ds, lambda).objective;
+    let backend = NativeBackend::new(&ds.x);
+    let sol = dantzig_generation(
+        &ds,
+        &backend,
+        lambda,
+        &[],
+        &GenParams { eps: 1e-9, ..Default::default() },
+    );
+    assert!(
+        (sol.objective - full).abs() / full.max(1e-9) <= 1e-6,
+        "engine {} full {}",
+        sol.objective,
+        full
+    );
+}
+
+/// The thread knob stays a pure speed knob on the new workloads too:
+/// identical working sets and objectives at 1 and 4 pricing threads.
+#[test]
+fn workload_parallel_pricing_identical() {
+    let spec = DantzigSpec { n: 30, p: 80, k0: 6, rho: 0.1, sigma: 0.4, standardize: true };
+    let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(63));
+    let lambda = 0.25 * lambda_max_dantzig(&ds);
+    let backend = NativeBackend::new(&ds.x);
+    let serial = dantzig_generation(
+        &ds,
+        &backend,
+        lambda,
+        &[],
+        &GenParams { eps: 1e-7, threads: 1, ..Default::default() },
+    );
+    let parallel = dantzig_generation(
+        &ds,
+        &backend,
+        lambda,
+        &[],
+        &GenParams { eps: 1e-7, threads: 4, ..Default::default() },
+    );
+    assert_eq!(serial.cols, parallel.cols, "working set J must be identical");
+    assert_eq!(serial.rows, parallel.rows, "working set I must be identical");
+    assert_eq!(serial.objective, parallel.objective);
+
+    let rspec = RankSpec { n: 25, p: 60, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+    let rds = generate_ranksvm(&rspec, &mut Xoshiro256::seed_from_u64(64));
+    let pairs = ranking_pairs(&rds.y);
+    let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
+    let rbackend = NativeBackend::new(&rds.x);
+    let a = ranksvm_generation(
+        &rds,
+        &rbackend,
+        &pairs,
+        rlam,
+        &GenParams { eps: 1e-7, threads: 1, ..Default::default() },
+    );
+    let b = ranksvm_generation(
+        &rds,
+        &rbackend,
+        &pairs,
+        rlam,
+        &GenParams { eps: 1e-7, threads: 4, ..Default::default() },
+    );
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.objective, b.objective);
 }
 
 /// PJRT backend (when artifacts exist) must drive column generation to
