@@ -321,6 +321,44 @@ fn main() {
         );
     }
 
+    // 9. serve: requests through the protocol handler — cold (cache off)
+    // vs warm (cache primed, snapshot-seeded restricted model), then a
+    // fixed 8-request batch drained by 1 vs 4 worker threads.
+    {
+        use cutgen::serve::ServeState;
+        let state = ServeState::new(64);
+        let (sn, sp) = if smoke { (40, 200) } else { (100, 2000) };
+        let reg = format!(
+            "{{\"op\":\"register\",\"name\":\"b\",\"synthetic\":\
+             {{\"kind\":\"l1\",\"n\":{sn},\"p\":{sp},\"seed\":1}}}}"
+        );
+        assert!(state.handle_line(&reg).contains("\"ok\":true"), "bench dataset registration");
+        let cold_req =
+            r#"{"op":"solve","dataset":"b","workload":"l1svm","lambda_frac":0.05,"cache":false}"#;
+        bench(&mut recs, &format!("serve solve cold n={sn} p={sp}"), 0.0, || {
+            black_box(state.handle_line(cold_req));
+        });
+        let warm_req = r#"{"op":"solve","dataset":"b","workload":"l1svm","lambda_frac":0.05}"#;
+        let primed = state.handle_line(warm_req); // prime the cache
+        assert!(primed.contains("\"ok\":true"));
+        bench(&mut recs, &format!("serve solve warm n={sn} p={sp}"), 0.0, || {
+            black_box(state.handle_line(warm_req));
+        });
+        for workers in [1usize, 4] {
+            bench(&mut recs, &format!("serve batch8 warm workers={workers}"), 0.0, || {
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        scope.spawn(|| {
+                            for _ in 0..(8 / workers) {
+                                black_box(state.handle_line(warm_req));
+                            }
+                        });
+                    }
+                });
+            });
+        }
+    }
+
     if json {
         write_json(&recs, if smoke { "smoke" } else { "default" });
     }

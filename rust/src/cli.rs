@@ -12,6 +12,9 @@
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
+//! cutgen serve    [--port 7878] [--host 127.0.0.1] [--workers W]
+//!                 [--cache-cap N] [--stdin]
+//! cutgen client   [--port 7878] [--host H] --send '<json>' | --file requests.jsonl
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
 
@@ -93,6 +96,8 @@ COMMANDS
   path                   warm-started regularization path
   ranksvm                pairwise-hinge L1 ranking (constraint generation)
   dantzig                Dantzig selector (column-and-constraint generation)
+  serve                  persistent solve service (warm-start cache; see docs/serving.md)
+  client                 send protocol requests to a running server
   bench                  regenerate a paper table/figure (or `--exp all`)
   help                   this text
 
@@ -111,6 +116,8 @@ pub fn main_with(args: Args) -> Result<()> {
         "path" => path_cmd(&args),
         "ranksvm" => ranksvm_cmd(&args),
         "dantzig" => dantzig_cmd(&args),
+        "serve" => serve_cmd(&args),
+        "client" => client_cmd(&args),
         "bench" => bench(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -180,7 +187,8 @@ fn datagen(args: &Args) -> Result<()> {
 
 fn load_or_generate(args: &Args) -> Result<Dataset> {
     if let Some(file) = args.get("data") {
-        let ds = libsvm::read_file(file, 0)?;
+        // one loading path with the serve registry (labels mapped to ±1)
+        let ds = crate::serve::registry::load_libsvm(file, false)?;
         println!("loaded {} ({} x {}, nnz {})", file, ds.n(), ds.p(), ds.x.nnz());
         Ok(ds)
     } else {
@@ -334,7 +342,11 @@ fn path_cmd(args: &Args) -> Result<()> {
 /// two-class problems, so `train`'s ±1 generator does not apply).
 fn load_or_generate_regression(args: &Args, rank: bool) -> Result<Dataset> {
     if let Some(file) = args.get("data") {
-        let ds = libsvm::read_file(file, 0)?;
+        // one loading path with the serve registry; raw labels preserved —
+        // coercing responses to ±1 would destroy the ranking/regression
+        // targets (this is what used to make these subcommands
+        // synthetic-only in practice)
+        let ds = crate::serve::registry::load_libsvm(file, true)?;
         println!("loaded {} ({} x {}, nnz {})", file, ds.n(), ds.p(), ds.x.nnz());
         return Ok(ds);
     }
@@ -458,6 +470,52 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cutgen serve`: run the persistent solve service. `--stdin` speaks
+/// the protocol over stdin/stdout (tests, CI, piping); otherwise a TCP
+/// listener with a worker pool. See `docs/serving.md`.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cache_cap = args.get_usize("cache-cap", crate::serve::DEFAULT_CACHE_CAP)?;
+    let state = crate::serve::ServeState::new(cache_cap);
+    if args.get("stdin").is_some() {
+        crate::serve::transport::serve_stdin(&state)?;
+        return Ok(());
+    }
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let port = args.get_usize("port", 7878)?;
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let addr = format!("{host}:{port}");
+    let listener = std::net::TcpListener::bind(&addr)
+        .with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "cutgen serve: listening on {addr} ({workers} workers, cache cap {cache_cap}); \
+         send {{\"op\":\"shutdown\"}} to stop"
+    );
+    crate::serve::transport::serve_tcp(&state, listener, workers)?;
+    Ok(())
+}
+
+/// `cutgen client`: send request lines to a running server and print the
+/// response lines. `--send` takes one inline JSON request; `--file`
+/// streams a `.jsonl` file through one connection.
+fn client_cmd(args: &Args) -> Result<()> {
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let addr = format!("{host}:{}", args.get_usize("port", 7878)?);
+    if let Some(line) = args.get("send") {
+        println!("{}", crate::serve::transport::client_send(&addr, line)?);
+        return Ok(());
+    }
+    if let Some(file) = args.get("file") {
+        let text = std::fs::read_to_string(file)
+            .with_context(|| format!("reading request file {file}"))?;
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        for resp in crate::serve::transport::client_send_many(&addr, &lines)? {
+            println!("{resp}");
+        }
+        return Ok(());
+    }
+    bail!("client needs --send '<json-request>' or --file <requests.jsonl>")
+}
+
 fn bench(args: &Args) -> Result<()> {
     let scale = args
         .get("scale")
@@ -530,6 +588,12 @@ mod tests {
         // --grid and an explicit non-gen --method conflict loudly
         let d = args(&["dantzig", "--synthetic", "20,12", "--grid", "3", "--method", "full-lp"]);
         assert!(main_with(d).is_err());
+    }
+
+    #[test]
+    fn client_without_request_errors() {
+        let a = args(&["client", "--port", "1"]);
+        assert!(main_with(a).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
-use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem, Snapshot, WorkingSet};
 use crate::fom::objective::hinge_loss_support;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
@@ -105,6 +105,12 @@ impl<'g> RestrictedGroup<'g> {
         }
     }
 
+    /// Worker threads for the dense dual-simplex pricing row (see
+    /// [`crate::simplex::SimplexSolver::set_threads`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.solver.set_threads(threads);
+    }
+
     /// Solve (warm-started).
     pub fn solve(&mut self) -> Status {
         self.solver.solve()
@@ -188,6 +194,16 @@ impl<'a, 'g> GroupProblem<'a, 'g> {
     }
 }
 
+impl Snapshot for GroupProblem<'_, '_> {
+    fn export_working_set(&self) -> WorkingSet {
+        // column channel carries *group* indices; there is no row channel
+        WorkingSet { cols: self.rg.g_set().to_vec(), rows: Vec::new() }
+    }
+    fn import_working_set(&mut self, ws: &WorkingSet) {
+        self.rg.add_groups(self.ds, &ws.cols);
+    }
+}
+
 impl RestrictedProblem for GroupProblem<'_, '_> {
     fn solve(&mut self) -> Status {
         self.rg.solve()
@@ -230,7 +246,9 @@ pub fn group_column_generation(
     params: &GenParams,
 ) -> SvmSolution {
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob = GroupProblem::new(RestrictedGroup::new(ds, groups, lambda, g_init), ds, &pricer);
+    let mut rg = RestrictedGroup::new(ds, groups, lambda, g_init);
+    rg.set_threads(params.threads);
+    let mut prob = GroupProblem::new(rg, ds, &pricer);
     let mut stats: GenStats = GenEngine::new(params).run(&mut prob);
     stats.cols_added += g_init.len();
     let rg = prob.inner();

@@ -12,7 +12,9 @@
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
-use crate::engine::{BackendPricer, GenEngine, NullPricer, Pricer, RestrictedProblem};
+use crate::engine::{
+    BackendPricer, GenEngine, NullPricer, Pricer, RestrictedProblem, Snapshot, WorkingSet,
+};
 use crate::fom::objective::hinge_loss_support;
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
@@ -137,6 +139,12 @@ impl RestrictedL1 {
         }
     }
 
+    /// Worker threads for the dense dual-simplex pricing row (see
+    /// [`crate::simplex::SimplexSolver::set_threads`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.solver.set_threads(threads);
+    }
+
     /// Solve the restricted LP (warm-started).
     pub fn solve(&mut self) -> Status {
         self.solver.solve()
@@ -254,6 +262,16 @@ impl<'a> L1Problem<'a> {
     }
 }
 
+impl Snapshot for L1Problem<'_> {
+    fn export_working_set(&self) -> WorkingSet {
+        WorkingSet { cols: self.rl1.j_set().to_vec(), rows: self.rl1.i_set().to_vec() }
+    }
+    fn import_working_set(&mut self, ws: &WorkingSet) {
+        self.rl1.add_samples(self.ds, &ws.rows);
+        self.rl1.add_features(self.ds, &ws.cols);
+    }
+}
+
 impl RestrictedProblem for L1Problem<'_> {
     fn solve(&mut self) -> Status {
         self.rl1.solve()
@@ -327,8 +345,9 @@ pub fn column_generation(
 ) -> SvmSolution {
     let all_i: Vec<usize> = (0..ds.n()).collect();
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob =
-        L1Problem::new(RestrictedL1::new(ds, lambda, &all_i, j_init), ds, &pricer, false, true);
+    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, j_init);
+    rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.cols_added += j_init.len();
     finish(ds, prob.inner(), lambda, stats)
@@ -350,8 +369,9 @@ pub fn constraint_generation(
     };
     // column channel disabled: every column is already in the model
     let pricer = NullPricer;
-    let mut prob =
-        L1Problem::new(RestrictedL1::new(ds, lambda, &seed, &all_j), ds, &pricer, true, false);
+    let mut rl1 = RestrictedL1::new(ds, lambda, &seed, &all_j);
+    rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, true, false);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.rows_added += seed.len();
     finish(ds, prob.inner(), lambda, stats)
@@ -381,8 +401,9 @@ pub fn column_constraint_generation(
         j_init.to_vec()
     };
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob =
-        L1Problem::new(RestrictedL1::new(ds, lambda, &seed_i, &seed_j), ds, &pricer, true, true);
+    let mut rl1 = RestrictedL1::new(ds, lambda, &seed_i, &seed_j);
+    rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, true, true);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.rows_added += seed_i.len();
     stats.cols_added += seed_j.len();

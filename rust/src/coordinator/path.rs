@@ -84,13 +84,9 @@ pub fn regularization_path(
     let all_i: Vec<usize> = (0..ds.n()).collect();
     let init = initial_columns(ds, j0);
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob = L1Problem::new(
-        RestrictedL1::new(ds, lambdas[0], &all_i, &init),
-        ds,
-        &pricer,
-        false,
-        true,
-    );
+    let mut rl1 = RestrictedL1::new(ds, lambdas[0], &all_i, &init);
+    rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
     let engine = GenEngine::new(params);
     let mut stats = GenStats { cols_added: init.len(), ..Default::default() };
     let mut out = Vec::with_capacity(lambdas.len());
@@ -160,8 +156,9 @@ pub fn dantzig_path(
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
     let seed = initial_features(ds, j0);
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob =
-        DantzigProblem::new(RestrictedDantzig::new(ds, lambdas[0], &seed), ds, &pricer);
+    let mut rd = RestrictedDantzig::new(ds, lambdas[0], &seed);
+    rd.set_threads(params.threads);
+    let mut prob = DantzigProblem::new(rd, ds, &pricer);
     let engine = GenEngine::new(params);
     let mut stats =
         GenStats { cols_added: seed.len(), rows_added: seed.len(), ..Default::default() };
@@ -198,11 +195,9 @@ pub fn ranksvm_path(
     let t_init = initial_pairs(pairs.len(), j0);
     let j_init = initial_rank_features(ds, pairs, j0);
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob = RankProblem::new(
-        RestrictedRank::new(ds, pairs, lambdas[0], &t_init, &j_init),
-        ds,
-        &pricer,
-    );
+    let mut rr = RestrictedRank::new(ds, pairs, lambdas[0], &t_init, &j_init);
+    rr.set_threads(params.threads);
+    let mut prob = RankProblem::new(rr, ds, &pricer);
     let engine = GenEngine::new(params);
     let mut stats = GenStats {
         cols_added: j_init.len(),

@@ -56,6 +56,21 @@ impl From<std::io::Error> for LibsvmError {
 /// mapped to ±1 (any value > 0 → +1). `min_cols` lets callers force the
 /// feature-space width when a split file doesn't mention trailing features.
 pub fn read<R: BufRead>(reader: R, min_cols: usize) -> Result<Dataset, LibsvmError> {
+    read_impl(reader, min_cols, true)
+}
+
+/// Like [`read`], but labels are kept as-is — the loading path for
+/// regression-style responses (RankSVM relevance scores, Dantzig-selector
+/// targets), where coercing `y` to ±1 would destroy the problem.
+pub fn read_raw<R: BufRead>(reader: R, min_cols: usize) -> Result<Dataset, LibsvmError> {
+    read_impl(reader, min_cols, false)
+}
+
+fn read_impl<R: BufRead>(
+    reader: R,
+    min_cols: usize,
+    map_labels: bool,
+) -> Result<Dataset, LibsvmError> {
     let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
     let mut max_col = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
@@ -69,7 +84,15 @@ pub fn read<R: BufRead>(reader: R, min_cols: usize) -> Result<Dataset, LibsvmErr
         let label: f64 = label_tok
             .parse()
             .map_err(|_| LibsvmError::BadLabel { line: lineno + 1, token: label_tok.into() })?;
-        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let label = if map_labels {
+            if label > 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        } else {
+            label
+        };
         let mut feats = Vec::new();
         for t in toks {
             if t.starts_with('#') {
@@ -104,10 +127,16 @@ pub fn read<R: BufRead>(reader: R, min_cols: usize) -> Result<Dataset, LibsvmErr
     Ok(Dataset { x: Design::sparse(coo.to_csr()), y })
 }
 
-/// Read a libsvm file from disk.
+/// Read a libsvm file from disk (labels mapped to ±1).
 pub fn read_file<P: AsRef<Path>>(path: P, min_cols: usize) -> Result<Dataset, LibsvmError> {
     let f = std::fs::File::open(path)?;
     read(std::io::BufReader::new(f), min_cols)
+}
+
+/// Read a libsvm file from disk keeping raw labels (see [`read_raw`]).
+pub fn read_file_raw<P: AsRef<Path>>(path: P, min_cols: usize) -> Result<Dataset, LibsvmError> {
+    let f = std::fs::File::open(path)?;
+    read_raw(std::io::BufReader::new(f), min_cols)
 }
 
 /// Write a (sparse or dense) dataset in libsvm format.
@@ -115,7 +144,15 @@ pub fn write_file<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<(), LibsvmErr
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     for i in 0..ds.n() {
-        write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        // ±1 labels keep the conventional tokens; anything else (RankSVM
+        // relevances, regression targets) round-trips verbatim
+        if ds.y[i] == 1.0 {
+            write!(w, "+1")?;
+        } else if ds.y[i] == -1.0 {
+            write!(w, "-1")?;
+        } else {
+            write!(w, "{}", ds.y[i])?;
+        }
         match &ds.x {
             Design::Dense(m) => {
                 for (j, v) in m.row(i).iter().enumerate() {
@@ -170,6 +207,18 @@ mod tests {
     fn labels_mapped_to_pm1() {
         let ds = read(Cursor::new("3 1:1\n0 1:1\n-2 1:1\n"), 0).unwrap();
         assert_eq!(ds.y, vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn raw_labels_survive_read_and_roundtrip() {
+        let ds = read_raw(Cursor::new("3.5 1:1\n0 1:1\n-2 2:0.5\n"), 0).unwrap();
+        assert_eq!(ds.y, vec![3.5, 0.0, -2.0]);
+        // raw responses round-trip through the writer
+        let path = std::env::temp_dir().join("cutgen_libsvm_raw_roundtrip.txt");
+        write_file(&ds, &path).unwrap();
+        let back = read_file_raw(&path, ds.p()).unwrap();
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

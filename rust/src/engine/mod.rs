@@ -82,6 +82,59 @@ pub struct GenStats {
     pub stalled: bool,
 }
 
+/// A serializable snapshot of a restricted problem's working sets.
+///
+/// This is the unit the serve layer's warm-start cache stores: the
+/// indices of every column and row currently in a restricted model,
+/// cheap to export after a solve and restorable into a *fresh*
+/// [`RestrictedProblem`] (via [`Snapshot::import_working_set`] or by
+/// seeding the workload's constructor), so a solve at a nearby λ
+/// resumes generation from a converged working set instead of starting
+/// cold.
+///
+/// Index spaces are the workload's own: features for L1/Slope columns,
+/// groups for Group-SVM, comparison-pair indices for RankSVM rows,
+/// correlation-row features for the Dantzig selector. Slope's epigraph
+/// cuts are *not* index-addressable (they are weight vectors generated
+/// from incumbents), so its snapshot carries columns only and the cuts
+/// regenerate in a few engine rounds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkingSet {
+    /// Column-channel indices, insertion order.
+    pub cols: Vec<usize>,
+    /// Row-channel indices, insertion order.
+    pub rows: Vec<usize>,
+}
+
+impl WorkingSet {
+    /// Whether both channels are empty.
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty() && self.rows.is_empty()
+    }
+
+    /// Total number of indices across both channels.
+    pub fn len(&self) -> usize {
+        self.cols.len() + self.rows.len()
+    }
+}
+
+/// Uniform working-set export/import for restricted problems.
+///
+/// Every workload adapter implements this next to [`RestrictedProblem`]:
+/// `export_working_set` reads the current sets out of the model,
+/// `import_working_set` unions a previously exported snapshot into the
+/// model (indices already present are skipped — every workload's `add_*`
+/// dedupes). Importing preserves whatever invariants the workload's own
+/// expansion path maintains (e.g. the Dantzig `I ⊆ J` feasibility
+/// invariant, because import routes through the same `add_*` methods the
+/// engine uses).
+pub trait Snapshot {
+    /// Export the current working sets.
+    fn export_working_set(&self) -> WorkingSet;
+    /// Union a snapshot's working sets into this problem.
+    fn import_working_set(&mut self, ws: &WorkingSet);
+}
+
 /// What the engine needs from a restricted LP.
 ///
 /// `price_*` return `(index, violation)` pairs for every candidate whose

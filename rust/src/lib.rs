@@ -11,6 +11,7 @@ pub mod fom;
 pub mod linalg;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simplex;
 pub mod sparse;
 pub mod workloads;

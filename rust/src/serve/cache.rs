@@ -1,0 +1,201 @@
+//! The warm-start cache: `(dataset fingerprint, workload, λ-bucket)` →
+//! working-set snapshot.
+//!
+//! The paper's central observation (Algorithm 2) is that restricted
+//! models warm-started from a nearby λ converge in a handful of rounds.
+//! The cache makes that observation request-shaped: after every solve the
+//! final [`WorkingSet`] is stored under a logarithmic λ-bucket, and a
+//! later request for a nearby λ (same data, same workload) seeds its
+//! restricted model from the snapshot instead of the cold heuristics.
+//! Lookups scan outward from the requested bucket up to
+//! [`NEIGHBORHOOD`] buckets, so a hit means the cached λ is within a
+//! factor of roughly `STEP^(NEIGHBORHOOD + ½)` of the request.
+//!
+//! Bounded: beyond `cap` entries the oldest-inserted key is evicted
+//! (generation working sets are small — tens of indices — so the default
+//! cap is generous).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::protocol::Workload;
+use crate::engine::WorkingSet;
+
+/// Natural log of the bucket ratio (1.25): buckets are ~25% wide in λ.
+const LN_STEP: f64 = 0.223_143_551_314_209_76;
+
+/// How many buckets away a lookup may wander on each side.
+pub const NEIGHBORHOOD: i64 = 2;
+
+/// Logarithmic λ-bucket index (non-positive or non-finite λ's share one
+/// out-of-band bucket).
+pub fn lambda_bucket(lambda: f64) -> i64 {
+    if lambda > 0.0 && lambda.is_finite() {
+        (lambda.ln() / LN_STEP).round() as i64
+    } else {
+        i64::MIN / 2
+    }
+}
+
+/// Cache key: which data, which estimator, which λ-neighborhood.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Dataset content fingerprint (see `serve::registry::fingerprint`).
+    pub fingerprint: u64,
+    /// Workload the snapshot came from.
+    pub workload: Workload,
+    /// λ-bucket (see [`lambda_bucket`]).
+    pub bucket: i64,
+}
+
+/// A stored snapshot plus the solve it came from.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    /// λ the snapshot was converged at.
+    pub lambda: f64,
+    /// Full-problem objective of that solve.
+    pub objective: f64,
+    /// The exported working sets.
+    pub ws: WorkingSet,
+}
+
+/// A cache hit: the entry plus how many buckets away it was found.
+#[derive(Clone, Debug)]
+pub struct CacheHit {
+    /// The matched snapshot.
+    pub entry: CacheEntry,
+    /// Bucket distance (0 = exact bucket).
+    pub distance: i64,
+}
+
+/// Bounded warm-start cache with hit/miss counters.
+pub struct WarmCache {
+    map: HashMap<CacheKey, CacheEntry>,
+    /// Keys in insertion order (each key appears once) for FIFO eviction.
+    order: VecDeque<CacheKey>,
+    cap: usize,
+    /// Lookups that found a snapshot.
+    pub hits: u64,
+    /// Lookups that found nothing within the neighborhood.
+    pub misses: u64,
+}
+
+impl WarmCache {
+    /// Cache bounded to `cap` entries (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of stored snapshots.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Find the nearest snapshot for `(fingerprint, workload)` within
+    /// [`NEIGHBORHOOD`] buckets of λ, preferring smaller distances.
+    pub fn lookup(
+        &mut self,
+        fingerprint: u64,
+        workload: Workload,
+        lambda: f64,
+    ) -> Option<CacheHit> {
+        let bucket = lambda_bucket(lambda);
+        for distance in 0..=NEIGHBORHOOD {
+            for b in [bucket - distance, bucket + distance] {
+                let key = CacheKey { fingerprint, workload, bucket: b };
+                if let Some(entry) = self.map.get(&key) {
+                    self.hits += 1;
+                    return Some(CacheHit { entry: entry.clone(), distance });
+                }
+                if distance == 0 {
+                    break; // bucket − 0 == bucket + 0
+                }
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Store a snapshot under λ's bucket (replacing that bucket's prior
+    /// snapshot, if any) and evict the oldest key beyond the cap.
+    pub fn insert(&mut self, fingerprint: u64, workload: Workload, entry: CacheEntry) {
+        let key = CacheKey { fingerprint, workload, bucket: lambda_bucket(entry.lambda) };
+        if self.map.insert(key, entry).is_none() {
+            self.order.push_back(key);
+        }
+        while self.map.len() > self.cap {
+            let oldest = self.order.pop_front().expect("order tracks map");
+            self.map.remove(&oldest);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(lambda: f64) -> CacheEntry {
+        CacheEntry {
+            lambda,
+            objective: 1.0,
+            ws: WorkingSet { cols: vec![1, 2], rows: vec![] },
+        }
+    }
+
+    #[test]
+    fn buckets_are_logarithmic() {
+        assert_eq!(lambda_bucket(1.0), 0);
+        assert_eq!(lambda_bucket(1.25), 1);
+        assert_eq!(lambda_bucket(0.8), -1);
+        // within-bucket wiggle maps to the same index
+        assert_eq!(lambda_bucket(0.05), lambda_bucket(0.052));
+        // degenerate λ's share the out-of-band bucket
+        assert_eq!(lambda_bucket(0.0), lambda_bucket(-3.0));
+        assert_ne!(lambda_bucket(0.0), lambda_bucket(1e-300));
+    }
+
+    #[test]
+    fn lookup_prefers_nearest_bucket() {
+        let mut c = WarmCache::new(8);
+        c.insert(7, Workload::L1svm, entry(1.0));
+        c.insert(7, Workload::L1svm, entry(2.0)); // ~3 buckets up
+        let hit = c.lookup(7, Workload::L1svm, 1.02).unwrap();
+        assert_eq!(hit.entry.lambda, 1.0);
+        assert_eq!(hit.distance, 0);
+        // a nearby-but-different bucket still hits, with distance > 0
+        let hit = c.lookup(7, Workload::L1svm, 1.35).unwrap();
+        assert!(hit.distance > 0);
+        // far λ misses
+        assert!(c.lookup(7, Workload::L1svm, 50.0).is_none());
+        // other fingerprints and workloads are isolated
+        assert!(c.lookup(8, Workload::L1svm, 1.0).is_none());
+        assert!(c.lookup(7, Workload::Dantzig, 1.0).is_none());
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 3);
+    }
+
+    #[test]
+    fn eviction_is_fifo_and_bounded() {
+        let mut c = WarmCache::new(2);
+        c.insert(1, Workload::L1svm, entry(1.0));
+        c.insert(1, Workload::L1svm, entry(10.0));
+        c.insert(1, Workload::L1svm, entry(100.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_none(), "oldest evicted");
+        assert!(c.lookup(1, Workload::L1svm, 10.0).is_some());
+        assert!(c.lookup(1, Workload::L1svm, 100.0).is_some());
+        // same-bucket reinsert replaces in place without growing the order
+        c.insert(1, Workload::L1svm, entry(100.0));
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -1,0 +1,580 @@
+//! The persistent solve service: a zero-dependency daemon that amortizes
+//! dataset loading and working-set discovery across requests.
+//!
+//! Every one-shot `cutgen` invocation rebuilds everything from scratch;
+//! this subsystem keeps the expensive state alive between requests:
+//!
+//! * [`registry::Registry`] — each design matrix is loaded and
+//!   fingerprinted **once** and shared via `Arc` across requests and
+//!   worker threads;
+//! * [`cache::WarmCache`] — after every solve the final working sets are
+//!   snapshotted (`engine::Snapshot`) under a `(dataset, workload,
+//!   λ-bucket)` key; a later request near a previously solved λ seeds
+//!   its restricted model from the snapshot and resumes generation
+//!   instead of starting cold — Algorithm 2's warm-start observation,
+//!   request-shaped;
+//! * a **grid endpoint** that routes through the warm-started λ-path
+//!   drivers in `coordinator::path`.
+//!
+//! The protocol is line-delimited JSON (one request object per line, one
+//! response per line, in order — [`json`] is the hand-rolled
+//! reader/writer) over two transports ([`transport`]): a
+//! `std::net::TcpListener` with a scoped worker pool, and a
+//! stdin/stdout mode (`cutgen serve --stdin`) so tests and CI exercise
+//! the full protocol without opening a port. `docs/serving.md` is the
+//! protocol reference.
+
+#![warn(missing_docs)]
+
+pub mod cache;
+pub mod json;
+pub mod protocol;
+pub mod registry;
+pub mod transport;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::backend::NativeBackend;
+use crate::coordinator::group::{initial_groups, GroupProblem, RestrictedGroup};
+use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
+use crate::coordinator::path::{
+    dantzig_path, geometric_grid, initial_columns, ranksvm_path, regularization_path,
+    PathSolution,
+};
+use crate::coordinator::slope::{RestrictedSlope, SlopeProblem};
+use crate::coordinator::{GenParams, GenStats};
+use crate::engine::{BackendPricer, GenEngine, Snapshot, WorkingSet};
+use crate::error::Result;
+use crate::fom::objective::{bh_slope_weights, hinge_loss_support, slope_norm};
+use crate::workloads::dantzig::{
+    initial_features, lambda_max_dantzig, DantzigProblem, RestrictedDantzig,
+};
+use crate::workloads::ranksvm::{
+    initial_pairs, initial_rank_features, lambda_max_rank, pairwise_hinge_support, RankProblem,
+    RestrictedRank,
+};
+use crate::{bail, ensure, err};
+
+use cache::{CacheEntry, CacheHit, WarmCache};
+use json::{kv, Json};
+use protocol::{err_response, ok_response, Req, Workload};
+use registry::{DatasetEntry, Registry, SynthOpts};
+
+/// Default bound on cached working-set snapshots.
+pub const DEFAULT_CACHE_CAP: usize = 256;
+
+/// All shared service state: registry, warm-start cache, counters, and
+/// the shutdown flag. One instance serves every connection; requests
+/// only hold the cache lock around lookups/inserts, never during solves.
+pub struct ServeState {
+    /// The dataset registry (name → `Arc`-shared entry).
+    pub registry: Registry,
+    cache: Mutex<WarmCache>,
+    requests: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl ServeState {
+    /// Fresh state with a warm-start cache bounded to `cache_cap`.
+    pub fn new(cache_cap: usize) -> Self {
+        Self {
+            registry: Registry::new(),
+            cache: Mutex::new(WarmCache::new(cache_cap)),
+            requests: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether a `shutdown` request has been received.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one request line, returning the response line. Never
+    /// panics on protocol input: parse and dispatch errors become
+    /// `{"ok":false,"error":…}` responses.
+    pub fn handle_line(&self, line: &str) -> String {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match Json::parse(line) {
+            Ok(doc) => {
+                let req = Req(&doc);
+                match req.str_req("op") {
+                    Ok(op) => self
+                        .dispatch(op, &req)
+                        .unwrap_or_else(|e| err_response(&e.to_string())),
+                    Err(e) => err_response(&e.to_string()),
+                }
+            }
+            Err(e) => err_response(&e.to_string()),
+        };
+        resp.to_string()
+    }
+
+    fn dispatch(&self, op: &str, req: &Req) -> Result<Json> {
+        match op {
+            "register" => self.handle_register(req),
+            "solve" => self.handle_solve(req),
+            "grid" => self.handle_grid(req),
+            "stats" => Ok(self.stats_response()),
+            "ping" => Ok(ok_response("ping", Vec::new())),
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok(ok_response("shutdown", Vec::new()))
+            }
+            other => bail!("unknown op {other:?} (register|solve|grid|stats|ping|shutdown)"),
+        }
+    }
+
+    fn handle_register(&self, req: &Req) -> Result<Json> {
+        let name = req.str_req("name")?;
+        let entry = if let Some(path) = req.str_opt("path") {
+            self.registry.register_file(name, path)?
+        } else if let Some(synth) = req.0.get("synthetic") {
+            let s = Req(synth);
+            let kind = s.str_opt("kind").unwrap_or("l1");
+            let n = s.usize_or("n", 100)?;
+            let p = s.usize_or("p", 1000)?;
+            let seed = s.usize_or("seed", 0)? as u64;
+            let opts = SynthOpts {
+                density: synth.get("density").and_then(Json::as_f64),
+                group_size: synth.get("group_size").and_then(Json::as_usize),
+            };
+            self.registry.register_synthetic(name, kind, n, p, seed, &opts)?
+        } else {
+            bail!("register needs a \"path\" (libsvm file) or a \"synthetic\" spec");
+        };
+        Ok(ok_response(
+            "register",
+            vec![
+                kv("name", name),
+                kv("n", entry.ds.n()),
+                kv("p", entry.ds.p()),
+                kv("nnz", entry.ds.x.nnz()),
+                kv("sparse", entry.ds.x.is_sparse()),
+                kv("fingerprint", format!("{:016x}", entry.fingerprint)),
+            ],
+        ))
+    }
+
+    fn handle_solve(&self, req: &Req) -> Result<Json> {
+        let name = req.str_req("dataset")?;
+        let entry = self
+            .registry
+            .get(name)
+            .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
+        let workload = Workload::parse(req.str_req("workload")?)?;
+        let gen = GenParams {
+            eps: req.f64_or("eps", 1e-2)?,
+            threads: req.usize_or("threads", 1)?.max(1),
+            max_cols_per_round: req.usize_or("max_cols_per_round", 0)?,
+            max_rows_per_round: req.usize_or("max_rows_per_round", 0)?,
+            ..Default::default()
+        };
+        let group_size = req.usize_or("group_size", 10)?.max(1);
+        let use_cache = req.bool_or("cache", true)?;
+        let lambda = lambda_for(&entry, workload, req, group_size)?;
+        // Group working sets are group indices, so snapshots are only
+        // compatible between requests with the same grouping: fold the
+        // group size into the cache fingerprint.
+        let fp = match workload {
+            Workload::Group => {
+                entry.fingerprint ^ (group_size as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            }
+            _ => entry.fingerprint,
+        };
+
+        let hit: Option<CacheHit> = if use_cache {
+            self.cache.lock().expect("cache lock").lookup(fp, workload, lambda)
+        } else {
+            None
+        };
+        let seed = hit.as_ref().map(|h| &h.entry.ws);
+        let core = solve_one(&entry, workload, lambda, seed, &gen, group_size)?;
+        if use_cache {
+            self.cache.lock().expect("cache lock").insert(
+                fp,
+                workload,
+                CacheEntry { lambda, objective: core.objective, ws: core.ws.clone() },
+            );
+        }
+
+        let mut fields = vec![
+            kv("dataset", name),
+            kv("workload", workload.as_str()),
+            kv("lambda", lambda),
+            kv("objective", core.objective),
+            kv("support", core.support),
+            kv("rounds", core.stats.rounds),
+            kv("cols_added", core.stats.cols_added),
+            kv("rows_added", core.stats.rows_added),
+            kv("simplex_iters", core.stats.simplex_iters),
+            kv("converged", core.stats.converged),
+            kv("working_cols", core.ws.cols.len()),
+            kv("working_rows", core.ws.rows.len()),
+            kv("warm", hit.is_some()),
+        ];
+        if let Some(h) = &hit {
+            fields.push(kv("warm_lambda", h.entry.lambda));
+            fields.push(kv("bucket_distance", h.distance as f64));
+        }
+        Ok(ok_response("solve", fields))
+    }
+
+    fn handle_grid(&self, req: &Req) -> Result<Json> {
+        let name = req.str_req("dataset")?;
+        let entry = self
+            .registry
+            .get(name)
+            .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
+        let workload = Workload::parse(req.str_req("workload")?)?;
+        let k = req.usize_or("grid", 10)?.max(1);
+        let ratio = req.f64_or("ratio", 0.7)?;
+        ensure!(
+            ratio > 0.0 && ratio < 1.0,
+            "grid ratio must be in (0, 1), got {ratio}"
+        );
+        let gen = GenParams {
+            eps: req.f64_or("eps", 1e-2)?,
+            threads: req.usize_or("threads", 1)?.max(1),
+            ..Default::default()
+        };
+        let j0 = req.usize_or("init", 10)?;
+        let path: Vec<PathSolution> = match workload {
+            Workload::L1svm => {
+                let ds = entry.classification();
+                let backend = NativeBackend::new(&ds.x);
+                let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
+                regularization_path(ds, &backend, &grid, j0, &gen).0
+            }
+            Workload::Ranksvm => {
+                let ds = &entry.ds;
+                let pairs = entry.pairs();
+                ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+                let backend = NativeBackend::new(&ds.x);
+                let grid = geometric_grid(lambda_max_rank(ds, pairs), k, ratio);
+                ranksvm_path(ds, &backend, pairs, &grid, j0, &gen)
+            }
+            Workload::Dantzig => {
+                let ds = &entry.ds;
+                let backend = NativeBackend::new(&ds.x);
+                let grid = geometric_grid(lambda_max_dantzig(ds), k, ratio);
+                dantzig_path(ds, &backend, &grid, j0, &gen)
+            }
+            other => bail!(
+                "grid routes through the warm-started path drivers, available for \
+                 l1svm|ranksvm|dantzig (got {:?})",
+                other.as_str()
+            ),
+        };
+        let last = path.last().expect("grid has at least one point");
+        let (rounds, simplex_iters) = (last.stats.rounds, last.stats.simplex_iters);
+        let points: Vec<Json> = path
+            .into_iter()
+            .map(|pt| {
+                Json::obj(vec![
+                    kv("lambda", pt.lambda),
+                    kv("objective", pt.objective),
+                    kv("support", pt.support),
+                    kv("working_set", pt.working_set),
+                ])
+            })
+            .collect();
+        Ok(ok_response(
+            "grid",
+            vec![
+                kv("dataset", name),
+                kv("workload", workload.as_str()),
+                kv("points", points.len()),
+                kv("rounds", rounds),
+                kv("simplex_iters", simplex_iters),
+                kv("path", points),
+            ],
+        ))
+    }
+
+    fn stats_response(&self) -> Json {
+        let cache = self.cache.lock().expect("cache lock");
+        let datasets: Vec<Json> = self.registry.names().into_iter().map(Json::from).collect();
+        ok_response(
+            "stats",
+            vec![
+                kv("requests", self.requests.load(Ordering::Relaxed) as usize),
+                kv("datasets", datasets),
+                kv("cache_entries", cache.len()),
+                kv("cache_hits", cache.hits as usize),
+                kv("cache_misses", cache.misses as usize),
+            ],
+        )
+    }
+}
+
+/// Resolve the request's λ: an absolute `"lambda"` wins, otherwise
+/// `"lambda_frac"` (default 0.05, Dantzig 0.3) times the workload's
+/// λ_max on this dataset. For Slope the resolved value is the scale λ̃
+/// of the Benjamini–Hochberg weight sequence.
+fn lambda_for(
+    entry: &DatasetEntry,
+    workload: Workload,
+    req: &Req,
+    group_size: usize,
+) -> Result<f64> {
+    if let Some(v) = req.0.get("lambda") {
+        let lambda = v.as_f64().ok_or_else(|| err!("field \"lambda\" must be a number"))?;
+        ensure!(lambda.is_finite() && lambda > 0.0, "lambda must be positive, got {lambda}");
+        return Ok(lambda);
+    }
+    let frac_default = match workload {
+        Workload::Dantzig => 0.3,
+        _ => 0.05,
+    };
+    let frac = req.f64_or("lambda_frac", frac_default)?;
+    ensure!(frac.is_finite() && frac > 0.0, "lambda_frac must be positive, got {frac}");
+    let lmax = match workload {
+        Workload::L1svm | Workload::Slope => entry.classification().lambda_max_l1(),
+        Workload::Group => {
+            let ds = entry.classification();
+            let groups = contiguous_groups(ds.p(), group_size)?;
+            ds.lambda_max_group(&groups)
+        }
+        Workload::Ranksvm => {
+            let pairs = entry.pairs();
+            ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+            lambda_max_rank(&entry.ds, pairs)
+        }
+        Workload::Dantzig => lambda_max_dantzig(&entry.ds),
+    };
+    Ok(frac * lmax)
+}
+
+fn contiguous_groups(p: usize, group_size: usize) -> Result<Vec<Vec<usize>>> {
+    let gs = group_size.max(1);
+    ensure!(p % gs == 0, "group workload needs p divisible by group_size ({p} % {gs} != 0)");
+    Ok((0..p / gs).map(|g| (g * gs..(g + 1) * gs).collect()).collect())
+}
+
+/// The part of a solve the protocol reports: objective, support, engine
+/// counters, and the exported snapshot that feeds the cache.
+pub struct SolveCore {
+    /// λ the solve ran at.
+    pub lambda: f64,
+    /// Full-problem objective.
+    pub objective: f64,
+    /// Nonzero coefficients.
+    pub support: usize,
+    /// Engine counters for this run.
+    pub stats: GenStats,
+    /// Final working sets (the cacheable snapshot).
+    pub ws: WorkingSet,
+}
+
+/// Solve one request: seed the restricted model from `seed` when warm,
+/// from the workload's cold heuristics otherwise, run the engine, and
+/// export the final working sets.
+pub fn solve_one(
+    entry: &DatasetEntry,
+    workload: Workload,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+    group_size: usize,
+) -> Result<SolveCore> {
+    match workload {
+        Workload::L1svm => solve_l1(entry, lambda, seed, gen),
+        Workload::Group => solve_group(entry, lambda, seed, gen, group_size),
+        Workload::Slope => solve_slope(entry, lambda, seed, gen),
+        Workload::Ranksvm => solve_ranksvm(entry, lambda, seed, gen),
+        Workload::Dantzig => solve_dantzig(entry, lambda, seed, gen),
+    }
+}
+
+fn solve_l1(
+    entry: &DatasetEntry,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+) -> Result<SolveCore> {
+    let ds = entry.classification();
+    let backend = NativeBackend::new(&ds.x);
+    let pricer = BackendPricer::new(&backend, gen.threads);
+    let all_i: Vec<usize> = (0..ds.n()).collect();
+    let j_init: Vec<usize> = match seed {
+        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
+        _ => initial_columns(ds, 10),
+    };
+    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &j_init);
+    rl1.set_threads(gen.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
+    let stats = GenEngine::new(gen).run(&mut prob);
+    let mut ws = prob.export_working_set();
+    // Algorithm 1 keeps every margin row in the model; snapshotting the
+    // full [n] would only bloat the cache.
+    ws.rows.clear();
+    let (support, b0) = prob.inner().beta_support();
+    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    Ok(SolveCore {
+        lambda,
+        objective: hinge + lambda * l1,
+        support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+        stats,
+        ws,
+    })
+}
+
+fn solve_group(
+    entry: &DatasetEntry,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+    group_size: usize,
+) -> Result<SolveCore> {
+    let ds = entry.classification();
+    let groups = contiguous_groups(ds.p(), group_size)?;
+    let backend = NativeBackend::new(&ds.x);
+    let pricer = BackendPricer::new(&backend, gen.threads);
+    let g_init: Vec<usize> = match seed {
+        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
+        _ => initial_groups(ds, &groups, 5),
+    };
+    ensure!(
+        g_init.iter().all(|&g| g < groups.len()),
+        "snapshot group index out of range for group_size {group_size}"
+    );
+    let mut rg = RestrictedGroup::new(ds, &groups, lambda, &g_init);
+    rg.set_threads(gen.threads);
+    let mut prob = GroupProblem::new(rg, ds, &pricer);
+    let stats = GenEngine::new(gen).run(&mut prob);
+    let ws = prob.export_working_set();
+    let (support, b0) = prob.inner().beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
+    let pen: f64 = groups
+        .iter()
+        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
+        .sum();
+    Ok(SolveCore {
+        lambda,
+        objective: hinge + lambda * pen,
+        support: beta.iter().filter(|v| v.abs() > 1e-9).count(),
+        stats,
+        ws,
+    })
+}
+
+fn solve_slope(
+    entry: &DatasetEntry,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+) -> Result<SolveCore> {
+    let ds = entry.classification();
+    let weights = bh_slope_weights(ds.p(), lambda);
+    let backend = NativeBackend::new(&ds.x);
+    let pricer = BackendPricer::new(&backend, gen.threads);
+    let j_init: Vec<usize> = match seed {
+        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
+        _ => initial_columns(ds, 10),
+    };
+    // Slope caps column additions per round (paper: 10).
+    let mut eng = gen.clone();
+    if eng.max_cols_per_round == 0 {
+        eng.max_cols_per_round = 10;
+    }
+    let mut rs = RestrictedSlope::new(ds, &weights, &j_init);
+    rs.set_threads(gen.threads);
+    let mut prob = SlopeProblem::new(rs, ds, &pricer, true);
+    let stats = GenEngine::new(&eng).run(&mut prob);
+    let ws = prob.export_working_set();
+    let (support, b0) = prob.inner().beta_support();
+    let mut beta = vec![0.0; ds.p()];
+    for &(j, v) in &support {
+        beta[j] = v;
+    }
+    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
+    Ok(SolveCore {
+        lambda,
+        objective: hinge + slope_norm(&beta, &weights),
+        support: beta.iter().filter(|v| v.abs() > 1e-9).count(),
+        stats,
+        ws,
+    })
+}
+
+fn solve_ranksvm(
+    entry: &DatasetEntry,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+) -> Result<SolveCore> {
+    let ds = &entry.ds;
+    let pairs = entry.pairs();
+    ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+    let backend = NativeBackend::new(&ds.x);
+    let pricer = BackendPricer::new(&backend, gen.threads);
+    let (t_init, j_init) = match seed {
+        Some(ws) if !ws.is_empty() => (ws.rows.clone(), ws.cols.clone()),
+        _ => (initial_pairs(pairs.len(), 10), initial_rank_features(ds, pairs, 10)),
+    };
+    ensure!(
+        t_init.iter().all(|&t| t < pairs.len()),
+        "snapshot pair index out of range (stale pair enumeration?)"
+    );
+    let mut rr = RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init);
+    rr.set_threads(gen.threads);
+    let mut prob = RankProblem::new(rr, ds, &pricer);
+    let stats = GenEngine::new(gen).run(&mut prob);
+    let ws = prob.export_working_set();
+    let support = prob.inner().beta_support();
+    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
+    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
+    let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    Ok(SolveCore {
+        lambda,
+        objective: hinge + lambda * l1,
+        support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+        stats,
+        ws,
+    })
+}
+
+fn solve_dantzig(
+    entry: &DatasetEntry,
+    lambda: f64,
+    seed: Option<&WorkingSet>,
+    gen: &GenParams,
+) -> Result<SolveCore> {
+    let ds = &entry.ds;
+    let backend = NativeBackend::new(&ds.x);
+    let pricer = BackendPricer::new(&backend, gen.threads);
+    let mut rd = RestrictedDantzig::new(ds, lambda, &[]);
+    rd.set_threads(gen.threads);
+    let mut prob = DantzigProblem::new(rd, ds, &pricer);
+    match seed {
+        Some(ws) if !ws.is_empty() => prob.import_working_set(ws),
+        _ => prob.import_working_set(&WorkingSet {
+            cols: Vec::new(),
+            rows: initial_features(ds, 10),
+        }),
+    }
+    let stats = GenEngine::new(gen).run(&mut prob);
+    let ws = prob.export_working_set();
+    let support = prob.inner().beta_support();
+    Ok(SolveCore {
+        lambda,
+        objective: prob.inner().objective(),
+        support: support.iter().filter(|(_, v)| v.abs() > 1e-9).count(),
+        stats,
+        ws,
+    })
+}

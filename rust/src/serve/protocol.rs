@@ -1,0 +1,155 @@
+//! Protocol vocabulary: workload names, request field extraction, and
+//! response construction.
+//!
+//! The wire format is line-delimited JSON — one request object in, one
+//! response object out, in order. Every response carries `"ok"`; error
+//! responses carry `"error"` with a human-readable message and never
+//! tear down the connection. See `docs/serving.md` for the full
+//! reference with examples.
+
+use super::json::{kv, Json};
+use crate::error::Result;
+use crate::{bail, err};
+
+/// The five estimators the service can solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// L1-SVM column generation (paper Algorithm 1).
+    L1svm,
+    /// Group-SVM column generation on groups (§2.4).
+    Group,
+    /// Slope-SVM column-and-cut generation (Algorithms 5–7).
+    Slope,
+    /// RankSVM: pairwise-hinge L1 ranking.
+    Ranksvm,
+    /// Dantzig selector: CCG over the correlation system.
+    Dantzig,
+}
+
+impl Workload {
+    /// All workloads, in protocol-name order.
+    pub const ALL: [Workload; 5] = [
+        Workload::L1svm,
+        Workload::Group,
+        Workload::Slope,
+        Workload::Ranksvm,
+        Workload::Dantzig,
+    ];
+
+    /// Parse a protocol workload name.
+    pub fn parse(name: &str) -> Result<Workload> {
+        Ok(match name {
+            "l1svm" => Workload::L1svm,
+            "group" => Workload::Group,
+            "slope" => Workload::Slope,
+            "ranksvm" => Workload::Ranksvm,
+            "dantzig" => Workload::Dantzig,
+            other => bail!("unknown workload {other:?} (l1svm|group|slope|ranksvm|dantzig)"),
+        })
+    }
+
+    /// Protocol name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Workload::L1svm => "l1svm",
+            Workload::Group => "group",
+            Workload::Slope => "slope",
+            Workload::Ranksvm => "ranksvm",
+            Workload::Dantzig => "dantzig",
+        }
+    }
+}
+
+/// Typed field access over a request object, with protocol-shaped errors.
+pub struct Req<'a>(
+    /// The parsed request document.
+    pub &'a Json,
+);
+
+impl Req<'_> {
+    /// Required string field.
+    pub fn str_req(&self, key: &str) -> Result<&str> {
+        self.0
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("request needs a string field {key:?}"))
+    }
+
+    /// Optional string field.
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.0.get(key).and_then(Json::as_str)
+    }
+
+    /// Optional number field with a default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| err!("field {key:?} must be a number")),
+        }
+    }
+
+    /// Optional non-negative-integer field with a default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.as_usize().ok_or_else(|| err!("field {key:?} must be a non-negative integer"))
+            }
+        }
+    }
+
+    /// Optional boolean field with a default.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| err!("field {key:?} must be a boolean")),
+        }
+    }
+}
+
+/// `{"ok":true,"op":<op>, ...fields}`.
+pub fn ok_response(op: &str, mut fields: Vec<(String, Json)>) -> Json {
+    let mut all = vec![kv("ok", true), kv("op", op)];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+/// `{"ok":false,"error":<message>}`.
+pub fn err_response(message: &str) -> Json {
+    Json::obj(vec![kv("ok", false), kv("error", message)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_names_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::parse(w.as_str()).unwrap(), w);
+        }
+        assert!(Workload::parse("lasso").is_err());
+    }
+
+    #[test]
+    fn request_field_extraction() {
+        let v = Json::parse(r#"{"op":"solve","k":3,"f":0.5,"b":true,"s":"x"}"#).unwrap();
+        let r = Req(&v);
+        assert_eq!(r.str_req("op").unwrap(), "solve");
+        assert!(r.str_req("nope").is_err());
+        assert_eq!(r.usize_or("k", 9).unwrap(), 3);
+        assert_eq!(r.usize_or("nope", 9).unwrap(), 9);
+        assert!(r.usize_or("f", 0).is_err(), "0.5 is not an integer");
+        assert_eq!(r.f64_or("f", 0.0).unwrap(), 0.5);
+        assert!(r.bool_or("s", false).is_err());
+        assert!(r.bool_or("b", false).unwrap());
+    }
+
+    #[test]
+    fn responses_have_protocol_shape() {
+        let ok = ok_response("stats", vec![kv("n", 2usize)]);
+        assert_eq!(ok.to_string(), r#"{"ok":true,"op":"stats","n":2}"#);
+        let err = err_response("boom");
+        assert_eq!(err.to_string(), r#"{"ok":false,"error":"boom"}"#);
+    }
+}

@@ -1,0 +1,308 @@
+//! The dataset registry: load and fingerprint each design matrix once,
+//! share it across requests via `Arc`.
+//!
+//! Every [`DatasetEntry`] stores the dataset with **raw** responses (the
+//! form RankSVM relevances and Dantzig-selector targets need) plus two
+//! lazily built, built-at-most-once views:
+//!
+//! * [`DatasetEntry::classification`] — `y` mapped to ±1 for the
+//!   hinge-loss workloads. When the labels already are ±1 (the common
+//!   case) this is the stored dataset itself, no copy;
+//! * [`DatasetEntry::pairs`] — the O(n²) RankSVM comparison-pair
+//!   enumeration, computed on the first ranking request and reused by
+//!   every later one (the enumeration is deterministic, which is what
+//!   makes cached pair-index snapshots restorable).
+//!
+//! The fingerprint keys the warm-start cache: two registrations of the
+//! same matrix (even under different names) share cache entries, and
+//! re-registering a *different* dataset under an old name can never
+//! resurrect stale working sets.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::bail;
+use crate::data::synthetic::{
+    generate_dantzig, generate_group, generate_l1, generate_ranksvm, generate_sparse_text,
+    DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
+};
+use crate::data::{libsvm, Dataset};
+use crate::error::{Context, Result};
+use crate::rng::Xoshiro256;
+
+/// One loaded dataset plus its derived views.
+pub struct DatasetEntry {
+    /// Registration name.
+    pub name: String,
+    /// The dataset with raw (unmapped) responses.
+    pub ds: Dataset,
+    /// Content fingerprint (see [`fingerprint()`]).
+    pub fingerprint: u64,
+    /// ±1-label view, built at most once (only when `y` is not already ±1).
+    class_view: OnceLock<Dataset>,
+    /// RankSVM comparison pairs, built at most once.
+    pairs: OnceLock<Vec<(usize, usize)>>,
+}
+
+impl DatasetEntry {
+    /// Wrap a dataset, computing its fingerprint.
+    pub fn new(name: &str, ds: Dataset) -> Self {
+        let fingerprint = fingerprint(&ds);
+        Self {
+            name: name.to_string(),
+            ds,
+            fingerprint,
+            class_view: OnceLock::new(),
+            pairs: OnceLock::new(),
+        }
+    }
+
+    /// The dataset with labels mapped to ±1 (hinge-loss workloads).
+    /// Returns the stored dataset directly when its labels already are
+    /// ±1; otherwise clones the design once, on first use.
+    pub fn classification(&self) -> &Dataset {
+        if self.ds.y.iter().all(|&v| v == 1.0 || v == -1.0) {
+            return &self.ds;
+        }
+        self.class_view.get_or_init(|| Dataset {
+            x: self.ds.x.clone(),
+            y: self.ds.y.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect(),
+        })
+    }
+
+    /// The RankSVM comparison pairs over the raw responses (computed on
+    /// first use, shared afterwards).
+    pub fn pairs(&self) -> &[(usize, usize)] {
+        self.pairs.get_or_init(|| crate::workloads::ranksvm::ranking_pairs(&self.ds.y))
+    }
+}
+
+/// Content fingerprint: FNV-1a over the dimensions, stored-nonzero
+/// count, every response bit, and the per-column absolute sums of the
+/// design — cheap (one O(nnz) pass) yet sensitive to any label edit and
+/// to any column's data changing.
+pub fn fingerprint(ds: &Dataset) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(&(ds.n() as u64).to_le_bytes());
+    eat(&(ds.p() as u64).to_le_bytes());
+    eat(&(ds.x.nnz() as u64).to_le_bytes());
+    for &v in &ds.y {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    let mut colsums = vec![0.0; ds.p()];
+    ds.x.abs_col_sums(&mut colsums);
+    for v in colsums {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// The one loading path shared by the registry and the one-shot CLI:
+/// read a libsvm file, keeping raw responses when `raw_labels` is set
+/// (RankSVM / Dantzig) and mapping to ±1 otherwise.
+pub fn load_libsvm(path: &str, raw_labels: bool) -> Result<Dataset> {
+    let ds = if raw_labels {
+        libsvm::read_file_raw(path, 0)
+    } else {
+        libsvm::read_file(path, 0)
+    };
+    ds.with_context(|| format!("loading libsvm file {path}"))
+}
+
+/// Knobs for synthetic registration (mirrors `cutgen datagen`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SynthOpts {
+    /// Nonzero density for the `sparse` kind (default 0.01).
+    pub density: Option<f64>,
+    /// Group size for the `group` kind (default 10).
+    pub group_size: Option<usize>,
+}
+
+/// Generate a synthetic dataset by kind name (`l1`, `sparse`, `group`,
+/// `ranksvm`, `dantzig`).
+pub fn generate_synthetic(
+    kind: &str,
+    n: usize,
+    p: usize,
+    seed: u64,
+    opts: &SynthOpts,
+) -> Result<Dataset> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Ok(match kind {
+        "l1" => generate_l1(&SyntheticSpec::paper_default(n, p), &mut rng),
+        "sparse" => generate_sparse_text(
+            &SparseTextSpec {
+                n,
+                p,
+                density: opts.density.unwrap_or(0.01),
+                k0: 50.min(p),
+                zipf: 1.1,
+            },
+            &mut rng,
+        ),
+        "group" => {
+            let gs = opts.group_size.unwrap_or(10).max(1);
+            if p % gs != 0 {
+                bail!("synthetic group data needs p divisible by group_size ({p} % {gs} != 0)");
+            }
+            generate_group(
+                &GroupSpec {
+                    n,
+                    n_groups: p / gs,
+                    group_size: gs,
+                    k0_groups: 3.min(p / gs),
+                    rho: 0.1,
+                    standardize: true,
+                },
+                &mut rng,
+            )
+            .data
+        }
+        "ranksvm" => generate_ranksvm(
+            &RankSpec { n, p, k0: 10.min(p), rho: 0.1, noise: 0.3, standardize: true },
+            &mut rng,
+        ),
+        "dantzig" => generate_dantzig(
+            &DantzigSpec { n, p, k0: 10.min(p), rho: 0.1, sigma: 0.5, standardize: true },
+            &mut rng,
+        ),
+        other => bail!("unknown synthetic kind {other:?} (l1|sparse|group|ranksvm|dantzig)"),
+    })
+}
+
+/// Name → dataset map behind a read-write lock: registrations are rare,
+/// lookups are every request.
+#[derive(Default)]
+pub struct Registry {
+    map: RwLock<HashMap<String, Arc<DatasetEntry>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a dataset under `name`. Replacement is safe
+    /// for the warm-start cache because entries are keyed by content
+    /// fingerprint, not by name.
+    pub fn insert(&self, name: &str, ds: Dataset) -> Arc<DatasetEntry> {
+        let entry = Arc::new(DatasetEntry::new(name, ds));
+        self.map.write().expect("registry lock").insert(name.to_string(), entry.clone());
+        entry
+    }
+
+    /// Load a libsvm file (raw responses preserved) and register it.
+    pub fn register_file(&self, name: &str, path: &str) -> Result<Arc<DatasetEntry>> {
+        let ds = load_libsvm(path, true)?;
+        Ok(self.insert(name, ds))
+    }
+
+    /// Generate a synthetic dataset and register it.
+    pub fn register_synthetic(
+        &self,
+        name: &str,
+        kind: &str,
+        n: usize,
+        p: usize,
+        seed: u64,
+        opts: &SynthOpts,
+    ) -> Result<Arc<DatasetEntry>> {
+        Ok(self.insert(name, generate_synthetic(kind, n, p, seed, opts)?))
+    }
+
+    /// Shared handle to a registered dataset.
+    pub fn get(&self, name: &str) -> Option<Arc<DatasetEntry>> {
+        self.map.read().expect("registry lock").get(name).cloned()
+    }
+
+    /// Number of registered datasets.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("registry lock").len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.map.read().expect("registry lock").keys().cloned().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_tracks_content_not_name() {
+        let a = generate_synthetic("l1", 20, 15, 3, &SynthOpts::default()).unwrap();
+        let b = generate_synthetic("l1", 20, 15, 3, &SynthOpts::default()).unwrap();
+        let c = generate_synthetic("l1", 20, 15, 4, &SynthOpts::default()).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "same draw, same print");
+        assert_ne!(fingerprint(&a), fingerprint(&c), "different seed, different print");
+        let mut d = generate_synthetic("l1", 20, 15, 3, &SynthOpts::default()).unwrap();
+        d.y[0] = -d.y[0];
+        assert_ne!(fingerprint(&a), fingerprint(&d), "label flip changes the print");
+    }
+
+    #[test]
+    fn classification_view_is_shared_and_lazy() {
+        let reg = Registry::new();
+        // ±1 labels: the classification view is the stored dataset itself
+        let e = reg
+            .register_synthetic("c", "l1", 15, 10, 1, &SynthOpts::default())
+            .unwrap();
+        assert!(std::ptr::eq(e.classification(), &e.ds));
+        // real-valued responses: built once, labels mapped by sign
+        let r = reg
+            .register_synthetic("r", "ranksvm", 12, 8, 1, &SynthOpts::default())
+            .unwrap();
+        let view = r.classification();
+        assert!(!std::ptr::eq(view, &r.ds));
+        assert!(std::ptr::eq(view, r.classification()), "second call reuses the view");
+        assert!(view.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        for (raw, mapped) in r.ds.y.iter().zip(&view.y) {
+            assert_eq!(*mapped, if *raw > 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn registry_lookup_and_replace() {
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        reg.register_synthetic("d", "l1", 10, 6, 1, &SynthOpts::default()).unwrap();
+        let first = reg.get("d").unwrap().fingerprint;
+        reg.register_synthetic("d", "l1", 10, 6, 2, &SynthOpts::default()).unwrap();
+        let second = reg.get("d").unwrap().fingerprint;
+        assert_ne!(first, second, "replacement swaps the entry");
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.names(), vec!["d".to_string()]);
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn pairs_are_cached_and_deterministic() {
+        let reg = Registry::new();
+        let e = reg
+            .register_synthetic("r", "ranksvm", 10, 6, 5, &SynthOpts::default())
+            .unwrap();
+        let p1 = e.pairs();
+        let p2 = e.pairs();
+        assert!(std::ptr::eq(p1, p2));
+        assert_eq!(p1, crate::workloads::ranksvm::ranking_pairs(&e.ds.y).as_slice());
+    }
+}

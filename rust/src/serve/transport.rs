@@ -1,0 +1,174 @@
+//! Transports for the line-delimited JSON protocol.
+//!
+//! * [`serve_lines`] — the protocol loop over any `BufRead`/`Write`
+//!   pair. Both other transports and the integration tests are this one
+//!   function applied to different endpoints.
+//! * [`serve_stdin`] — stdin/stdout transport (`cutgen serve --stdin`):
+//!   lets tests and CI exercise the full protocol without opening a
+//!   port.
+//! * [`serve_tcp`] — `std::net::TcpListener` with a scoped worker pool:
+//!   the accept loop hands connections to `workers` threads over an
+//!   mpsc channel; each connection is one protocol session (many
+//!   requests, responses in order).
+//!
+//! Shutdown: the `shutdown` op flips the state flag; the worker that
+//! served it pokes the listener with an empty connection so the
+//! blocking `accept` wakes up and the pool drains.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use super::ServeState;
+use crate::error::{Context, Result};
+
+/// Run the protocol over a line-oriented reader/writer pair until EOF
+/// or a `shutdown` request.
+pub fn serve_lines<R: BufRead, W: Write>(
+    state: &ServeState,
+    reader: R,
+    mut out: W,
+) -> std::io::Result<()> {
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let resp = state.handle_line(line);
+        writeln!(out, "{resp}")?;
+        out.flush()?;
+        if state.shutdown_requested() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// The stdin/stdout transport.
+pub fn serve_stdin(state: &ServeState) -> std::io::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    serve_lines(state, stdin.lock(), stdout.lock())
+}
+
+fn handle_conn(state: &ServeState, stream: TcpStream) {
+    // An idle session must not pin the worker open across a shutdown:
+    // poll the read with a timeout and re-check the flag between
+    // attempts. A timed-out read may leave a partial line in `line`
+    // (read_line appends what it consumed before erroring), so the
+    // buffer is only cleared after a complete line is processed.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {
+                let req = line.trim();
+                if !req.is_empty() {
+                    let resp = state.handle_line(req);
+                    // peer hangups mid-write are the peer's business
+                    if writeln!(writer, "{resp}").and_then(|()| writer.flush()).is_err() {
+                        break;
+                    }
+                }
+                line.clear();
+                if state.shutdown_requested() {
+                    break;
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if state.shutdown_requested() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// The TCP transport: accept connections and serve each as one protocol
+/// session on a pool of `workers` scoped threads (clamped to ≥ 1).
+/// Returns after a `shutdown` request has been served and the pool has
+/// drained.
+pub fn serve_tcp(
+    state: &ServeState,
+    listener: TcpListener,
+    workers: usize,
+) -> std::io::Result<()> {
+    let workers = workers.max(1);
+    let local = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Mutex::new(rx);
+    std::thread::scope(|scope| -> std::io::Result<()> {
+        for _ in 0..workers {
+            let rx = &rx;
+            scope.spawn(move || loop {
+                let next = rx.lock().expect("queue lock").recv();
+                match next {
+                    Ok(stream) => {
+                        handle_conn(state, stream);
+                        if state.shutdown_requested() {
+                            // wake the blocking accept so the loop exits
+                            let _ = TcpStream::connect(local);
+                        }
+                    }
+                    Err(_) => break, // sender dropped: server is done
+                }
+            });
+        }
+        loop {
+            let (stream, _) = listener.accept()?;
+            if state.shutdown_requested() {
+                break; // this was the wake-up poke
+            }
+            if tx.send(stream).is_err() {
+                break;
+            }
+        }
+        drop(tx);
+        Ok(())
+    })
+}
+
+/// Connect to a running server, send one request line, return the
+/// response line.
+pub fn client_send(addr: &str, line: &str) -> Result<String> {
+    let responses = client_send_many(addr, std::slice::from_ref(&line.to_string()))?;
+    responses.into_iter().next().ok_or_else(|| crate::err!("server closed without responding"))
+}
+
+/// Connect once and run several request lines through one protocol
+/// session, returning the responses in order. Blank lines are skipped.
+/// If the server closes the connection mid-session (e.g. right after
+/// serving a `shutdown` request), the responses received so far are
+/// returned rather than discarded — callers can detect the short count.
+pub fn client_send_many(addr: &str, lines: &[String]) -> Result<Vec<String>> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut writer = stream.try_clone().context("cloning connection")?;
+    let mut reader = BufReader::new(stream);
+    let mut out = Vec::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if writeln!(writer, "{line}").and_then(|()| writer.flush()).is_err() {
+            break; // server gone: keep what we already got
+        }
+        let mut resp = String::new();
+        match reader.read_line(&mut resp) {
+            // closed or reset mid-session: keep the earlier responses
+            Ok(0) | Err(_) => break,
+            Ok(_) => out.push(resp.trim_end().to_string()),
+        }
+    }
+    Ok(out)
+}

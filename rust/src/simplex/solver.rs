@@ -77,7 +77,15 @@ pub struct SimplexSolver {
     bland: bool,
     /// Consecutive degenerate iterations (stall detector).
     stall: usize,
+    /// Worker threads for the dense dual-simplex pricing row (1 = serial).
+    threads: usize,
 }
+
+/// Below this many structural columns the parallel pricing row is not
+/// worth the thread-spawn overhead (a few µs per scoped worker vs
+/// sub-µs column dots); the serial path is used regardless of
+/// [`SimplexSolver::set_threads`].
+const PAR_PRICE_MIN_COLS: usize = 256;
 
 const INF: f64 = f64::INFINITY;
 
@@ -98,6 +106,7 @@ impl SimplexSolver {
             stats: SolveStats::default(),
             bland: false,
             stall: 0,
+            threads: 1,
         };
         s.sync_new_cols(nv);
         s.sync_new_rows(m);
@@ -108,6 +117,15 @@ impl SimplexSolver {
     pub fn with_tolerances(mut self, tol: Tolerances) -> Self {
         self.tol = tol;
         self
+    }
+
+    /// Worker threads for the dense dual-simplex pricing row (clamped to
+    /// ≥ 1). Pricing results — and therefore pivots, iteration counts and
+    /// solutions — are bit-identical at any thread count: each column's
+    /// dot `α_j = a_jᵀρ` is computed by exactly one worker with the same
+    /// accumulation order as the serial loop.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Immutable model access.
@@ -711,7 +729,6 @@ impl SimplexSolver {
             //   at-lower q (Δ>0) needs α_q<0; at-upper q (Δ<0) needs α_q>0
             //   (signs mirror when x_r is above ub)
             let need_neg_alpha_for_lower = below_lb;
-            let nv = self.model.num_vars();
             let mut best: Option<(BVar, f64, f64)> = None; // (var, alpha, ratio)
             let consider = |this: &Self,
                             v: BVar,
@@ -748,17 +765,18 @@ impl SimplexSolver {
                     *best = Some((v, alpha, ratio));
                 }
             };
-            // Structural columns: status-check *before* touching the column
-            // data, then a single pass computing α = colᵀρ; reduced costs
-            // come from the incremental cache.
-            for j in 0..nv {
+            // Structural columns: the dense pricing row α = Aᵀρ is the
+            // dual simplex's hot pass — filled (in parallel when
+            // `set_threads` > 1) into `alpha_struct`, then scanned
+            // serially for the ratio test so tie-breaking stays
+            // deterministic; reduced costs come from the incremental
+            // cache.
+            self.price_dual_row(&rho, &mut alpha_struct);
+            for (j, &alpha) in alpha_struct.iter().enumerate() {
                 let st = self.col_status[j];
                 if matches!(st, VarStatus::Basic(_)) || self.model.lb[j] == self.model.ub[j] {
-                    alpha_struct[j] = 0.0;
                     continue;
                 }
-                let alpha = self.model.cols[j].dot_dense(&rho);
-                alpha_struct[j] = alpha;
                 consider(self, BVar::Col(j), st, alpha, d_struct[j], &mut best);
             }
             for rr in 0..m {
@@ -846,6 +864,41 @@ impl SimplexSolver {
             }
         }
         Status::IterLimit
+    }
+
+    /// Fill `alpha[j] = a_jᵀρ` for every structural column eligible to
+    /// enter (0.0 for basic or fixed columns), chunking the column range
+    /// across `std::thread::scope` workers when [`SimplexSolver::set_threads`]
+    /// is above 1 and the model clears [`PAR_PRICE_MIN_COLS`] — the same
+    /// chunked-range pattern `engine::BackendPricer` uses for `Xᵀv`. Each
+    /// α_j is produced by exactly one worker with the serial accumulation
+    /// order, so the pricing row is bit-identical at any thread count.
+    fn price_dual_row(&self, rho: &[f64], alpha: &mut [f64]) {
+        let nv = alpha.len();
+        let fill = |j0: usize, out: &mut [f64]| {
+            for (k, a) in out.iter_mut().enumerate() {
+                let j = j0 + k;
+                *a = if matches!(self.col_status[j], VarStatus::Basic(_))
+                    || self.model.lb[j] == self.model.ub[j]
+                {
+                    0.0
+                } else {
+                    self.model.cols[j].dot_dense(rho)
+                };
+            }
+        };
+        let t = self.threads.min(nv);
+        if t <= 1 || nv < PAR_PRICE_MIN_COLS {
+            fill(0, alpha);
+            return;
+        }
+        let chunk = nv.div_ceil(t);
+        std::thread::scope(|scope| {
+            for (c, slice) in alpha.chunks_mut(chunk).enumerate() {
+                let fill = &fill;
+                scope.spawn(move || fill(c * chunk, slice));
+            }
+        });
     }
 
     /// Rebuild the dual-simplex reduced-cost cache from the current basis.

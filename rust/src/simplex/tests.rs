@@ -462,3 +462,50 @@ fn parametric_path_matches_direct_solves() {
         direct.objective()
     );
 }
+
+/// The dense dual-simplex pricing row must be a pure speed knob: a cold
+/// solve (all-logical basis → dual simplex) over a model wide enough to
+/// engage the chunked parallel pass must produce bit-identical pivots,
+/// iteration counts and solutions at any thread count.
+#[test]
+fn parallel_dual_pricing_row_is_bit_identical() {
+    let mut rng = Xoshiro256::seed_from_u64(909);
+    let (nv, m) = (400, 50); // nv clears PAR_PRICE_MIN_COLS
+    let mut model = LpModel::new();
+    let mut vars = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        vars.push(model.add_col_nonneg(0.05 + rng.uniform(), &[]));
+    }
+    // feasible by construction: b = A x0 − slack with x0 ≥ 0
+    let x0: Vec<f64> = (0..nv).map(|_| rng.uniform()).collect();
+    for _ in 0..m {
+        let mut coefs = Vec::new();
+        let mut ax0 = 0.0;
+        for (&v, &x) in vars.iter().zip(&x0) {
+            if rng.uniform() < 0.15 {
+                let a = rng.normal();
+                ax0 += a * x;
+                coefs.push((v, a));
+            }
+        }
+        model.add_row_ge(ax0 - 0.1 - rng.uniform(), &coefs);
+    }
+
+    let mut serial = SimplexSolver::new(model.clone());
+    serial.set_threads(1);
+    assert_eq!(serial.solve(), Status::Optimal);
+    assert_kkt(&mut serial);
+
+    for threads in [2usize, 4, 7] {
+        let mut par = SimplexSolver::new(model.clone());
+        par.set_threads(threads);
+        assert_eq!(par.solve(), Status::Optimal);
+        assert_eq!(
+            (serial.stats.primal_iters, serial.stats.dual_iters),
+            (par.stats.primal_iters, par.stats.dual_iters),
+            "pivot trajectory differs at {threads} threads"
+        );
+        assert_eq!(serial.objective(), par.objective(), "objective differs at {threads} threads");
+        assert_eq!(serial.col_values(), par.col_values(), "solution differs at {threads} threads");
+    }
+}

@@ -37,7 +37,7 @@
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
-use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
@@ -178,6 +178,12 @@ impl RestrictedDantzig {
         }
     }
 
+    /// Worker threads for the dense dual-simplex pricing row (see
+    /// [`crate::simplex::SimplexSolver::set_threads`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.solver.set_threads(threads);
+    }
+
     /// Solve the restricted LP (warm-started).
     pub fn solve(&mut self) -> Status {
         self.solver.solve()
@@ -287,6 +293,19 @@ impl<'a> DantzigProblem<'a> {
     }
 }
 
+impl Snapshot for DantzigProblem<'_> {
+    fn export_working_set(&self) -> WorkingSet {
+        WorkingSet { cols: self.rd.j_set().to_vec(), rows: self.rd.i_set().to_vec() }
+    }
+    fn import_working_set(&mut self, ws: &WorkingSet) {
+        // rows first: each constraint row pulls in its own coefficient
+        // pair, preserving the I ⊆ J feasibility invariant; the remaining
+        // snapshot columns are then unioned in
+        self.rd.add_constraint_rows(self.ds, &ws.rows);
+        self.rd.add_coef_cols(self.ds, &ws.cols);
+    }
+}
+
 impl RestrictedProblem for DantzigProblem<'_> {
     fn solve(&mut self) -> Status {
         self.rd.solve()
@@ -344,6 +363,7 @@ pub fn dantzig_generation(
         seed.to_vec()
     };
     rd.add_constraint_rows(ds, &seed);
+    rd.set_threads(params.threads);
     let pricer = BackendPricer::new(backend, params.threads);
     let mut prob = DantzigProblem::new(rd, ds, &pricer);
     let mut stats = GenEngine::new(params).run(&mut prob);

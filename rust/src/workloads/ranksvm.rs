@@ -29,7 +29,7 @@
 use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
-use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem};
+use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
@@ -222,6 +222,12 @@ impl<'p> RestrictedRank<'p> {
         }
     }
 
+    /// Worker threads for the dense dual-simplex pricing row (see
+    /// [`crate::simplex::SimplexSolver::set_threads`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.solver.set_threads(threads);
+    }
+
     /// Solve the restricted LP (warm-started).
     pub fn solve(&mut self) -> Status {
         self.solver.solve()
@@ -328,6 +334,19 @@ impl<'a, 'p> RankProblem<'a, 'p> {
     }
 }
 
+impl Snapshot for RankProblem<'_, '_> {
+    fn export_working_set(&self) -> WorkingSet {
+        // row indices address the *candidate pair list* the model was
+        // built over; a snapshot is only restorable against the same
+        // (deterministic) pair enumeration, e.g. [`ranking_pairs`]
+        WorkingSet { cols: self.rr.j_set().to_vec(), rows: self.rr.t_set().to_vec() }
+    }
+    fn import_working_set(&mut self, ws: &WorkingSet) {
+        self.rr.add_pairs(self.ds, &ws.rows);
+        self.rr.add_features(self.ds, &ws.cols);
+    }
+}
+
 impl RestrictedProblem for RankProblem<'_, '_> {
     fn solve(&mut self) -> Status {
         self.rr.solve()
@@ -392,11 +411,9 @@ pub fn ranksvm_generation(
     let t_init = initial_pairs(pairs.len(), 10);
     let j_init = initial_rank_features(ds, pairs, 10);
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut prob = RankProblem::new(
-        RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init),
-        ds,
-        &pricer,
-    );
+    let mut rr = RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init);
+    rr.set_threads(params.threads);
+    let mut prob = RankProblem::new(rr, ds, &pricer);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.rows_added += t_init.len();
     stats.cols_added += j_init.len();

@@ -1,0 +1,311 @@
+//! End-to-end tests of the solve service: the full line-delimited JSON
+//! protocol over the stdin-style transport, warm-start cache semantics
+//! on every workload, serial-vs-concurrent consistency, snapshot
+//! export/import, and the TCP transport.
+
+use std::io::Cursor;
+
+use cutgen::backend::NativeBackend;
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_dantzig, DantzigSpec};
+use cutgen::engine::{BackendPricer, GenEngine, Snapshot};
+use cutgen::rng::Xoshiro256;
+use cutgen::serve::json::Json;
+use cutgen::serve::transport::{client_send, client_send_many, serve_lines, serve_tcp};
+use cutgen::serve::ServeState;
+use cutgen::workloads::dantzig::{
+    dantzig_generation, initial_features, lambda_max_dantzig, DantzigProblem, RestrictedDantzig,
+};
+
+fn run_script(state: &ServeState, script: &str) -> Vec<Json> {
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(state, Cursor::new(script.as_bytes()), &mut out).unwrap();
+    let text = std::str::from_utf8(&out).unwrap();
+    text.lines().map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}"))).collect()
+}
+
+fn get_f64(v: &Json, key: &str) -> f64 {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_f64().unwrap()
+}
+
+fn get_usize(v: &Json, key: &str) -> usize {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_usize().unwrap()
+}
+
+fn get_bool(v: &Json, key: &str) -> bool {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_bool().unwrap()
+}
+
+fn assert_ok(v: &Json) {
+    assert!(get_bool(v, "ok"), "request failed: {v}");
+}
+
+/// The acceptance-criteria drive: over the stdin transport, register a
+/// dataset, solve cold, re-solve a nearby λ with a cache hit, and check
+/// the warm solve uses strictly fewer generation rounds while matching
+/// the cold objective to ≤ 1e-6 relative.
+#[test]
+fn stdin_transport_warm_start_end_to_end() {
+    let state = ServeState::new(64);
+    // max_cols_per_round caps expansion so round counts reflect how far
+    // from the optimum each solve started
+    let script = concat!(
+        r#"{"op":"register","name":"d1","synthetic":{"kind":"l1","n":60,"p":200,"seed":7}}"#,
+        "\n",
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.02,"eps":1e-6,"max_cols_per_round":5}"#,
+        "\n",
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5}"#,
+        "\n",
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5,"cache":false}"#,
+        "\n",
+        r#"{"op":"stats"}"#,
+        "\n",
+    );
+    let resp = run_script(&state, script);
+    assert_eq!(resp.len(), 5);
+    for r in &resp {
+        assert_ok(r);
+    }
+    let (reg, cold1, warm, cold2, stats) =
+        (&resp[0], &resp[1], &resp[2], &resp[3], &resp[4]);
+    assert_eq!(get_usize(reg, "n"), 60);
+    assert_eq!(get_usize(reg, "p"), 200);
+
+    assert!(!get_bool(cold1, "warm"), "first solve must be cold");
+    assert!(get_bool(cold1, "converged"));
+
+    // nearby λ: the cache must hit and resume from the snapshot
+    assert!(get_bool(warm, "warm"), "nearby λ must hit the cache: {warm}");
+    assert!(get_bool(warm, "converged"));
+    assert!(!get_bool(cold2, "warm"), "cache:false must solve cold");
+
+    // fewer generation rounds warm than cold, same optimum
+    let warm_rounds = get_usize(warm, "rounds");
+    let cold_rounds = get_usize(cold2, "rounds");
+    assert!(
+        warm_rounds < cold_rounds,
+        "warm start must save rounds: warm {warm_rounds}, cold {cold_rounds}"
+    );
+    let wo = get_f64(warm, "objective");
+    let co = get_f64(cold2, "objective");
+    assert!(
+        (wo - co).abs() / co.max(1e-9) <= 1e-6,
+        "warm {wo} vs cold {co} at the same λ"
+    );
+
+    assert!(get_usize(stats, "cache_hits") >= 1, "stats must report the hit: {stats}");
+    assert_eq!(get_usize(stats, "requests"), 5);
+}
+
+/// Cache correctness on every workload: a warm-started solve from a
+/// snapshot matches a cold solve of the same request to ≤ 1e-6 relative
+/// objective, without using more rounds.
+#[test]
+fn warm_solve_matches_cold_on_every_workload() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":11}}"#,
+    ))
+    .unwrap());
+    for (workload, frac) in [
+        ("l1svm", 0.05),
+        ("group", 0.1),
+        ("slope", 0.05),
+        ("ranksvm", 0.05),
+        ("dantzig", 0.3),
+    ] {
+        let req = format!(
+            r#"{{"op":"solve","dataset":"d","workload":"{workload}","lambda_frac":{frac},"eps":1e-7}}"#
+        );
+        let cold = Json::parse(&state.handle_line(&req)).unwrap();
+        assert_ok(&cold);
+        assert!(!get_bool(&cold, "warm"), "{workload}: first solve must be cold");
+        let warm = Json::parse(&state.handle_line(&req)).unwrap();
+        assert_ok(&warm);
+        assert!(get_bool(&warm, "warm"), "{workload}: repeat must hit the cache");
+        let co = get_f64(&cold, "objective");
+        let wo = get_f64(&warm, "objective");
+        assert!(
+            (wo - co).abs() / co.max(1e-9) <= 1e-6,
+            "{workload}: warm {wo} vs cold {co}"
+        );
+        // Slope's epigraph cuts regenerate from incumbents, so its warm
+        // round count isn't strictly comparable; everywhere else the
+        // restored working set must not expand the search.
+        if workload != "slope" {
+            assert!(
+                get_usize(&warm, "rounds") <= get_usize(&cold, "rounds"),
+                "{workload}: warm must not use more rounds"
+            );
+        }
+    }
+}
+
+/// N concurrent clients must receive byte-identical responses to the
+/// same requests issued serially (cache disabled so every solve is a
+/// deterministic cold run).
+#[test]
+fn concurrent_clients_match_serial() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":30,"p":60,"seed":5}}"#,
+    ))
+    .unwrap());
+    let requests: Vec<String> = ["l1svm", "group", "slope", "ranksvm", "dantzig"]
+        .iter()
+        .map(|w| {
+            format!(
+                r#"{{"op":"solve","dataset":"d","workload":"{w}","lambda_frac":0.1,"eps":1e-4,"cache":false}}"#
+            )
+        })
+        .collect();
+    let serial: Vec<String> = requests.iter().map(|r| state.handle_line(r)).collect();
+    let mut concurrent: Vec<String> = vec![String::new(); requests.len()];
+    std::thread::scope(|scope| {
+        for (slot, req) in concurrent.iter_mut().zip(&requests) {
+            let state = &state;
+            scope.spawn(move || {
+                *slot = state.handle_line(req);
+            });
+        }
+    });
+    for (k, (s, c)) in serial.iter().zip(&concurrent).enumerate() {
+        assert_ok(&Json::parse(s).unwrap());
+        assert_eq!(s, c, "request {k}: concurrent response diverged");
+    }
+}
+
+/// The grid endpoint routes through the warm-started path drivers and
+/// reports one point per λ; unsupported workloads fail cleanly.
+#[test]
+fn grid_endpoint_runs_the_warm_started_paths() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":30,"p":50,"seed":9}}"#,
+    ))
+    .unwrap());
+    for workload in ["l1svm", "ranksvm", "dantzig"] {
+        let resp = Json::parse(&state.handle_line(&format!(
+            r#"{{"op":"grid","dataset":"d","workload":"{workload}","grid":4,"ratio":0.6}}"#
+        )))
+        .unwrap();
+        assert_ok(&resp);
+        let path = resp.get("path").unwrap().as_arr().unwrap();
+        assert_eq!(path.len(), 4, "{workload}: expected 4 grid points");
+        // λ decreases along the grid; λ_max comes first with support 0
+        assert_eq!(path[0].get("support").unwrap().as_usize(), Some(0));
+        let l0 = path[0].get("lambda").unwrap().as_f64().unwrap();
+        let l3 = path[3].get("lambda").unwrap().as_f64().unwrap();
+        assert!(l3 < l0);
+    }
+    let unsupported = Json::parse(
+        &state.handle_line(r#"{"op":"grid","dataset":"d","workload":"slope","grid":3}"#),
+    )
+    .unwrap();
+    assert!(!get_bool(&unsupported, "ok"));
+}
+
+/// Malformed input never tears the session down: every bad line gets an
+/// `{"ok":false}` response and the next request still works.
+#[test]
+fn protocol_errors_are_responses_not_crashes() {
+    let state = ServeState::new(8);
+    for bad in [
+        "not json at all",
+        r#"{"op":"frobnicate"}"#,
+        r#"{"missing":"op"}"#,
+        r#"{"op":"solve","dataset":"ghost","workload":"l1svm"}"#,
+        r#"{"op":"solve","dataset":"d","workload":"lasso"}"#,
+        r#"{"op":"register","name":"x"}"#,
+        r#"{"op":"register","name":"x","synthetic":{"kind":"martian"}}"#,
+    ] {
+        let resp = Json::parse(&state.handle_line(bad)).unwrap();
+        assert!(!get_bool(&resp, "ok"), "{bad:?} should fail");
+        assert!(resp.get("error").unwrap().as_str().is_some());
+    }
+    let pong = Json::parse(&state.handle_line(r#"{"op":"ping"}"#)).unwrap();
+    assert_ok(&pong);
+}
+
+/// Snapshot export → import into a fresh restricted problem restores
+/// the working sets exactly and re-converges in one round at the same
+/// objective (Dantzig exercises the I ⊆ J invariant through import).
+#[test]
+fn snapshot_roundtrip_restores_dantzig_working_sets() {
+    let spec = DantzigSpec { n: 30, p: 40, k0: 5, rho: 0.1, sigma: 0.4, standardize: true };
+    let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(77));
+    let lambda = 0.3 * lambda_max_dantzig(&ds);
+    let backend = NativeBackend::new(&ds.x);
+    let params = GenParams { eps: 1e-9, ..Default::default() };
+    let pricer = BackendPricer::new(&backend, 1);
+
+    let mut cold = DantzigProblem::new(
+        RestrictedDantzig::new(&ds, lambda, &initial_features(&ds, 10)),
+        &ds,
+        &pricer,
+    );
+    let engine = GenEngine::new(&params);
+    let cold_stats = engine.run(&mut cold);
+    assert!(cold_stats.converged);
+    let ws = cold.export_working_set();
+    assert!(!ws.is_empty());
+
+    let mut fresh =
+        DantzigProblem::new(RestrictedDantzig::new(&ds, lambda, &[]), &ds, &pricer);
+    fresh.import_working_set(&ws);
+    // same sets (insertion order may differ: import adds row-columns first)
+    let restored = fresh.export_working_set();
+    let sorted = |v: &[usize]| {
+        let mut v = v.to_vec();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(&restored.cols), sorted(&ws.cols), "column sets must match");
+    assert_eq!(restored.rows, ws.rows, "row order is preserved verbatim");
+    // I ⊆ J must survive the import
+    for i in fresh.inner().i_set() {
+        assert!(fresh.inner().j_set().contains(i), "row {i} lacks its column pair");
+    }
+    let warm_stats = engine.run(&mut fresh);
+    assert!(warm_stats.converged);
+    assert!(
+        warm_stats.rounds <= 2,
+        "restored working set must price out almost immediately (rounds {})",
+        warm_stats.rounds
+    );
+    let direct = dantzig_generation(&ds, &backend, lambda, &[], &params);
+    assert!(
+        (fresh.inner().objective() - direct.objective).abs() / direct.objective.max(1e-9)
+            <= 1e-6,
+        "restored {} direct {}",
+        fresh.inner().objective(),
+        direct.objective
+    );
+}
+
+/// The TCP transport: worker pool serves a multi-request session, and a
+/// `shutdown` request stops the server.
+#[test]
+fn tcp_transport_session_and_shutdown() {
+    let state = ServeState::new(16);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let state_ref = &state;
+        let server = scope.spawn(move || serve_tcp(state_ref, listener, 2));
+        let lines: Vec<String> = vec![
+            r#"{"op":"register","name":"t","synthetic":{"kind":"l1","n":25,"p":40,"seed":3}}"#
+                .to_string(),
+            r#"{"op":"solve","dataset":"t","workload":"l1svm","lambda_frac":0.1}"#.to_string(),
+            r#"{"op":"stats"}"#.to_string(),
+        ];
+        let responses = client_send_many(&addr, &lines).unwrap();
+        assert_eq!(responses.len(), 3);
+        for r in &responses {
+            assert_ok(&Json::parse(r).unwrap());
+        }
+        let bye = client_send(&addr, r#"{"op":"shutdown"}"#).unwrap();
+        assert_ok(&Json::parse(&bye).unwrap());
+        server.join().unwrap().unwrap();
+    });
+}
