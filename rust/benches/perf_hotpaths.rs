@@ -133,6 +133,60 @@ fn main() {
         }
     }
 
+    // 2c. §4 initialization strategies + FOM-vs-screening cold solves —
+    // the engine Initializer layer: seed cost alone, then the end-to-end
+    // cold solve it unlocks (seed + column generation).
+    {
+        use cutgen::coordinator::l1svm::column_generation;
+        use cutgen::coordinator::GenParams;
+        use cutgen::engine::{InitStrategy, Initializer};
+
+        let (inn, inp) = if smoke { (80, 800) } else { (200, 4000) };
+        let ids = generate_l1(&SyntheticSpec::paper_default(inn, inp), &mut rng);
+        let ibackend = NativeBackend::new(&ids.x);
+        let ilam = 0.05 * ids.lambda_max_l1();
+        for strat in [InitStrategy::Screening, InitStrategy::Fista] {
+            let ini = Initializer::new(strat, 10);
+            bench(
+                &mut recs,
+                &format!("init {} n={inn} p={inp}", strat.as_str()),
+                0.0,
+                || {
+                    black_box(ini.seed_l1(&ids, &ibackend, ilam).ws.len());
+                },
+            );
+        }
+        // subsample-and-average on a large-n draw (§4.4.2)
+        let (sn2, sp2) = if smoke { (2000, 20) } else { (12_000, 40) };
+        let sds2 = generate_l1(&SyntheticSpec::paper_default(sn2, sp2), &mut rng);
+        let sbackend2 = NativeBackend::new(&sds2.x);
+        let slam2 = 0.02 * sds2.lambda_max_l1();
+        let sub_ini = Initializer::new(InitStrategy::Subsample, 10);
+        bench(&mut recs, &format!("init subsample n={sn2} p={sp2}"), 0.0, || {
+            black_box(sub_ini.seed_l1(&sds2, &sbackend2, slam2).ws.len());
+        });
+        // cold solve: screening seed vs FOM seed, end to end
+        for strat in [InitStrategy::Screening, InitStrategy::Fista] {
+            let ini = Initializer::new(strat, 10);
+            bench(
+                &mut recs,
+                &format!("cold solve {} n={inn} p={inp}", strat.as_str()),
+                0.0,
+                || {
+                    let seed = ini.seed_l1(&ids, &ibackend, ilam);
+                    let sol = column_generation(
+                        &ids,
+                        &ibackend,
+                        ilam,
+                        &seed.ws.cols,
+                        &GenParams::default(),
+                    );
+                    black_box(sol.objective);
+                },
+            );
+        }
+    }
+
     // 3. sparse pricing
     let spec = SparseTextSpec {
         n: if smoke { 2000 } else { 20_000 },
@@ -314,6 +368,8 @@ fn main() {
                     &rbe,
                     &pairs,
                     rlam,
+                    &[],
+                    &[],
                     &cutgen::coordinator::GenParams::default(),
                 );
                 black_box(sol.objective);

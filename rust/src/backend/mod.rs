@@ -47,10 +47,102 @@ pub trait Backend: Sync {
     fn supports_range_pricing(&self) -> bool {
         false
     }
+    /// Dot of column `j` with a dense vector: `(Xᵀv)[j]`.
+    ///
+    /// The default routes through [`Backend::xtv_range`] with a
+    /// single-column range, so backends with a real range kernel get this
+    /// at column cost for free.
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let mut out = [0.0];
+        self.xtv_range(v, j, &mut out);
+        out[0]
+    }
+    /// `out += alpha · X[:, j]` (incremental margin maintenance in block
+    /// coordinate descent).
+    ///
+    /// The default multiplies a basis vector through [`Backend::xb`] —
+    /// correct for any backend but O(np); backends with column access
+    /// should override it.
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        let mut e = vec![0.0; self.cols()];
+        e[j] = alpha;
+        let mut tmp = vec![0.0; self.rows()];
+        self.xb(&e, &mut tmp);
+        for (o, t) in out.iter_mut().zip(&tmp) {
+            *o += t;
+        }
+    }
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str {
         "unknown"
     }
+}
+
+/// Minimum estimated work (output length × rows, a flop proxy) before
+/// the parallel kernels spawn workers: below this, thread spawn/join
+/// overhead dominates the matvec itself (a FISTA iteration on a small
+/// screened subproblem, or block CD's ~10-column groups).
+const PAR_MIN_WORK: usize = 1 << 15;
+
+/// `out = Xᵀv` chunked over `threads` scoped workers — the shared kernel
+/// behind cutting-plane pricing (`engine::BackendPricer`) **and** the
+/// first-order gradients (`fom::fista`, `fom::block_cd`), so both hot
+/// paths ride the same `xtv_range` chunking.
+///
+/// Determinism: every column's dot product accumulates over samples in
+/// ascending row order regardless of the chunking, so the output — and
+/// therefore anything seeded from it — is bit-identical for any thread
+/// count. Falls back to a single serial `xtv` when `threads <= 1`, when
+/// the backend has no genuine range kernel (see
+/// [`Backend::supports_range_pricing`]), or when the problem is too
+/// small for worker spawn/join to pay for itself ([`PAR_MIN_WORK`]).
+pub fn par_xtv(backend: &dyn Backend, threads: usize, v: &[f64], out: &mut [f64]) {
+    let p = out.len();
+    if p == 0 {
+        return;
+    }
+    let t = threads.max(1).min(p);
+    if t <= 1
+        || !backend.supports_range_pricing()
+        || p.saturating_mul(backend.rows()) < PAR_MIN_WORK
+    {
+        backend.xtv(v, out);
+        return;
+    }
+    let chunk = p.div_ceil(t);
+    std::thread::scope(|scope| {
+        for (c, slice) in out.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || backend.xtv_range(v, c * chunk, slice));
+        }
+    });
+}
+
+/// `(Xᵀv)[j]` for an arbitrary column subset, chunked over `threads`
+/// scoped workers (block CD's per-group gradient, where the group's
+/// columns need not be contiguous). Each output slot is one independent
+/// [`Backend::col_dot`], so the result is bit-identical for any thread
+/// count — including across the serial small-work fast path.
+pub fn par_col_dots(backend: &dyn Backend, threads: usize, cols: &[usize], v: &[f64]) -> Vec<f64> {
+    let k = cols.len();
+    let mut out = vec![0.0; k];
+    let t = threads.max(1).min(k.max(1));
+    if t <= 1 || k.saturating_mul(backend.rows()) < PAR_MIN_WORK {
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = backend.col_dot(j, v);
+        }
+        return out;
+    }
+    let chunk = k.div_ceil(t);
+    std::thread::scope(|scope| {
+        for (slice_j, slice_o) in cols.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (o, &j) in slice_o.iter_mut().zip(slice_j) {
+                    *o = backend.col_dot(j, v);
+                }
+            });
+        }
+    });
+    out
 }
 
 /// Pure-Rust backend delegating to the [`Design`] kernels.
@@ -83,6 +175,12 @@ impl Backend for NativeBackend<'_> {
     }
     fn supports_range_pricing(&self) -> bool {
         true
+    }
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        self.design.col_dot(j, v)
+    }
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        self.design.col_axpy(j, alpha, out);
     }
     fn name(&self) -> &'static str {
         "native"
@@ -143,6 +241,77 @@ mod tests {
         let mut t = vec![0.0; 3];
         b.xtv(&[1.0, 2.0], &mut t);
         assert_eq!(t, vec![-1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn par_kernels_match_serial_bitwise() {
+        let m = Matrix::from_vec(3, 5, vec![
+            1.0, -2.0, 0.5, 0.0, 3.0, //
+            0.0, 1.0, -1.5, 2.0, 0.0, //
+            4.0, 0.0, 1.0, -0.5, 2.5,
+        ]);
+        let d = Design::dense(m);
+        let b = NativeBackend::new(&d);
+        let v = [0.3, -1.2, 0.7];
+        let mut serial = vec![0.0; 5];
+        b.xtv(&v, &mut serial);
+        for t in [1usize, 2, 3, 8] {
+            let mut par = vec![0.0; 5];
+            par_xtv(&b, t, &v, &mut par);
+            assert_eq!(serial, par, "par_xtv diverged at {t} threads");
+        }
+        let cols = [4usize, 0, 2];
+        let want: Vec<f64> = cols.iter().map(|&j| serial[j]).collect();
+        for t in [1usize, 2, 7] {
+            assert_eq!(par_col_dots(&b, t, &cols, &v), want, "par_col_dots at {t} threads");
+        }
+        assert!(par_col_dots(&b, 4, &[], &v).is_empty());
+        // default col ops (through the trait's fallbacks) agree with the
+        // overridden native ones
+        struct Wrap<'a>(&'a NativeBackend<'a>);
+        impl Backend for Wrap<'_> {
+            fn rows(&self) -> usize {
+                self.0.rows()
+            }
+            fn cols(&self) -> usize {
+                self.0.cols()
+            }
+            fn xb(&self, beta: &[f64], out: &mut [f64]) {
+                self.0.xb(beta, out)
+            }
+            fn xtv(&self, v: &[f64], out: &mut [f64]) {
+                self.0.xtv(v, out)
+            }
+        }
+        let w = Wrap(&b);
+        assert_eq!(w.col_dot(2, &v), b.col_dot(2, &v));
+        let mut a1 = vec![1.0; 3];
+        let mut a2 = vec![1.0; 3];
+        w.col_axpy(1, 0.5, &mut a1);
+        b.col_axpy(1, 0.5, &mut a2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn par_col_dots_chunked_path_matches_serial() {
+        // big enough to clear PAR_MIN_WORK so workers actually spawn
+        let n = 256;
+        let p = 200;
+        let mut vals = Vec::with_capacity(n * p);
+        let mut state = 0x9E37_79B9u64;
+        for _ in 0..n * p {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            vals.push(((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5);
+        }
+        let d = Design::dense(Matrix::from_vec(n, p, vals));
+        let b = NativeBackend::new(&d);
+        let v: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let cols: Vec<usize> = (0..p).rev().collect(); // non-contiguous order
+        assert!(cols.len() * n >= PAR_MIN_WORK);
+        let serial = par_col_dots(&b, 1, &cols, &v);
+        for t in [2usize, 4, 7] {
+            assert_eq!(par_col_dots(&b, t, &cols, &v), serial, "{t} threads");
+        }
     }
 
     #[test]

@@ -6,17 +6,28 @@
 //! cutgen train    --data FILE | --synthetic N,P  [--penalty l1|group|slope]
 //!                 [--lambda-frac F] [--method fo-clg|clg|cng|clcng|full-lp|psm]
 //!                 [--backend native|pjrt] [--eps E] [--group-size G]
+//!                 [--init auto|screening|fista|blockcd|subsample] [--seed-budget K]
 //!                 [--threads T] [--trace]
-//! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--threads T]
+//! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--seed-budget K] [--threads T]
 //! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
-//!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
+//!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
+//!                 [--seed-budget K] [--threads T] [--trace]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
-//!                 [--method gen|full-lp] [--grid K] [--eps E] [--threads T] [--trace]
+//!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
+//!                 [--seed-budget K] [--threads T] [--trace]
 //! cutgen serve    [--port 7878] [--host 127.0.0.1] [--workers W]
 //!                 [--cache-cap N] [--stdin]
 //! cutgen client   [--port 7878] [--host H] --send '<json>' | --file requests.jsonl
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
+//!
+//! `--init` selects the §4 first-order initialization strategy for cold
+//! solves (`auto` = per-workload FOM default; `screening` = the
+//! closed-form λ_max top-k); `--seed-budget` sizes the seed. They apply
+//! to `train --method clg|cng` and the group/slope penalties, to
+//! `path`, and to `ranksvm`/`dantzig`; the paper-method runners
+//! (`fo-clg`, `clcng`) pin their own §5 FOM configuration and ignore
+//! them.
 
 use std::collections::BTreeMap;
 
@@ -31,6 +42,7 @@ use crate::data::synthetic::{
     DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use crate::data::{libsvm, Dataset};
+use crate::engine::{InitStrategy, Initializer};
 use crate::exps::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::rng::Xoshiro256;
 
@@ -80,6 +92,24 @@ impl Args {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer")),
         }
+    }
+    /// Generation params with the shared `--eps/--threads/--trace/--init/
+    /// --seed-budget` knobs folded in.
+    fn gen_params(&self) -> Result<GenParams> {
+        let init = match self.get("init") {
+            Some(s) => InitStrategy::parse(s)?,
+            None => InitStrategy::Auto,
+        };
+        Ok(GenParams {
+            eps: self.get_f64("eps", 1e-2)?,
+            threads: self.get_usize("threads", 1)?.max(1),
+            trace: self.get("trace").is_some(),
+            init,
+            seed_budget: self
+                .get_usize("seed-budget", crate::engine::DEFAULT_SEED_BUDGET)?
+                .max(1),
+            ..Default::default()
+        })
     }
 }
 
@@ -216,12 +246,13 @@ fn report(sol: &SvmSolution, secs: f64) {
 fn train(args: &Args) -> Result<()> {
     let ds = load_or_generate(args)?;
     let lambda_frac = args.get_f64("lambda-frac", 0.01)?;
-    let eps = args.get_f64("eps", 1e-2)?;
-    let threads = args.get_usize("threads", 1)?.max(1);
-    let trace = args.get("trace").is_some();
     let method = args.get("method").unwrap_or("fo-clg");
     let penalty = args.get("penalty").unwrap_or("l1");
     let use_pjrt = args.get("backend") == Some("pjrt");
+    let gen = args.gen_params()?;
+    // single source of truth for the shared knobs (gen_params parses them)
+    let eps = gen.eps;
+    let threads = gen.threads;
     // The shared method runners (fo-clg, clcng, slope init) build their own
     // GenParams; the env knob routes the thread count to them too.
     std::env::set_var("CUTGEN_THREADS", threads.to_string());
@@ -246,20 +277,43 @@ fn train(args: &Args) -> Result<()> {
     match penalty {
         "l1" => {
             let lambda = lambda_frac * ds.lambda_max_l1();
-            println!("L1-SVM: n={}, p={}, λ={lambda:.4} ({lambda_frac}·λ_max)", ds.n(), ds.p());
-            let gen = GenParams { eps, threads, trace, ..Default::default() };
+            // fo-clg / clcng are the paper's §5 methods with their own
+            // pinned FOM configuration; only clg/cng consume --init
+            let init_label = match method {
+                "clg" | "cng" => gen.init.as_str(),
+                "fo-clg" | "clcng" => "method-defined",
+                _ => "n/a",
+            };
+            println!(
+                "L1-SVM: n={}, p={}, λ={lambda:.4} ({lambda_frac}·λ_max), init {init_label}",
+                ds.n(),
+                ds.p(),
+            );
             let (sol, t) = crate::exps::time_it(|| -> Result<SvmSolution> {
                 Ok(match method {
                     "fo-clg" => crate::exps::common::fo_clg(&ds, lambda, eps, 100).0,
-                    "clg" => crate::coordinator::l1svm::column_generation(
-                        &ds,
-                        backend,
-                        lambda,
-                        &crate::coordinator::path::initial_columns(&ds, 10),
-                        &gen,
-                    ),
+                    "clg" => {
+                        // §4 default behavior: FOM-seeded cold solve
+                        // (--init screening restores the bare top-k seed);
+                        // column-only — Algorithm 1 keeps all margin rows
+                        let seed =
+                            Initializer::from_params(&gen).seed_l1_cols(&ds, backend, lambda);
+                        crate::coordinator::l1svm::column_generation(
+                            &ds,
+                            backend,
+                            lambda,
+                            &seed.ws.cols,
+                            &gen,
+                        )
+                    }
                     "cng" => {
-                        crate::coordinator::l1svm::constraint_generation(&ds, lambda, &[], &gen)
+                        let seed = Initializer::from_params(&gen).seed_l1(&ds, backend, lambda);
+                        crate::coordinator::l1svm::constraint_generation(
+                            &ds,
+                            lambda,
+                            &seed.ws.rows,
+                            &gen,
+                        )
                     }
                     "clcng" => crate::exps::common::sfo_cl_cng(&ds, lambda, eps, 200, 1).0,
                     "full-lp" => crate::baselines::full_lp::solve_full_l1(&ds, lambda),
@@ -275,16 +329,15 @@ fn train(args: &Args) -> Result<()> {
             let groups: Vec<Vec<usize>> =
                 (0..ds.p() / gs).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
             let lambda = lambda_frac * ds.lambda_max_group(&groups);
-            println!("Group-SVM: {} groups of {gs}, λ={lambda:.4}", groups.len());
-            let init = crate::coordinator::group::initial_groups(&ds, &groups, 5);
+            println!(
+                "Group-SVM: {} groups of {gs}, λ={lambda:.4}, init {}",
+                groups.len(),
+                gen.init.as_str()
+            );
+            let init = Initializer::from_params(&gen).seed_group(&ds, &groups, lambda).ws.cols;
             let (sol, t) = crate::exps::time_it(|| {
                 crate::coordinator::group::group_column_generation(
-                    &ds,
-                    backend,
-                    &groups,
-                    lambda,
-                    &init,
-                    &GenParams { eps, threads, trace, ..Default::default() },
+                    &ds, backend, &groups, lambda, &init, &gen,
                 )
             });
             report(&sol, t);
@@ -292,21 +345,18 @@ fn train(args: &Args) -> Result<()> {
         "slope" => {
             let lt = lambda_frac * ds.lambda_max_l1();
             let lambda = crate::fom::objective::bh_slope_weights(ds.p(), lt);
-            println!("Slope-SVM (BH weights): λ̃={lt:.4}");
-            let (init, _) = crate::exps::common::fo_slope_init(&ds, &lambda, 100);
+            println!("Slope-SVM (BH weights): λ̃={lt:.4}, init {}", gen.init.as_str());
+            // the §5 slope config seeds with up to 100 columns; an
+            // explicit --seed-budget still wins
+            let mut ini = Initializer::from_params(&gen);
+            if args.get("seed-budget").is_none() {
+                ini.budget = 100;
+            }
+            let init = ini.seed_slope(&ds, &lambda).ws.cols;
+            let slope_gen = GenParams { max_cols_per_round: 10, ..gen.clone() };
             let (sol, t) = crate::exps::time_it(|| {
                 crate::coordinator::slope::slope_column_constraint_generation(
-                    &ds,
-                    backend,
-                    &lambda,
-                    &init,
-                    &GenParams {
-                        eps,
-                        max_cols_per_round: 10,
-                        threads,
-                        trace,
-                        ..Default::default()
-                    },
+                    &ds, backend, &lambda, &init, &slope_gen,
                 )
             });
             report(&sol, t);
@@ -320,19 +370,11 @@ fn path_cmd(args: &Args) -> Result<()> {
     let ds = load_or_generate(args)?;
     let k = args.get_usize("grid", 20)?;
     let ratio = args.get_f64("ratio", 0.7)?;
-    let eps = args.get_f64("eps", 1e-2)?;
-    let threads = args.get_usize("threads", 1)?.max(1);
+    let gen = args.gen_params()?;
     let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
     let backend = NativeBackend::new(&ds.x);
-    let ((path, _), t) = crate::exps::time_it(|| {
-        regularization_path(
-            &ds,
-            &backend,
-            &grid,
-            10,
-            &GenParams { eps, threads, ..Default::default() },
-        )
-    });
+    let ((path, _), t) =
+        crate::exps::time_it(|| regularization_path(&ds, &backend, &grid, &gen));
     report_path(&path, t);
     Ok(())
 }
@@ -391,16 +433,14 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
     ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
     let lmax = crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
     let lambda_frac = args.get_f64("lambda-frac", 0.05)?;
-    let eps = args.get_f64("eps", 1e-2)?;
-    let threads = args.get_usize("threads", 1)?.max(1);
-    let trace = args.get("trace").is_some();
     let backend = NativeBackend::new(&ds.x);
-    let gen = GenParams { eps, threads, trace, ..Default::default() };
+    let gen = args.gen_params()?;
     println!(
-        "RankSVM: n={}, p={}, |P|={} pairs, λ_max={lmax:.4}",
+        "RankSVM: n={}, p={}, |P|={} pairs, λ_max={lmax:.4}, init {}",
         ds.n(),
         ds.p(),
-        pairs.len()
+        pairs.len(),
+        gen.init.as_str()
     );
     if let Some(k) = args.get("grid") {
         ensure!(
@@ -411,7 +451,7 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
         let ratio = args.get_f64("ratio", 0.7)?;
         let grid = geometric_grid(lmax, k, ratio);
         let (path, t) = crate::exps::time_it(|| {
-            crate::coordinator::path::ranksvm_path(&ds, &backend, &pairs, &grid, 10, &gen)
+            crate::coordinator::path::ranksvm_path(&ds, &backend, &pairs, &grid, &gen)
         });
         report_path(&path, t);
         return Ok(());
@@ -420,7 +460,16 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
     println!("λ = {lambda:.4} ({lambda_frac}·λ_max)");
     let (sol, t) = match args.get("method").unwrap_or("gen") {
         "gen" => crate::exps::time_it(|| {
-            crate::workloads::ranksvm::ranksvm_generation(&ds, &backend, &pairs, lambda, &gen)
+            let seed = Initializer::from_params(&gen).seed_ranksvm(&ds, &backend, &pairs, lambda);
+            crate::workloads::ranksvm::ranksvm_generation(
+                &ds,
+                &backend,
+                &pairs,
+                lambda,
+                &seed.ws.rows,
+                &seed.ws.cols,
+                &gen,
+            )
         }),
         "full-lp" => crate::exps::time_it(|| {
             crate::baselines::ranksvm_full::solve_full_ranksvm(&ds, &pairs, lambda)
@@ -435,12 +484,14 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
     let ds = load_or_generate_regression(args, false)?;
     let lmax = crate::workloads::dantzig::lambda_max_dantzig(&ds);
     let lambda_frac = args.get_f64("lambda-frac", 0.3)?;
-    let eps = args.get_f64("eps", 1e-2)?;
-    let threads = args.get_usize("threads", 1)?.max(1);
-    let trace = args.get("trace").is_some();
     let backend = NativeBackend::new(&ds.x);
-    let gen = GenParams { eps, threads, trace, ..Default::default() };
-    println!("Dantzig selector: n={}, p={}, λ_max={lmax:.4}", ds.n(), ds.p());
+    let gen = args.gen_params()?;
+    println!(
+        "Dantzig selector: n={}, p={}, λ_max={lmax:.4}, init {}",
+        ds.n(),
+        ds.p(),
+        gen.init.as_str()
+    );
     if let Some(k) = args.get("grid") {
         ensure!(
             matches!(args.get("method"), None | Some("gen")),
@@ -450,7 +501,7 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
         let ratio = args.get_f64("ratio", 0.7)?;
         let grid = geometric_grid(lmax, k, ratio);
         let (path, t) = crate::exps::time_it(|| {
-            crate::coordinator::path::dantzig_path(&ds, &backend, &grid, 10, &gen)
+            crate::coordinator::path::dantzig_path(&ds, &backend, &grid, &gen)
         });
         report_path(&path, t);
         return Ok(());
@@ -459,7 +510,14 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
     println!("λ = {lambda:.4} ({lambda_frac}·λ_max)");
     let (sol, t) = match args.get("method").unwrap_or("gen") {
         "gen" => crate::exps::time_it(|| {
-            crate::workloads::dantzig::dantzig_generation(&ds, &backend, lambda, &[], &gen)
+            let seed = Initializer::from_params(&gen).seed_dantzig(&ds, &backend, lambda);
+            crate::workloads::dantzig::dantzig_generation(
+                &ds,
+                &backend,
+                lambda,
+                &seed.ws.rows,
+                &gen,
+            )
         }),
         "full-lp" => crate::exps::time_it(|| {
             crate::baselines::dantzig_full::solve_full_dantzig(&ds, lambda)
@@ -561,6 +619,26 @@ mod tests {
     fn train_on_tiny_synthetic_runs() {
         let a = args(&["train", "--synthetic", "30,80", "--method", "clg"]);
         main_with(a).unwrap();
+    }
+
+    #[test]
+    fn train_with_explicit_init_strategies_runs() {
+        for strat in ["screening", "fista"] {
+            let a = args(&[
+                "train",
+                "--synthetic",
+                "25,50",
+                "--method",
+                "clg",
+                "--init",
+                strat,
+                "--seed-budget",
+                "5",
+            ]);
+            main_with(a).unwrap();
+        }
+        let bad = args(&["train", "--synthetic", "25,50", "--init", "magic"]);
+        assert!(main_with(bad).is_err(), "unknown strategy must error");
     }
 
     #[test]

@@ -12,7 +12,6 @@ use crate::backend::Backend;
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem, Snapshot, WorkingSet};
-use crate::fom::objective::hinge_loss_support;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
 /// Restricted-groups Group-SVM LP.
@@ -254,23 +253,13 @@ pub fn group_column_generation(
     let rg = prob.inner();
 
     let (support, beta0) = rg.beta_support();
-    let mut beta = vec![0.0; ds.p()];
-    for &(j, v) in &support {
-        beta[j] = v;
-    }
-    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols_nz, &vals, beta0);
-    let pen: f64 = groups
-        .iter()
-        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
-        .sum();
+    let report = crate::coordinator::report::group_report(ds, groups, &support, beta0, lambda);
     let mut cols = rg.g_set().to_vec();
     cols.sort_unstable();
     SvmSolution {
-        beta,
+        beta: report.beta,
         beta0,
-        objective: hinge + lambda * pen,
+        objective: report.objective,
         stats,
         cols, // group indices here
         rows: (0..ds.n()).collect(),

@@ -15,7 +15,6 @@ use crate::data::Dataset;
 use crate::engine::{
     BackendPricer, GenEngine, NullPricer, Pricer, RestrictedProblem, Snapshot, WorkingSet,
 };
-use crate::fom::objective::hinge_loss_support;
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
 
@@ -311,23 +310,16 @@ fn finish(
     stats: GenStats,
 ) -> SvmSolution {
     let (support, beta0) = rl1.beta_support();
-    let mut beta = vec![0.0; ds.p()];
-    for &(j, v) in &support {
-        beta[j] = v;
-    }
-    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
     // true full-problem objective (hinge over ALL samples)
-    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols_nz, &vals, beta0);
-    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let report = crate::coordinator::report::l1_report(ds, &support, beta0, lambda);
     let mut cols = rl1.j_set().to_vec();
     cols.sort_unstable();
     let mut rows = rl1.i_set().to_vec();
     rows.sort_unstable();
     SvmSolution {
-        beta,
+        beta: report.beta,
         beta0,
-        objective: hinge + lambda * l1,
+        objective: report.objective,
         stats,
         cols,
         rows,
@@ -335,7 +327,8 @@ fn finish(
 }
 
 /// **Algorithm 1** — column generation for L1-SVM (all n constraints, J
-/// grows from `j_init`).
+/// grows from `j_init`; empty ⇒ the top-[`GenParams::seed_budget`]
+/// closed-form reduced costs at λ_max).
 pub fn column_generation(
     ds: &Dataset,
     backend: &dyn Backend,
@@ -344,17 +337,23 @@ pub fn column_generation(
     params: &GenParams,
 ) -> SvmSolution {
     let all_i: Vec<usize> = (0..ds.n()).collect();
+    let seed_j: Vec<usize> = if j_init.is_empty() {
+        crate::coordinator::path::initial_columns(ds, params.seed_budget)
+    } else {
+        j_init.to_vec()
+    };
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, j_init);
+    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &seed_j);
     rl1.set_threads(params.threads);
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
     let mut stats = GenEngine::new(params).run(&mut prob);
-    stats.cols_added += j_init.len();
+    stats.cols_added += seed_j.len();
     finish(ds, prob.inner(), lambda, stats)
 }
 
 /// **Algorithm 3** — constraint generation for L1-SVM (all p columns, I
-/// grows from `i_init`).
+/// grows from `i_init`; empty ⇒ the first [`GenParams::seed_budget`]
+/// samples).
 pub fn constraint_generation(
     ds: &Dataset,
     lambda: f64,
@@ -363,7 +362,7 @@ pub fn constraint_generation(
 ) -> SvmSolution {
     let all_j: Vec<usize> = (0..ds.p()).collect();
     let seed: Vec<usize> = if i_init.is_empty() {
-        (0..ds.n().min(10)).collect()
+        (0..ds.n().min(params.seed_budget.max(1))).collect()
     } else {
         i_init.to_vec()
     };
@@ -378,7 +377,8 @@ pub fn constraint_generation(
 }
 
 /// **Algorithm 4** — combined column-and-constraint generation (both I
-/// and J grow).
+/// and J grow; empty seeds fall back to [`GenParams::seed_budget`]-sized
+/// sample/correlation picks).
 pub fn column_constraint_generation(
     ds: &Dataset,
     backend: &dyn Backend,
@@ -388,15 +388,15 @@ pub fn column_constraint_generation(
     params: &GenParams,
 ) -> SvmSolution {
     let seed_i: Vec<usize> = if i_init.is_empty() {
-        (0..ds.n().min(10)).collect()
+        (0..ds.n().min(params.seed_budget.max(1))).collect()
     } else {
         i_init.to_vec()
     };
     let seed_j: Vec<usize> = if j_init.is_empty() {
-        // correlation fallback: top-10 |x_jᵀy|
+        // correlation fallback: top-budget |x_jᵀy|
         let mut q = vec![0.0; ds.p()];
         ds.x.tmatvec(&ds.y, &mut q);
-        top_k_by_abs(&q, 10.min(ds.p()))
+        top_k_by_abs(&q, params.seed_budget.min(ds.p()))
     } else {
         j_init.to_vec()
     };

@@ -14,7 +14,9 @@
 //! * [`group`] — column generation on groups for Group-SVM (§2.4);
 //! * [`slope`] — Algorithms 5–7 for Slope-SVM: permutation cuts for the
 //!   exponential epigraph (§3.1) paired with column generation using the
-//!   O(|J|) pricing rule (eq. 34).
+//!   O(|J|) pricing rule (eq. 34);
+//! * [`report`] — shared per-workload full-problem objective/support
+//!   reports, consumed by the drivers here and by the serve handlers.
 //!
 //! [`GenParams`] and [`GenStats`] live in [`crate::engine`] and are
 //! re-exported here for compatibility.
@@ -22,6 +24,7 @@
 pub mod group;
 pub mod l1svm;
 pub mod path;
+pub mod report;
 pub mod slope;
 
 pub use crate::engine::{GenParams, GenStats};

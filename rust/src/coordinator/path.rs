@@ -11,15 +11,13 @@
 
 use crate::backend::Backend;
 use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
+use crate::coordinator::report::{dantzig_report, l1_report, ranksvm_report};
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
-use crate::engine::{BackendPricer, GenEngine};
-use crate::fom::objective::hinge_loss_support;
+use crate::engine::{BackendPricer, GenEngine, Initializer, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
-use crate::workloads::dantzig::{initial_features, DantzigProblem, RestrictedDantzig};
-use crate::workloads::ranksvm::{
-    initial_pairs, initial_rank_features, pairwise_hinge_support, RankProblem, RestrictedRank,
-};
+use crate::workloads::dantzig::{DantzigProblem, RestrictedDantzig};
+use crate::workloads::ranksvm::{RankProblem, RestrictedRank};
 
 /// Analytic reduced-cost scores at λ_max (the rhs of eq. 10, second
 /// term): features with the largest |·| are the first to activate.
@@ -62,6 +60,11 @@ pub struct PathSolution {
     pub working_set: usize,
     /// Cumulative generation stats up to and including this step.
     pub stats: GenStats,
+    /// Snapshot of the working sets after this step — lets callers (the
+    /// serve `grid` endpoint) seed a warm-start cache at **every**
+    /// visited λ, not just the last. For the L1 path the row channel is
+    /// left empty (Algorithm 2 keeps every margin row in the model).
+    pub ws: WorkingSet,
 }
 
 /// A geometric λ grid from λ_max down to `lambda_min` with the given
@@ -72,17 +75,21 @@ pub fn geometric_grid(lambda_max: f64, n_values: usize, ratio: f64) -> Vec<f64> 
 
 /// Run Algorithm 2 over a decreasing λ grid. Returns one entry per grid
 /// point plus the final solution object at the last λ.
+///
+/// The initial working set comes from the shared engine initializer
+/// ([`Initializer::for_path`]): the closed-form λ_max screening with
+/// [`GenParams::seed_budget`] columns by default, or the configured
+/// first-order method when [`GenParams::init`] names one explicitly.
 pub fn regularization_path(
     ds: &Dataset,
     backend: &dyn Backend,
     lambdas: &[f64],
-    j0: usize,
     params: &GenParams,
 ) -> (Vec<PathSolution>, SvmSolution) {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
     let all_i: Vec<usize> = (0..ds.n()).collect();
-    let init = initial_columns(ds, j0);
+    let init = Initializer::for_path(params).seed_l1_cols(ds, backend, lambdas[0]).ws.cols;
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rl1 = RestrictedL1::new(ds, lambdas[0], &all_i, &init);
     rl1.set_threads(params.threads);
@@ -96,16 +103,16 @@ pub fn regularization_path(
         // column generation at this λ (warm-started from previous λ)
         accumulate(&mut stats, engine.run(&mut prob));
         let (support, b0) = prob.inner().beta_support();
-        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-        let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
-        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        let report = l1_report(ds, &support, b0, lambda);
+        let mut ws = prob.export_working_set();
+        ws.rows.clear(); // Algorithm 2 keeps every margin row in the model
         out.push(PathSolution {
             lambda,
-            objective: hinge + lambda * l1,
-            support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+            objective: report.objective,
+            support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            ws,
         });
     }
 
@@ -149,12 +156,11 @@ pub fn dantzig_path(
     ds: &Dataset,
     backend: &dyn Backend,
     lambdas: &[f64],
-    j0: usize,
     params: &GenParams,
 ) -> Vec<PathSolution> {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
-    let seed = initial_features(ds, j0);
+    let seed = Initializer::for_path(params).seed_dantzig(ds, backend, lambdas[0]).ws.rows;
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rd = RestrictedDantzig::new(ds, lambdas[0], &seed);
     rd.set_threads(params.threads);
@@ -166,13 +172,17 @@ pub fn dantzig_path(
     for &lambda in lambdas {
         prob.set_lambda(lambda);
         accumulate(&mut stats, engine.run(&mut prob));
-        let support = prob.inner().beta_support();
+        let report = dantzig_report(ds.p(), &prob.inner().beta_support());
         out.push(PathSolution {
             lambda,
+            // the restricted LP objective Σ(β⁺+β⁻) — identical to ‖β‖₁
+            // at a non-degenerate vertex, and what `dantzig_generation`
+            // reports
             objective: prob.inner().objective(),
-            support: support.iter().filter(|(_, v)| v.abs() > 1e-9).count(),
+            support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            ws: prob.export_working_set(),
         });
     }
     out
@@ -187,38 +197,33 @@ pub fn ranksvm_path(
     backend: &dyn Backend,
     pairs: &[(usize, usize)],
     lambdas: &[f64],
-    j0: usize,
     params: &GenParams,
 ) -> Vec<PathSolution> {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
-    let t_init = initial_pairs(pairs.len(), j0);
-    let j_init = initial_rank_features(ds, pairs, j0);
+    let seed = Initializer::for_path(params).seed_ranksvm(ds, backend, pairs, lambdas[0]).ws;
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut rr = RestrictedRank::new(ds, pairs, lambdas[0], &t_init, &j_init);
+    let mut rr = RestrictedRank::new(ds, pairs, lambdas[0], &seed.rows, &seed.cols);
     rr.set_threads(params.threads);
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let engine = GenEngine::new(params);
     let mut stats = GenStats {
-        cols_added: j_init.len(),
-        rows_added: t_init.len(),
+        cols_added: seed.cols.len(),
+        rows_added: seed.rows.len(),
         ..Default::default()
     };
     let mut out = Vec::with_capacity(lambdas.len());
     for &lambda in lambdas {
         prob.set_lambda(lambda);
         accumulate(&mut stats, engine.run(&mut prob));
-        let support = prob.inner().beta_support();
-        let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-        let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-        let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
-        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
         out.push(PathSolution {
             lambda,
-            objective: hinge + lambda * l1,
-            support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+            objective: report.objective,
+            support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            ws: prob.export_working_set(),
         });
     }
     out
@@ -259,8 +264,8 @@ mod tests {
         let backend = NativeBackend::new(&d.x);
         let lmax = d.lambda_max_l1();
         let grid = geometric_grid(lmax, 6, 0.6);
-        let params = GenParams { eps: 1e-6, ..Default::default() };
-        let (path, final_sol) = regularization_path(&d, &backend, &grid, 5, &params);
+        let params = GenParams { eps: 1e-6, seed_budget: 5, ..Default::default() };
+        let (path, final_sol) = regularization_path(&d, &backend, &grid, &params);
         assert_eq!(path.len(), 6);
         // first point: λ = λ_max → zero solution, objective = n·hinge(0) = n
         assert_eq!(path[0].support, 0);
@@ -288,9 +293,15 @@ mod tests {
         let d = ds();
         let backend = NativeBackend::new(&d.x);
         let grid = geometric_grid(d.lambda_max_l1(), 5, 0.5);
-        let (path, _) = regularization_path(&d, &backend, &grid, 5, &GenParams::default());
+        let params = GenParams { seed_budget: 5, ..Default::default() };
+        let (path, _) = regularization_path(&d, &backend, &grid, &params);
         for w in path.windows(2) {
             assert!(w[1].working_set >= w[0].working_set);
+        }
+        // every point carries a cacheable snapshot of its working set
+        for pt in &path {
+            assert_eq!(pt.ws.cols.len(), pt.working_set);
+            assert!(pt.ws.rows.is_empty(), "L1 path snapshots carry columns only");
         }
     }
 
@@ -303,8 +314,8 @@ mod tests {
         let d = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(112));
         let backend = NativeBackend::new(&d.x);
         let grid = geometric_grid(lambda_max_dantzig(&d), 5, 0.6);
-        let params = GenParams { eps: 1e-9, ..Default::default() };
-        let path = dantzig_path(&d, &backend, &grid, 5, &params);
+        let params = GenParams { eps: 1e-9, seed_budget: 5, ..Default::default() };
+        let path = dantzig_path(&d, &backend, &grid, &params);
         assert_eq!(path.len(), 5);
         // first point: λ = λ_max → β = 0, objective 0
         assert_eq!(path[0].support, 0);
@@ -334,12 +345,12 @@ mod tests {
         let pairs = ranking_pairs(&d.y);
         let backend = NativeBackend::new(&d.x);
         let grid = geometric_grid(lambda_max_rank(&d, &pairs), 5, 0.5);
-        let params = GenParams { eps: 1e-9, ..Default::default() };
-        let path = ranksvm_path(&d, &backend, &pairs, &grid, 8, &params);
+        let params = GenParams { eps: 1e-9, seed_budget: 8, ..Default::default() };
+        let path = ranksvm_path(&d, &backend, &pairs, &grid, &params);
         assert_eq!(path.len(), 5);
         assert_eq!(path[0].support, 0, "β must be zero at λ_max");
         for pt in &path[1..] {
-            let direct = ranksvm_generation(&d, &backend, &pairs, pt.lambda, &params);
+            let direct = ranksvm_generation(&d, &backend, &pairs, pt.lambda, &[], &[], &params);
             assert!(
                 (pt.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-5,
                 "λ={}: path {} direct {}",

@@ -1,0 +1,158 @@
+//! Shared per-workload solution reports.
+//!
+//! Every driver that hands a solution to a human or a protocol — the
+//! coordinators' `finish` steps, the λ-path drivers, the serve handlers
+//! — needs the same three things off a restricted model's support: the
+//! dense coefficient vector, the **full-problem** objective (loss over
+//! ALL samples/pairs, not just the working set), and the support size.
+//! This module computes them once per workload so the serve layer and
+//! `coordinator::path` stop duplicating the arithmetic.
+
+use crate::data::Dataset;
+use crate::fom::objective::{hinge_loss_support, slope_norm};
+use crate::workloads::ranksvm::pairwise_hinge_support;
+
+/// A solution scored against the full problem.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Full-problem objective.
+    pub objective: f64,
+    /// Number of nonzero coefficients (|β_j| > 1e-9).
+    pub support: usize,
+    /// Dense coefficient vector (length p; zeros off the support).
+    pub beta: Vec<f64>,
+    /// Intercept (0 for workloads without one).
+    pub beta0: f64,
+}
+
+/// Split `(j, β_j)` support pairs into parallel index/value vectors.
+pub fn split_support(support: &[(usize, f64)]) -> (Vec<usize>, Vec<f64>) {
+    (
+        support.iter().map(|&(j, _)| j).collect(),
+        support.iter().map(|&(_, v)| v).collect(),
+    )
+}
+
+fn densify(p: usize, support: &[(usize, f64)]) -> Vec<f64> {
+    let mut beta = vec![0.0; p];
+    for &(j, v) in support {
+        beta[j] = v;
+    }
+    beta
+}
+
+fn nnz(vals: &[f64]) -> usize {
+    vals.iter().filter(|v| v.abs() > 1e-9).count()
+}
+
+/// L1-SVM: hinge over all samples plus `λ‖β‖₁`.
+pub fn l1_report(ds: &Dataset, support: &[(usize, f64)], beta0: f64, lambda: f64) -> Report {
+    let (cols, vals) = split_support(support);
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, beta0);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    Report {
+        objective: hinge + lambda * l1,
+        support: nnz(&vals),
+        beta: densify(ds.p(), support),
+        beta0,
+    }
+}
+
+/// Group-SVM: hinge over all samples plus `λ Σ_g ‖β_g‖∞`.
+pub fn group_report(
+    ds: &Dataset,
+    groups: &[Vec<usize>],
+    support: &[(usize, f64)],
+    beta0: f64,
+    lambda: f64,
+) -> Report {
+    let (cols, vals) = split_support(support);
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, beta0);
+    let beta = densify(ds.p(), support);
+    let pen: f64 = groups
+        .iter()
+        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
+        .sum();
+    Report { objective: hinge + lambda * pen, support: nnz(&vals), beta, beta0 }
+}
+
+/// Slope-SVM: hinge over all samples plus the sorted-weight Slope norm.
+pub fn slope_report(
+    ds: &Dataset,
+    weights: &[f64],
+    support: &[(usize, f64)],
+    beta0: f64,
+) -> Report {
+    let (cols, vals) = split_support(support);
+    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, beta0);
+    let beta = densify(ds.p(), support);
+    Report {
+        objective: hinge + slope_norm(&beta, weights),
+        support: nnz(&vals),
+        beta,
+        beta0,
+    }
+}
+
+/// RankSVM: pairwise hinge over ALL candidate pairs plus `λ‖β‖₁` (no
+/// intercept).
+pub fn ranksvm_report(
+    ds: &Dataset,
+    pairs: &[(usize, usize)],
+    support: &[(usize, f64)],
+    lambda: f64,
+) -> Report {
+    let (cols, vals) = split_support(support);
+    let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
+    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    Report {
+        objective: hinge + lambda * l1,
+        support: nnz(&vals),
+        beta: densify(ds.p(), support),
+        beta0: 0.0,
+    }
+}
+
+/// Dantzig selector: the objective IS `‖β‖₁` (feasibility is the
+/// restricted model's invariant, not a loss).
+pub fn dantzig_report(p: usize, support: &[(usize, f64)]) -> Report {
+    let (_, vals) = split_support(support);
+    Report {
+        objective: vals.iter().map(|v| v.abs()).sum(),
+        support: nnz(&vals),
+        beta: densify(p, support),
+        beta0: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn l1_report_matches_manual_objective() {
+        let spec = SyntheticSpec { n: 20, p: 10, k0: 3, rho: 0.1, standardize: true };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(301));
+        let support = vec![(2usize, 0.7), (5, -0.3)];
+        let r = l1_report(&ds, &support, 0.1, 0.5);
+        assert_eq!(r.support, 2);
+        assert_eq!(r.beta[2], 0.7);
+        assert_eq!(r.beta[5], -0.3);
+        let mut manual = 0.5 * (0.7 + 0.3);
+        for i in 0..ds.n() {
+            let m = ds.x.get(i, 2) * 0.7 + ds.x.get(i, 5) * (-0.3) + 0.1;
+            manual += (1.0 - ds.y[i] * m).max(0.0);
+        }
+        assert!((r.objective - manual).abs() < 1e-10, "{} vs {manual}", r.objective);
+    }
+
+    #[test]
+    fn dantzig_report_is_the_l1_norm() {
+        let r = dantzig_report(6, &[(0, 1.5), (4, -2.0)]);
+        assert_eq!(r.objective, 3.5);
+        assert_eq!(r.support, 2);
+        assert_eq!(r.beta0, 0.0);
+    }
+}

@@ -1,0 +1,892 @@
+//! The §4 first-order initialization layer.
+//!
+//! The paper's headline result is the *combination* of column/constraint
+//! generation with first-order methods: a FOM runs cheaply to a
+//! low-accuracy solution whose support seeds the restricted LP, which
+//! then converges in a handful of rounds (§2.2.1, §4). This module owns
+//! that combination once, instead of each driver wiring its own FISTA:
+//!
+//! * [`InitStrategy`] — the knob ([`crate::engine::GenParams::init`],
+//!   CLI `--init`, serve-protocol `"init"`) selecting how a cold solve
+//!   seeds its working sets;
+//! * [`Initializer`] — maps `(dataset, workload, λ, budget)` to a
+//!   [`Seed`]: a [`WorkingSet`] plus an optional primal guess.
+//!
+//! Strategies and the workloads they cover:
+//!
+//! | strategy    | L1-SVM | Group | Slope | RankSVM | Dantzig |
+//! |-------------|--------|-------|-------|---------|---------|
+//! | `screening` | closed-form λ_max reduced costs, top-k everywhere |||||
+//! | `fista`     | smoothed hinge + soft-threshold | group-L∞ prox | Slope prox (PAVA) | pairwise-difference view, no intercept | least-squares correlation residual |
+//! | `blockcd`   | — | proximal block CD (§4.3) | — | — | — |
+//! | `subsample` | subsample-and-average (§4.4.2–4.4.3) | — | — | — | — |
+//!
+//! `Auto` resolves per workload: FISTA for L1 (subsample-and-average
+//! once n crosses [`SUBSAMPLE_AUTO_N`] in the n ≥ 10p regime), block CD
+//! for Group, FISTA for Slope/RankSVM/Dantzig. A strategy that does not apply to a workload
+//! falls back to the nearest one that does (documented on each
+//! `seed_*`). Every FOM gradient rides the shared chunked
+//! [`crate::backend::par_xtv`] kernel, so seeds are bit-identical for
+//! any thread count and deterministic given [`Initializer::seed`].
+
+use crate::backend::{par_xtv, sigma_max_sq, Backend, NativeBackend};
+use crate::bail;
+use crate::data::Dataset;
+use crate::engine::WorkingSet;
+use crate::error::Result;
+use crate::fom::block_cd::{block_cd, BlockCdParams};
+use crate::fom::fista::{fista, FistaParams, FistaResult, Penalty};
+use crate::fom::prox::soft_threshold;
+use crate::fom::screening::{correlation_screen, group_screen, top_k_by_abs};
+use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
+
+/// Default seed-size budget `k` (the paper seeds with ~10 columns).
+pub const DEFAULT_SEED_BUDGET: usize = 10;
+
+/// Above this sample count — AND when n ≥ 10p, the §4.4.2 regime where a
+/// size-10p subsample is a genuine subsample — `Auto` on L1-SVM switches
+/// from one FISTA run to the subsample-and-average heuristic: the
+/// full-data FOM is gradient-bound at large n, while subsample solves
+/// parallelize. Without the n ≥ 10p guard the "subsamples" would be the
+/// whole dataset and the heuristic would just run FISTA twice.
+pub const SUBSAMPLE_AUTO_N: usize = 4096;
+
+/// Cap on FOM-flagged constraint rows handed to the restricted LP: a
+/// noisy first-order estimate can flag thousands of samples/pairs, and
+/// seeding all of them inflates the LP basis for no benefit — the
+/// generation rounds bring in whatever the initializer missed.
+pub const SEED_ROW_CAP: usize = 1500;
+
+/// How a cold solve seeds its initial working sets (§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// Per-workload default: a first-order method for fixed-λ solves
+    /// (block CD for Group, subsample-and-average for large-n L1),
+    /// closed-form screening for the λ_max-anchored path drivers.
+    Auto,
+    /// Closed-form λ_max reduced-cost screening, top-k (§2.2.2, eq. 10).
+    Screening,
+    /// Nesterov-smoothed hinge FISTA with the workload's prox (§4.3);
+    /// RankSVM via the pairwise-difference view, the Dantzig selector
+    /// via its least-squares correlation residual.
+    Fista,
+    /// Proximal block coordinate descent on groups (§4.3; Group only —
+    /// other workloads fall back to [`InitStrategy::Fista`]).
+    BlockCd,
+    /// Subsample-and-average (§4.4.2–4.4.3; L1 only — other workloads
+    /// fall back to their FOM).
+    Subsample,
+}
+
+impl InitStrategy {
+    /// Parse a knob value (`auto|screening|fista|blockcd|subsample`).
+    pub fn parse(name: &str) -> Result<InitStrategy> {
+        Ok(match name {
+            "auto" => InitStrategy::Auto,
+            "screening" => InitStrategy::Screening,
+            "fista" => InitStrategy::Fista,
+            "blockcd" => InitStrategy::BlockCd,
+            "subsample" => InitStrategy::Subsample,
+            other => {
+                bail!("unknown init strategy {other:?} (auto|screening|fista|blockcd|subsample)")
+            }
+        })
+    }
+
+    /// Knob spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            InitStrategy::Auto => "auto",
+            InitStrategy::Screening => "screening",
+            InitStrategy::Fista => "fista",
+            InitStrategy::BlockCd => "blockcd",
+            InitStrategy::Subsample => "subsample",
+        }
+    }
+}
+
+/// A computed seed: the initial working sets plus (for FOM strategies)
+/// the low-accuracy primal the sets were read off.
+#[derive(Clone, Debug)]
+pub struct Seed {
+    /// Column/row indices to seed the restricted model with. Index
+    /// spaces are the workload's own (features, groups, pairs — see
+    /// [`WorkingSet`]).
+    pub ws: WorkingSet,
+    /// The FOM's `(β, β₀)` (None for pure screening).
+    pub primal: Option<(Vec<f64>, f64)>,
+    /// The strategy that actually ran (`Auto` resolved).
+    pub strategy: InitStrategy,
+}
+
+/// The shared §4 initializer: one configuration, one `seed_*` method per
+/// workload. Construct via [`Initializer::new`] or
+/// [`Initializer::from_params`], then override the FOM knobs with the
+/// builder methods where an experiment needs specific settings.
+#[derive(Clone, Debug)]
+pub struct Initializer {
+    /// Strategy (resolved per workload when `Auto`).
+    pub strategy: InitStrategy,
+    /// Seed-size budget `k` (clamped to ≥ 1).
+    pub budget: usize,
+    /// Worker threads for the FOM gradients and subsample solves.
+    pub threads: usize,
+    /// RNG seed for the subsampling heuristic (fixed ⇒ deterministic).
+    pub seed: u64,
+    /// FISTA settings for the smoothed-hinge seeds.
+    pub fista: FistaParams,
+    /// Block-CD settings for the Group seed (low accuracy by design).
+    pub block_cd: BlockCdParams,
+    /// Subsample settings; `None` derives them from `(n, p)` per §4.4.2.
+    pub subsample: Option<SubsampleParams>,
+}
+
+impl Initializer {
+    /// An initializer with the given strategy and budget (serial, seed 0,
+    /// default FOM settings).
+    pub fn new(strategy: InitStrategy, budget: usize) -> Self {
+        Self {
+            strategy,
+            budget: budget.max(1),
+            threads: 1,
+            seed: 0,
+            fista: FistaParams::default(),
+            block_cd: BlockCdParams { max_sweeps: 60, tol: 1e-3, ..Default::default() },
+            subsample: None,
+        }
+    }
+
+    /// Read strategy, budget and threads off a
+    /// [`crate::engine::GenParams`].
+    pub fn from_params(params: &crate::engine::GenParams) -> Self {
+        let mut me = Self::new(params.init, params.seed_budget);
+        me.threads = params.threads.max(1);
+        me.fista.threads = me.threads;
+        me.block_cd.threads = me.threads;
+        me
+    }
+
+    /// Like [`Initializer::from_params`] but resolving `Auto` to
+    /// `Screening` — the λ-path drivers anchor at λ_max, where the
+    /// closed-form reduced costs are exact and a FOM would only find the
+    /// all-zero solution (Algorithm 2's own choice).
+    pub fn for_path(params: &crate::engine::GenParams) -> Self {
+        let mut me = Self::from_params(params);
+        if me.strategy == InitStrategy::Auto {
+            me.strategy = InitStrategy::Screening;
+        }
+        me
+    }
+
+    /// Override the subsampling RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the FISTA settings.
+    pub fn with_fom(mut self, fista: FistaParams) -> Self {
+        self.fista = fista;
+        self
+    }
+
+    /// Override the block-CD settings.
+    pub fn with_block_cd(mut self, params: BlockCdParams) -> Self {
+        self.block_cd = params;
+        self
+    }
+
+    /// Override the subsample settings.
+    pub fn with_subsample(mut self, params: SubsampleParams) -> Self {
+        self.subsample = Some(params);
+        self
+    }
+
+    /// Seed the L1-SVM working sets at `lambda`. `Auto` → FISTA, or
+    /// subsample-and-average when `n ≥` [`SUBSAMPLE_AUTO_N`] and
+    /// `n ≥ 10p`; `BlockCd` falls back to FISTA (no group structure).
+    /// FOM seeds carry both channels: the top-budget surviving
+    /// coefficients as columns and the most violated margins (capped at
+    /// [`SEED_ROW_CAP`]) as rows. Callers that only consume the column
+    /// channel (Algorithm 1) should use [`Initializer::seed_l1_cols`],
+    /// which skips the O(np) margin scan.
+    pub fn seed_l1(&self, ds: &Dataset, backend: &dyn Backend, lambda: f64) -> Seed {
+        self.seed_l1_impl(ds, backend, lambda, true)
+    }
+
+    /// [`Initializer::seed_l1`] without the violated-margin row scan —
+    /// for pure column generation, where the rows would be discarded and
+    /// the scan's full-design matvec is pure overhead.
+    pub fn seed_l1_cols(&self, ds: &Dataset, backend: &dyn Backend, lambda: f64) -> Seed {
+        self.seed_l1_impl(ds, backend, lambda, false)
+    }
+
+    fn seed_l1_impl(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        lambda: f64,
+        want_rows: bool,
+    ) -> Seed {
+        let strat = match self.strategy {
+            InitStrategy::Auto => {
+                if ds.n() >= SUBSAMPLE_AUTO_N && ds.n() >= 10 * ds.p() {
+                    InitStrategy::Subsample
+                } else {
+                    InitStrategy::Fista
+                }
+            }
+            InitStrategy::BlockCd => InitStrategy::Fista,
+            s => s,
+        };
+        match strat {
+            InitStrategy::Screening => self.screening_l1(ds),
+            InitStrategy::Subsample => {
+                let params = self
+                    .subsample
+                    .clone()
+                    .unwrap_or_else(|| self.derived_subsample_params(ds));
+                let avg = subsample_average(ds, lambda, &params, self.seed);
+                self.l1_seed_from_primal(
+                    ds,
+                    backend,
+                    avg.beta,
+                    avg.beta0,
+                    InitStrategy::Subsample,
+                    want_rows,
+                )
+            }
+            _ => {
+                // screened FISTA on the smoothed hinge (§4.4.1 + §4.3)
+                let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+                let xx = ds.x.subset_cols(&screen);
+                let sub_backend = NativeBackend::new(&xx);
+                let res = fista(&sub_backend, &ds.y, &Penalty::L1(lambda), &self.fista, None);
+                let mut beta = vec![0.0; ds.p()];
+                for (k, &j) in screen.iter().enumerate() {
+                    beta[j] = res.beta[k];
+                }
+                self.l1_seed_from_primal(
+                    ds,
+                    backend,
+                    beta,
+                    res.beta0,
+                    InitStrategy::Fista,
+                    want_rows,
+                )
+            }
+        }
+    }
+
+    /// Seed the Group-SVM working set (group indices in
+    /// [`WorkingSet::cols`]) at `lambda`. `Auto`/`Subsample` → block CD;
+    /// `Fista` uses the group-L∞ prox. Both FOMs run on the top-n
+    /// screened groups (§4.4.1) and keep the budget's worth of groups by
+    /// coefficient mass, falling back to screening when every group
+    /// thresholds to zero.
+    pub fn seed_group(&self, ds: &Dataset, groups: &[Vec<usize>], lambda: f64) -> Seed {
+        let strat = match self.strategy {
+            InitStrategy::Auto | InitStrategy::Subsample => InitStrategy::BlockCd,
+            s => s,
+        };
+        if strat == InitStrategy::Screening {
+            return Seed {
+                ws: WorkingSet {
+                    cols: crate::coordinator::group::initial_groups(ds, groups, self.budget),
+                    rows: Vec::new(),
+                },
+                primal: None,
+                strategy: InitStrategy::Screening,
+            };
+        }
+        // screen groups, materialize their columns, solve locally
+        let keep = ds.n().max(self.budget).min(groups.len());
+        let screened = group_screen(&ds.x, &ds.y, groups, keep);
+        let cols_flat: Vec<usize> =
+            screened.iter().flat_map(|&g| groups[g].iter().copied()).collect();
+        let xx = ds.x.subset_cols(&cols_flat);
+        let sub_backend = NativeBackend::new(&xx);
+        let mut local: Vec<Vec<usize>> = Vec::with_capacity(screened.len());
+        let mut off = 0;
+        for &g in &screened {
+            local.push((off..off + groups[g].len()).collect());
+            off += groups[g].len();
+        }
+        let (beta_local, beta0) = if strat == InitStrategy::BlockCd {
+            let res = block_cd(&sub_backend, &ds.y, &local, lambda, &self.block_cd, None);
+            (res.beta, res.beta0)
+        } else {
+            let res = fista(
+                &sub_backend,
+                &ds.y,
+                &Penalty::GroupLinf { lambda, groups: local.clone() },
+                &self.fista,
+                None,
+            );
+            (res.beta, res.beta0)
+        };
+        // rank screened groups by coefficient mass, keep nonzero ones
+        let mass: Vec<f64> = local
+            .iter()
+            .map(|g| g.iter().map(|&j| beta_local[j].abs()).sum())
+            .collect();
+        let cols: Vec<usize> = top_k_by_abs(&mass, self.budget)
+            .into_iter()
+            .filter(|&k| mass[k] > 1e-8)
+            .map(|k| screened[k])
+            .collect();
+        let (cols, strat) = if cols.is_empty() {
+            (
+                crate::coordinator::group::initial_groups(ds, groups, self.budget),
+                InitStrategy::Screening,
+            )
+        } else {
+            (cols, strat)
+        };
+        let mut beta = vec![0.0; ds.p()];
+        for (k, &j) in cols_flat.iter().enumerate() {
+            beta[j] = beta_local[k];
+        }
+        Seed {
+            ws: WorkingSet { cols, rows: Vec::new() },
+            primal: Some((beta, beta0)),
+            strategy: strat,
+        }
+    }
+
+    /// Seed the Slope-SVM column working set for the (sorted,
+    /// nonincreasing) weight vector. `Auto`/`BlockCd`/`Subsample` →
+    /// FISTA with the Slope prox (PAVA) on the screened columns; the row
+    /// channel stays empty — epigraph cuts regenerate from incumbents.
+    pub fn seed_slope(&self, ds: &Dataset, weights: &[f64]) -> Seed {
+        if matches!(self.strategy, InitStrategy::Screening) {
+            return Seed {
+                ws: WorkingSet {
+                    cols: crate::coordinator::path::initial_columns(ds, self.budget),
+                    rows: Vec::new(),
+                },
+                primal: None,
+                strategy: InitStrategy::Screening,
+            };
+        }
+        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+        let xx = ds.x.subset_cols(&screen);
+        let sub_backend = NativeBackend::new(&xx);
+        let sub_lams: Vec<f64> = weights[..screen.len()].to_vec();
+        let res = fista(&sub_backend, &ds.y, &Penalty::Slope(sub_lams), &self.fista, None);
+        let mut beta = vec![0.0; ds.p()];
+        for (k, &j) in screen.iter().enumerate() {
+            beta[j] = res.beta[k];
+        }
+        let cols = support_top_k(&beta, self.budget);
+        let (cols, strategy) = if cols.is_empty() {
+            (
+                crate::coordinator::path::initial_columns(ds, self.budget),
+                InitStrategy::Screening,
+            )
+        } else {
+            (cols, InitStrategy::Fista)
+        };
+        Seed {
+            ws: WorkingSet { cols, rows: Vec::new() },
+            primal: Some((beta, res.beta0)),
+            strategy,
+        }
+    }
+
+    /// Seed the RankSVM working sets (pair indices in rows, features in
+    /// cols) at `lambda`. The FOM runs FISTA on the **pairwise-difference
+    /// view**: the implicit design `D` with one row `x_i − x_k` per
+    /// comparison pair, all-ones targets and no intercept
+    /// ([`PairDiffBackend`] keeps every product at `O(np + |P|)`).
+    pub fn seed_ranksvm(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        pairs: &[(usize, usize)],
+        lambda: f64,
+    ) -> Seed {
+        use crate::workloads::ranksvm::{initial_pairs, initial_rank_features};
+        let strat = match self.strategy {
+            InitStrategy::Screening => InitStrategy::Screening,
+            _ => InitStrategy::Fista,
+        };
+        if strat == InitStrategy::Screening || pairs.is_empty() {
+            return Seed {
+                ws: WorkingSet {
+                    cols: initial_rank_features(ds, pairs, self.budget),
+                    rows: initial_pairs(pairs.len(), self.budget),
+                },
+                primal: None,
+                strategy: InitStrategy::Screening,
+            };
+        }
+        let pd = PairDiffBackend::new(backend, pairs, self.fista.threads.max(1));
+        let ones = vec![1.0; pairs.len()];
+        let params = FistaParams { fit_intercept: false, ..self.fista.clone() };
+        let res = fista(&pd, &ones, &Penalty::L1(lambda), &params, None);
+        let cols = support_top_k(&res.beta, self.budget);
+        if cols.is_empty() {
+            // λ ≥ λ_max: the FOM found nothing — the screening pick seeds
+            return Seed {
+                ws: WorkingSet {
+                    cols: initial_rank_features(ds, pairs, self.budget),
+                    rows: initial_pairs(pairs.len(), self.budget),
+                },
+                primal: Some((res.beta, 0.0)),
+                strategy: InitStrategy::Screening,
+            };
+        }
+        // most violated pairs at the FOM point, capped
+        let rows = violated_samples_capped(&pd, &ones, &res.beta, 0.0, 0.0, SEED_ROW_CAP);
+        let rows = if rows.is_empty() { initial_pairs(pairs.len(), self.budget) } else { rows };
+        Seed {
+            ws: WorkingSet { cols, rows },
+            primal: Some((res.beta, 0.0)),
+            strategy: InitStrategy::Fista,
+        }
+    }
+
+    /// Seed the Dantzig-selector row working set (feature indices; the
+    /// restricted model pulls each row's coefficient pair in itself,
+    /// preserving `I ⊆ J`). The FOM is FISTA on the least-squares lasso
+    /// surrogate `½‖Xβ − y‖² + λ‖β‖₁` — its KKT conditions bound the
+    /// **correlation residual** `‖Xᵀ(y − Xβ)‖∞ ≤ λ`, i.e. a lasso
+    /// solution at the same λ is Dantzig-feasible and its support marks
+    /// the rows that bind.
+    pub fn seed_dantzig(&self, ds: &Dataset, backend: &dyn Backend, lambda: f64) -> Seed {
+        use crate::workloads::dantzig::initial_features;
+        let strat = match self.strategy {
+            InitStrategy::Screening => InitStrategy::Screening,
+            _ => InitStrategy::Fista,
+        };
+        if strat == InitStrategy::Screening {
+            return Seed {
+                ws: WorkingSet { cols: Vec::new(), rows: initial_features(ds, self.budget) },
+                primal: None,
+                strategy: InitStrategy::Screening,
+            };
+        }
+        let res = lasso_fista(backend, &ds.y, lambda, &self.fista);
+        let rows = support_top_k(&res.beta, self.budget);
+        let (rows, strategy) = if rows.is_empty() {
+            (initial_features(ds, self.budget), InitStrategy::Screening)
+        } else {
+            (rows, InitStrategy::Fista)
+        };
+        Seed {
+            ws: WorkingSet { cols: Vec::new(), rows },
+            primal: Some((res.beta, 0.0)),
+            strategy,
+        }
+    }
+
+    // -- internals --------------------------------------------------------
+
+    fn screening_l1(&self, ds: &Dataset) -> Seed {
+        Seed {
+            ws: WorkingSet {
+                cols: crate::coordinator::path::initial_columns(ds, self.budget),
+                rows: Vec::new(),
+            },
+            primal: None,
+            strategy: InitStrategy::Screening,
+        }
+    }
+
+    /// §4.4.2 defaults: n₀ = 10p (clamped into [100, n]), Q_max = n/n₀
+    /// (clamped into [2, 12]), with correlation screening inside each
+    /// subsample once p is large (§4.4.3). The inner FISTA runs serial —
+    /// the subsample solves themselves occupy the workers.
+    fn derived_subsample_params(&self, ds: &Dataset) -> SubsampleParams {
+        let n = ds.n();
+        let p = ds.p();
+        SubsampleParams {
+            // clamp low end to n as well so tiny datasets can't invert
+            // the clamp bounds
+            n0: (10 * p).clamp(100.min(n), n),
+            mu_tol: 1e-1,
+            q_max: (n / (10 * p).max(1)).clamp(2, 12),
+            threads: self.threads.max(1),
+            screen_k: if p > 2000 { 1000 } else { 0 },
+            fista: FistaParams { threads: 1, ..self.fista.clone() },
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn l1_seed_from_primal(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        beta: Vec<f64>,
+        beta0: f64,
+        strategy: InitStrategy,
+        want_rows: bool,
+    ) -> Seed {
+        let cols = support_top_k(&beta, self.budget);
+        // `strategy` reports what actually seeded the columns: an empty
+        // FOM support (λ ≥ λ_max) falls back to the screening pick
+        let (cols, strategy) = if cols.is_empty() {
+            (
+                crate::coordinator::path::initial_columns(ds, self.budget),
+                InitStrategy::Screening,
+            )
+        } else {
+            (cols, strategy)
+        };
+        let rows = if want_rows {
+            violated_samples_capped(backend, &ds.y, &beta, beta0, 0.0, SEED_ROW_CAP)
+        } else {
+            Vec::new()
+        };
+        Seed { ws: WorkingSet { cols, rows }, primal: Some((beta, beta0)), strategy }
+    }
+}
+
+/// Indices of the (at most) `k` largest nonzero entries of `beta` by
+/// absolute value — the FOM support a seed keeps.
+fn support_top_k(beta: &[f64], k: usize) -> Vec<usize> {
+    top_k_by_abs(beta, k.min(beta.len()))
+        .into_iter()
+        .filter(|&j| beta[j] != 0.0)
+        .collect()
+}
+
+/// Run a first-order method to the given accuracy on the **full** design
+/// (no screening, no truncation) — the experiment harness's "FO-only"
+/// baselines ride the same shared wiring as the seeds.
+pub fn fom_full(
+    backend: &dyn Backend,
+    y: &[f64],
+    penalty: &Penalty,
+    params: &FistaParams,
+) -> FistaResult {
+    fista(backend, y, penalty, params, None)
+}
+
+/// The pairwise-difference design `D`: one row `x_i − x_k` per comparison
+/// pair `(i, k)`, never materialized. `Dβ` is one base matvec plus an
+/// O(|P|) gather; `Dᵀv` scatters the pair weights onto the samples
+/// (+winner/−loser) **once** and then runs the base `Xᵀ·` through the
+/// chunked [`par_xtv`] kernel with the configured thread count — the
+/// same dual-scatter identity RankSVM pricing uses, so the FOM and the
+/// pricer agree on cost and on bits. `supports_range_pricing` is `false`
+/// on purpose: |P| is O(n²), so re-scattering per column chunk would
+/// dominate; parallelism lives *inside* `xtv` instead, behind the single
+/// scatter.
+pub struct PairDiffBackend<'a> {
+    base: &'a dyn Backend,
+    pairs: &'a [(usize, usize)],
+    threads: usize,
+}
+
+impl<'a> PairDiffBackend<'a> {
+    /// View `base` through the comparison pairs; `threads` chunks the
+    /// base matvec behind the one-time pair scatter.
+    pub fn new(base: &'a dyn Backend, pairs: &'a [(usize, usize)], threads: usize) -> Self {
+        Self { base, pairs, threads: threads.max(1) }
+    }
+
+    fn scatter(&self, v: &[f64]) -> Vec<f64> {
+        let mut s = vec![0.0; self.base.rows()];
+        for (t, &(i, k)) in self.pairs.iter().enumerate() {
+            if v[t] != 0.0 {
+                s[i] += v[t];
+                s[k] -= v[t];
+            }
+        }
+        s
+    }
+}
+
+impl Backend for PairDiffBackend<'_> {
+    fn rows(&self) -> usize {
+        self.pairs.len()
+    }
+    fn cols(&self) -> usize {
+        self.base.cols()
+    }
+    fn xb(&self, beta: &[f64], out: &mut [f64]) {
+        let mut m = vec![0.0; self.base.rows()];
+        self.base.xb(beta, &mut m);
+        for (o, &(i, k)) in out.iter_mut().zip(self.pairs) {
+            *o = m[i] - m[k];
+        }
+    }
+    fn xtv(&self, v: &[f64], out: &mut [f64]) {
+        // one O(|P|) scatter, then the (possibly chunked) base matvec
+        par_xtv(self.base, self.threads, &self.scatter(v), out);
+    }
+    fn xtv_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
+        self.base.xtv_range(&self.scatter(v), j0, out);
+    }
+    fn supports_range_pricing(&self) -> bool {
+        false
+    }
+    fn name(&self) -> &'static str {
+        "pairdiff"
+    }
+}
+
+/// FISTA on the least-squares lasso `½‖Xβ − y‖² + λ‖β‖₁` (no intercept)
+/// — the Dantzig selector's first-order surrogate. Gradients ride the
+/// shared chunked [`par_xtv`] kernel; the Lipschitz constant reuses the
+/// augmented-design power iteration (an upper bound on `σ_max(XᵀX)`).
+///
+/// The momentum schedule, prox step, and `‖Δβ‖ ≤ eta` stop mirror
+/// [`crate::fom::fista::fista`] deliberately — keep the two in sync if
+/// either acceleration loop changes (only the loss gradient and the
+/// absent intercept differ).
+pub fn lasso_fista(
+    backend: &dyn Backend,
+    y: &[f64],
+    lambda: f64,
+    params: &FistaParams,
+) -> FistaResult {
+    let n = backend.rows();
+    let p = backend.cols();
+    let l = sigma_max_sq(backend, params.power_iters).max(1e-12) * 1.05;
+    let inv_l = 1.0 / l;
+    let mut beta = vec![0.0; p];
+    let mut beta_prev = beta.clone();
+    let mut q = 1.0f64;
+    let mut resid = vec![0.0; n];
+    let mut grad = vec![0.0; p];
+    let mut iters = 0;
+    for t in 0..params.max_iters {
+        iters = t + 1;
+        let q_next = 0.5 * (1.0 + (1.0 + 4.0 * q * q).sqrt());
+        let mom = (q - 1.0) / q_next;
+        let mut alpha: Vec<f64> =
+            beta.iter().zip(&beta_prev).map(|(b, bp)| b + mom * (b - bp)).collect();
+        q = q_next;
+        // ∇ = Xᵀ(Xα − y)
+        backend.xb(&alpha, &mut resid);
+        for (r, yi) in resid.iter_mut().zip(y) {
+            *r -= yi;
+        }
+        par_xtv(backend, params.threads, &resid, &mut grad);
+        for (a, g) in alpha.iter_mut().zip(&grad) {
+            *a -= inv_l * g;
+        }
+        soft_threshold(&mut alpha, lambda * inv_l);
+        let mut delta = 0.0;
+        for (a, b) in alpha.iter().zip(&beta) {
+            delta += (a - b) * (a - b);
+        }
+        beta_prev = std::mem::replace(&mut beta, alpha);
+        if delta.sqrt() <= params.eta {
+            break;
+        }
+    }
+    // objective for introspection
+    backend.xb(&beta, &mut resid);
+    let mut obj = 0.0;
+    for (r, yi) in resid.iter().zip(y) {
+        obj += 0.5 * (r - yi) * (r - yi);
+    }
+    obj += lambda * beta.iter().map(|v| v.abs()).sum::<f64>();
+    FistaResult { beta, beta0: 0.0, iters, objective: obj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{
+        generate_dantzig, generate_group, generate_l1, generate_ranksvm, DantzigSpec, GroupSpec,
+        RankSpec, SyntheticSpec,
+    };
+    use crate::rng::Xoshiro256;
+    use crate::workloads::ranksvm::ranking_pairs;
+
+    fn l1_ds(n: usize, p: usize, seed: u64) -> Dataset {
+        let spec = SyntheticSpec { n, p, k0: 5.min(p), rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut Xoshiro256::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in [
+            InitStrategy::Auto,
+            InitStrategy::Screening,
+            InitStrategy::Fista,
+            InitStrategy::BlockCd,
+            InitStrategy::Subsample,
+        ] {
+            assert_eq!(InitStrategy::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(InitStrategy::parse("fomish").is_err());
+    }
+
+    #[test]
+    fn l1_fista_seed_finds_informative_columns() {
+        let ds = l1_ds(80, 160, 21);
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let seed = Initializer::new(InitStrategy::Fista, 10).seed_l1(&ds, &backend, lambda);
+        assert_eq!(seed.strategy, InitStrategy::Fista);
+        assert!(!seed.ws.cols.is_empty() && seed.ws.cols.len() <= 10);
+        let hits = seed.ws.cols.iter().filter(|&&j| j < 5).count();
+        assert!(hits >= 3, "seed {:?} misses the informative features", seed.ws.cols);
+        assert!(seed.primal.is_some());
+    }
+
+    #[test]
+    fn l1_seed_above_lambda_max_falls_back_to_screening_columns() {
+        let ds = l1_ds(30, 40, 22);
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 1.5 * ds.lambda_max_l1(); // FOM thresholds everything to 0
+        let seed = Initializer::new(InitStrategy::Fista, 6).seed_l1(&ds, &backend, lambda);
+        assert_eq!(seed.ws.cols.len(), 6, "screening fallback must fill the budget");
+        assert_eq!(
+            seed.strategy,
+            InitStrategy::Screening,
+            "the seed must report what actually seeded the columns"
+        );
+        // the column-only variant skips the margin scan entirely
+        let cols_only =
+            Initializer::new(InitStrategy::Fista, 6).seed_l1_cols(&ds, &backend, lambda);
+        assert_eq!(cols_only.ws.cols, seed.ws.cols);
+        assert!(cols_only.ws.rows.is_empty());
+    }
+
+    #[test]
+    fn auto_resolves_subsample_for_large_n() {
+        let spec = SyntheticSpec {
+            n: SUBSAMPLE_AUTO_N + 200,
+            p: 12,
+            k0: 4,
+            rho: 0.1,
+            standardize: true,
+        };
+        let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(23));
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.02 * ds.lambda_max_l1();
+        let ini = Initializer::new(InitStrategy::Auto, 8).with_fom(FistaParams {
+            max_iters: 60,
+            ..Default::default()
+        });
+        let seed = ini.seed_l1(&ds, &backend, lambda);
+        assert_eq!(seed.strategy, InitStrategy::Subsample);
+        assert!(!seed.ws.rows.is_empty(), "subsample seed must flag violated margins");
+        assert!(seed.ws.rows.len() <= SEED_ROW_CAP);
+    }
+
+    #[test]
+    fn group_seed_prefers_informative_groups() {
+        let spec = GroupSpec {
+            n: 60,
+            n_groups: 12,
+            group_size: 5,
+            k0_groups: 3,
+            rho: 0.2,
+            standardize: true,
+        };
+        let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(24));
+        let lambda = 0.1 * gd.data.lambda_max_group(&gd.groups);
+        for strat in [InitStrategy::BlockCd, InitStrategy::Fista, InitStrategy::Auto] {
+            let seed = Initializer::new(strat, 5).seed_group(&gd.data, &gd.groups, lambda);
+            let hits = seed.ws.cols.iter().filter(|&&g| g < 3).count();
+            assert!(hits >= 2, "{strat:?}: seed {:?}", seed.ws.cols);
+            assert!(seed.ws.rows.is_empty());
+        }
+    }
+
+    #[test]
+    fn ranksvm_pairdiff_backend_matches_explicit_differences() {
+        let spec = RankSpec { n: 12, p: 8, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(25));
+        let pairs = ranking_pairs(&ds.y);
+        let base = NativeBackend::new(&ds.x);
+        let pd = PairDiffBackend::new(&base, &pairs, 1);
+        assert_eq!(pd.rows(), pairs.len());
+        assert_eq!(pd.cols(), ds.p());
+        let beta: Vec<f64> = (0..ds.p()).map(|j| (j as f64 * 0.3).sin()).collect();
+        let mut z = vec![0.0; pairs.len()];
+        pd.xb(&beta, &mut z);
+        for (t, &(i, k)) in pairs.iter().enumerate() {
+            let direct: f64 =
+                (0..ds.p()).map(|j| (ds.x.get(i, j) - ds.x.get(k, j)) * beta[j]).sum();
+            assert!((z[t] - direct).abs() < 1e-12, "pair {t}");
+        }
+        // Dᵀv against brute force, serial and chunked
+        let v: Vec<f64> = (0..pairs.len()).map(|t| ((t % 5) as f64) - 2.0).collect();
+        let mut q = vec![0.0; ds.p()];
+        pd.xtv(&v, &mut q);
+        for j in 0..ds.p() {
+            let direct: f64 = pairs
+                .iter()
+                .zip(&v)
+                .map(|(&(i, k), vt)| vt * (ds.x.get(i, j) - ds.x.get(k, j)))
+                .sum();
+            assert!((q[j] - direct).abs() < 1e-10, "col {j}");
+        }
+        // chunked variant: threads live INSIDE xtv (one scatter, base
+        // matvec chunked) — must be bit-identical to the serial view
+        let pd3 = PairDiffBackend::new(&base, &pairs, 3);
+        assert!(!pd3.supports_range_pricing());
+        let mut qp = vec![0.0; ds.p()];
+        pd3.xtv(&v, &mut qp);
+        assert_eq!(q, qp, "chunked pairdiff pricing must be bit-identical");
+        // and routing through the outer par_xtv degrades to one xtv call
+        let mut qo = vec![0.0; ds.p()];
+        par_xtv(&pd3, 4, &v, &mut qo);
+        assert_eq!(q, qo);
+    }
+
+    #[test]
+    fn ranksvm_fista_seed_has_no_intercept_shortcut() {
+        let spec = RankSpec { n: 20, p: 25, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(26));
+        let pairs = ranking_pairs(&ds.y);
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.05 * crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
+        let seed = Initializer::new(InitStrategy::Fista, 8)
+            .seed_ranksvm(&ds, &backend, &pairs, lambda);
+        assert!(!seed.ws.cols.is_empty());
+        assert!(!seed.ws.rows.is_empty());
+        let (beta, beta0) = seed.primal.unwrap();
+        assert_eq!(beta0, 0.0, "the pairwise view fits no intercept");
+        assert!(beta.iter().any(|v| *v != 0.0), "FOM must learn a ranking direction");
+        let hits = seed.ws.cols.iter().filter(|&&j| j < 5).count();
+        assert!(hits >= 2, "seed {:?}", seed.ws.cols);
+    }
+
+    #[test]
+    fn dantzig_lasso_residual_is_feasible_and_seeds_support() {
+        let spec = DantzigSpec { n: 40, p: 30, k0: 5, rho: 0.1, sigma: 0.4, standardize: true };
+        let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(27));
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.3 * crate::workloads::dantzig::lambda_max_dantzig(&ds);
+        let params = FistaParams { max_iters: 2000, eta: 1e-10, ..Default::default() };
+        let res = lasso_fista(&backend, &ds.y, lambda, &params);
+        // KKT: the correlation residual obeys the Dantzig constraint
+        let mut xb = vec![0.0; ds.n()];
+        backend.xb(&res.beta, &mut xb);
+        let u: Vec<f64> = ds.y.iter().zip(&xb).map(|(y, m)| y - m).collect();
+        let mut r = vec![0.0; ds.p()];
+        backend.xtv(&u, &mut r);
+        let linf = r.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        // FISTA is iterative, so allow a small KKT slack over the exact
+        // ‖Xᵀ(y − Xβ*)‖∞ ≤ λ bound
+        assert!(linf <= lambda * (1.0 + 1e-3), "residual ‖·‖∞ {linf} exceeds λ {lambda}");
+        let seed = Initializer::new(InitStrategy::Fista, 8).seed_dantzig(&ds, &backend, lambda);
+        assert!(!seed.ws.rows.is_empty());
+        let hits = seed.ws.rows.iter().filter(|&&j| j < 5).count();
+        assert!(hits >= 2, "seed {:?}", seed.ws.rows);
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_thread_independent() {
+        let ds = l1_ds(80, 120, 28);
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.05 * ds.lambda_max_l1();
+        let a = Initializer::new(InitStrategy::Fista, 10).seed_l1(&ds, &backend, lambda);
+        let mut par = Initializer::new(InitStrategy::Fista, 10);
+        par.threads = 4;
+        par.fista.threads = 4;
+        let b = par.seed_l1(&ds, &backend, lambda);
+        assert_eq!(a.ws, b.ws, "seeds must not depend on the thread count");
+        assert_eq!(a.primal.unwrap().0, b.primal.unwrap().0);
+    }
+}

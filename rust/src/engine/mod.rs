@@ -16,7 +16,12 @@
 //!   [`GenParams::threads`] > 1;
 //! * [`GenEngine`] — the solve → price → expand driver, with per-round
 //!   instrumentation ([`GenParams::trace`]), a round cap, and stall
-//!   detection ([`GenParams::stall_rounds`]).
+//!   detection ([`GenParams::stall_rounds`]);
+//! * [`init`] — the §4 first-order initialization layer: an
+//!   [`Initializer`] maps `(dataset, workload, λ, budget)` to a seed
+//!   [`WorkingSet`] (plus an optional primal guess) via screening,
+//!   smoothed-hinge FISTA, block CD, or subsample-and-average, selected
+//!   by [`GenParams::init`].
 //!
 //! New LP workloads plug in by implementing [`RestrictedProblem`] —
 //! roughly 200 lines of model bookkeeping instead of a forked generation
@@ -25,7 +30,11 @@
 
 #![warn(missing_docs)]
 
-use crate::backend::Backend;
+pub mod init;
+
+pub use init::{InitStrategy, Initializer, Seed, DEFAULT_SEED_BUDGET};
+
+use crate::backend::{par_xtv, Backend};
 use crate::simplex::Status;
 
 /// Shared knobs for the generation loops.
@@ -46,6 +55,15 @@ pub struct GenParams {
     /// unchanged restricted objective (0 = never). Protects against
     /// numerically stuck generation loops re-pricing the same cuts.
     pub stall_rounds: usize,
+    /// How a cold solve seeds its initial working sets (§4): the drivers
+    /// resolve [`InitStrategy::Auto`] to their per-workload default — a
+    /// first-order method for fixed-λ solves, closed-form screening for
+    /// the λ_max-anchored path drivers. See [`Initializer`].
+    pub init: InitStrategy,
+    /// Seed-size budget `k` for initial working sets — screening keeps
+    /// the top-k reduced costs, FOM seeds keep the k largest surviving
+    /// coefficients (default [`DEFAULT_SEED_BUDGET`]).
+    pub seed_budget: usize,
     /// Print one line per round to stderr.
     pub trace: bool,
 }
@@ -59,6 +77,8 @@ impl Default for GenParams {
             max_rows_per_round: 0,
             threads: 1,
             stall_rounds: 60,
+            init: InitStrategy::Auto,
+            seed_budget: DEFAULT_SEED_BUDGET,
             trace: false,
         }
     }
@@ -203,24 +223,9 @@ impl Pricer for BackendPricer<'_> {
     }
 
     fn score(&self, v: &[f64], q: &mut [f64]) {
-        let p = q.len();
-        if p == 0 {
-            return;
-        }
-        let t = self.threads.min(p);
-        // Chunking only pays when the backend has a genuine range kernel;
-        // otherwise each worker would recompute the full O(np) matvec.
-        if t <= 1 || !self.backend.supports_range_pricing() {
-            self.backend.xtv(v, q);
-            return;
-        }
-        let chunk = p.div_ceil(t);
-        let backend = self.backend;
-        std::thread::scope(|scope| {
-            for (c, slice) in q.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || backend.xtv_range(v, c * chunk, slice));
-            }
-        });
+        // the shared chunked kernel — also drives the FOM gradients, so
+        // initialization and pricing stay on one hot path
+        par_xtv(self.backend, self.threads, v, q);
     }
 
     fn name(&self) -> &'static str {

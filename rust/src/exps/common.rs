@@ -1,17 +1,22 @@
 //! Shared method runners for the experiment harness — each corresponds to
 //! a labelled method in §5 ("FO+CLG", "SFO+CNG", "RP CLG", …).
+//!
+//! All first-order initialization routes through the shared engine layer
+//! (`engine::Initializer`); this module only configures the strategies
+//! with the paper's §5 hyperparameters and times the two stages.
 
 use crate::backend::NativeBackend;
 use crate::coordinator::l1svm::{
     column_constraint_generation, column_generation, constraint_generation,
 };
-use crate::coordinator::path::{geometric_grid, initial_columns, regularization_path};
+use crate::coordinator::path::{geometric_grid, regularization_path};
 use crate::coordinator::{GenParams, SvmSolution};
 use crate::data::Dataset;
+use crate::engine::{InitStrategy, Initializer};
 use crate::exps::time_it;
-use crate::fom::fista::{fista, FistaParams, Penalty};
-use crate::fom::screening::{correlation_screen, top_k_by_abs};
-use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
+use crate::fom::fista::FistaParams;
+use crate::fom::screening::correlation_screen;
+use crate::fom::subsample::SubsampleParams;
 use crate::rng::Xoshiro256;
 
 /// Timing split of a two-stage method (initializer + cutting planes).
@@ -41,6 +46,18 @@ pub fn pricing_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// The §5.1.1 FISTA settings (screened init, low accuracy by design).
+fn fo_fista_params() -> FistaParams {
+    FistaParams {
+        tau: 0.2,
+        eta: 1e-3,
+        max_iters: 200,
+        power_iters: 20,
+        threads: pricing_threads(),
+        fit_intercept: true,
+    }
+}
+
 /// Method (b) "FO+CLG": correlation-screened FISTA init, then column
 /// generation (§5.1.1). Returns the solution and the timing split.
 pub fn fo_clg(
@@ -50,30 +67,18 @@ pub fn fo_clg(
     keep_top: usize,
 ) -> (SvmSolution, SplitTime) {
     let backend = NativeBackend::new(&ds.x);
-    let (init_cols, t_init) = time_it(|| {
-        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
-        let xx = ds.x.subset_cols(&screen);
-        let sub_backend = NativeBackend::new(&xx);
-        let res = fista(
-            &sub_backend,
-            &ds.y,
-            &Penalty::L1(lambda),
-            &FistaParams { tau: 0.2, eta: 1e-3, max_iters: 200, power_iters: 20 },
-            None,
-        );
-        // map back + keep the largest coefficients
-        let mut scored = vec![0.0; ds.p()];
-        for (k, &j) in screen.iter().enumerate() {
-            scored[j] = res.beta[k];
-        }
-        top_k_by_abs(&scored, keep_top.min(ds.p()))
-    });
+    let ini = Initializer::new(InitStrategy::Fista, keep_top).with_fom(fo_fista_params());
+    // column-only: Algorithm 1 keeps every margin row in the model.
+    // (The FOM support is kept as-is — up to keep_top surviving
+    // coefficients — rather than zero-padded to exactly keep_top as the
+    // pre-refactor harness did; padding columns carried no information.)
+    let (seed, t_init) = time_it(|| ini.seed_l1_cols(ds, &backend, lambda));
     let (sol, t_cut) = time_it(|| {
         column_generation(
             ds,
             &backend,
             lambda,
-            &init_cols,
+            &seed.ws.cols,
             &GenParams { eps, threads: pricing_threads(), ..Default::default() },
         )
     });
@@ -90,7 +95,7 @@ pub fn rp_clg(ds: &Dataset, lambda: f64, eps: f64, grid_points: usize) -> (SvmSo
     let grid: Vec<f64> = (0..grid_points).map(|k| hi * ratio.powi(k as i32)).collect();
     let ((_, sol), t) = time_it(|| {
         let params = GenParams { eps, threads: pricing_threads(), ..Default::default() };
-        regularization_path(ds, &backend, &grid, 10, &params)
+        regularization_path(ds, &backend, &grid, &params)
     });
     (sol, t)
 }
@@ -120,23 +125,30 @@ pub fn init_clg(
 /// Method (f) "SFO+CNG": subsampled first-order init, then constraint
 /// generation (§5.1.3).
 pub fn sfo_cng(ds: &Dataset, lambda: f64, eps: f64, seed: u64) -> (SvmSolution, SplitTime) {
-    let params = SubsampleParams {
+    let backend = NativeBackend::new(&ds.x);
+    let subsample = SubsampleParams {
         n0: (10 * ds.p()).clamp(100, ds.n()),
         mu_tol: 1e-1,
         q_max: (ds.n() / (10 * ds.p()).max(1)).clamp(2, 12),
         threads: 4,
         screen_k: 0,
-        fista: FistaParams { tau: 0.2, eta: 1e-3, max_iters: 150, power_iters: 15 },
+        fista: FistaParams {
+            tau: 0.2,
+            eta: 1e-3,
+            max_iters: 150,
+            power_iters: 15,
+            ..Default::default()
+        },
     };
-    let (init_rows, t_init) = time_it(|| {
-        let avg = subsample_average(ds, lambda, &params, seed);
-        violated_samples_capped(ds, &avg.beta, avg.beta0, 0.0, 1500)
-    });
+    let ini = Initializer::new(InitStrategy::Subsample, 10)
+        .with_subsample(subsample)
+        .with_seed(seed);
+    let (seed_ws, t_init) = time_it(|| ini.seed_l1(ds, &backend, lambda).ws);
     let (sol, t_cut) = time_it(|| {
         constraint_generation(
             ds,
             lambda,
-            &init_rows,
+            &seed_ws.rows,
             &GenParams {
                 eps,
                 max_rows_per_round: 1000,
@@ -158,27 +170,31 @@ pub fn sfo_cl_cng(
     seed: u64,
 ) -> (SvmSolution, SplitTime) {
     let backend = NativeBackend::new(&ds.x);
-    let params = SubsampleParams {
+    let subsample = SubsampleParams {
         n0: 1000.min(ds.n()),
         mu_tol: 0.5,
         q_max: 8,
         threads: 4,
         screen_k: (10 * 100).min(ds.p()),
-        fista: FistaParams { tau: 0.2, eta: 1e-3, max_iters: 150, power_iters: 15 },
+        fista: FistaParams {
+            tau: 0.2,
+            eta: 1e-3,
+            max_iters: 150,
+            power_iters: 15,
+            ..Default::default()
+        },
     };
-    let ((init_rows, init_cols), t_init) = time_it(|| {
-        let avg = subsample_average(ds, lambda, &params, seed);
-        let rows = violated_samples_capped(ds, &avg.beta, avg.beta0, 0.0, 1500);
-        let cols = top_k_by_abs(&avg.beta, keep_cols.min(ds.p()));
-        (rows, cols)
-    });
+    let ini = Initializer::new(InitStrategy::Subsample, keep_cols)
+        .with_subsample(subsample)
+        .with_seed(seed);
+    let (seed_ws, t_init) = time_it(|| ini.seed_l1(ds, &backend, lambda).ws);
     let (sol, t_cut) = time_it(|| {
         column_constraint_generation(
             ds,
             &backend,
             lambda,
-            &init_rows,
-            &init_cols,
+            &seed_ws.rows,
+            &seed_ws.cols,
             &GenParams {
                 eps,
                 max_rows_per_round: 1000,
@@ -190,30 +206,11 @@ pub fn sfo_cl_cng(
     (sol, SplitTime { init: t_init, cut: t_cut })
 }
 
-/// First-order initializer for Slope: screened FISTA with the Slope prox.
+/// First-order initializer for Slope: screened FISTA with the Slope prox
+/// (through the shared `engine::Initializer`).
 pub fn fo_slope_init(ds: &Dataset, lambda: &[f64], keep_top: usize) -> (Vec<usize>, f64) {
-    time_it(|| {
-        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
-        let xx = ds.x.subset_cols(&screen);
-        let sub_backend = NativeBackend::new(&xx);
-        let sub_lams: Vec<f64> = lambda[..screen.len()].to_vec();
-        let res = fista(
-            &sub_backend,
-            &ds.y,
-            &Penalty::Slope(sub_lams),
-            &FistaParams { tau: 0.2, eta: 1e-3, max_iters: 200, power_iters: 20 },
-            None,
-        );
-        let mut scored = vec![0.0; ds.p()];
-        for (k, &j) in screen.iter().enumerate() {
-            scored[j] = res.beta[k];
-        }
-        let mut cols = top_k_by_abs(&scored, keep_top.min(ds.p()));
-        if cols.is_empty() {
-            cols = initial_columns(ds, 10);
-        }
-        cols
-    })
+    let ini = Initializer::new(InitStrategy::Fista, keep_top).with_fom(fo_fista_params());
+    time_it(|| ini.seed_slope(ds, lambda).ws.cols)
 }
 
 /// Paper-standard λ grid for Table 1: 20 values, geometric ratio 0.7.

@@ -12,11 +12,10 @@ use crate::coordinator::group::{
 };
 use crate::coordinator::GenParams;
 use crate::data::synthetic::{generate_group, GroupSpec};
-use crate::engine::{BackendPricer, GenEngine};
+use crate::engine::{BackendPricer, GenEngine, InitStrategy, Initializer};
 use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
-use crate::fom::block_cd::{block_cd, BlockCdParams};
-use crate::fom::fista::{fista, FistaParams, Penalty};
-use crate::fom::screening::{group_screen, top_k_by_abs};
+use crate::fom::block_cd::BlockCdParams;
+use crate::fom::fista::FistaParams;
 use crate::rng::Xoshiro256;
 
 fn sizes(scale: Scale) -> (usize, Vec<usize>, usize, usize) {
@@ -30,52 +29,21 @@ fn sizes(scale: Scale) -> (usize, Vec<usize>, usize, usize) {
 
 const PG: usize = 10; // group size (paper)
 
-/// FO (FISTA or BCD) init for group CG: returns the initial group set.
+/// FO (FISTA or BCD) init for group CG via the shared engine
+/// initializer: screened groups, a low-accuracy local solve, top groups
+/// by coefficient mass.
 fn fo_group_init(
     gd: &crate::data::synthetic::GroupDataset,
     lambda: f64,
     use_bcd: bool,
 ) -> Vec<usize> {
-    let ds = &gd.data;
-    let screened = group_screen(&ds.x, &ds.y, &gd.groups, ds.n());
-    let cols: Vec<usize> = screened.iter().flat_map(|&g| gd.groups[g].clone()).collect();
-    let xx = ds.x.subset_cols(&cols);
-    let local_groups: Vec<Vec<usize>> =
-        (0..screened.len()).map(|k| (k * PG..(k + 1) * PG).collect()).collect();
-    let beta_local = if use_bcd {
-        block_cd(
-            &xx,
-            &ds.y,
-            &local_groups,
-            lambda,
-            &BlockCdParams { max_sweeps: 60, tol: 1e-3, ..Default::default() },
-            None,
-        )
-        .beta
-    } else {
-        let backend = NativeBackend::new(&xx);
-        fista(
-            &backend,
-            &ds.y,
-            &Penalty::GroupLinf { lambda, groups: local_groups.clone() },
-            &FistaParams { max_iters: 200, eta: 1e-3, ..Default::default() },
-            None,
-        )
-        .beta
-    };
-    // rank screened groups by coefficient mass, keep nonzero ones
-    let mass: Vec<f64> = local_groups
-        .iter()
-        .map(|g| g.iter().map(|&j| beta_local[j].abs()).sum())
-        .collect();
-    let top = top_k_by_abs(&mass, 30);
-    let init: Vec<usize> =
-        top.into_iter().filter(|&k| mass[k] > 1e-8).map(|k| screened[k]).collect();
-    if init.is_empty() {
-        initial_groups(ds, &gd.groups, 5)
-    } else {
-        init
-    }
+    let strat = if use_bcd { InitStrategy::BlockCd } else { InitStrategy::Fista };
+    Initializer::new(strat, 30)
+        .with_fom(FistaParams { max_iters: 200, eta: 1e-3, ..Default::default() })
+        .with_block_cd(BlockCdParams { max_sweeps: 60, tol: 1e-3, ..Default::default() })
+        .seed_group(&gd.data, &gd.groups, lambda)
+        .ws
+        .cols
 }
 
 /// Run Figure 4.

@@ -85,7 +85,7 @@ pub fn run(scale: Scale) -> String {
             {
                 let (path, t) = time_it(|| {
                     let params = GenParams { eps, ..Default::default() };
-                    regularization_path(&ds, &backend, &grid, 10, &params).0
+                    regularization_path(&ds, &backend, &grid, &params).0
                 });
                 times.entry(label).or_default().push(t);
                 objs.entry(label).or_default().extend(path.iter().map(|pt| pt.objective));

@@ -8,9 +8,10 @@ use crate::baselines::slope_full::solve_slope_full;
 use crate::coordinator::slope::slope_column_constraint_generation;
 use crate::coordinator::GenParams;
 use crate::data::synthetic::{generate_l1, SyntheticSpec};
+use crate::engine::init::fom_full;
 use crate::exps::common::fo_slope_init;
 use crate::exps::{ara_percent, fmt_time, mean_std, time_it, Scale, Table};
-use crate::fom::fista::{fista, FistaParams, Penalty};
+use crate::fom::fista::{FistaParams, Penalty};
 use crate::fom::objective::{bh_slope_weights, slope_objective};
 use crate::rng::Xoshiro256;
 
@@ -59,12 +60,17 @@ pub fn run(scale: Scale) -> String {
 
             // first-order method pushed for accuracy (full p, many iters)
             let (fo_obj, t) = time_it(|| {
-                let res = fista(
+                let res = fom_full(
                     &backend,
                     &ds.y,
                     &Penalty::Slope(lambda.clone()),
-                    &FistaParams { tau: 0.2, eta: 1e-8, max_iters: 1500, power_iters: 25 },
-                    None,
+                    &FistaParams {
+                        tau: 0.2,
+                        eta: 1e-8,
+                        max_iters: 1500,
+                        power_iters: 25,
+                        ..Default::default()
+                    },
                 );
                 slope_objective(&backend, &ds.y, &res.beta, res.beta0, &lambda)
             });

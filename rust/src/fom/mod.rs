@@ -1,7 +1,11 @@
 //! First-order methods (§4 of the paper).
 //!
-//! These produce *low-accuracy* solutions fast; the coordinators use them
-//! purely to guess good initial column/constraint working sets:
+//! These produce *low-accuracy* solutions fast. They are the building
+//! blocks of the engine's initialization layer
+//! (`crate::engine::init::Initializer`), which turns them into seed
+//! working sets for every workload; every gradient here rides the same
+//! chunked parallel kernels as cutting-plane pricing
+//! (`crate::backend::{par_xtv, par_col_dots}`):
 //!
 //! * [`smoothing`] — Nesterov-smoothed hinge loss `F^τ` (value + gradient);
 //! * [`prox`] — thresholding operators for the three regularizers

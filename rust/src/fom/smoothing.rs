@@ -9,7 +9,7 @@
 //!
 //! The two O(np) products run through a [`Backend`].
 
-use crate::backend::Backend;
+use crate::backend::{par_xtv, Backend};
 
 /// Smoothed hinge loss with parameter τ.
 #[derive(Clone, Copy, Debug)]
@@ -37,7 +37,7 @@ impl HingeWorkspace {
 }
 
 impl SmoothedHinge {
-    /// Evaluate value and gradient at `(β, β₀)`.
+    /// Evaluate value and gradient at `(β, β₀)` (serial `Xᵀv`).
     ///
     /// Returns `(F^τ, ∇β ∈ ℝᵖ written into grad_beta, ∇β₀)`.
     pub fn value_grad(
@@ -48,6 +48,24 @@ impl SmoothedHinge {
         beta0: f64,
         ws: &mut HingeWorkspace,
         grad_beta: &mut [f64],
+    ) -> (f64, f64) {
+        self.value_grad_mt(backend, y, beta, beta0, ws, grad_beta, 1)
+    }
+
+    /// [`SmoothedHinge::value_grad`] with the `Xᵀv` half of the gradient
+    /// chunked over `threads` workers — the same
+    /// [`crate::backend::par_xtv`] kernel as cutting-plane pricing, so
+    /// the result is bit-identical for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn value_grad_mt(
+        &self,
+        backend: &dyn Backend,
+        y: &[f64],
+        beta: &[f64],
+        beta0: f64,
+        ws: &mut HingeWorkspace,
+        grad_beta: &mut [f64],
+        threads: usize,
     ) -> (f64, f64) {
         let n = backend.rows();
         debug_assert_eq!(y.len(), n);
@@ -68,7 +86,7 @@ impl SmoothedHinge {
             grad_b0 -= coeff;
         }
         // ∇β = −Xᵀ v with v_i = y_i (1+w_i)/2
-        backend.xtv(&ws.v, grad_beta);
+        par_xtv(backend, threads, &ws.v, grad_beta);
         for g in grad_beta.iter_mut() {
             *g = -*g;
         }

@@ -4,9 +4,11 @@
 //! paper instead solves the problem on subsamples `A_j` (with λ rescaled
 //! by `|A|/n`), averages the estimators for variance reduction, and stops
 //! once the running average stabilizes. The subsample solves are
-//! embarrassingly parallel — here they run on `std::thread` workers.
+//! embarrassingly parallel — here they run on `std::thread` workers; the
+//! FISTA gradients inside each solve and the final margin scans ride the
+//! shared [`Backend`] kernels.
 
-use crate::backend::NativeBackend;
+use crate::backend::{Backend, NativeBackend};
 use crate::data::{Dataset, Design};
 use crate::fom::fista::{fista, FistaParams, Penalty};
 use crate::fom::screening::correlation_screen;
@@ -145,13 +147,20 @@ pub fn subsample_average(
 }
 
 /// Sample indices whose hinge loss is positive at `(β, β₀)` — the paper's
-/// initializer for the constraint-generation working set `I`.
-pub fn violated_samples(ds: &Dataset, beta: &[f64], beta0: f64, slack: f64) -> Vec<usize> {
-    let n = ds.n();
+/// initializer for the constraint-generation working set `I`. The margin
+/// matvec runs through the shared [`Backend`].
+pub fn violated_samples(
+    backend: &dyn Backend,
+    y: &[f64],
+    beta: &[f64],
+    beta0: f64,
+    slack: f64,
+) -> Vec<usize> {
+    let n = backend.rows();
     let mut xb = vec![0.0; n];
-    ds.x.matvec(beta, &mut xb);
+    backend.xb(beta, &mut xb);
     (0..n)
-        .filter(|&i| 1.0 - ds.y[i] * (xb[i] + beta0) > -slack)
+        .filter(|&i| 1.0 - y[i] * (xb[i] + beta0) > -slack)
         .collect()
 }
 
@@ -161,18 +170,19 @@ pub fn violated_samples(ds: &Dataset, beta: &[f64], beta0: f64, slack: f64) -> V
 /// the LP basis (O(|I|³) factorizations) for no benefit — the CNG rounds
 /// bring in whatever the initializer missed.
 pub fn violated_samples_capped(
-    ds: &Dataset,
+    backend: &dyn Backend,
+    y: &[f64],
     beta: &[f64],
     beta0: f64,
     slack: f64,
     cap: usize,
 ) -> Vec<usize> {
-    let n = ds.n();
+    let n = backend.rows();
     let mut xb = vec![0.0; n];
-    ds.x.matvec(beta, &mut xb);
+    backend.xb(beta, &mut xb);
     let mut scored: Vec<(usize, f64)> = (0..n)
         .filter_map(|i| {
-            let z = 1.0 - ds.y[i] * (xb[i] + beta0);
+            let z = 1.0 - y[i] * (xb[i] + beta0);
             if z > -slack {
                 Some((i, z))
             } else {
@@ -230,11 +240,11 @@ mod tests {
     #[test]
     fn violated_samples_detects_margin_violations() {
         let ds = big_n_dataset();
+        let backend = NativeBackend::new(&ds.x);
         // zero coefficients: every sample violates (hinge = 1)
-        let all = violated_samples(&ds, &vec![0.0; ds.p()], 0.0, 0.0);
+        let all = violated_samples(&backend, &ds.y, &vec![0.0; ds.p()], 0.0, 0.0);
         assert_eq!(all.len(), ds.n());
         // a good separator from FISTA violates far fewer
-        let backend = NativeBackend::new(&ds.x);
         let lambda = 0.01 * ds.lambda_max_l1();
         let res = fista(
             &backend,
@@ -243,8 +253,29 @@ mod tests {
             &FistaParams { max_iters: 500, eta: 1e-6, ..Default::default() },
             None,
         );
-        let few = violated_samples(&ds, &res.beta, res.beta0, 0.0);
+        let few = violated_samples(&backend, &ds.y, &res.beta, res.beta0, 0.0);
         assert!(few.len() < ds.n(), "classifier should satisfy some margins");
+        // the capped variant keeps the worst offenders first
+        let capped = violated_samples_capped(&backend, &ds.y, &vec![0.0; ds.p()], 0.0, 0.0, 100);
+        assert_eq!(capped.len(), 100);
+    }
+
+    #[test]
+    fn subsample_fista_threads_are_bit_identical() {
+        // the inner FISTA gradients ride par_xtv: chunking must not
+        // change a single bit of the averaged estimator
+        let ds = big_n_dataset();
+        let lambda = 0.02 * ds.lambda_max_l1();
+        let base = SubsampleParams { n0: 200, q_max: 4, threads: 2, ..Default::default() };
+        let serial = subsample_average(&ds, lambda, &base, 3);
+        let par_params = SubsampleParams {
+            fista: FistaParams { threads: 4, ..Default::default() },
+            ..base
+        };
+        let par = subsample_average(&ds, lambda, &par_params, 3);
+        assert_eq!(serial.q_used, par.q_used);
+        assert_eq!(serial.beta0, par.beta0);
+        assert_eq!(serial.beta, par.beta);
     }
 
     #[test]

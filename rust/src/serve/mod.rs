@@ -14,7 +14,14 @@
 //!   instead of starting cold — Algorithm 2's warm-start observation,
 //!   request-shaped;
 //! * a **grid endpoint** that routes through the warm-started λ-path
-//!   drivers in `coordinator::path`.
+//!   drivers in `coordinator::path` and seeds the warm-start cache at
+//!   **every** visited λ, so later fixed-λ requests near the grid resume
+//!   warm;
+//! * **first-order cold starts**: a cache miss seeds the restricted
+//!   model through the shared `engine::Initializer` (§4 FOM seeding by
+//!   default; the request's `"init"` field picks
+//!   `auto|screening|fista|blockcd|subsample`, `"seed_budget"` sizes the
+//!   seed).
 //!
 //! The protocol is line-delimited JSON (one request object per line, one
 //! response per line, in order — [`json`] is the hand-rolled
@@ -36,24 +43,21 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::backend::NativeBackend;
-use crate::coordinator::group::{initial_groups, GroupProblem, RestrictedGroup};
+use crate::coordinator::group::{GroupProblem, RestrictedGroup};
 use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
 use crate::coordinator::path::{
-    dantzig_path, geometric_grid, initial_columns, ranksvm_path, regularization_path,
-    PathSolution,
+    dantzig_path, geometric_grid, ranksvm_path, regularization_path, PathSolution,
+};
+use crate::coordinator::report::{
+    dantzig_report, group_report, l1_report, ranksvm_report, slope_report,
 };
 use crate::coordinator::slope::{RestrictedSlope, SlopeProblem};
 use crate::coordinator::{GenParams, GenStats};
-use crate::engine::{BackendPricer, GenEngine, Snapshot, WorkingSet};
+use crate::engine::{BackendPricer, GenEngine, InitStrategy, Initializer, Snapshot, WorkingSet};
 use crate::error::Result;
-use crate::fom::objective::{bh_slope_weights, hinge_loss_support, slope_norm};
-use crate::workloads::dantzig::{
-    initial_features, lambda_max_dantzig, DantzigProblem, RestrictedDantzig,
-};
-use crate::workloads::ranksvm::{
-    initial_pairs, initial_rank_features, lambda_max_rank, pairwise_hinge_support, RankProblem,
-    RestrictedRank,
-};
+use crate::fom::objective::bh_slope_weights;
+use crate::workloads::dantzig::{lambda_max_dantzig, DantzigProblem, RestrictedDantzig};
+use crate::workloads::ranksvm::{lambda_max_rank, RankProblem, RestrictedRank};
 use crate::{bail, ensure, err};
 
 use cache::{CacheEntry, CacheHit, WarmCache};
@@ -164,13 +168,9 @@ impl ServeState {
             .get(name)
             .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
         let workload = Workload::parse(req.str_req("workload")?)?;
-        let gen = GenParams {
-            eps: req.f64_or("eps", 1e-2)?,
-            threads: req.usize_or("threads", 1)?.max(1),
-            max_cols_per_round: req.usize_or("max_cols_per_round", 0)?,
-            max_rows_per_round: req.usize_or("max_rows_per_round", 0)?,
-            ..Default::default()
-        };
+        let mut gen = gen_from_req(req)?;
+        gen.max_cols_per_round = req.usize_or("max_cols_per_round", 0)?;
+        gen.max_rows_per_round = req.usize_or("max_rows_per_round", 0)?;
         let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
         let lambda = lambda_for(&entry, workload, req, group_size)?;
@@ -202,6 +202,8 @@ impl ServeState {
         let mut fields = vec![
             kv("dataset", name),
             kv("workload", workload.as_str()),
+            kv("init", gen.init.as_str()),
+            kv("seeded_by", core.seeded_by),
             kv("lambda", lambda),
             kv("objective", core.objective),
             kv("support", core.support),
@@ -234,18 +236,14 @@ impl ServeState {
             ratio > 0.0 && ratio < 1.0,
             "grid ratio must be in (0, 1), got {ratio}"
         );
-        let gen = GenParams {
-            eps: req.f64_or("eps", 1e-2)?,
-            threads: req.usize_or("threads", 1)?.max(1),
-            ..Default::default()
-        };
-        let j0 = req.usize_or("init", 10)?;
+        let gen = gen_from_req(req)?;
+        let use_cache = req.bool_or("cache", true)?;
         let path: Vec<PathSolution> = match workload {
             Workload::L1svm => {
                 let ds = entry.classification();
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
-                regularization_path(ds, &backend, &grid, j0, &gen).0
+                regularization_path(ds, &backend, &grid, &gen).0
             }
             Workload::Ranksvm => {
                 let ds = &entry.ds;
@@ -253,13 +251,13 @@ impl ServeState {
                 ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(lambda_max_rank(ds, pairs), k, ratio);
-                ranksvm_path(ds, &backend, pairs, &grid, j0, &gen)
+                ranksvm_path(ds, &backend, pairs, &grid, &gen)
             }
             Workload::Dantzig => {
                 let ds = &entry.ds;
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(lambda_max_dantzig(ds), k, ratio);
-                dantzig_path(ds, &backend, &grid, j0, &gen)
+                dantzig_path(ds, &backend, &grid, &gen)
             }
             other => bail!(
                 "grid routes through the warm-started path drivers, available for \
@@ -267,6 +265,27 @@ impl ServeState {
                 other.as_str()
             ),
         };
+        // Seed the warm-start cache at EVERY visited λ: a later fixed-λ
+        // solve anywhere near the grid resumes from the matching
+        // snapshot instead of starting cold.
+        let mut seeded = 0usize;
+        if use_cache {
+            let mut cache = self.cache.lock().expect("cache lock");
+            for pt in &path {
+                if !pt.ws.is_empty() {
+                    cache.insert(
+                        entry.fingerprint,
+                        workload,
+                        CacheEntry {
+                            lambda: pt.lambda,
+                            objective: pt.objective,
+                            ws: pt.ws.clone(),
+                        },
+                    );
+                    seeded += 1;
+                }
+            }
+        }
         let last = path.last().expect("grid has at least one point");
         let (rounds, simplex_iters) = (last.stats.rounds, last.stats.simplex_iters);
         let points: Vec<Json> = path
@@ -288,6 +307,7 @@ impl ServeState {
                 kv("points", points.len()),
                 kv("rounds", rounds),
                 kv("simplex_iters", simplex_iters),
+                kv("cache_seeded", seeded),
                 kv("path", points),
             ],
         ))
@@ -347,6 +367,34 @@ fn lambda_for(
     Ok(frac * lmax)
 }
 
+/// Fold the request knobs shared by `solve` and `grid` into a
+/// [`GenParams`] (`solve` layers its per-round expansion caps on top).
+fn gen_from_req(req: &Req) -> Result<GenParams> {
+    Ok(GenParams {
+        eps: req.f64_or("eps", 1e-2)?,
+        threads: req.usize_or("threads", 1)?.max(1),
+        init: init_for(req)?,
+        seed_budget: req.usize_or("seed_budget", crate::engine::DEFAULT_SEED_BUDGET)?.max(1),
+        ..Default::default()
+    })
+}
+
+/// Parse the optional `"init"` strategy field (default `auto`, i.e. the
+/// per-workload first-order default on a cache miss).
+fn init_for(req: &Req) -> Result<InitStrategy> {
+    match req.str_opt("init") {
+        Some(s) => InitStrategy::parse(s),
+        None => {
+            ensure!(
+                req.0.get("init").is_none(),
+                "field \"init\" must be a strategy string \
+                 (auto|screening|fista|blockcd|subsample); the seed size knob is \"seed_budget\""
+            );
+            Ok(InitStrategy::Auto)
+        }
+    }
+}
+
 fn contiguous_groups(p: usize, group_size: usize) -> Result<Vec<Vec<usize>>> {
     let gs = group_size.max(1);
     ensure!(p % gs == 0, "group workload needs p divisible by group_size ({p} % {gs} != 0)");
@@ -366,11 +414,16 @@ pub struct SolveCore {
     pub stats: GenStats,
     /// Final working sets (the cacheable snapshot).
     pub ws: WorkingSet,
+    /// What seeded the restricted model: `"cache"` for a warm snapshot,
+    /// else the resolved [`InitStrategy`] that actually ran (`Auto`
+    /// already mapped to its per-workload default).
+    pub seeded_by: &'static str,
 }
 
 /// Solve one request: seed the restricted model from `seed` when warm,
-/// from the workload's cold heuristics otherwise, run the engine, and
-/// export the final working sets.
+/// from the shared [`Initializer`] otherwise (a cache miss runs the §4
+/// first-order seed by default — [`InitStrategy::Auto`] — instead of
+/// bare screening), run the engine, and export the final working sets.
 pub fn solve_one(
     entry: &DatasetEntry,
     workload: Workload,
@@ -398,9 +451,14 @@ fn solve_l1(
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
     let all_i: Vec<usize> = (0..ds.n()).collect();
-    let j_init: Vec<usize> = match seed {
-        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
-        _ => initial_columns(ds, 10),
+    let (j_init, seeded_by): (Vec<usize>, &'static str) = match seed {
+        Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
+        _ => {
+            // Algorithm 1 keeps all margin rows: the column-only seed
+            // skips the discarded violated-row scan
+            let s = Initializer::from_params(gen).seed_l1_cols(ds, &backend, lambda);
+            (s.ws.cols, s.strategy.as_str())
+        }
     };
     let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &j_init);
     rl1.set_threads(gen.threads);
@@ -411,16 +469,14 @@ fn solve_l1(
     // full [n] would only bloat the cache.
     ws.rows.clear();
     let (support, b0) = prob.inner().beta_support();
-    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
-    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let report = l1_report(ds, &support, b0, lambda);
     Ok(SolveCore {
         lambda,
-        objective: hinge + lambda * l1,
-        support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+        objective: report.objective,
+        support: report.support,
         stats,
         ws,
+        seeded_by,
     })
 }
 
@@ -435,9 +491,12 @@ fn solve_group(
     let groups = contiguous_groups(ds.p(), group_size)?;
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
-    let g_init: Vec<usize> = match seed {
-        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
-        _ => initial_groups(ds, &groups, 5),
+    let (g_init, seeded_by): (Vec<usize>, &'static str) = match seed {
+        Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
+        _ => {
+            let s = Initializer::from_params(gen).seed_group(ds, &groups, lambda);
+            (s.ws.cols, s.strategy.as_str())
+        }
     };
     ensure!(
         g_init.iter().all(|&g| g < groups.len()),
@@ -449,23 +508,14 @@ fn solve_group(
     let stats = GenEngine::new(gen).run(&mut prob);
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
-    let mut beta = vec![0.0; ds.p()];
-    for &(j, v) in &support {
-        beta[j] = v;
-    }
-    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
-    let pen: f64 = groups
-        .iter()
-        .map(|g| g.iter().fold(0.0f64, |m, &j| m.max(beta[j].abs())))
-        .sum();
+    let report = group_report(ds, &groups, &support, b0, lambda);
     Ok(SolveCore {
         lambda,
-        objective: hinge + lambda * pen,
-        support: beta.iter().filter(|v| v.abs() > 1e-9).count(),
+        objective: report.objective,
+        support: report.support,
         stats,
         ws,
+        seeded_by,
     })
 }
 
@@ -479,9 +529,12 @@ fn solve_slope(
     let weights = bh_slope_weights(ds.p(), lambda);
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
-    let j_init: Vec<usize> = match seed {
-        Some(ws) if !ws.cols.is_empty() => ws.cols.clone(),
-        _ => initial_columns(ds, 10),
+    let (j_init, seeded_by): (Vec<usize>, &'static str) = match seed {
+        Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
+        _ => {
+            let s = Initializer::from_params(gen).seed_slope(ds, &weights);
+            (s.ws.cols, s.strategy.as_str())
+        }
     };
     // Slope caps column additions per round (paper: 10).
     let mut eng = gen.clone();
@@ -494,19 +547,14 @@ fn solve_slope(
     let stats = GenEngine::new(&eng).run(&mut prob);
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
-    let mut beta = vec![0.0; ds.p()];
-    for &(j, v) in &support {
-        beta[j] = v;
-    }
-    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = hinge_loss_support(&ds.x, &ds.y, &cols, &vals, b0);
+    let report = slope_report(ds, &weights, &support, b0);
     Ok(SolveCore {
         lambda,
-        objective: hinge + slope_norm(&beta, &weights),
-        support: beta.iter().filter(|v| v.abs() > 1e-9).count(),
+        objective: report.objective,
+        support: report.support,
         stats,
         ws,
+        seeded_by,
     })
 }
 
@@ -521,9 +569,12 @@ fn solve_ranksvm(
     ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
-    let (t_init, j_init) = match seed {
-        Some(ws) if !ws.is_empty() => (ws.rows.clone(), ws.cols.clone()),
-        _ => (initial_pairs(pairs.len(), 10), initial_rank_features(ds, pairs, 10)),
+    let (t_init, j_init, seeded_by) = match seed {
+        Some(ws) if !ws.is_empty() => (ws.rows.clone(), ws.cols.clone(), "cache"),
+        _ => {
+            let s = Initializer::from_params(gen).seed_ranksvm(ds, &backend, pairs, lambda);
+            (s.ws.rows, s.ws.cols, s.strategy.as_str())
+        }
     };
     ensure!(
         t_init.iter().all(|&t| t < pairs.len()),
@@ -534,17 +585,14 @@ fn solve_ranksvm(
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let stats = GenEngine::new(gen).run(&mut prob);
     let ws = prob.export_working_set();
-    let support = prob.inner().beta_support();
-    let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
-    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
     Ok(SolveCore {
         lambda,
-        objective: hinge + lambda * l1,
-        support: vals.iter().filter(|v| v.abs() > 1e-9).count(),
+        objective: report.objective,
+        support: report.support,
         stats,
         ws,
+        seeded_by,
     })
 }
 
@@ -560,21 +608,27 @@ fn solve_dantzig(
     let mut rd = RestrictedDantzig::new(ds, lambda, &[]);
     rd.set_threads(gen.threads);
     let mut prob = DantzigProblem::new(rd, ds, &pricer);
-    match seed {
-        Some(ws) if !ws.is_empty() => prob.import_working_set(ws),
-        _ => prob.import_working_set(&WorkingSet {
-            cols: Vec::new(),
-            rows: initial_features(ds, 10),
-        }),
-    }
+    let seeded_by = match seed {
+        Some(ws) if !ws.is_empty() => {
+            prob.import_working_set(ws);
+            "cache"
+        }
+        _ => {
+            let cold = Initializer::from_params(gen).seed_dantzig(ds, &backend, lambda);
+            prob.import_working_set(&cold.ws);
+            cold.strategy.as_str()
+        }
+    };
     let stats = GenEngine::new(gen).run(&mut prob);
     let ws = prob.export_working_set();
-    let support = prob.inner().beta_support();
+    let report = dantzig_report(ds.p(), &prob.inner().beta_support());
     Ok(SolveCore {
         lambda,
+        // restricted LP objective, matching `dantzig_path`/`finish`
         objective: prob.inner().objective(),
-        support: support.iter().filter(|(_, v)| v.abs() > 1e-9).count(),
+        support: report.support,
         stats,
         ws,
+        seeded_by,
     })
 }

@@ -346,7 +346,10 @@ fn finish(ds: &Dataset, rd: &RestrictedDantzig, stats: GenStats) -> SvmSolution 
 }
 
 /// Column-and-constraint generation for the Dantzig selector. `seed` is
-/// the initial feature working set (empty ⇒ top-10 `|x_iᵀy|`).
+/// the initial feature working set (empty ⇒ the top
+/// [`GenParams::seed_budget`] `|x_iᵀy|` scores; callers wanting a
+/// first-order seed go through
+/// [`crate::engine::Initializer::seed_dantzig`]).
 pub fn dantzig_generation(
     ds: &Dataset,
     backend: &dyn Backend,
@@ -358,7 +361,7 @@ pub fn dantzig_generation(
     // default seed from the c = Xᵀy the model just computed (no second
     // O(np) pass): the top-|c| features bind first below λ_max
     let seed: Vec<usize> = if seed.is_empty() {
-        top_k_by_abs(&rd.c, 10.min(ds.p()))
+        top_k_by_abs(&rd.c, params.seed_budget.min(ds.p()))
     } else {
         seed.to_vec()
     };

@@ -382,34 +382,40 @@ fn finish(
     lambda: f64,
     stats: GenStats,
 ) -> SvmSolution {
-    let support = rr.beta_support();
-    let mut beta = vec![0.0; ds.p()];
-    for &(j, v) in &support {
-        beta[j] = v;
-    }
-    let cols_nz: Vec<usize> = support.iter().map(|&(j, _)| j).collect();
-    let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
-    let hinge = pairwise_hinge_support(ds, pairs, &cols_nz, &vals);
-    let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+    let report =
+        crate::coordinator::report::ranksvm_report(ds, pairs, &rr.beta_support(), lambda);
     let mut cols = rr.j_set().to_vec();
     cols.sort_unstable();
     let mut rows = rr.t_set().to_vec();
     rows.sort_unstable();
-    SvmSolution { beta, beta0: 0.0, objective: hinge + lambda * l1, stats, cols, rows }
+    SvmSolution { beta: report.beta, beta0: 0.0, objective: report.objective, stats, cols, rows }
 }
 
 /// Column-and-constraint generation for RankSVM over the given candidate
-/// pair set (typically [`ranking_pairs`]). Empty seeds default to 10
-/// spread pairs and the top-10 `|q_j|` features.
+/// pair set (typically [`ranking_pairs`]). `t_init`/`j_init` seed the
+/// pair and feature working sets; empty seeds default to
+/// [`GenParams::seed_budget`] spread pairs and top-budget `|q_j|`
+/// features (callers wanting a first-order seed go through
+/// [`crate::engine::Initializer::seed_ranksvm`]).
 pub fn ranksvm_generation(
     ds: &Dataset,
     backend: &dyn Backend,
     pairs: &[(usize, usize)],
     lambda: f64,
+    t_init: &[usize],
+    j_init: &[usize],
     params: &GenParams,
 ) -> SvmSolution {
-    let t_init = initial_pairs(pairs.len(), 10);
-    let j_init = initial_rank_features(ds, pairs, 10);
+    let t_init: Vec<usize> = if t_init.is_empty() {
+        initial_pairs(pairs.len(), params.seed_budget)
+    } else {
+        t_init.to_vec()
+    };
+    let j_init: Vec<usize> = if j_init.is_empty() {
+        initial_rank_features(ds, pairs, params.seed_budget)
+    } else {
+        j_init.to_vec()
+    };
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rr = RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init);
     rr.set_threads(params.threads);
@@ -448,7 +454,7 @@ mod tests {
         let backend = NativeBackend::new(&ds.x);
         let full = solve_full_ranksvm(&ds, &pairs, lambda);
         let params = GenParams { eps: 1e-9, ..Default::default() };
-        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &params);
+        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params);
         assert!(sol.stats.converged, "engine must report ε-optimality");
         assert!(
             (sol.objective - full.objective).abs() / full.objective.max(1e-9) < 1e-6,
@@ -471,7 +477,8 @@ mod tests {
         let pairs = ranking_pairs(&ds.y);
         let lambda = 1.01 * lambda_max_rank(&ds, &pairs);
         let backend = NativeBackend::new(&ds.x);
-        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &GenParams::default());
+        let sol =
+            ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &GenParams::default());
         assert_eq!(sol.support_size(), 0, "beta must be zero above lambda_max");
     }
 
@@ -482,7 +489,7 @@ mod tests {
         let lambda = 0.02 * lambda_max_rank(&ds, &pairs);
         let backend = NativeBackend::new(&ds.x);
         let params = GenParams { eps: 1e-7, ..Default::default() };
-        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &params);
+        let sol = ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params);
         // scoring function must get most pairs right (concordance)
         let mut m = vec![0.0; ds.n()];
         ds.x.matvec(&sol.beta, &mut m);
@@ -571,7 +578,8 @@ mod tests {
             let vals: Vec<f64> = support.iter().map(|&(_, v)| v).collect();
             let warm = pairwise_hinge_support(&ds, &pairs, &cols, &vals)
                 + lambda * vals.iter().map(|v| v.abs()).sum::<f64>();
-            let fresh = ranksvm_generation(&ds, &backend, &pairs, lambda, &params).objective;
+            let fresh =
+                ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params).objective;
             assert!(
                 (warm - fresh).abs() / fresh.max(1e-9) < 1e-5,
                 "λ={lambda}: warm {warm} fresh {fresh}"

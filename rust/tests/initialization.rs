@@ -1,0 +1,190 @@
+//! Engine-level tests of the §4 initialization layer: FOM-seeded cold
+//! solves must converge in no more generation rounds than
+//! screening-seeded ones while reaching the same (≤ 1e-6 relative)
+//! objective, on L1, Group and Slope instances; and the refactored
+//! Backend-based FOM paths must be bit-identical at any thread count.
+
+use cutgen::backend::NativeBackend;
+use cutgen::coordinator::group::group_column_generation;
+use cutgen::coordinator::l1svm::column_generation;
+use cutgen::coordinator::slope::slope_column_constraint_generation;
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_group, generate_l1, GroupSpec, SyntheticSpec};
+use cutgen::engine::{InitStrategy, Initializer};
+use cutgen::fom::block_cd::{block_cd, BlockCdParams};
+use cutgen::fom::fista::FistaParams;
+use cutgen::fom::objective::bh_slope_weights;
+use cutgen::rng::Xoshiro256;
+
+/// An accurate-but-cheap FISTA configuration for the seeding FOM.
+fn seed_fista() -> FistaParams {
+    FistaParams { max_iters: 500, eta: 1e-6, ..Default::default() }
+}
+
+fn assert_fom_no_worse(
+    label: &str,
+    fom_rounds: usize,
+    scr_rounds: usize,
+    fom_obj: f64,
+    scr_obj: f64,
+) {
+    assert!(
+        (fom_obj - scr_obj).abs() / scr_obj.max(1e-9) <= 1e-6,
+        "{label}: FOM-seeded objective {fom_obj} differs from screening-seeded {scr_obj}"
+    );
+    assert!(
+        fom_rounds <= scr_rounds,
+        "{label}: FOM seed needed MORE rounds ({fom_rounds}) than screening ({scr_rounds})"
+    );
+}
+
+/// L1-SVM: a FISTA seed must not need more CG rounds than the
+/// closed-form screening seed, at an identical optimum.
+#[test]
+fn l1_fom_seed_converges_in_no_more_rounds_than_screening() {
+    let spec = SyntheticSpec { n: 60, p: 120, k0: 5, rho: 0.1, standardize: true };
+    let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(401));
+    let backend = NativeBackend::new(&ds.x);
+    let lambda = 0.05 * ds.lambda_max_l1();
+    // max_cols_per_round caps expansion so the round counts measure seed
+    // quality; eps tight so both runs land on the true optimum
+    let params = GenParams { eps: 1e-8, max_cols_per_round: 5, ..Default::default() };
+
+    let scr = Initializer::new(InitStrategy::Screening, 10).seed_l1(&ds, &backend, lambda);
+    let scr_sol = column_generation(&ds, &backend, lambda, &scr.ws.cols, &params);
+    assert!(scr_sol.stats.converged);
+
+    let fom = Initializer::new(InitStrategy::Fista, 10)
+        .with_fom(seed_fista())
+        .seed_l1(&ds, &backend, lambda);
+    assert_eq!(fom.strategy, InitStrategy::Fista);
+    let fom_sol = column_generation(&ds, &backend, lambda, &fom.ws.cols, &params);
+    assert!(fom_sol.stats.converged);
+
+    assert_fom_no_worse(
+        "l1svm",
+        fom_sol.stats.rounds,
+        scr_sol.stats.rounds,
+        fom_sol.objective,
+        scr_sol.objective,
+    );
+}
+
+/// Group-SVM: a block-CD seed must not need more CG rounds than
+/// screening, at an identical optimum.
+#[test]
+fn group_fom_seed_converges_in_no_more_rounds_than_screening() {
+    let spec = GroupSpec {
+        n: 60,
+        n_groups: 15,
+        group_size: 4,
+        k0_groups: 3,
+        rho: 0.15,
+        standardize: true,
+    };
+    let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(402));
+    let ds = &gd.data;
+    let backend = NativeBackend::new(&ds.x);
+    let lambda = 0.08 * ds.lambda_max_group(&gd.groups);
+    let params = GenParams { eps: 1e-8, max_cols_per_round: 2, ..Default::default() };
+
+    let scr = Initializer::new(InitStrategy::Screening, 4).seed_group(ds, &gd.groups, lambda);
+    let scr_sol = group_column_generation(ds, &backend, &gd.groups, lambda, &scr.ws.cols, &params);
+    assert!(scr_sol.stats.converged);
+
+    let fom = Initializer::new(InitStrategy::BlockCd, 4)
+        .with_block_cd(BlockCdParams { max_sweeps: 300, tol: 1e-6, ..Default::default() })
+        .seed_group(ds, &gd.groups, lambda);
+    assert_eq!(fom.strategy, InitStrategy::BlockCd);
+    let fom_sol = group_column_generation(ds, &backend, &gd.groups, lambda, &fom.ws.cols, &params);
+    assert!(fom_sol.stats.converged);
+
+    assert_fom_no_worse(
+        "group",
+        fom_sol.stats.rounds,
+        scr_sol.stats.rounds,
+        fom_sol.objective,
+        scr_sol.objective,
+    );
+}
+
+/// Slope-SVM: a FISTA (PAVA prox) seed must not need more generation
+/// rounds than screening, at an identical optimum.
+#[test]
+fn slope_fom_seed_converges_in_no_more_rounds_than_screening() {
+    let spec = SyntheticSpec { n: 40, p: 60, k0: 5, rho: 0.1, standardize: true };
+    let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(403));
+    let backend = NativeBackend::new(&ds.x);
+    let weights = bh_slope_weights(ds.p(), 0.05 * ds.lambda_max_l1());
+    let params =
+        GenParams { eps: 1e-8, max_cols_per_round: 5, ..Default::default() };
+
+    let scr = Initializer::new(InitStrategy::Screening, 10).seed_slope(&ds, &weights);
+    let scr_sol =
+        slope_column_constraint_generation(&ds, &backend, &weights, &scr.ws.cols, &params);
+    assert!(scr_sol.stats.converged);
+
+    let fom = Initializer::new(InitStrategy::Fista, 10)
+        .with_fom(seed_fista())
+        .seed_slope(&ds, &weights);
+    let fom_sol =
+        slope_column_constraint_generation(&ds, &backend, &weights, &fom.ws.cols, &params);
+    assert!(fom_sol.stats.converged);
+
+    assert_fom_no_worse(
+        "slope",
+        fom_sol.stats.rounds,
+        scr_sol.stats.rounds,
+        fom_sol.objective,
+        scr_sol.objective,
+    );
+}
+
+/// The refactored Backend-based block CD: threads 1 vs 4 produce
+/// bit-identical coefficients, and the seeds built on top of them are
+/// identical end to end (the satellite determinism guarantee).
+#[test]
+fn refactored_fom_paths_are_thread_identical_end_to_end() {
+    let spec = GroupSpec {
+        n: 50,
+        n_groups: 12,
+        group_size: 5,
+        k0_groups: 3,
+        rho: 0.2,
+        standardize: true,
+    };
+    let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(404));
+    let backend = NativeBackend::new(&gd.data.x);
+    let lambda = 0.1 * gd.data.lambda_max_group(&gd.groups);
+
+    // block_cd on the Backend trait, serial vs chunked group gradients
+    let serial = block_cd(
+        &backend,
+        &gd.data.y,
+        &gd.groups,
+        lambda,
+        &BlockCdParams { threads: 1, ..Default::default() },
+        None,
+    );
+    let par = block_cd(
+        &backend,
+        &gd.data.y,
+        &gd.groups,
+        lambda,
+        &BlockCdParams { threads: 4, ..Default::default() },
+        None,
+    );
+    assert_eq!(serial.beta, par.beta, "block_cd must be thread-count independent");
+    assert_eq!(serial.beta0, par.beta0);
+
+    // the full seed path (screen → FOM → mass ranking) inherits it
+    let mut a = Initializer::new(InitStrategy::BlockCd, 5);
+    let mut b = a.clone();
+    a.threads = 1;
+    a.block_cd.threads = 1;
+    b.threads = 4;
+    b.block_cd.threads = 4;
+    let sa = a.seed_group(&gd.data, &gd.groups, lambda);
+    let sb = b.seed_group(&gd.data, &gd.groups, lambda);
+    assert_eq!(sa.ws, sb.ws, "group seeds must be thread-count independent");
+}

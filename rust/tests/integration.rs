@@ -308,6 +308,8 @@ fn ranksvm_engine_matches_full_pairwise_lp() {
         &backend,
         &pairs,
         lambda,
+        &[],
+        &[],
         &GenParams { eps: 1e-9, ..Default::default() },
     );
     assert!(
@@ -384,6 +386,8 @@ fn workload_parallel_pricing_identical() {
         &rbackend,
         &pairs,
         rlam,
+        &[],
+        &[],
         &GenParams { eps: 1e-7, threads: 1, ..Default::default() },
     );
     let b = ranksvm_generation(
@@ -391,6 +395,8 @@ fn workload_parallel_pricing_identical() {
         &rbackend,
         &pairs,
         rlam,
+        &[],
+        &[],
         &GenParams { eps: 1e-7, threads: 4, ..Default::default() },
     );
     assert_eq!(a.cols, b.cols);

@@ -43,7 +43,9 @@ fn assert_ok(v: &Json) {
 /// The acceptance-criteria drive: over the stdin transport, register a
 /// dataset, solve cold, re-solve a nearby λ with a cache hit, and check
 /// the warm solve uses strictly fewer generation rounds while matching
-/// the cold objective to ≤ 1e-6 relative.
+/// the cold objective to ≤ 1e-6 relative. The requests pin
+/// `"init":"screening"` so the cold round counts measure the cache, not
+/// the (default) first-order seeding.
 #[test]
 fn stdin_transport_warm_start_end_to_end() {
     let state = ServeState::new(64);
@@ -52,11 +54,11 @@ fn stdin_transport_warm_start_end_to_end() {
     let script = concat!(
         r#"{"op":"register","name":"d1","synthetic":{"kind":"l1","n":60,"p":200,"seed":7}}"#,
         "\n",
-        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.02,"eps":1e-6,"max_cols_per_round":5}"#,
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.02,"eps":1e-6,"max_cols_per_round":5,"init":"screening"}"#,
         "\n",
-        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5}"#,
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5,"init":"screening"}"#,
         "\n",
-        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5,"cache":false}"#,
+        r#"{"op":"solve","dataset":"d1","workload":"l1svm","lambda_frac":0.018,"eps":1e-6,"max_cols_per_round":5,"cache":false,"init":"screening"}"#,
         "\n",
         r#"{"op":"stats"}"#,
         "\n",
@@ -123,6 +125,16 @@ fn warm_solve_matches_cold_on_every_workload() {
         let warm = Json::parse(&state.handle_line(&req)).unwrap();
         assert_ok(&warm);
         assert!(get_bool(&warm, "warm"), "{workload}: repeat must hit the cache");
+        assert_ne!(
+            cold.get("seeded_by").unwrap().as_str(),
+            Some("cache"),
+            "{workload}: cold must report its resolved init strategy"
+        );
+        assert_eq!(
+            warm.get("seeded_by").unwrap().as_str(),
+            Some("cache"),
+            "{workload}: warm must report the cache seed"
+        );
         let co = get_f64(&cold, "objective");
         let wo = get_f64(&warm, "objective");
         assert!(
@@ -139,6 +151,79 @@ fn warm_solve_matches_cold_on_every_workload() {
             );
         }
     }
+}
+
+/// The `"init"` protocol knob: a `"fista"` cold solve must converge to
+/// the same objective as a `"screening"` cold solve of the same request
+/// (≤ 1e-6 relative) without using more generation rounds, and bad
+/// strategy values must error cleanly.
+#[test]
+fn fista_init_over_the_protocol() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":50,"p":160,"seed":13}}"#,
+    ))
+    .unwrap());
+    let req = |init: &str| {
+        format!(
+            r#"{{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"eps":1e-7,"cache":false,"init":"{init}","max_cols_per_round":5}}"#
+        )
+    };
+    let screening = Json::parse(&state.handle_line(&req("screening"))).unwrap();
+    assert_ok(&screening);
+    assert_eq!(screening.get("init").unwrap().as_str(), Some("screening"));
+    let fista = Json::parse(&state.handle_line(&req("fista"))).unwrap();
+    assert_ok(&fista);
+    assert_eq!(fista.get("init").unwrap().as_str(), Some("fista"));
+    assert_eq!(fista.get("seeded_by").unwrap().as_str(), Some("fista"));
+    assert!(get_bool(&fista, "converged"));
+    let so = get_f64(&screening, "objective");
+    let fo = get_f64(&fista, "objective");
+    assert!(
+        (so - fo).abs() / so.max(1e-9) <= 1e-6,
+        "fista-seeded {fo} vs screening-seeded {so}"
+    );
+    assert!(
+        get_usize(&fista, "rounds") <= get_usize(&screening, "rounds"),
+        "the FOM seed must not need more rounds: fista {} screening {}",
+        get_usize(&fista, "rounds"),
+        get_usize(&screening, "rounds")
+    );
+    // unknown strategies and the legacy numeric form are protocol errors
+    for bad in [
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","init":"magic"}"#,
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","init":7}"#,
+    ] {
+        let resp = Json::parse(&state.handle_line(bad)).unwrap();
+        assert!(!get_bool(&resp, "ok"), "{bad:?} should fail");
+    }
+}
+
+/// The grid endpoint must seed the warm-start cache at every visited λ:
+/// a later fixed-λ solve inside the grid's range starts warm.
+#[test]
+fn grid_seeds_the_cache_at_every_lambda() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":21}}"#,
+    ))
+    .unwrap());
+    let grid = Json::parse(&state.handle_line(
+        r#"{"op":"grid","dataset":"d","workload":"l1svm","grid":5,"ratio":0.6}"#,
+    ))
+    .unwrap();
+    assert_ok(&grid);
+    let seeded = get_usize(&grid, "cache_seeded");
+    assert!(seeded >= 4, "expected most grid points cached, got {seeded}");
+    let path = grid.get("path").unwrap().as_arr().unwrap();
+    // hit an interior grid λ exactly: the solve must come back warm
+    let lambda_mid = path[2].get("lambda").unwrap().as_f64().unwrap();
+    let solve = Json::parse(&state.handle_line(&format!(
+        r#"{{"op":"solve","dataset":"d","workload":"l1svm","lambda":{lambda_mid},"eps":1e-6}}"#
+    )))
+    .unwrap();
+    assert_ok(&solve);
+    assert!(get_bool(&solve, "warm"), "grid-visited λ must hit the cache: {solve}");
 }
 
 /// N concurrent clients must receive byte-identical responses to the
