@@ -262,13 +262,17 @@ fn main() {
     // 6. workload pricing — the two estimators added on the GenEngine.
     // Dantzig: both channels are one chunked Xᵀv through BackendPricer
     // (rows: Xᵀ(y − Xβ); cols: XᵀXμ̄ via w = Σ μ_i x_i). RankSVM: the
-    // row channel is a margin matvec + an O(|P|) pair scan.
+    // row channel compared across pair representations — the enumerated
+    // O(|P|) list scan vs the implicit O(n log n) sorted-order sweep, at
+    // the ISSUE 5 acceptance sizes n = 2·10³ and n = 2·10⁴ (the
+    // enumerated 2·10⁴ point materializes ~2·10⁸ pairs, ≈1.6 GB — the
+    // regime the implicit representation exists to retire).
     {
         use cutgen::data::synthetic::{generate_dantzig, generate_ranksvm, DantzigSpec, RankSpec};
+        use cutgen::engine::PairMode;
         use cutgen::workloads::dantzig::{initial_features, lambda_max_dantzig, RestrictedDantzig};
-        use cutgen::workloads::ranksvm::{
-            initial_pairs, initial_rank_features, lambda_max_rank, ranking_pairs, RestrictedRank,
-        };
+        use cutgen::workloads::pairset::PairSet;
+        use cutgen::workloads::ranksvm::{initial_rank_features, lambda_max_rank, RestrictedRank};
 
         let (wn, wp) = if smoke { (100, 1000) } else { (400, 8000) };
         let dspec =
@@ -290,28 +294,34 @@ fn main() {
             );
         }
 
-        let rn = if smoke { 120 } else { 400 };
-        let rp = if smoke { 500 } else { 2000 };
-        let rspec = RankSpec { n: rn, p: rp, k0: 10, rho: 0.1, noise: 0.3, standardize: true };
-        let rds = generate_ranksvm(&rspec, &mut rng);
-        let pairs = ranking_pairs(&rds.y);
-        let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
-        let mut rr = RestrictedRank::new(
-            &rds,
-            &pairs,
-            rlam,
-            &initial_pairs(pairs.len(), 10),
-            &initial_rank_features(&rds, &pairs, 10),
-        );
-        rr.solve();
-        bench(
-            &mut recs,
-            &format!("ranksvm pair scan n={rn} |P|={}", pairs.len()),
-            2.0 * pairs.len() as f64,
-            || {
-                black_box(rr.price_pairs(&rds, 1e-2));
-            },
-        );
+        let sizes: Vec<usize> = if smoke { vec![400] } else { vec![2000, 20_000] };
+        for rn in sizes {
+            let rp = 200;
+            let rspec =
+                RankSpec { n: rn, p: rp, k0: 10, rho: 0.1, noise: 0.3, standardize: true };
+            let rds = generate_ranksvm(&rspec, &mut rng);
+            for mode in [PairMode::Enumerate, PairMode::Implicit] {
+                let pairs = PairSet::build(&rds.y, mode);
+                let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
+                let mut rr = RestrictedRank::new(
+                    &rds,
+                    &pairs,
+                    rlam,
+                    &pairs.spread(10),
+                    &initial_rank_features(&rds, &pairs, 10),
+                );
+                rr.solve();
+                let flops = if pairs.is_enumerated() { 2.0 * pairs.len() as f64 } else { 0.0 };
+                bench(
+                    &mut recs,
+                    &format!("ranksvm pair-scan {} n={rn} |P|={}", pairs.mode(), pairs.len()),
+                    flops,
+                    || {
+                        black_box(rr.price_pairs(&rds, 1e-2));
+                    },
+                );
+            }
+        }
     }
 
     // 7. end-to-end column generation (small, fixed)
@@ -333,8 +343,10 @@ fn main() {
     // 8. end-to-end workload generation (small, fixed)
     {
         use cutgen::data::synthetic::{generate_dantzig, generate_ranksvm, DantzigSpec, RankSpec};
+        use cutgen::engine::PairMode;
         use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
-        use cutgen::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
+        use cutgen::workloads::pairset::PairSet;
+        use cutgen::workloads::ranksvm::{lambda_max_rank, ranksvm_generation};
 
         let dp = if smoke { 200 } else { 800 };
         let dspec = DantzigSpec { n: 60, p: dp, k0: 8, rho: 0.1, sigma: 0.5, standardize: true };
@@ -356,7 +368,7 @@ fn main() {
         let rspec = RankSpec { n: rn, p: 200, k0: 8, rho: 0.1, noise: 0.3, standardize: true };
         let rds = generate_ranksvm(&rspec, &mut rng);
         let rbe = NativeBackend::new(&rds.x);
-        let pairs = ranking_pairs(&rds.y);
+        let pairs = PairSet::build(&rds.y, PairMode::Auto);
         let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
         bench(
             &mut recs,

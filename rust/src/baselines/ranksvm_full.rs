@@ -64,16 +64,18 @@ pub fn solve_full_ranksvm(
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate_ranksvm, RankSpec};
+    use crate::engine::PairMode;
     use crate::rng::Xoshiro256;
-    use crate::workloads::ranksvm::{lambda_max_rank, pairwise_hinge_support, ranking_pairs};
+    use crate::workloads::pairset::PairSet;
+    use crate::workloads::ranksvm::{lambda_max_rank, pairwise_hinge_support};
 
     #[test]
     fn full_lp_objective_decomposes() {
         let spec = RankSpec { n: 15, p: 10, k0: 3, rho: 0.1, noise: 0.3, standardize: true };
         let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(181));
-        let pairs = ranking_pairs(&ds.y);
+        let pairs = PairSet::build(&ds.y, PairMode::Enumerate);
         let lambda = 0.1 * lambda_max_rank(&ds, &pairs);
-        let sol = solve_full_ranksvm(&ds, &pairs, lambda);
+        let sol = solve_full_ranksvm(&ds, &pairs.materialize(), lambda);
         // LP objective = pairwise hinge + λ‖β‖₁ recomputed from scratch
         let support: Vec<(usize, f64)> = sol
             .beta

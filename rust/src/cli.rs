@@ -11,6 +11,7 @@
 //! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--seed-budget K] [--threads T]
 //! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
+//!                 [--pair-mode auto|enumerate|implicit]
 //!                 [--seed-budget K] [--threads T] [--trace]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
@@ -27,7 +28,9 @@
 //! to `train --method clg|cng` and the group/slope penalties, to
 //! `path`, and to `ranksvm`/`dantzig`; the paper-method runners
 //! (`fo-clg`, `clcng`) pin their own §5 FOM configuration and ignore
-//! them.
+//! them. `--pair-mode` picks RankSVM's comparison-pair representation
+//! (`auto` enumerates small candidate sets, goes implicit — O(n log n)
+//! pricing, no O(n²) list — beyond; see `docs/ranksvm-scaling.md`).
 
 use std::collections::BTreeMap;
 
@@ -42,9 +45,10 @@ use crate::data::synthetic::{
     DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use crate::data::{libsvm, Dataset};
-use crate::engine::{InitStrategy, Initializer};
+use crate::engine::{InitStrategy, Initializer, PairMode};
 use crate::exps::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::rng::Xoshiro256;
+use crate::workloads::pairset::PairSet;
 
 /// Parsed command line: subcommand + `--key value` options.
 pub struct Args {
@@ -94,11 +98,15 @@ impl Args {
         }
     }
     /// Generation params with the shared `--eps/--threads/--trace/--init/
-    /// --seed-budget` knobs folded in.
+    /// --seed-budget/--pair-mode` knobs folded in.
     fn gen_params(&self) -> Result<GenParams> {
         let init = match self.get("init") {
             Some(s) => InitStrategy::parse(s)?,
             None => InitStrategy::Auto,
+        };
+        let pair_mode = match self.get("pair-mode") {
+            Some(s) => PairMode::parse(s)?,
+            None => PairMode::Auto,
         };
         Ok(GenParams {
             eps: self.get_f64("eps", 1e-2)?,
@@ -108,6 +116,7 @@ impl Args {
             seed_budget: self
                 .get_usize("seed-budget", crate::engine::DEFAULT_SEED_BUDGET)?
                 .max(1),
+            pair_mode,
             ..Default::default()
         })
     }
@@ -429,17 +438,18 @@ fn report_path(path: &[crate::coordinator::path::PathSolution], secs: f64) {
 
 fn ranksvm_cmd(args: &Args) -> Result<()> {
     let ds = load_or_generate_regression(args, true)?;
-    let pairs = crate::workloads::ranksvm::ranking_pairs(&ds.y);
+    let gen = args.gen_params()?;
+    let pairs = PairSet::build(&ds.y, gen.pair_mode);
     ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
     let lmax = crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
     let lambda_frac = args.get_f64("lambda-frac", 0.05)?;
     let backend = NativeBackend::new(&ds.x);
-    let gen = args.gen_params()?;
     println!(
-        "RankSVM: n={}, p={}, |P|={} pairs, λ_max={lmax:.4}, init {}",
+        "RankSVM: n={}, p={}, |P|={} pairs ({}), λ_max={lmax:.4}, init {}",
         ds.n(),
         ds.p(),
         pairs.len(),
+        pairs.mode(),
         gen.init.as_str()
     );
     if let Some(k) = args.get("grid") {
@@ -472,7 +482,9 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
             )
         }),
         "full-lp" => crate::exps::time_it(|| {
-            crate::baselines::ranksvm_full::solve_full_ranksvm(&ds, &pairs, lambda)
+            // the complete-model baseline materializes every pair by
+            // definition — small-n cross-checks only
+            crate::baselines::ranksvm_full::solve_full_ranksvm(&ds, &pairs.materialize(), lambda)
         }),
         other => bail!("unknown --method {other:?} (gen|full-lp)"),
     };
@@ -653,6 +665,19 @@ mod tests {
         main_with(a).unwrap();
         let b = args(&["ranksvm", "--synthetic", "15,20", "--grid", "3"]);
         main_with(b).unwrap();
+        // the forced implicit representation drives the same pipeline
+        let c = args(&[
+            "ranksvm",
+            "--synthetic",
+            "18,25",
+            "--lambda-frac",
+            "0.05",
+            "--pair-mode",
+            "implicit",
+        ]);
+        main_with(c).unwrap();
+        let bad = args(&["ranksvm", "--synthetic", "15,20", "--pair-mode", "magic"]);
+        assert!(main_with(bad).is_err(), "unknown pair mode must error");
     }
 
     #[test]

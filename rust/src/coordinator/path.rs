@@ -17,7 +17,8 @@ use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine, Initializer, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
 use crate::workloads::dantzig::{DantzigProblem, RestrictedDantzig};
-use crate::workloads::ranksvm::{RankProblem, RestrictedRank};
+use crate::workloads::pairset::PairSet;
+use crate::workloads::ranksvm::{pair_rows_cap, RankProblem, RestrictedRank};
 
 /// Analytic reduced-cost scores at λ_max (the rhs of eq. 10, second
 /// term): features with the largest |·| are the first to activate.
@@ -195,7 +196,7 @@ pub fn dantzig_path(
 pub fn ranksvm_path(
     ds: &Dataset,
     backend: &dyn Backend,
-    pairs: &[(usize, usize)],
+    pairs: &PairSet,
     lambdas: &[f64],
     params: &GenParams,
 ) -> Vec<PathSolution> {
@@ -205,6 +206,7 @@ pub fn ranksvm_path(
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rr = RestrictedRank::new(ds, pairs, lambdas[0], &seed.rows, &seed.cols);
     rr.set_threads(params.threads);
+    rr.set_pair_cap(pair_rows_cap(params));
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let engine = GenEngine::new(params);
     let mut stats = GenStats {
@@ -339,10 +341,11 @@ mod tests {
     #[test]
     fn ranksvm_path_matches_independent_solves() {
         use crate::data::synthetic::{generate_ranksvm, RankSpec};
-        use crate::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
+        use crate::engine::PairMode;
+        use crate::workloads::ranksvm::{lambda_max_rank, ranksvm_generation};
         let spec = RankSpec { n: 16, p: 14, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
         let d = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(113));
-        let pairs = ranking_pairs(&d.y);
+        let pairs = PairSet::build(&d.y, PairMode::Auto);
         let backend = NativeBackend::new(&d.x);
         let grid = geometric_grid(lambda_max_rank(&d, &pairs), 5, 0.5);
         let params = GenParams { eps: 1e-9, seed_budget: 8, ..Default::default() };

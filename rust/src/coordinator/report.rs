@@ -10,6 +10,7 @@
 
 use crate::data::Dataset;
 use crate::fom::objective::{hinge_loss_support, slope_norm};
+use crate::workloads::pairset::PairSet;
 use crate::workloads::ranksvm::pairwise_hinge_support;
 
 /// A solution scored against the full problem.
@@ -95,10 +96,11 @@ pub fn slope_report(
 }
 
 /// RankSVM: pairwise hinge over ALL candidate pairs plus `λ‖β‖₁` (no
-/// intercept).
+/// intercept). O(n log n) with an implicit [`PairSet`], never O(|P|)
+/// beyond the enumeration threshold.
 pub fn ranksvm_report(
     ds: &Dataset,
-    pairs: &[(usize, usize)],
+    pairs: &PairSet,
     support: &[(usize, f64)],
     lambda: f64,
 ) -> Report {

@@ -39,6 +39,7 @@ use crate::fom::fista::{fista, FistaParams, FistaResult, Penalty};
 use crate::fom::prox::soft_threshold;
 use crate::fom::screening::{correlation_screen, group_screen, top_k_by_abs};
 use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
+use crate::workloads::pairset::PairSet;
 
 /// Default seed-size budget `k` (the paper seeds with ~10 columns).
 pub const DEFAULT_SEED_BUDGET: usize = 10;
@@ -398,24 +399,34 @@ impl Initializer {
     /// cols) at `lambda`. The FOM runs FISTA on the **pairwise-difference
     /// view**: the implicit design `D` with one row `x_i − x_k` per
     /// comparison pair, all-ones targets and no intercept
-    /// ([`PairDiffBackend`] keeps every product at `O(np + |P|)`).
+    /// ([`PairDiffBackend`] streams the pairs through the
+    /// [`crate::workloads::pairset::PairSet`] sorted representation —
+    /// the O(n²) pair list is never materialized — keeping every product
+    /// at `O(np + |P|)`). The FISTA *iterates* are still Θ(|P|)-length
+    /// vectors, so past
+    /// [`crate::workloads::pairset::ENUM_PAIR_CAP`] candidate pairs the
+    /// seed falls back to the O(n log n + np) closed-form screening pick
+    /// — consistent with where the pair channel itself goes implicit.
     pub fn seed_ranksvm(
         &self,
         ds: &Dataset,
         backend: &dyn Backend,
-        pairs: &[(usize, usize)],
+        pairs: &PairSet,
         lambda: f64,
     ) -> Seed {
-        use crate::workloads::ranksvm::{initial_pairs, initial_rank_features};
+        use crate::workloads::ranksvm::initial_rank_features;
         let strat = match self.strategy {
             InitStrategy::Screening => InitStrategy::Screening,
             _ => InitStrategy::Fista,
         };
-        if strat == InitStrategy::Screening || pairs.is_empty() {
+        if strat == InitStrategy::Screening
+            || pairs.is_empty()
+            || pairs.len() > crate::workloads::pairset::ENUM_PAIR_CAP
+        {
             return Seed {
                 ws: WorkingSet {
                     cols: initial_rank_features(ds, pairs, self.budget),
-                    rows: initial_pairs(pairs.len(), self.budget),
+                    rows: pairs.spread(self.budget),
                 },
                 primal: None,
                 strategy: InitStrategy::Screening,
@@ -431,7 +442,7 @@ impl Initializer {
             return Seed {
                 ws: WorkingSet {
                     cols: initial_rank_features(ds, pairs, self.budget),
-                    rows: initial_pairs(pairs.len(), self.budget),
+                    rows: pairs.spread(self.budget),
                 },
                 primal: Some((res.beta, 0.0)),
                 strategy: InitStrategy::Screening,
@@ -439,7 +450,7 @@ impl Initializer {
         }
         // most violated pairs at the FOM point, capped
         let rows = violated_samples_capped(&pd, &ones, &res.beta, 0.0, 0.0, SEED_ROW_CAP);
-        let rows = if rows.is_empty() { initial_pairs(pairs.len(), self.budget) } else { rows };
+        let rows = if rows.is_empty() { pairs.spread(self.budget) } else { rows };
         Seed {
             ws: WorkingSet { cols, rows },
             primal: Some((res.beta, 0.0)),
@@ -565,36 +576,39 @@ pub fn fom_full(
 }
 
 /// The pairwise-difference design `D`: one row `x_i − x_k` per comparison
-/// pair `(i, k)`, never materialized. `Dβ` is one base matvec plus an
-/// O(|P|) gather; `Dᵀv` scatters the pair weights onto the samples
-/// (+winner/−loser) **once** and then runs the base `Xᵀ·` through the
-/// chunked [`par_xtv`] kernel with the configured thread count — the
-/// same dual-scatter identity RankSVM pricing uses, so the FOM and the
-/// pricer agree on cost and on bits. `supports_range_pricing` is `false`
-/// on purpose: |P| is O(n²), so re-scattering per column chunk would
-/// dominate; parallelism lives *inside* `xtv` instead, behind the single
-/// scatter.
+/// pair `(i, k)`, never materialized — pairs stream through the
+/// [`PairSet`] canonical order (the sorted representation), so even the
+/// 16-bytes-per-pair index list is never allocated. `Dβ` is one base
+/// matvec plus an O(|P|) gather; `Dᵀv` scatters the pair weights onto
+/// the samples (+winner/−loser) **once** and then runs the base `Xᵀ·`
+/// through the chunked [`par_xtv`] kernel with the configured thread
+/// count — the same dual-scatter identity RankSVM pricing uses, so the
+/// FOM and the pricer agree on cost and on bits.
+/// `supports_range_pricing` is `false` on purpose: |P| is O(n²), so
+/// re-scattering per column chunk would dominate; parallelism lives
+/// *inside* `xtv` instead, behind the single scatter.
 pub struct PairDiffBackend<'a> {
     base: &'a dyn Backend,
-    pairs: &'a [(usize, usize)],
+    pairs: &'a PairSet,
     threads: usize,
 }
 
 impl<'a> PairDiffBackend<'a> {
     /// View `base` through the comparison pairs; `threads` chunks the
     /// base matvec behind the one-time pair scatter.
-    pub fn new(base: &'a dyn Backend, pairs: &'a [(usize, usize)], threads: usize) -> Self {
+    pub fn new(base: &'a dyn Backend, pairs: &'a PairSet, threads: usize) -> Self {
         Self { base, pairs, threads: threads.max(1) }
     }
 
     fn scatter(&self, v: &[f64]) -> Vec<f64> {
         let mut s = vec![0.0; self.base.rows()];
-        for (t, &(i, k)) in self.pairs.iter().enumerate() {
-            if v[t] != 0.0 {
-                s[i] += v[t];
-                s[k] -= v[t];
+        self.pairs.for_each(|t, i, k| {
+            let vt = v[t];
+            if vt != 0.0 {
+                s[i] += vt;
+                s[k] -= vt;
             }
-        }
+        });
         s
     }
 }
@@ -609,9 +623,7 @@ impl Backend for PairDiffBackend<'_> {
     fn xb(&self, beta: &[f64], out: &mut [f64]) {
         let mut m = vec![0.0; self.base.rows()];
         self.base.xb(beta, &mut m);
-        for (o, &(i, k)) in out.iter_mut().zip(self.pairs) {
-            *o = m[i] - m[k];
-        }
+        self.pairs.for_each(|t, i, k| out[t] = m[i] - m[k]);
     }
     fn xtv(&self, v: &[f64], out: &mut [f64]) {
         // one O(|P|) scatter, then the (possibly chunked) base matvec
@@ -696,6 +708,7 @@ mod tests {
         generate_dantzig, generate_group, generate_l1, generate_ranksvm, DantzigSpec, GroupSpec,
         RankSpec, SyntheticSpec,
     };
+    use crate::engine::PairMode;
     use crate::rng::Xoshiro256;
     use crate::workloads::ranksvm::ranking_pairs;
 
@@ -796,9 +809,11 @@ mod tests {
     fn ranksvm_pairdiff_backend_matches_explicit_differences() {
         let spec = RankSpec { n: 12, p: 8, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
         let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(25));
+        let ps = PairSet::build(&ds.y, PairMode::Implicit);
         let pairs = ranking_pairs(&ds.y);
+        assert_eq!(ps.materialize(), pairs, "streaming order matches the reference");
         let base = NativeBackend::new(&ds.x);
-        let pd = PairDiffBackend::new(&base, &pairs, 1);
+        let pd = PairDiffBackend::new(&base, &ps, 1);
         assert_eq!(pd.rows(), pairs.len());
         assert_eq!(pd.cols(), ds.p());
         let beta: Vec<f64> = (0..ds.p()).map(|j| (j as f64 * 0.3).sin()).collect();
@@ -823,7 +838,7 @@ mod tests {
         }
         // chunked variant: threads live INSIDE xtv (one scatter, base
         // matvec chunked) — must be bit-identical to the serial view
-        let pd3 = PairDiffBackend::new(&base, &pairs, 3);
+        let pd3 = PairDiffBackend::new(&base, &ps, 3);
         assert!(!pd3.supports_range_pricing());
         let mut qp = vec![0.0; ds.p()];
         pd3.xtv(&v, &mut qp);
@@ -838,18 +853,25 @@ mod tests {
     fn ranksvm_fista_seed_has_no_intercept_shortcut() {
         let spec = RankSpec { n: 20, p: 25, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
         let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(26));
-        let pairs = ranking_pairs(&ds.y);
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
         let backend = NativeBackend::new(&ds.x);
         let lambda = 0.05 * crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
         let seed = Initializer::new(InitStrategy::Fista, 8)
             .seed_ranksvm(&ds, &backend, &pairs, lambda);
         assert!(!seed.ws.cols.is_empty());
         assert!(!seed.ws.rows.is_empty());
-        let (beta, beta0) = seed.primal.unwrap();
+        let (beta, beta0) = seed.primal.clone().unwrap();
         assert_eq!(beta0, 0.0, "the pairwise view fits no intercept");
         assert!(beta.iter().any(|v| *v != 0.0), "FOM must learn a ranking direction");
         let hits = seed.ws.cols.iter().filter(|&&j| j < 5).count();
         assert!(hits >= 2, "seed {:?}", seed.ws.cols);
+        // the seed must not depend on the pair-channel representation:
+        // the FOM streams the same canonical order either way
+        let implicit = PairSet::build(&ds.y, PairMode::Implicit);
+        let seed2 = Initializer::new(InitStrategy::Fista, 8)
+            .seed_ranksvm(&ds, &backend, &implicit, lambda);
+        assert_eq!(seed.ws, seed2.ws, "seed working sets must be representation-independent");
+        assert_eq!(seed.primal.unwrap().0, seed2.primal.unwrap().0);
     }
 
     #[test]

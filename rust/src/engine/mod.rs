@@ -35,7 +35,52 @@ pub mod init;
 pub use init::{InitStrategy, Initializer, Seed, DEFAULT_SEED_BUDGET};
 
 use crate::backend::{par_xtv, Backend};
+use crate::bail;
+use crate::error::Result;
 use crate::simplex::Status;
+
+/// How RankSVM's comparison-pair channel represents its O(n²) implicit
+/// candidate set (see `crate::workloads::pairset::PairSet`).
+///
+/// Pricing must be sublinear in the implicit constraint set for
+/// generation to scale (the pair *scan*, not the restricted LP, is the
+/// large-n bottleneck), so the pair channel has two interchangeable
+/// representations sharing one canonical index space: a materialized
+/// list for small candidate sets and exactness cross-checks, and a
+/// sorted-order implicit form whose pricing sweep is O(n log n).
+/// Workloads without a pair channel ignore this knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairMode {
+    /// Enumerate while the candidate set stays below
+    /// `crate::workloads::pairset::ENUM_PAIR_CAP` pairs; implicit beyond.
+    Auto,
+    /// Always materialize the pair list (tiny n, cross-checks).
+    Enumerate,
+    /// Always the implicit sorted-order representation (never allocates
+    /// the O(n²) list; pricing is O(n log n) per round).
+    Implicit,
+}
+
+impl PairMode {
+    /// Parse a knob value (`auto|enumerate|implicit`).
+    pub fn parse(name: &str) -> Result<PairMode> {
+        Ok(match name {
+            "auto" => PairMode::Auto,
+            "enumerate" => PairMode::Enumerate,
+            "implicit" => PairMode::Implicit,
+            other => bail!("unknown pair mode {other:?} (auto|enumerate|implicit)"),
+        })
+    }
+
+    /// Knob spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PairMode::Auto => "auto",
+            PairMode::Enumerate => "enumerate",
+            PairMode::Implicit => "implicit",
+        }
+    }
+}
 
 /// Shared knobs for the generation loops.
 #[derive(Clone, Debug)]
@@ -64,6 +109,9 @@ pub struct GenParams {
     /// the top-k reduced costs, FOM seeds keep the k largest surviving
     /// coefficients (default [`DEFAULT_SEED_BUDGET`]).
     pub seed_budget: usize,
+    /// Representation of RankSVM's comparison-pair channel (CLI
+    /// `--pair-mode`, serve `"pair_mode"`); other workloads ignore it.
+    pub pair_mode: PairMode,
     /// Print one line per round to stderr.
     pub trace: bool,
 }
@@ -79,6 +127,7 @@ impl Default for GenParams {
             stall_rounds: 60,
             init: InitStrategy::Auto,
             seed_budget: DEFAULT_SEED_BUDGET,
+            pair_mode: PairMode::Auto,
             trace: false,
         }
     }

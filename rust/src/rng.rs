@@ -6,6 +6,8 @@
 //! * [`SplitMix64`] — seeding / stream splitting (Steele et al., 2014).
 //! * [`Xoshiro256`] — xoshiro256++ main generator (Blackman & Vigna, 2019).
 //! * Gaussian sampling via the polar Box–Muller transform.
+//! * [`Fnv1a`] — the shared FNV-1a content-fingerprint primitive (serve
+//!   registry, `PairSet` index space).
 //!
 //! Every experiment in the repository is seeded, so runs are reproducible
 //! bit-for-bit across invocations.
@@ -139,9 +141,58 @@ impl Xoshiro256 {
     }
 }
 
+/// Incremental FNV-1a 64-bit hash — the shared content-fingerprint
+/// primitive behind the serve registry's dataset fingerprints and the
+/// `PairSet` index-space fingerprint. Deterministic and
+/// platform-independent (byte-oriented), like everything else here.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    /// Fresh hasher at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold bytes into the hash.
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_reference_values() {
+        // Public reference vectors for 64-bit FNV-1a.
+        assert_eq!(Fnv1a::new().finish(), 0xcbf2_9ce4_8422_2325, "offset basis");
+        let mut h = Fnv1a::new();
+        h.eat(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h2 = Fnv1a::default();
+        h2.eat(b"foo");
+        h2.eat(b"bar");
+        let mut h3 = Fnv1a::new();
+        h3.eat(b"foobar");
+        assert_eq!(h2.finish(), h3.finish(), "chunking must not matter");
+        assert_eq!(h3.finish(), 0x8594_4171_f739_67e8);
+    }
 
     #[test]
     fn splitmix_reference_values() {

@@ -53,11 +53,14 @@ use crate::coordinator::report::{
 };
 use crate::coordinator::slope::{RestrictedSlope, SlopeProblem};
 use crate::coordinator::{GenParams, GenStats};
-use crate::engine::{BackendPricer, GenEngine, InitStrategy, Initializer, Snapshot, WorkingSet};
+use crate::engine::{
+    BackendPricer, GenEngine, InitStrategy, Initializer, PairMode, Snapshot, WorkingSet,
+};
 use crate::error::Result;
 use crate::fom::objective::bh_slope_weights;
 use crate::workloads::dantzig::{lambda_max_dantzig, DantzigProblem, RestrictedDantzig};
-use crate::workloads::ranksvm::{lambda_max_rank, RankProblem, RestrictedRank};
+use crate::workloads::pairset::PairSet;
+use crate::workloads::ranksvm::{lambda_max_rank, pair_rows_cap, RankProblem, RestrictedRank};
 use crate::{bail, ensure, err};
 
 use cache::{CacheEntry, CacheHit, WarmCache};
@@ -174,15 +177,7 @@ impl ServeState {
         let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
         let lambda = lambda_for(&entry, workload, req, group_size)?;
-        // Group working sets are group indices, so snapshots are only
-        // compatible between requests with the same grouping: fold the
-        // group size into the cache fingerprint.
-        let fp = match workload {
-            Workload::Group => {
-                entry.fingerprint ^ (group_size as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            }
-            _ => entry.fingerprint,
-        };
+        let fp = cache_fp(&entry, workload, group_size);
 
         let hit: Option<CacheHit> = if use_cache {
             self.cache.lock().expect("cache lock").lookup(fp, workload, lambda)
@@ -247,8 +242,8 @@ impl ServeState {
             }
             Workload::Ranksvm => {
                 let ds = &entry.ds;
-                let pairs = entry.pairs();
-                ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+                let mut owned_pairs = None;
+                let pairs = pairs_for(&entry, gen.pair_mode, &mut owned_pairs)?;
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(lambda_max_rank(ds, pairs), k, ratio);
                 ranksvm_path(ds, &backend, pairs, &grid, &gen)
@@ -270,11 +265,15 @@ impl ServeState {
         // snapshot instead of starting cold.
         let mut seeded = 0usize;
         if use_cache {
+            // same key derivation as `solve`, so grid-seeded snapshots
+            // actually hit on later fixed-λ requests (grid workloads
+            // exclude Group, so the group size never applies here)
+            let fp = cache_fp(&entry, workload, 0);
             let mut cache = self.cache.lock().expect("cache lock");
             for pt in &path {
                 if !pt.ws.is_empty() {
                     cache.insert(
-                        entry.fingerprint,
+                        fp,
                         workload,
                         CacheEntry {
                             lambda: pt.lambda,
@@ -329,6 +328,62 @@ impl ServeState {
     }
 }
 
+/// Resolve a ranking request's comparison-pair set: the registry's
+/// shared Auto [`PairSet`] (built once per dataset), or a request-local
+/// one when the request forces a representation. Forcing `enumerate`
+/// past the Auto threshold is refused — one request must not allocate
+/// the O(n²) pair list inside the long-running service (an aborting
+/// allocation would take the whole daemon down, not just the request).
+fn pairs_for<'e>(
+    entry: &'e DatasetEntry,
+    mode: PairMode,
+    owned: &'e mut Option<PairSet>,
+) -> Result<&'e PairSet> {
+    let shared = entry.pairs();
+    let pairs: &PairSet = match mode {
+        PairMode::Auto => shared,
+        // honor the forced representation, but reuse the shared set
+        // when it already is one (no per-request rebuild)
+        PairMode::Implicit if !shared.is_enumerated() => shared,
+        PairMode::Implicit => {
+            owned.insert(PairSet::build(&entry.ds.y, PairMode::Implicit))
+        }
+        PairMode::Enumerate => {
+            // Auto enumerates exactly when |P| ≤ ENUM_PAIR_CAP, so a
+            // shared implicit set means the list is over the cap —
+            // refuse rather than let one request allocate the O(n²)
+            // list inside the daemon.
+            ensure!(
+                shared.is_enumerated(),
+                "pair_mode \"enumerate\" would materialize {} pairs (cap {}); \
+                 use \"auto\" or \"implicit\"",
+                shared.len(),
+                crate::workloads::pairset::ENUM_PAIR_CAP
+            );
+            shared
+        }
+    };
+    ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+    Ok(pairs)
+}
+
+/// The warm-cache key for one `(dataset, workload)` request. Group
+/// working sets are group indices, so snapshots are only compatible
+/// between requests with the same grouping: the group size folds into
+/// the fingerprint. RankSVM row snapshots address the canonical
+/// pair-index space, so the [`PairSet::fingerprint`] folds in — it is
+/// representation-independent, which is what lets snapshots written
+/// under one [`PairMode`] warm-start solves under another.
+fn cache_fp(entry: &DatasetEntry, workload: Workload, group_size: usize) -> u64 {
+    match workload {
+        Workload::Group => {
+            entry.fingerprint ^ (group_size as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        }
+        Workload::Ranksvm => entry.fingerprint ^ entry.pairs().fingerprint(),
+        _ => entry.fingerprint,
+    }
+}
+
 /// Resolve the request's λ: an absolute `"lambda"` wins, otherwise
 /// `"lambda_frac"` (default 0.05, Dantzig 0.3) times the workload's
 /// λ_max on this dataset. For Slope the resolved value is the scale λ̃
@@ -375,8 +430,27 @@ fn gen_from_req(req: &Req) -> Result<GenParams> {
         threads: req.usize_or("threads", 1)?.max(1),
         init: init_for(req)?,
         seed_budget: req.usize_or("seed_budget", crate::engine::DEFAULT_SEED_BUDGET)?.max(1),
+        pair_mode: pair_mode_for(req)?,
         ..Default::default()
     })
+}
+
+/// Parse the optional `"pair_mode"` field (default `auto`): the RankSVM
+/// pair-channel representation. `auto` uses the registry's shared
+/// [`PairSet`]; `enumerate`/`implicit` build a request-local one in the
+/// forced representation (the canonical index space — and therefore the
+/// warm-start cache — is identical either way).
+fn pair_mode_for(req: &Req) -> Result<PairMode> {
+    match req.str_opt("pair_mode") {
+        Some(s) => PairMode::parse(s),
+        None => {
+            ensure!(
+                req.0.get("pair_mode").is_none(),
+                "field \"pair_mode\" must be a string (auto|enumerate|implicit)"
+            );
+            Ok(PairMode::Auto)
+        }
+    }
 }
 
 /// Parse the optional `"init"` strategy field (default `auto`, i.e. the
@@ -565,8 +639,8 @@ fn solve_ranksvm(
     gen: &GenParams,
 ) -> Result<SolveCore> {
     let ds = &entry.ds;
-    let pairs = entry.pairs();
-    ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
+    let mut owned_pairs = None;
+    let pairs = pairs_for(entry, gen.pair_mode, &mut owned_pairs)?;
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
     let (t_init, j_init, seeded_by) = match seed {
@@ -582,6 +656,7 @@ fn solve_ranksvm(
     );
     let mut rr = RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init);
     rr.set_threads(gen.threads);
+    rr.set_pair_cap(pair_rows_cap(gen));
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let stats = GenEngine::new(gen).run(&mut prob);
     let ws = prob.export_working_set();

@@ -8,10 +8,15 @@
 //! * [`DatasetEntry::classification`] — `y` mapped to ±1 for the
 //!   hinge-loss workloads. When the labels already are ±1 (the common
 //!   case) this is the stored dataset itself, no copy;
-//! * [`DatasetEntry::pairs`] — the O(n²) RankSVM comparison-pair
-//!   enumeration, computed on the first ranking request and reused by
-//!   every later one (the enumeration is deterministic, which is what
-//!   makes cached pair-index snapshots restorable).
+//! * [`DatasetEntry::pairs`] — the RankSVM comparison-pair
+//!   [`PairSet`], computed on the first ranking request and reused by
+//!   every later one. The registry no longer caches an O(n²) pair
+//!   enumeration: the `PairSet` enumerates only below the auto
+//!   threshold and otherwise keeps the O(n) sorted-order implicit form.
+//!   Its canonical pair indexing (and [`PairSet::fingerprint`], which
+//!   keys the ranking warm-start cache) is derived deterministically
+//!   from the sorted order of `y`, which is what makes cached
+//!   pair-index snapshots restorable — under either representation.
 //!
 //! The fingerprint keys the warm-start cache: two registrations of the
 //! same matrix (even under different names) share cache entries, and
@@ -27,8 +32,10 @@ use crate::data::synthetic::{
     DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use crate::data::{libsvm, Dataset};
+use crate::engine::PairMode;
 use crate::error::{Context, Result};
 use crate::rng::Xoshiro256;
+use crate::workloads::pairset::PairSet;
 
 /// One loaded dataset plus its derived views.
 pub struct DatasetEntry {
@@ -40,8 +47,8 @@ pub struct DatasetEntry {
     pub fingerprint: u64,
     /// ±1-label view, built at most once (only when `y` is not already ±1).
     class_view: OnceLock<Dataset>,
-    /// RankSVM comparison pairs, built at most once.
-    pairs: OnceLock<Vec<(usize, usize)>>,
+    /// RankSVM comparison-pair set, built at most once.
+    pairs: OnceLock<PairSet>,
 }
 
 impl DatasetEntry {
@@ -70,10 +77,11 @@ impl DatasetEntry {
         })
     }
 
-    /// The RankSVM comparison pairs over the raw responses (computed on
-    /// first use, shared afterwards).
-    pub fn pairs(&self) -> &[(usize, usize)] {
-        self.pairs.get_or_init(|| crate::workloads::ranksvm::ranking_pairs(&self.ds.y))
+    /// The RankSVM comparison-pair set over the raw responses (computed
+    /// on first use, shared afterwards; [`PairMode::Auto`] — enumerated
+    /// below the threshold, implicit beyond).
+    pub fn pairs(&self) -> &PairSet {
+        self.pairs.get_or_init(|| PairSet::build(&self.ds.y, PairMode::Auto))
     }
 }
 
@@ -82,27 +90,19 @@ impl DatasetEntry {
 /// design — cheap (one O(nnz) pass) yet sensitive to any label edit and
 /// to any column's data changing.
 pub fn fingerprint(ds: &Dataset) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
-    };
-    eat(&(ds.n() as u64).to_le_bytes());
-    eat(&(ds.p() as u64).to_le_bytes());
-    eat(&(ds.x.nnz() as u64).to_le_bytes());
+    let mut h = crate::rng::Fnv1a::new();
+    h.eat(&(ds.n() as u64).to_le_bytes());
+    h.eat(&(ds.p() as u64).to_le_bytes());
+    h.eat(&(ds.x.nnz() as u64).to_le_bytes());
     for &v in &ds.y {
-        eat(&v.to_bits().to_le_bytes());
+        h.eat(&v.to_bits().to_le_bytes());
     }
     let mut colsums = vec![0.0; ds.p()];
     ds.x.abs_col_sums(&mut colsums);
     for v in colsums {
-        eat(&v.to_bits().to_le_bytes());
+        h.eat(&v.to_bits().to_le_bytes());
     }
-    h
+    h.finish()
 }
 
 /// The one loading path shared by the registry and the one-shot CLI:
@@ -303,6 +303,10 @@ mod tests {
         let p1 = e.pairs();
         let p2 = e.pairs();
         assert!(std::ptr::eq(p1, p2));
-        assert_eq!(p1, crate::workloads::ranksvm::ranking_pairs(&e.ds.y).as_slice());
+        assert!(p1.is_enumerated(), "tiny |P| stays enumerated under Auto");
+        assert_eq!(p1.materialize(), crate::workloads::ranksvm::ranking_pairs(&e.ds.y));
+        // the fingerprint keying the warm cache is representation-free
+        let implicit = PairSet::build(&e.ds.y, PairMode::Implicit);
+        assert_eq!(p1.fingerprint(), implicit.fingerprint());
     }
 }

@@ -9,9 +9,14 @@
 //!
 //! * [`ranksvm`] — pairwise-hinge L1 ranking: constraint generation over
 //!   the O(n²) comparison pairs, column generation over features;
+//! * [`pairset`] — RankSVM's comparison-pair abstraction: one canonical
+//!   pair-index space with an enumerated representation for small
+//!   instances and an implicit sorted-order representation whose pricing
+//!   sweep is O(n log n) (see `docs/ranksvm-scaling.md`);
 //! * [`dantzig`] — the Dantzig selector `min ‖β‖₁ s.t. ‖Xᵀ(y − Xβ)‖∞ ≤ λ`:
 //!   column-and-constraint generation over the p×p correlation system
 //!   (Mazumder, Wright & Zheng, arXiv:1908.06515).
 
 pub mod dantzig;
+pub mod pairset;
 pub mod ranksvm;

@@ -1,0 +1,926 @@
+//! The RankSVM comparison-pair abstraction: one canonical index space
+//! over `P = {(i, k) : y_i > y_k}`, two interchangeable representations.
+//!
+//! RankSVM's constraint channel lives on the O(n²) comparison pairs, and
+//! the paper's central claim — generation stays cheap because the
+//! *restricted* LP is tiny — only survives at scale if pricing is
+//! **sublinear in the implicit constraint set**. A materialized pair
+//! list makes every pricing round (and every λ_max / hinge / seeding
+//! helper) Ω(n²); this module replaces it with a [`PairSet`] built from
+//! **one O(n log n) sort of the relevance scores**:
+//!
+//! * samples are sorted by `(y ascending, index ascending)` into
+//!   `order`, with tie groups bucketed so repeated relevance levels
+//!   produce no pairs among themselves;
+//! * the losers of winner `i` are exactly the sorted prefix
+//!   `order[..below(i)]`, where `below(i)` is the number of samples with
+//!   strictly smaller relevance;
+//! * the **canonical pair index** of `(i, k)` is
+//!   `offset(i) + sorted_pos(k)` — winners ascending by sample index,
+//!   losers ascending by sorted position. Both representations share
+//!   this space, so working-set snapshots (and the serve layer's
+//!   warm-start cache) are valid under either and survive switching
+//!   between them.
+//!
+//! Operations and costs (`n` samples, `|P|` pairs, `K` the round cap):
+//!
+//! | operation | [`Enumerated`](PairSet::is_enumerated) | implicit |
+//! |---|---|---|
+//! | build | O(n log n + \|P\|) | O(n log n) |
+//! | [`PairSet::pair`] | O(1) | O(log n) |
+//! | [`PairSet::price`] | O(\|P\|) | O(n log n) |
+//! | [`PairSet::hinge`] | O(\|P\|) | O(n log n) |
+//! | [`PairSet::ones_dual`] | O(n) | O(n) |
+//! | memory | 8 bytes/pair | O(n) |
+//!
+//! The pricing sweep finds, for every winner `i`, its most violated pair
+//! `argmax_k 1 − (m_i − m_k)` — a running prefix maximum of the margins
+//! in sorted order (equivalently a prefix *minimum* of `m_i − m_k`) —
+//! and keeps the `K` most violated winner-best pairs overall. Pairs
+//! already in the working set are excluded through an O(n)-build
+//! leftmost-argmax tournament tree queried on the prefix minus the
+//! excluded positions. The per-winner scan chunks across scoped worker
+//! threads exactly like [`crate::backend::par_xtv`], and is bit-identical
+//! at any thread count. See `docs/ranksvm-scaling.md` for the full
+//! derivation and when enumeration still wins.
+
+use std::collections::HashMap;
+
+use crate::engine::PairMode;
+
+/// Above this many candidate pairs, [`PairMode::Auto`] stops
+/// materializing the list (2²¹ pairs ≈ 16 MB at 8 bytes/pair). The
+/// first-order RankSVM seed uses the same threshold: the pairwise FISTA
+/// iterates are Θ(|P|)-length vectors, so past it
+/// [`crate::engine::Initializer`] falls back to closed-form screening.
+pub const ENUM_PAIR_CAP: usize = 1 << 21;
+
+/// Default cap on violated pairs returned per pricing round when
+/// [`crate::engine::GenParams::max_rows_per_round`] is unset: the sweep
+/// surfaces at most one pair per winner, and this keeps a cold large-n
+/// solve from swallowing O(n) margin rows into the LP in one round.
+pub const DEFAULT_PAIR_ROWS_PER_ROUND: usize = 256;
+
+/// Below this many samples the pricing sweep stays serial — worker
+/// spawn/join overhead would dominate the O(n) per-winner scan (the
+/// same reasoning as `backend::PAR_MIN_WORK`).
+const PAR_MIN_SAMPLES: usize = 4096;
+
+/// `k` indices spread evenly over `0..n_items`: with `k` clamped into
+/// `[1, n_items]`, returns `j·n_items/k` for `j = 0..k` — exactly `k`
+/// strictly increasing indices whose largest gap is at most
+/// `⌈n_items/k⌉` (empty only when `n_items = 0`). The old
+/// `stride = n_items/k` walk clustered at the front, covering only the
+/// first `k·⌊n_items/k⌋` items whenever `n_items` was not a multiple
+/// of `k`.
+pub fn spread_indices(n_items: usize, k: usize) -> Vec<usize> {
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n_items).max(1);
+    (0..k).map(|j| j * n_items / k).collect()
+}
+
+/// The comparison-pair candidate set behind one canonical index space.
+///
+/// Construct with [`PairSet::build`]; the [`PairMode`] only selects the
+/// *representation* — every index-space operation returns identical
+/// results in either mode (pinned by the cross-representation tests).
+pub struct PairSet {
+    n: usize,
+    total: usize,
+    /// Sample indices sorted by `(y asc, index asc)`, NaN responses last.
+    order: Vec<u32>,
+    /// Inverse of `order`: sample index → sorted position.
+    sorted_pos: Vec<u32>,
+    /// Sample index → number of samples with strictly smaller `y`
+    /// (= start of its tie group in `order`; 0 for NaN responses, which
+    /// win and lose nothing — matching `y_i > y_k` being false for NaN).
+    below: Vec<u32>,
+    /// Sample index → end (exclusive) of its tie group in `order`
+    /// (`n` for NaN responses).
+    tie_hi: Vec<u32>,
+    /// Number of rankable (non-NaN) samples: `order[..ranked]`.
+    ranked: usize,
+    /// `offset[i]..offset[i+1]` is winner `i`'s canonical index block.
+    offset: Vec<usize>,
+    /// The materialized list (canonical order) — `Some` iff enumerated.
+    pairs: Option<Vec<(u32, u32)>>,
+}
+
+impl PairSet {
+    /// Build the pair set over relevance scores `y`. `Auto` enumerates
+    /// while `|P| ≤` [`ENUM_PAIR_CAP`] and goes implicit beyond.
+    pub fn build(y: &[f64], mode: PairMode) -> PairSet {
+        let mut ps = PairSet::scaffold(y);
+        let enumerate = match mode {
+            PairMode::Enumerate => true,
+            PairMode::Implicit => false,
+            PairMode::Auto => ps.total <= ENUM_PAIR_CAP,
+        };
+        if enumerate {
+            ps.pairs = Some(ps.enumerate_list());
+        }
+        ps
+    }
+
+    /// The sorted-order scaffold every operation runs on (no pair list).
+    /// NaN responses sort last and participate in no pair (the reference
+    /// predicate `y_i > y_k` is false whenever either side is NaN), so
+    /// garbage labels degrade to an empty candidate set instead of a
+    /// panic — the serve layer turns that into a protocol error.
+    fn scaffold(y: &[f64]) -> PairSet {
+        let n = y.len();
+        assert!(n < u32::MAX as usize, "sample count exceeds the pair index space");
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            let (ya, yb) = (y[a as usize], y[b as usize]);
+            match (ya.is_nan(), yb.is_nan()) {
+                (false, false) => ya.total_cmp(&yb).then(a.cmp(&b)),
+                (true, true) => a.cmp(&b),
+                (false, true) => std::cmp::Ordering::Less,
+                (true, false) => std::cmp::Ordering::Greater,
+            }
+        });
+        let ranked =
+            order.iter().position(|&i| y[i as usize].is_nan()).unwrap_or(n);
+        let mut below = vec![0u32; n];
+        let mut tie_hi = vec![0u32; n];
+        let mut sorted_pos = vec![0u32; n];
+        let mut s = 0usize;
+        while s < ranked {
+            let mut e = s + 1;
+            while e < ranked && y[order[e] as usize] == y[order[s] as usize] {
+                e += 1;
+            }
+            for pos in s..e {
+                let idx = order[pos] as usize;
+                below[idx] = s as u32;
+                tie_hi[idx] = e as u32;
+                sorted_pos[idx] = pos as u32;
+            }
+            s = e;
+        }
+        for pos in ranked..n {
+            let idx = order[pos] as usize;
+            below[idx] = 0;
+            tie_hi[idx] = n as u32;
+            sorted_pos[idx] = pos as u32;
+        }
+        let mut offset = Vec::with_capacity(n + 1);
+        offset.push(0usize);
+        for i in 0..n {
+            offset.push(offset[i] + below[i] as usize);
+        }
+        let total = offset[n];
+        PairSet { n, total, order, sorted_pos, below, tie_hi, ranked, offset, pairs: None }
+    }
+
+    /// The canonical pair list: winners ascending by sample index,
+    /// losers ascending by sorted position.
+    fn enumerate_list(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.total);
+        for i in 0..self.n {
+            let b = self.below[i] as usize;
+            for &k in &self.order[..b] {
+                out.push((i as u32, k));
+            }
+        }
+        out
+    }
+
+    /// Number of candidate pairs `|P|`.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    /// Whether the candidate set is empty (all responses tied).
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Number of samples `n`.
+    pub fn n_samples(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the pair list is materialized.
+    pub fn is_enumerated(&self) -> bool {
+        self.pairs.is_some()
+    }
+
+    /// Representation name for logs and bench labels.
+    pub fn mode(&self) -> &'static str {
+        if self.pairs.is_some() {
+            "enumerated"
+        } else {
+            "implicit"
+        }
+    }
+
+    /// Winner of canonical pair `t` (the `i` with
+    /// `offset[i] ≤ t < offset[i+1]`).
+    fn winner_of(&self, t: usize) -> usize {
+        debug_assert!(t < self.total, "pair index {t} out of range {}", self.total);
+        self.offset.partition_point(|&o| o <= t) - 1
+    }
+
+    /// Canonical index of the pair `(i, k)`, or `None` when
+    /// `y_i ≤ y_k` (not a candidate pair). O(1) in either
+    /// representation: `offset(i) + sorted_pos(k)` — a loser's sorted
+    /// position lies below the winner's tie-group start exactly when
+    /// its relevance is strictly smaller.
+    pub fn index_of(&self, i: usize, k: usize) -> Option<usize> {
+        if self.sorted_pos[k] < self.below[i] {
+            Some(self.offset[i] + self.sorted_pos[k] as usize)
+        } else {
+            None
+        }
+    }
+
+    /// The `(winner, loser)` sample indices of canonical pair `t`.
+    /// O(1) enumerated, O(log n) implicit.
+    pub fn pair(&self, t: usize) -> (usize, usize) {
+        if let Some(list) = &self.pairs {
+            let (i, k) = list[t];
+            return (i as usize, k as usize);
+        }
+        let i = self.winner_of(t);
+        (i, self.order[t - self.offset[i]] as usize)
+    }
+
+    /// Stream every pair as `(canonical index, winner, loser)` in
+    /// canonical order, without materializing a list. O(|P|) time,
+    /// O(1) extra memory.
+    pub fn for_each(&self, mut f: impl FnMut(usize, usize, usize)) {
+        if let Some(list) = &self.pairs {
+            for (t, &(i, k)) in list.iter().enumerate() {
+                f(t, i as usize, k as usize);
+            }
+            return;
+        }
+        let mut t = 0usize;
+        for i in 0..self.n {
+            for r in 0..self.below[i] as usize {
+                f(t, i, self.order[r] as usize);
+                t += 1;
+            }
+        }
+    }
+
+    /// Materialize the canonical pair list as `(usize, usize)` tuples —
+    /// for the independent full-LP baseline and tests only (O(|P|)
+    /// memory by definition).
+    pub fn materialize(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.total);
+        self.for_each(|_, i, k| out.push((i, k)));
+        out
+    }
+
+    /// `k` pair indices spread evenly over the canonical index space —
+    /// the β = 0 seed, where every pair is equally violated and coverage
+    /// beats scoring (see [`spread_indices`]).
+    pub fn spread(&self, k: usize) -> Vec<usize> {
+        spread_indices(self.total, k)
+    }
+
+    /// The all-ones-dual scatter `v_i = #{k : (i,k) ∈ P} − #{k : (k,i) ∈
+    /// P}` = `below(i) − above(i)`, in O(n) — the vector behind λ_max and
+    /// the initial feature scores (at β = 0 every dual is 1). Only the
+    /// `ranked` (non-NaN) samples sit above anything.
+    pub fn ones_dual(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| {
+                self.below[i] as f64
+                    - self.ranked.saturating_sub(self.tie_hi[i] as usize) as f64
+            })
+            .collect()
+    }
+
+    /// Content fingerprint of the canonical index space (FNV-1a over the
+    /// sorted order and the tie structure). Identical for both
+    /// representations of the same `y`, so warm-start snapshots keyed by
+    /// it survive switching [`PairMode`].
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::rng::Fnv1a::new();
+        h.eat(&(self.n as u64).to_le_bytes());
+        h.eat(&(self.total as u64).to_le_bytes());
+        for &p in &self.order {
+            h.eat(&p.to_le_bytes());
+        }
+        for &b in &self.below {
+            h.eat(&b.to_le_bytes());
+        }
+        h.finish()
+    }
+
+    /// Price the pair channel: for every winner `i`, the most violated
+    /// non-excluded pair `(i, k*)` (`k* = argmax_k m_k` over the sorted
+    /// prefix, leftmost on margin ties), keeping the `cap` most violated
+    /// winner-best pairs overall, ordered `(violation desc, index asc)`.
+    /// `cap = 0` keeps them all (still at most one per winner).
+    ///
+    /// `m` is the full margin vector `Xβ` (length n); `excluded` is the
+    /// current working set P′ as **sorted ascending** canonical indices.
+    /// Enumerated cost is O(|P|); implicit cost is O(n log n) with the
+    /// per-winner scan chunked over `threads` scoped workers —
+    /// bit-identical for any thread count, and identical between the two
+    /// representations (the violation arithmetic is the same expression).
+    pub fn price(
+        &self,
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        cap: usize,
+        threads: usize,
+    ) -> Vec<(usize, f64)> {
+        debug_assert_eq!(m.len(), self.n);
+        debug_assert!(
+            excluded.windows(2).all(|w| w[0] < w[1]),
+            "excluded pair indices must be sorted ascending"
+        );
+        let mut cands = match &self.pairs {
+            Some(list) => winner_best_enumerated(list, m, eps, excluded),
+            None => self.winner_best_implicit(m, eps, excluded, threads),
+        };
+        cands.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        if cap > 0 && cands.len() > cap {
+            cands.truncate(cap);
+        }
+        cands
+    }
+
+    /// The implicit winner-best scan: prefix max of margins in sorted
+    /// order for exclusion-free winners, tournament-tree interval argmax
+    /// for the (few) winners with pairs already in P′.
+    fn winner_best_implicit(
+        &self,
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        threads: usize,
+    ) -> Vec<(usize, f64)> {
+        let n = self.n;
+        if self.total == 0 {
+            return Vec::new();
+        }
+        // margins in sorted order + running prefix max (leftmost ties)
+        let mm: Vec<f64> = self.order.iter().map(|&idx| m[idx as usize]).collect();
+        let mut pmax: Vec<(f64, u32)> = Vec::with_capacity(n);
+        let mut best = (f64::NEG_INFINITY, 0u32);
+        for (pos, &v) in mm.iter().enumerate() {
+            if v > best.0 {
+                best = (v, pos as u32);
+            }
+            pmax.push(best);
+        }
+        // group the excluded pairs' loser positions by winner (sorted
+        // input ⇒ each winner's positions arrive ascending)
+        let mut excl: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &t in excluded {
+            let i = self.winner_of(t);
+            excl.entry(i).or_default().push(t - self.offset[i]);
+        }
+        let tree = if excl.is_empty() { None } else { Some(MaxTree::build(&mm)) };
+
+        let run = |lo: usize, hi: usize| -> Vec<(usize, f64)> {
+            let mut out = Vec::new();
+            for i in lo..hi {
+                let b = self.below[i] as usize;
+                if b == 0 {
+                    continue;
+                }
+                let hit = match excl.get(&i) {
+                    None => {
+                        let (val, pos) = pmax[b - 1];
+                        Some((pos as usize, val))
+                    }
+                    Some(ex) => best_excluding(tree.as_ref().expect("tree built"), b, ex),
+                };
+                if let Some((pos, val)) = hit {
+                    // the same expression the enumerated scan evaluates,
+                    // so the two representations agree bitwise
+                    let viol = 1.0 - (m[i] - val);
+                    if viol > eps {
+                        out.push((self.offset[i] + pos, viol));
+                    }
+                }
+            }
+            out
+        };
+
+        let t = threads.max(1).min(n);
+        if t <= 1 || n < PAR_MIN_SAMPLES {
+            return run(0, n);
+        }
+        let chunk = n.div_ceil(t);
+        let parts: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
+            let run = &run;
+            let mut handles = Vec::with_capacity(t);
+            for c in 0..t {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                handles.push(scope.spawn(move || run(lo, hi)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pair pricing worker panicked"))
+                .collect()
+        });
+        parts.concat()
+    }
+
+    /// Total pairwise hinge `Σ_{(i,k)∈P} max(0, 1 − (m_i − m_k))` of a
+    /// margin vector over ALL candidate pairs. Enumerated: one O(|P|)
+    /// pass. Implicit: O(n log n) — walk the tie groups in ascending
+    /// relevance, maintaining Fenwick count/sum trees over margin ranks;
+    /// each winner reads the count `c` and sum `S` of inserted (strictly
+    /// lower-relevance) margins above `m_i − 1`, contributing
+    /// `S + c·(1 − m_i)`.
+    pub fn hinge(&self, m: &[f64]) -> f64 {
+        debug_assert_eq!(m.len(), self.n);
+        if let Some(list) = &self.pairs {
+            return list
+                .iter()
+                .map(|&(i, k)| (1.0 - (m[i as usize] - m[k as usize])).max(0.0))
+                .sum();
+        }
+        let n = self.n;
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mm: Vec<f64> = self.order.iter().map(|&idx| m[idx as usize]).collect();
+        // margin ranks (ascending, ties by position)
+        let mut by_margin: Vec<u32> = (0..n as u32).collect();
+        by_margin.sort_unstable_by(|&a, &b| {
+            mm[a as usize].total_cmp(&mm[b as usize]).then(a.cmp(&b))
+        });
+        let mut rank_of = vec![0u32; n];
+        for (r, &pos) in by_margin.iter().enumerate() {
+            rank_of[pos as usize] = r as u32;
+        }
+        let sorted_margins: Vec<f64> = by_margin.iter().map(|&p| mm[p as usize]).collect();
+        // Fenwick trees indexed by DESCENDING margin rank, so "margins
+        // above a threshold" is a pure prefix sum (no cancellation).
+        let mut cnt = Fenwick::new(n);
+        let mut sum = Fenwick::new(n);
+        let mut acc = 0.0;
+        let mut s = 0usize;
+        while s < n {
+            let e = self.tie_hi[self.order[s] as usize] as usize;
+            if s > 0 {
+                for &idx in &self.order[s..e] {
+                    if self.below[idx as usize] == 0 {
+                        continue; // NaN bucket: wins nothing
+                    }
+                    let mi = m[idx as usize];
+                    let theta = mi - 1.0;
+                    // first ascending rank with margin strictly above θ
+                    let lo = sorted_margins.partition_point(|&v| v <= theta);
+                    if lo < n {
+                        let len = n - lo; // descending ranks 0..len
+                        let c = cnt.prefix(len);
+                        let sm = sum.prefix(len);
+                        acc += sm + c * (1.0 - mi);
+                    }
+                }
+            }
+            for pos in s..e {
+                let desc = n - 1 - rank_of[pos] as usize;
+                cnt.add(desc, 1.0);
+                sum.add(desc, mm[pos]);
+            }
+            s = e;
+        }
+        acc
+    }
+}
+
+/// Winner-best scan over the materialized list: the canonical order is
+/// winner-ascending, so one pass with a running per-winner best (strict
+/// `>` keeps the first — i.e. leftmost sorted position — on ties)
+/// suffices. Kept independent of the implicit sweep so the two act as
+/// cross-checks of each other.
+fn winner_best_enumerated(
+    list: &[(u32, u32)],
+    m: &[f64],
+    eps: f64,
+    excluded: &[usize],
+) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let mut ex = excluded.iter().peekable();
+    let mut cur: Option<(u32, usize, f64)> = None; // (winner, t, viol)
+    for (t, &(i, k)) in list.iter().enumerate() {
+        if ex.peek() == Some(&&t) {
+            ex.next();
+            continue;
+        }
+        let viol = 1.0 - (m[i as usize] - m[k as usize]);
+        match cur {
+            Some((w, _, bv)) if w == i => {
+                if viol > bv {
+                    cur = Some((i, t, viol));
+                }
+            }
+            Some((_, bt, bv)) => {
+                if bv > eps {
+                    out.push((bt, bv));
+                }
+                cur = Some((i, t, viol));
+            }
+            None => cur = Some((i, t, viol)),
+        }
+    }
+    if let Some((_, bt, bv)) = cur {
+        if bv > eps {
+            out.push((bt, bv));
+        }
+    }
+    out
+}
+
+/// Max over `[0, b)` minus the excluded positions `ex` (sorted
+/// ascending, all `< b`): the union of at most `|ex| + 1` intervals,
+/// each one tournament-tree query. Leftmost position on value ties.
+fn best_excluding(tree: &MaxTree, b: usize, ex: &[usize]) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    let mut lo = 0usize;
+    for &e in ex {
+        if e >= b {
+            break;
+        }
+        take_better(tree, lo, e, &mut best);
+        lo = e + 1;
+    }
+    take_better(tree, lo, b, &mut best);
+    best
+}
+
+fn take_better(tree: &MaxTree, l: usize, r: usize, best: &mut Option<(usize, f64)>) {
+    if l >= r {
+        return;
+    }
+    if let Some((val, pos)) = tree.query(l, r) {
+        let replace = match *best {
+            None => true,
+            Some((bp, bv)) => val > bv || (val == bv && pos < bp),
+        };
+        if replace {
+            *best = Some((pos, val));
+        }
+    }
+}
+
+/// A static leftmost-argmax tournament tree over a fixed f64 array
+/// (O(n) build, O(log n) range queries) — resolves the pricing sweep's
+/// per-winner best loser when some prefix positions are excluded.
+struct MaxTree {
+    size: usize,
+    val: Vec<f64>,
+    pos: Vec<u32>,
+}
+
+impl MaxTree {
+    fn build(m: &[f64]) -> MaxTree {
+        let size = m.len().next_power_of_two().max(1);
+        let mut val = vec![f64::NEG_INFINITY; 2 * size];
+        let mut pos = vec![u32::MAX; 2 * size];
+        for (i, &v) in m.iter().enumerate() {
+            val[size + i] = v;
+            pos[size + i] = i as u32;
+        }
+        for i in (1..size).rev() {
+            // `>=` keeps the left child on ties ⇒ stored pos is the
+            // leftmost argmax of the node's segment
+            if val[2 * i] >= val[2 * i + 1] {
+                val[i] = val[2 * i];
+                pos[i] = pos[2 * i];
+            } else {
+                val[i] = val[2 * i + 1];
+                pos[i] = pos[2 * i + 1];
+            }
+        }
+        MaxTree { size, val, pos }
+    }
+
+    /// `(max value, leftmost argmax)` over `[l, r)`.
+    fn query(&self, mut l: usize, mut r: usize) -> Option<(f64, usize)> {
+        if l >= r {
+            return None;
+        }
+        let mut best = (f64::NEG_INFINITY, u32::MAX);
+        l += self.size;
+        r += self.size;
+        while l < r {
+            if l & 1 == 1 {
+                best = better(best, (self.val[l], self.pos[l]));
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                best = better(best, (self.val[r], self.pos[r]));
+            }
+            l >>= 1;
+            r >>= 1;
+        }
+        Some((best.0, best.1 as usize))
+    }
+}
+
+/// Larger value wins; smaller position breaks exact ties.
+fn better(a: (f64, u32), b: (f64, u32)) -> (f64, u32) {
+    if b.0 > a.0 || (b.0 == a.0 && b.1 < a.1) {
+        b
+    } else {
+        a
+    }
+}
+
+/// A Fenwick (binary indexed) tree of f64 prefix sums — the hinge
+/// accumulator. Deterministic accumulation order regardless of callers'
+/// threading (it is only ever driven serially).
+struct Fenwick {
+    tree: Vec<f64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Fenwick {
+        Fenwick { tree: vec![0.0; n + 1] }
+    }
+
+    fn add(&mut self, i: usize, v: f64) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] += v;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum over `[0, i)`.
+    fn prefix(&self, i: usize) -> f64 {
+        let mut i = i.min(self.tree.len() - 1);
+        let mut s = 0.0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::workloads::ranksvm::ranking_pairs;
+
+    /// y with repeated levels, margins pseudo-random — the tie-heavy
+    /// instance the cross-checks run on.
+    fn tied_instance(n: usize, levels: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let y: Vec<f64> = (0..n).map(|_| (rng.uniform() * levels as f64).floor()).collect();
+        let m: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (y, m)
+    }
+
+    /// Independent brute-force winner-best pricing off the reference
+    /// enumeration.
+    fn brute_force_price(y: &[f64], m: &[f64], eps: f64, excluded: &[usize]) -> Vec<(usize, f64)> {
+        let list = ranking_pairs(y);
+        let mut best: HashMap<usize, (usize, f64)> = HashMap::new();
+        for (t, &(i, k)) in list.iter().enumerate() {
+            if excluded.binary_search(&t).is_ok() {
+                continue;
+            }
+            let viol = 1.0 - (m[i] - m[k]);
+            match best.get(&i) {
+                Some(&(_, bv)) if viol <= bv => {}
+                _ => {
+                    best.insert(i, (t, viol));
+                }
+            }
+        }
+        let mut out: Vec<(usize, f64)> =
+            best.into_values().filter(|&(_, v)| v > eps).collect();
+        out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out
+    }
+
+    #[test]
+    fn canonical_enumeration_matches_reference() {
+        for (n, levels, seed) in [(1usize, 1usize, 1u64), (17, 3, 2), (40, 7, 3), (25, 25, 4)] {
+            let (y, _) = tied_instance(n, levels, seed);
+            let e = PairSet::build(&y, PairMode::Enumerate);
+            let i = PairSet::build(&y, PairMode::Implicit);
+            let reference = ranking_pairs(&y);
+            assert_eq!(e.materialize(), reference, "enumerated list");
+            assert_eq!(i.materialize(), reference, "implicit streaming");
+            assert_eq!(e.len(), reference.len());
+            assert_eq!(i.len(), reference.len());
+            for (t, &want) in reference.iter().enumerate() {
+                assert_eq!(e.pair(t), want, "enumerated pair({t})");
+                assert_eq!(i.pair(t), want, "implicit pair({t})");
+                assert_eq!(e.index_of(want.0, want.1), Some(t), "index_of roundtrip");
+                assert_eq!(i.index_of(want.0, want.1), Some(t));
+                assert_eq!(i.index_of(want.1, want.0), None, "reversed pair is no candidate");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_switches_on_the_pair_count() {
+        let (y, _) = tied_instance(30, 5, 9);
+        assert!(PairSet::build(&y, PairMode::Auto).is_enumerated(), "small |P| enumerates");
+        assert!(!PairSet::build(&y, PairMode::Implicit).is_enumerated());
+        assert_eq!(PairSet::build(&y, PairMode::Implicit).mode(), "implicit");
+    }
+
+    #[test]
+    fn all_tied_responses_give_an_empty_set() {
+        let y = vec![2.0; 12];
+        for mode in [PairMode::Enumerate, PairMode::Implicit] {
+            let ps = PairSet::build(&y, mode);
+            assert!(ps.is_empty());
+            assert!(ps.spread(5).is_empty());
+            assert!(ps.price(&[0.0; 12], 0.0, &[], 0, 1).is_empty());
+            assert_eq!(ps.hinge(&[0.0; 12]), 0.0);
+            assert!(ps.ones_dual().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn nan_responses_join_no_pair_and_never_panic() {
+        // a NaN label (parseable from a libsvm file) must degrade
+        // gracefully — the serve layer's never-panics contract depends
+        // on it — and match the reference predicate, where y_i > y_k is
+        // false whenever either side is NaN
+        let y = [2.0, f64::NAN, 1.0, 2.0, f64::NAN, 3.0];
+        let reference = ranking_pairs(&y);
+        assert!(reference.iter().all(|&(i, k)| i != 1 && k != 1 && i != 4 && k != 4));
+        for mode in [PairMode::Enumerate, PairMode::Implicit] {
+            let ps = PairSet::build(&y, mode);
+            assert_eq!(ps.materialize(), reference, "{mode:?}");
+            assert_eq!(ps.index_of(5, 1), None, "NaN never loses");
+            assert_eq!(ps.index_of(1, 2), None, "NaN never wins");
+            let m = [0.5, -1.0, 0.25, 0.0, 2.0, -0.75];
+            let priced = ps.price(&m, f64::NEG_INFINITY, &[], 0, 1);
+            for &(t, _) in &priced {
+                let (i, k) = ps.pair(t);
+                assert!(i != 1 && i != 4 && k != 1 && k != 4);
+            }
+            // hinge over the same margins matches the reference sum
+            let want: f64 =
+                reference.iter().map(|&(i, k)| (1.0 - (m[i] - m[k])).max(0.0)).sum();
+            assert!((ps.hinge(&m) - want).abs() < 1e-12, "{mode:?} hinge");
+            // the all-ones dual only counts rankable samples
+            let mut dual = vec![0.0; y.len()];
+            for &(i, k) in &reference {
+                dual[i] += 1.0;
+                dual[k] -= 1.0;
+            }
+            assert_eq!(ps.ones_dual(), dual, "{mode:?} ones_dual");
+        }
+        // all-NaN responses: an empty candidate set, not a crash
+        let all_nan = [f64::NAN; 4];
+        assert!(PairSet::build(&all_nan, PairMode::Implicit).is_empty());
+    }
+
+    #[test]
+    fn ones_dual_matches_the_pair_scatter() {
+        let (y, _) = tied_instance(35, 6, 11);
+        let ps = PairSet::build(&y, PairMode::Implicit);
+        let mut want = vec![0.0; y.len()];
+        for (i, k) in ranking_pairs(&y) {
+            want[i] += 1.0;
+            want[k] -= 1.0;
+        }
+        assert_eq!(ps.ones_dual(), want);
+    }
+
+    #[test]
+    fn spread_indices_fill_the_budget_and_cover_the_tail() {
+        // the regression: n barely above k used to cluster at the front
+        let s = spread_indices(29, 10);
+        assert_eq!(s.len(), 10, "must return exactly k indices");
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+        assert!(*s.last().unwrap() >= 29 - 3, "tail must be covered: {s:?}");
+        for (a, b) in s.iter().zip(s.iter().skip(1)) {
+            assert!(b - a <= 3, "gap {a}..{b} exceeds ceil(29/10)");
+        }
+        assert_eq!(spread_indices(10, 4), vec![0, 2, 5, 7]);
+        assert_eq!(spread_indices(3, 10), vec![0, 1, 2], "k clamps to n");
+        assert!(spread_indices(0, 5).is_empty());
+        assert_eq!(spread_indices(7, 0), vec![0], "k clamps up to 1");
+    }
+
+    #[test]
+    fn price_agrees_across_representations_and_brute_force() {
+        for seed in [21u64, 22, 23, 24, 25] {
+            let (y, m) = tied_instance(60, 4 + (seed as usize % 5), seed);
+            let e = PairSet::build(&y, PairMode::Enumerate);
+            let i = PairSet::build(&y, PairMode::Implicit);
+            assert_eq!(e.fingerprint(), i.fingerprint());
+            if e.is_empty() {
+                continue;
+            }
+            // exclude a spread of pairs plus a dense run inside one winner
+            let mut excluded = e.spread(15);
+            excluded.extend((0..e.len().min(6)).skip(1));
+            excluded.sort_unstable();
+            excluded.dedup();
+            for eps in [0.0, 0.3] {
+                for cap in [0usize, 3, 7] {
+                    let a = e.price(&m, eps, &excluded, cap, 1);
+                    let b = i.price(&m, eps, &excluded, cap, 1);
+                    assert_eq!(a, b, "seed {seed} eps {eps} cap {cap}");
+                    if cap == 0 {
+                        let brute = brute_force_price(&y, &m, eps, &excluded);
+                        assert_eq!(a, brute, "brute force, seed {seed} eps {eps}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn price_excludes_every_working_set_pair() {
+        let (y, m) = tied_instance(30, 3, 31);
+        let ps = PairSet::build(&y, PairMode::Implicit);
+        // excluding a winner's whole block must silence that winner
+        let (w, _) = ps.pair(0);
+        let block: Vec<usize> = (ps.offset[w]..ps.offset[w + 1]).collect();
+        let priced = ps.price(&m, f64::NEG_INFINITY, &block, 0, 1);
+        for &(t, _) in &priced {
+            assert!(!block.contains(&t), "excluded pair {t} still priced");
+            assert_ne!(ps.pair(t).0, w, "silenced winner resurfaced");
+        }
+    }
+
+    #[test]
+    fn implicit_price_is_thread_independent() {
+        // n above the spawn gate so workers actually run
+        let (y, m) = tied_instance(6000, 97, 41);
+        let ps = PairSet::build(&y, PairMode::Implicit);
+        assert!(ps.n_samples() >= PAR_MIN_SAMPLES);
+        let excluded = ps.spread(48);
+        let serial = ps.price(&m, 0.0, &excluded, 0, 1);
+        assert!(!serial.is_empty());
+        for t in [2usize, 4, 7] {
+            assert_eq!(ps.price(&m, 0.0, &excluded, 0, t), serial, "{t} threads diverged");
+        }
+        // the cap keeps the most-violated prefix of the same ordering
+        let capped = ps.price(&m, 0.0, &excluded, 50, 4);
+        assert_eq!(capped.as_slice(), &serial[..50]);
+    }
+
+    #[test]
+    fn hinge_matches_the_enumerated_sum() {
+        for seed in [51u64, 52, 53] {
+            let (y, m) = tied_instance(80, 6, seed);
+            let e = PairSet::build(&y, PairMode::Enumerate);
+            let i = PairSet::build(&y, PairMode::Implicit);
+            let he = e.hinge(&m);
+            let hi = i.hinge(&m);
+            assert!(
+                (he - hi).abs() <= 1e-8 * he.abs().max(1.0),
+                "seed {seed}: enumerated {he} implicit {hi}"
+            );
+            // β = 0 ⇒ every pair contributes exactly 1
+            let zeros = vec![0.0; y.len()];
+            assert_eq!(e.hinge(&zeros), e.len() as f64);
+            assert!((i.hinge(&zeros) - i.len() as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_index_space() {
+        let (ya, _) = tied_instance(25, 4, 61);
+        let (yb, _) = tied_instance(25, 4, 62);
+        let a = PairSet::build(&ya, PairMode::Enumerate);
+        let b = PairSet::build(&yb, PairMode::Enumerate);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "different y, different print");
+        let a2 = PairSet::build(&ya, PairMode::Implicit);
+        assert_eq!(
+            a.fingerprint(),
+            a2.fingerprint(),
+            "the fingerprint is representation-independent"
+        );
+    }
+
+    #[test]
+    fn max_tree_finds_leftmost_argmax() {
+        let m = [1.0, 5.0, 5.0, 2.0, 5.0, -1.0];
+        let tree = MaxTree::build(&m);
+        assert_eq!(tree.query(0, 6), Some((5.0, 1)));
+        assert_eq!(tree.query(2, 6), Some((5.0, 2)));
+        assert_eq!(tree.query(3, 6), Some((5.0, 4)));
+        assert_eq!(tree.query(3, 4), Some((2.0, 3)));
+        assert_eq!(tree.query(3, 3), None);
+        assert_eq!(best_excluding(&tree, 6, &[1, 2]), Some((4, 5.0)));
+        assert_eq!(best_excluding(&tree, 3, &[1, 2]), Some((0, 1.0)));
+        assert_eq!(best_excluding(&tree, 1, &[0]), None);
+    }
+}

@@ -19,11 +19,13 @@ use cutgen::data::synthetic::{
     DantzigSpec, GroupSpec, RankSpec, SparseTextSpec, SyntheticSpec,
 };
 use cutgen::data::{libsvm, Dataset};
+use cutgen::engine::PairMode;
 use cutgen::fom::fista::{fista, FistaParams, Penalty};
 use cutgen::fom::objective::{bh_slope_weights, l1_objective};
 use cutgen::rng::Xoshiro256;
 use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
-use cutgen::workloads::ranksvm::{lambda_max_rank, ranking_pairs, ranksvm_generation};
+use cutgen::workloads::pairset::PairSet;
+use cutgen::workloads::ranksvm::{lambda_max_rank, ranksvm_generation};
 
 fn synth(n: usize, p: usize, seed: u64) -> Dataset {
     generate_l1(&SyntheticSpec::paper_default(n, p), &mut Xoshiro256::seed_from_u64(seed))
@@ -299,31 +301,38 @@ fn parallel_pricing_produces_identical_working_sets() {
 fn ranksvm_engine_matches_full_pairwise_lp() {
     let spec = RankSpec { n: 22, p: 25, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
     let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(61));
-    let pairs = ranking_pairs(&ds.y);
-    let lambda = 0.05 * lambda_max_rank(&ds, &pairs);
-    let full = solve_full_ranksvm(&ds, &pairs, lambda).objective;
+    let full_pairs = cutgen::workloads::ranksvm::ranking_pairs(&ds.y);
     let backend = NativeBackend::new(&ds.x);
-    let sol = ranksvm_generation(
-        &ds,
-        &backend,
-        &pairs,
-        lambda,
-        &[],
-        &[],
-        &GenParams { eps: 1e-9, ..Default::default() },
-    );
-    assert!(
-        (sol.objective - full).abs() / full.max(1e-9) <= 1e-6,
-        "engine {} full {}",
-        sol.objective,
-        full
-    );
-    assert!(
-        sol.rows.len() < pairs.len(),
-        "only {} of {} pairs should be materialized",
-        sol.rows.len(),
-        pairs.len()
-    );
+    // BOTH pair-channel representations must match the independent
+    // full pairwise LP — the implicit sweep is no approximation
+    for mode in [PairMode::Enumerate, PairMode::Implicit] {
+        let pairs = PairSet::build(&ds.y, mode);
+        let lambda = 0.05 * lambda_max_rank(&ds, &pairs);
+        let full = solve_full_ranksvm(&ds, &full_pairs, lambda).objective;
+        let sol = ranksvm_generation(
+            &ds,
+            &backend,
+            &pairs,
+            lambda,
+            &[],
+            &[],
+            &GenParams { eps: 1e-9, ..Default::default() },
+        );
+        assert!(
+            (sol.objective - full).abs() / full.max(1e-9) <= 1e-6,
+            "{}: engine {} full {}",
+            pairs.mode(),
+            sol.objective,
+            full
+        );
+        assert!(
+            sol.rows.len() < pairs.len(),
+            "{}: only {} of {} pairs should be materialized",
+            pairs.mode(),
+            sol.rows.len(),
+            pairs.len()
+        );
+    }
 }
 
 /// Dantzig selector through the engine must match the independent full
@@ -378,7 +387,7 @@ fn workload_parallel_pricing_identical() {
 
     let rspec = RankSpec { n: 25, p: 60, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
     let rds = generate_ranksvm(&rspec, &mut Xoshiro256::seed_from_u64(64));
-    let pairs = ranking_pairs(&rds.y);
+    let pairs = PairSet::build(&rds.y, PairMode::Auto);
     let rlam = 0.05 * lambda_max_rank(&rds, &pairs);
     let rbackend = NativeBackend::new(&rds.x);
     let a = ranksvm_generation(

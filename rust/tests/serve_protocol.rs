@@ -226,6 +226,58 @@ fn grid_seeds_the_cache_at_every_lambda() {
     assert!(get_bool(&solve, "warm"), "grid-visited λ must hit the cache: {solve}");
 }
 
+/// Warm-start snapshots survive the `PairSet` migration: RankSVM row
+/// snapshots address the canonical pair-index space, which is derived
+/// from the sorted relevance order and is identical for both pair
+/// representations — so a snapshot written under `"pair_mode":
+/// "enumerate"` warm-starts a `"pair_mode":"implicit"` solve (and vice
+/// versa) at the same objective without extra rounds.
+#[test]
+fn ranksvm_snapshots_survive_pair_mode_migration() {
+    let state = ServeState::new(64);
+    for (name, seed, first, second) in
+        [("ra", 17, "enumerate", "implicit"), ("rb", 18, "implicit", "enumerate")]
+    {
+        let reg = format!(
+            "{{\"op\":\"register\",\"name\":\"{name}\",\"synthetic\":\
+             {{\"kind\":\"ranksvm\",\"n\":28,\"p\":30,\"seed\":{seed}}}}}"
+        );
+        assert_ok(&Json::parse(&state.handle_line(&reg)).unwrap());
+        let req = |mode: &str| {
+            format!(
+                r#"{{"op":"solve","dataset":"{name}","workload":"ranksvm","lambda_frac":0.05,"eps":1e-7,"pair_mode":"{mode}"}}"#
+            )
+        };
+        let cold = Json::parse(&state.handle_line(&req(first))).unwrap();
+        assert_ok(&cold);
+        assert!(!get_bool(&cold, "warm"), "{name}: first solve must be cold");
+        assert!(get_usize(&cold, "working_rows") > 0, "pair channel must be exercised");
+        let warm = Json::parse(&state.handle_line(&req(second))).unwrap();
+        assert_ok(&warm);
+        assert!(
+            get_bool(&warm, "warm"),
+            "{name}: {first}→{second} snapshot must hit the cache: {warm}"
+        );
+        assert_eq!(warm.get("seeded_by").unwrap().as_str(), Some("cache"));
+        let co = get_f64(&cold, "objective");
+        let wo = get_f64(&warm, "objective");
+        assert!(
+            (wo - co).abs() / co.max(1e-9) <= 1e-6,
+            "{name}: warm {wo} vs cold {co} across representations"
+        );
+        assert!(
+            get_usize(&warm, "rounds") <= get_usize(&cold, "rounds"),
+            "{name}: the migrated snapshot must not expand the search"
+        );
+    }
+    // bad pair modes are protocol errors, not crashes
+    let bad = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"ra","workload":"ranksvm","pair_mode":"magic"}"#,
+    ))
+    .unwrap();
+    assert!(!get_bool(&bad, "ok"));
+}
+
 /// N concurrent clients must receive byte-identical responses to the
 /// same requests issued serially (cache disabled so every solve is a
 /// deterministic cold run).
