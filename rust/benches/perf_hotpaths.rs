@@ -14,10 +14,28 @@ use std::time::Instant;
 
 use cutgen::backend::{Backend, NativeBackend};
 use cutgen::data::synthetic::{generate_l1, generate_sparse_text, SparseTextSpec, SyntheticSpec};
+use cutgen::data::Design;
 use cutgen::engine::{BackendPricer, Pricer};
 use cutgen::fom::prox::prox_slope;
-use cutgen::linalg::{dot, Lu};
+use cutgen::linalg::{dot, Lu, Matrix};
 use cutgen::rng::Xoshiro256;
+
+/// Pre-tiling scalar reference `out = Aᵀv` — what `Matrix::tmatvec` was
+/// before the register-tiled row-blocked sweep; kept here so the bench
+/// can report "dense xtv tiled" against "dense xtv scalar" on the same
+/// matrix.
+fn scalar_tmatvec(m: &Matrix, v: &[f64], out: &mut [f64]) {
+    out.fill(0.0);
+    for i in 0..m.rows() {
+        let vi = v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        for (o, x) in out.iter_mut().zip(m.row(i)) {
+            *o += vi * *x;
+        }
+    }
+}
 
 /// One measured result.
 struct Record {
@@ -62,10 +80,11 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn write_json(records: &[Record], mode: &str) {
+fn write_json(records: &[Record], mode: &str, note: &str) {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"bench\": \"perf_hotpaths\",\n  \"mode\": \"{mode}\",\n"));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
     out.push_str("  \"results\": [\n");
     for (k, r) in records.iter().enumerate() {
         out.push_str(&format!(
@@ -112,6 +131,18 @@ fn main() {
     bench(&mut recs, &format!("dense xb {dn}x{dp} (margins)"), 2.0 * (dn * dp) as f64, || {
         backend.xb(black_box(&beta), black_box(&mut m));
     });
+
+    // 2a. register-tiled vs scalar dense Xᵀv on the same matrix — the
+    // tile is what `Matrix::tmatvec` now runs; the scalar loop is the
+    // pre-tiling baseline kept above for comparison.
+    if let Design::Dense(dm) = &ds.x {
+        bench(&mut recs, &format!("dense xtv tiled {dn}x{dp}"), 2.0 * (dn * dp) as f64, || {
+            dm.tmatvec(black_box(&v), black_box(&mut q));
+        });
+        bench(&mut recs, &format!("dense xtv scalar {dn}x{dp}"), 2.0 * (dn * dp) as f64, || {
+            scalar_tmatvec(black_box(dm), black_box(&v), black_box(&mut q));
+        });
+    }
 
     // 2b. serial vs parallel pricing through the engine's BackendPricer —
     // n·p = 4M (smoke: 0.4M) and 20M, the sizes the engine refactor targets.
@@ -187,7 +218,10 @@ fn main() {
         }
     }
 
-    // 3. sparse pricing
+    // 3. sparse pricing on power-law text data. The design really is
+    // CSR+CSC (generate_sparse_text builds Design::Sparse); the threaded
+    // rows are the engine's nnz-balanced chunked pricing — per-column
+    // reduction order is fixed, so any thread count is bit-identical.
     let spec = SparseTextSpec {
         n: if smoke { 2000 } else { 20_000 },
         p: if smoke { 5000 } else { 40_000 },
@@ -196,6 +230,7 @@ fn main() {
         zipf: 1.1,
     };
     let sds = generate_sparse_text(&spec, &mut rng);
+    assert!(sds.x.is_sparse(), "sparse bench section must run on a CSC/CSR design");
     let sbackend = NativeBackend::new(&sds.x);
     let sv: Vec<f64> = (0..sds.n()).map(|_| rng.uniform()).collect();
     let mut sq = vec![0.0; sds.p()];
@@ -207,18 +242,81 @@ fn main() {
             sbackend.xtv(black_box(&sv), black_box(&mut sq));
         },
     );
-    // sparse serial vs parallel pricing
     for threads in [1usize, 4] {
         let pricer = BackendPricer::new(&sbackend, threads);
         bench(
             &mut recs,
-            &format!("sparse pricing nnz={} threads={threads}", sds.x.nnz()),
+            &format!("sparse xtv nnz-balanced threads={threads} nnz={}", sds.x.nnz()),
             2.0 * sds.x.nnz() as f64,
             || {
                 pricer.score(black_box(&sv), black_box(&mut sq));
             },
         );
     }
+
+    // 3a. dense vs sparse at the same shape — the layout-speedup claim.
+    // A smaller draw so the dense twin stays reasonable (to_dense is
+    // n·p·8 bytes), and an explicit agreement check: the two layouts
+    // reduce in different orders, so they agree to ~1e-12, not bitwise.
+    let agree_note: String = {
+        let tspec = SparseTextSpec {
+            n: if smoke { 400 } else { 2000 },
+            p: if smoke { 2000 } else { 10_000 },
+            density: 0.005,
+            k0: 20,
+            zipf: 1.1,
+        };
+        let tds = generate_sparse_text(&tspec, &mut rng);
+        let (tn, tp) = (tds.n(), tds.p());
+        let dense_twin = match &tds.x {
+            Design::Sparse { csr, .. } => Design::Dense(csr.to_dense()),
+            Design::Dense(_) => unreachable!("generate_sparse_text builds a sparse design"),
+        };
+        let sb = NativeBackend::new(&tds.x);
+        let db = NativeBackend::new(&dense_twin);
+        let tv: Vec<f64> = (0..tn).map(|_| rng.uniform()).collect();
+        let mut qs = vec![0.0; tp];
+        let mut qd = vec![0.0; tp];
+        sb.xtv(&tv, &mut qs);
+        db.xtv(&tv, &mut qd);
+        let max_delta = qs
+            .iter()
+            .zip(&qd)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_delta <= 1e-12,
+            "dense and sparse xtv disagree: max |delta| = {max_delta:e}"
+        );
+        let before = recs.len();
+        bench(
+            &mut recs,
+            &format!("sparse xtv same-shape {tn}x{tp} nnz={}", tds.x.nnz()),
+            2.0 * tds.x.nnz() as f64,
+            || {
+                sb.xtv(black_box(&tv), black_box(&mut qs));
+            },
+        );
+        bench(
+            &mut recs,
+            &format!("dense xtv same-shape {tn}x{tp}"),
+            2.0 * (tn * tp) as f64,
+            || {
+                db.xtv(black_box(&tv), black_box(&mut qd));
+            },
+        );
+        let speedup = recs[before + 1].us_per_op / recs[before].us_per_op;
+        println!(
+            "    sparse is {speedup:.1}x faster than dense at {tn}x{tp} \
+             (density {:.4}, max |delta| {max_delta:.3e})",
+            tds.x.nnz() as f64 / (tn * tp) as f64
+        );
+        format!(
+            "dense and sparse xtv agree to <= 1e-12 at {tn}x{tp} \
+             (measured max |delta| = {max_delta:.3e}); sparse/dense \
+             same-shape speedup {speedup:.1}x"
+        )
+    };
 
     // 4. LU factorize + solves (the simplex basis kernel)
     for mdim in if smoke { vec![100] } else { vec![100, 400, 1000] } {
@@ -428,7 +526,7 @@ fn main() {
     }
 
     if json {
-        write_json(&recs, if smoke { "smoke" } else { "default" });
+        write_json(&recs, if smoke { "smoke" } else { "default" }, &agree_note);
     }
     println!("--- done ---");
 }

@@ -72,22 +72,73 @@ pub trait Backend: Sync {
             *o += t;
         }
     }
+    /// Estimated work of a full `xtv` pass: stored nonzeros of the
+    /// design. The default assumes a dense matrix (`rows × cols`);
+    /// sparse-aware backends override so the spawn gate in [`par_xtv`] /
+    /// [`par_col_dots`] reflects actual flops, not the dense envelope.
+    fn work_total(&self) -> usize {
+        self.rows().saturating_mul(self.cols())
+    }
+    /// Monotone cumulative work of columns `[0, j)`, the prefix the
+    /// nnz-balanced column splits binary-search. Invariants:
+    /// `work_prefix(0) == 0`, `work_prefix(cols()) == work_total()`,
+    /// nondecreasing in `j`. Defaults to `j × rows` (every dense column
+    /// costs the same); sparse backends return the CSC `indptr`.
+    fn work_prefix(&self, j: usize) -> usize {
+        j.saturating_mul(self.rows())
+    }
+    /// Work (stored nonzeros) of column `j` alone.
+    fn col_work(&self, _j: usize) -> usize {
+        self.rows()
+    }
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str {
         "unknown"
     }
 }
 
-/// Minimum estimated work (output length × rows, a flop proxy) before
+/// Minimum estimated work (stored nonzeros touched, a flop proxy) before
 /// the parallel kernels spawn workers: below this, thread spawn/join
 /// overhead dominates the matvec itself (a FISTA iteration on a small
-/// screened subproblem, or block CD's ~10-column groups).
+/// screened subproblem, or block CD's ~10-column groups). The estimate
+/// comes from [`Backend::work_total`] / [`Backend::col_work`], so a
+/// wide-but-nearly-empty sparse design no longer spawns threads for a
+/// few thousand flops the way the old `rows × cols` proxy did.
 const PAR_MIN_WORK: usize = 1 << 15;
+
+/// Column split points `b_0 = 0 ≤ … ≤ b_t = p` with approximately equal
+/// work per chunk, found by binary-searching the backend's monotone
+/// [`Backend::work_prefix`]. On power-law text data equal *column*
+/// counts leave one worker holding most of the nonzeros; equal *nnz*
+/// keeps thread scaling flat. Splits only move chunk boundaries — each
+/// column is still priced by exactly one worker with the serial
+/// accumulation order, so outputs stay bit-identical at any `t`.
+fn balanced_bounds(backend: &dyn Backend, p: usize, t: usize) -> Vec<usize> {
+    let total = backend.work_prefix(p);
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for c in 1..t {
+        let target = ((total as u128 * c as u128) / t as u128) as usize;
+        let (mut lo, mut hi) = (*bounds.last().expect("nonempty"), p);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if backend.work_prefix(mid) < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        bounds.push(lo);
+    }
+    bounds.push(p);
+    bounds
+}
 
 /// `out = Xᵀv` chunked over `threads` scoped workers — the shared kernel
 /// behind cutting-plane pricing (`engine::BackendPricer`) **and** the
 /// first-order gradients (`fom::fista`, `fom::block_cd`), so both hot
-/// paths ride the same `xtv_range` chunking.
+/// paths ride the same `xtv_range` chunking. Chunk boundaries are
+/// nnz-balanced (see [`balanced_bounds`]), not equal column counts.
 ///
 /// Determinism: every column's dot product accumulates over samples in
 /// ascending row order regardless of the chunking, so the output — and
@@ -95,48 +146,86 @@ const PAR_MIN_WORK: usize = 1 << 15;
 /// count. Falls back to a single serial `xtv` when `threads <= 1`, when
 /// the backend has no genuine range kernel (see
 /// [`Backend::supports_range_pricing`]), or when the problem is too
-/// small for worker spawn/join to pay for itself ([`PAR_MIN_WORK`]).
+/// small for worker spawn/join to pay for itself ([`PAR_MIN_WORK`],
+/// measured in stored nonzeros via [`Backend::work_total`]).
 pub fn par_xtv(backend: &dyn Backend, threads: usize, v: &[f64], out: &mut [f64]) {
     let p = out.len();
     if p == 0 {
         return;
     }
     let t = threads.max(1).min(p);
-    if t <= 1
-        || !backend.supports_range_pricing()
-        || p.saturating_mul(backend.rows()) < PAR_MIN_WORK
-    {
+    if t <= 1 || !backend.supports_range_pricing() || backend.work_total() < PAR_MIN_WORK {
         backend.xtv(v, out);
         return;
     }
-    let chunk = p.div_ceil(t);
+    let bounds = balanced_bounds(backend, p, t);
     std::thread::scope(|scope| {
-        for (c, slice) in out.chunks_mut(chunk).enumerate() {
-            scope.spawn(move || backend.xtv_range(v, c * chunk, slice));
+        let mut rest = out;
+        for c in 0..t {
+            let (j0, j1) = (bounds[c], bounds[c + 1]);
+            let (slice, tail) = rest.split_at_mut(j1 - j0);
+            rest = tail;
+            if slice.is_empty() {
+                continue;
+            }
+            scope.spawn(move || backend.xtv_range(v, j0, slice));
         }
     });
 }
 
 /// `(Xᵀv)[j]` for an arbitrary column subset, chunked over `threads`
 /// scoped workers (block CD's per-group gradient, where the group's
-/// columns need not be contiguous). Each output slot is one independent
+/// columns need not be contiguous). Chunks are balanced by the subset's
+/// per-column work ([`Backend::col_work`]) and the spawn gate uses the
+/// subset's actual nonzero count. Each output slot is one independent
 /// [`Backend::col_dot`], so the result is bit-identical for any thread
 /// count — including across the serial small-work fast path.
 pub fn par_col_dots(backend: &dyn Backend, threads: usize, cols: &[usize], v: &[f64]) -> Vec<f64> {
     let k = cols.len();
     let mut out = vec![0.0; k];
     let t = threads.max(1).min(k.max(1));
-    if t <= 1 || k.saturating_mul(backend.rows()) < PAR_MIN_WORK {
+    if t <= 1 {
         for (o, &j) in out.iter_mut().zip(cols) {
             *o = backend.col_dot(j, v);
         }
         return out;
     }
-    let chunk = k.div_ceil(t);
+    // prefix[i] = work of cols[..i]; prefix[k] both gates the spawn and
+    // is the domain of the balanced splits
+    let mut prefix = Vec::with_capacity(k + 1);
+    let mut acc = 0usize;
+    prefix.push(0usize);
+    for &j in cols {
+        acc = acc.saturating_add(backend.col_work(j));
+        prefix.push(acc);
+    }
+    if acc < PAR_MIN_WORK {
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = backend.col_dot(j, v);
+        }
+        return out;
+    }
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for c in 1..t {
+        let target = ((acc as u128 * c as u128) / t as u128) as usize;
+        bounds.push(prefix.partition_point(|&w| w < target).min(k));
+    }
+    bounds.push(k);
     std::thread::scope(|scope| {
-        for (slice_j, slice_o) in cols.chunks(chunk).zip(out.chunks_mut(chunk)) {
+        let mut rest_c = cols;
+        let mut rest_o = &mut out[..];
+        for c in 0..t {
+            let len = bounds[c + 1] - bounds[c];
+            let (slice_c, tail_c) = rest_c.split_at(len);
+            let (slice_o, tail_o) = rest_o.split_at_mut(len);
+            rest_c = tail_c;
+            rest_o = tail_o;
+            if len == 0 {
+                continue;
+            }
             scope.spawn(move || {
-                for (o, &j) in slice_o.iter_mut().zip(slice_j) {
+                for (o, &j) in slice_o.iter_mut().zip(slice_c) {
                     *o = backend.col_dot(j, v);
                 }
             });
@@ -181,6 +270,15 @@ impl Backend for NativeBackend<'_> {
     }
     fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
         self.design.col_axpy(j, alpha, out);
+    }
+    fn work_total(&self) -> usize {
+        self.design.nnz()
+    }
+    fn work_prefix(&self, j: usize) -> usize {
+        self.design.work_prefix(j)
+    }
+    fn col_work(&self, j: usize) -> usize {
+        self.design.col_nnz(j)
     }
     fn name(&self) -> &'static str {
         "native"
@@ -312,6 +410,82 @@ mod tests {
         for t in [2usize, 4, 7] {
             assert_eq!(par_col_dots(&b, t, &cols, &v), serial, "{t} threads");
         }
+    }
+
+    #[test]
+    fn balanced_bounds_follow_nnz_skew() {
+        // one dominant column (900 of 970 nonzeros): nnz-balancing must
+        // give it a chunk of its own instead of splitting columns evenly
+        let mut coo = crate::sparse::Coo::new(900, 8);
+        for i in 0..900 {
+            coo.push(i, 0, 1.0 + i as f64);
+        }
+        for j in 1..8 {
+            for k in 0..10 {
+                coo.push(k * 37 + j, j, -(j as f64));
+            }
+        }
+        let d = Design::sparse(coo.to_csr());
+        let b = NativeBackend::new(&d);
+        assert_eq!(b.work_total(), 970);
+        assert_eq!(b.work_prefix(8), b.work_total());
+        let bounds = balanced_bounds(&b, 8, 2);
+        assert_eq!(bounds, vec![0, 1, 8], "heavy column isolated: {bounds:?}");
+        // dense default prefix still splits columns evenly
+        let m = Matrix::zeros(900, 8);
+        let dd = Design::dense(m);
+        let db = NativeBackend::new(&dd);
+        assert_eq!(balanced_bounds(&db, 8, 2), vec![0, 4, 8]);
+        // degenerate t=1 covers the whole range
+        assert_eq!(balanced_bounds(&b, 8, 1), vec![0, 8]);
+    }
+
+    #[test]
+    fn sparse_par_kernels_bitwise_at_any_thread_count() {
+        use crate::data::synthetic::{generate_sparse_text, SparseTextSpec};
+        use crate::rng::Xoshiro256;
+        // power-law sparse design big enough to clear the nnz spawn gate
+        let spec = SparseTextSpec { n: 2000, p: 2000, density: 0.02, k0: 20, zipf: 1.1 };
+        let ds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(9));
+        assert!(ds.x.is_sparse());
+        assert!(ds.x.nnz() >= PAR_MIN_WORK, "nnz {} below spawn gate", ds.x.nnz());
+        let b = NativeBackend::new(&ds.x);
+        let v: Vec<f64> = (0..ds.n()).map(|i| ((i * 13 % 31) as f64 - 15.0) / 7.0).collect();
+        let mut serial = vec![0.0; ds.p()];
+        b.xtv(&v, &mut serial);
+        for t in [1usize, 2, 4, 8] {
+            let mut par = vec![0.0; ds.p()];
+            par_xtv(&b, t, &v, &mut par);
+            assert_eq!(serial, par, "sparse par_xtv diverged at {t} threads");
+        }
+        // arbitrary (non-contiguous) subset through the balanced col-dot path
+        let cols: Vec<usize> = (0..ds.p()).rev().step_by(3).collect();
+        let one = par_col_dots(&b, 1, &cols, &v);
+        for t in [2usize, 4, 7] {
+            assert_eq!(par_col_dots(&b, t, &cols, &v), one, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn tiny_nnz_wide_design_stays_under_spawn_gate() {
+        // p·rows far exceeds PAR_MIN_WORK but only 64 entries are stored:
+        // the nnz-based gate keeps this serial, and the result matches
+        let mut coo = crate::sparse::Coo::new(1024, 4096);
+        for k in 0..64 {
+            coo.push((k * 17) % 1024, (k * 131) % 4096, 1.0 + k as f64);
+        }
+        let d = Design::sparse(coo.to_csr());
+        let b = NativeBackend::new(&d);
+        assert!(b.rows() * b.cols() >= PAR_MIN_WORK);
+        assert!(b.work_total() < PAR_MIN_WORK);
+        let v: Vec<f64> = (0..1024).map(|i| (i % 5) as f64 - 2.0).collect();
+        let mut serial = vec![0.0; 4096];
+        b.xtv(&v, &mut serial);
+        let mut par = vec![0.0; 4096];
+        par_xtv(&b, 4, &v, &mut par);
+        assert_eq!(serial, par);
+        let cols: Vec<usize> = (0..4096).step_by(7).collect();
+        assert_eq!(par_col_dots(&b, 4, &cols, &v), par_col_dots(&b, 1, &cols, &v));
     }
 
     #[test]

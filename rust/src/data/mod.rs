@@ -14,7 +14,7 @@
 pub mod libsvm;
 pub mod synthetic;
 
-use crate::linalg::Matrix;
+use crate::linalg::{fmadd, Matrix};
 use crate::sparse::{Csc, Csr};
 
 /// A binary-classification dataset: features `x` (n × p) and labels
@@ -151,24 +151,14 @@ impl Design {
     ///
     /// This is the worker kernel of parallel pricing: each thread owns a
     /// contiguous feature range. Every output accumulates over samples in
-    /// ascending row order (dense: row-major sweep; sparse: CSC column
-    /// dot), so results are independent of how the range is chunked.
+    /// ascending row order (dense: register-tiled row-blocked sweep;
+    /// sparse: CSC column dot), so results are independent of how the
+    /// range is chunked.
     pub fn tmatvec_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
         assert_eq!(v.len(), self.rows());
         assert!(j0 + out.len() <= self.cols());
         match self {
-            Design::Dense(m) => {
-                out.fill(0.0);
-                for i in 0..m.rows() {
-                    let vi = v[i];
-                    if vi != 0.0 {
-                        let row = &m.row(i)[j0..j0 + out.len()];
-                        for (o, x) in out.iter_mut().zip(row) {
-                            *o += vi * x;
-                        }
-                    }
-                }
-            }
+            Design::Dense(m) => m.tmatvec_range(v, j0, out),
             Design::Sparse { csc, .. } => {
                 for (k, o) in out.iter_mut().enumerate() {
                     *o = csc.col_dot(j0 + k, v);
@@ -234,13 +224,56 @@ impl Design {
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         match self {
             Design::Dense(m) => {
-                let mut s = 0.0;
-                for i in 0..m.rows() {
-                    s += m.get(i, j) * v[i];
+                // strided gather — four independent accumulators split
+                // the FP dependency chain the stride otherwise serializes
+                let n = m.rows();
+                let chunks = n / 4;
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    s0 = fmadd(m.get(i, j), v[i], s0);
+                    s1 = fmadd(m.get(i + 1, j), v[i + 1], s1);
+                    s2 = fmadd(m.get(i + 2, j), v[i + 2], s2);
+                    s3 = fmadd(m.get(i + 3, j), v[i + 3], s3);
+                }
+                let mut s = (s0 + s1) + (s2 + s3);
+                for i in 4 * chunks..n {
+                    s = fmadd(m.get(i, j), v[i], s);
                 }
                 s
             }
             Design::Sparse { csc, .. } => csc.col_dot(j, v),
+        }
+    }
+
+    /// Stored entries in column `j` (= rows for dense).
+    pub fn col_nnz(&self, j: usize) -> usize {
+        match self {
+            Design::Dense(m) => m.rows(),
+            Design::Sparse { csc, .. } => csc.indptr[j + 1] - csc.indptr[j],
+        }
+    }
+
+    /// Monotone cumulative stored-entry count of columns `[0, j)` —
+    /// `work_prefix(0) = 0`, `work_prefix(cols()) = nnz()`. The parallel
+    /// kernels binary-search this prefix for nnz-balanced column splits
+    /// (for sparse designs it is just the CSC `indptr`).
+    pub fn work_prefix(&self, j: usize) -> usize {
+        match self {
+            Design::Dense(m) => j * m.rows(),
+            Design::Sparse { csc, .. } => csc.indptr[j],
+        }
+    }
+
+    /// Estimated resident bytes of the stored matrix: `8·n·p` dense;
+    /// values + row indices for both CSR and CSC layouts plus the two
+    /// index pointers when sparse.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Design::Dense(m) => 8 * m.rows() * m.cols(),
+            Design::Sparse { csr, csc } => {
+                16 * (csr.nnz() + csc.nnz()) + 8 * (csr.indptr.len() + csc.indptr.len())
+            }
         }
     }
 
@@ -406,6 +439,24 @@ mod tests {
             let mut none: Vec<f64> = Vec::new();
             ds.x.tmatvec_range(&v, 2, &mut none);
         }
+    }
+
+    #[test]
+    fn nnz_accounting_dense_and_sparse() {
+        let d = dense_ds();
+        let s = sparse_ds();
+        assert_eq!(d.x.col_nnz(0), 3);
+        assert_eq!(s.x.col_nnz(0), 2);
+        assert_eq!(s.x.col_nnz(1), 3);
+        for x in [&d.x, &s.x] {
+            assert_eq!(x.work_prefix(0), 0);
+            assert_eq!(x.work_prefix(x.cols()), x.nnz());
+            for j in 0..x.cols() {
+                assert_eq!(x.work_prefix(j + 1) - x.work_prefix(j), x.col_nnz(j));
+            }
+        }
+        assert_eq!(d.x.resident_bytes(), 8 * 3 * 2);
+        assert_eq!(s.x.resident_bytes(), 16 * 2 * 5 + 8 * (4 + 3));
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::error::Result;
 use crate::fom::block_cd::{block_cd, BlockCdParams};
 use crate::fom::fista::{fista, FistaParams, FistaResult, Penalty};
 use crate::fom::prox::soft_threshold;
-use crate::fom::screening::{correlation_screen, group_screen, top_k_by_abs};
+use crate::fom::screening::{correlation_screen_backend, group_screen_backend, top_k_by_abs};
 use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
 use crate::workloads::pairset::PairSet;
 
@@ -258,8 +258,14 @@ impl Initializer {
                 )
             }
             _ => {
-                // screened FISTA on the smoothed hinge (§4.4.1 + §4.3)
-                let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+                // screened FISTA on the smoothed hinge (§4.4.1 + §4.3);
+                // scoring rides the shared chunked Xᵀy kernel
+                let screen = correlation_screen_backend(
+                    backend,
+                    &ds.y,
+                    (10 * ds.n()).min(ds.p()),
+                    self.fista.threads,
+                );
                 let xx = ds.x.subset_cols(&screen);
                 let sub_backend = NativeBackend::new(&xx);
                 let res = fista(&sub_backend, &ds.y, &Penalty::L1(lambda), &self.fista, None);
@@ -302,7 +308,13 @@ impl Initializer {
         }
         // screen groups, materialize their columns, solve locally
         let keep = ds.n().max(self.budget).min(groups.len());
-        let screened = group_screen(&ds.x, &ds.y, groups, keep);
+        let screened = group_screen_backend(
+            &NativeBackend::new(&ds.x),
+            &ds.y,
+            groups,
+            keep,
+            self.fista.threads,
+        );
         let cols_flat: Vec<usize> =
             screened.iter().flat_map(|&g| groups[g].iter().copied()).collect();
         let xx = ds.x.subset_cols(&cols_flat);
@@ -370,7 +382,12 @@ impl Initializer {
                 strategy: InitStrategy::Screening,
             };
         }
-        let screen = correlation_screen(&ds.x, &ds.y, (10 * ds.n()).min(ds.p()));
+        let screen = correlation_screen_backend(
+            &NativeBackend::new(&ds.x),
+            &ds.y,
+            (10 * ds.n()).min(ds.p()),
+            self.fista.threads,
+        );
         let xx = ds.x.subset_cols(&screen);
         let sub_backend = NativeBackend::new(&xx);
         let sub_lams: Vec<f64> = weights[..screen.len()].to_vec();

@@ -15,7 +15,7 @@ use crate::data::Dataset;
 use crate::engine::{InitStrategy, Initializer};
 use crate::exps::time_it;
 use crate::fom::fista::FistaParams;
-use crate::fom::screening::correlation_screen;
+use crate::fom::screening::correlation_screen_backend;
 use crate::fom::subsample::SubsampleParams;
 use crate::rng::Xoshiro256;
 
@@ -114,7 +114,7 @@ pub fn init_clg(
         let mut rng = Xoshiro256::seed_from_u64(seed);
         rng.sample_indices(ds.p(), init_size.min(ds.p()))
     } else {
-        correlation_screen(&ds.x, &ds.y, init_size.min(ds.p()))
+        correlation_screen_backend(&backend, &ds.y, init_size.min(ds.p()), pricing_threads())
     };
     time_it(|| {
         let params = GenParams { eps, threads: pricing_threads(), ..Default::default() };

@@ -5,22 +5,50 @@
 //! (or top `n` groups) before running a first-order method, and uses the
 //! top `~n` features directly as a column-generation initializer.
 
+use crate::backend::{par_xtv, Backend, NativeBackend};
 use crate::data::Design;
 
 /// Indices of the `k` features with the largest `|x_jᵀ y|`, sorted by
-/// decreasing score.
+/// decreasing score. Thin wrapper over [`correlation_screen_backend`]
+/// with the native kernels and serial scoring (the call sites inside
+/// subsample workers must not nest thread pools).
 pub fn correlation_screen(design: &Design, y: &[f64], k: usize) -> Vec<usize> {
-    let p = design.cols();
+    correlation_screen_backend(&NativeBackend::new(design), y, k, 1)
+}
+
+/// [`correlation_screen`] on an arbitrary [`Backend`], with the score
+/// matvec `Xᵀy` running through the shared chunked [`par_xtv`] kernel —
+/// sparse designs score at O(nnz) and the ranking is bit-identical at
+/// any thread count.
+pub fn correlation_screen_backend(
+    backend: &dyn Backend,
+    y: &[f64],
+    k: usize,
+    threads: usize,
+) -> Vec<usize> {
+    let p = backend.cols();
     let mut scores = vec![0.0; p];
-    design.tmatvec(y, &mut scores);
+    par_xtv(backend, threads, y, &mut scores);
     top_k_by_abs(&scores, k.min(p))
 }
 
 /// Indices of the `k` groups with the largest `Σ_{j∈g} |x_jᵀ y|`.
 pub fn group_screen(design: &Design, y: &[f64], groups: &[Vec<usize>], k: usize) -> Vec<usize> {
-    let p = design.cols();
+    group_screen_backend(&NativeBackend::new(design), y, groups, k, 1)
+}
+
+/// [`group_screen`] on an arbitrary [`Backend`]; see
+/// [`correlation_screen_backend`].
+pub fn group_screen_backend(
+    backend: &dyn Backend,
+    y: &[f64],
+    groups: &[Vec<usize>],
+    k: usize,
+    threads: usize,
+) -> Vec<usize> {
+    let p = backend.cols();
     let mut scores = vec![0.0; p];
-    design.tmatvec(y, &mut scores);
+    par_xtv(backend, threads, y, &mut scores);
     let gscores: Vec<f64> = groups
         .iter()
         .map(|g| g.iter().map(|&j| scores[j].abs()).sum())
@@ -66,6 +94,24 @@ mod tests {
         let picked = correlation_screen(&ds.x, &ds.y, 20);
         let hits = picked.iter().filter(|&&j| j < 8).count();
         assert!(hits >= 7, "screening found only {hits}/8 informative features");
+    }
+
+    #[test]
+    fn backend_screening_is_thread_invariant() {
+        use crate::data::synthetic::{generate_sparse_text, SparseTextSpec};
+        // par_xtv is bit-identical at any thread count, so the ranking —
+        // ties broken by index — cannot move either
+        let spec = SparseTextSpec { n: 400, p: 1500, density: 0.02, k0: 10, zipf: 1.1 };
+        let ds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(73));
+        let base = correlation_screen(&ds.x, &ds.y, 50);
+        let backend = crate::backend::NativeBackend::new(&ds.x);
+        for t in [1usize, 2, 4] {
+            assert_eq!(
+                correlation_screen_backend(&backend, &ds.y, 50, t),
+                base,
+                "screening ranking moved at {t} threads"
+            );
+        }
     }
 
     #[test]

@@ -74,6 +74,8 @@ fn solve_subsample(
     let lam_scaled = lambda * n0 as f64 / n as f64;
 
     if params.screen_k > 0 && params.screen_k < p {
+        // Serial screening wrapper on purpose: this runs inside a
+        // subsample worker thread and must not nest thread pools.
         let cols = correlation_screen(&sub_x, &sub_y, params.screen_k);
         let xx = sub_x.subset_cols(&cols);
         let backend = NativeBackend::new(&xx);

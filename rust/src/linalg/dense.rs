@@ -4,7 +4,7 @@
 //! `Xβ` a streaming row·vector loop and `Xᵀv` an axpy accumulation — both
 //! single-pass over the matrix, i.e. memory-bandwidth bound.
 
-use crate::linalg::{axpy, dot};
+use crate::linalg::{axpy, dot, fmadd};
 
 /// Dense row-major `rows × cols` f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,14 +82,61 @@ impl Matrix {
         }
     }
 
-    /// `out = Xᵀ v` (length `cols`) via row-wise axpy: single streaming
-    /// pass over X, no strided access.
+    /// `out = Xᵀ v` (length `cols`): single streaming pass over X, no
+    /// strided access. Delegates to [`Matrix::tmatvec_range`] over the
+    /// full column range so the serial product and any chunked parallel
+    /// pricing of it run the identical kernel (bit-identical results).
     pub fn tmatvec(&self, v: &[f64], out: &mut [f64]) {
-        assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
+        self.tmatvec_range(v, 0, out);
+    }
+
+    /// Column-range slice of `Xᵀ v`: `out[k] = (Xᵀv)[j0 + k]`.
+    ///
+    /// Rows are processed in blocks of four with each column's partial
+    /// sum carried through the block in registers — four contiguous row
+    /// slices per iteration, which autovectorizes to wide FMAs. The
+    /// blocking spans the full row dimension whatever the column range,
+    /// and each output accumulates rows in ascending order, so chunked
+    /// parallel pricing reproduces the serial `tmatvec` bit for bit.
+    /// All-zero blocks of `v` are skipped (dual vectors are sparse);
+    /// a zero weight inside a mixed block contributes exactly 0.0, so
+    /// the skip never changes the value.
+    pub fn tmatvec_range(&self, v: &[f64], j0: usize, out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert!(j0 + out.len() <= self.cols);
         out.fill(0.0);
-        for i in 0..self.rows {
-            axpy(v[i], self.row(i), out);
+        let w = out.len();
+        if w == 0 {
+            return;
+        }
+        let blocks = self.rows / 4;
+        for blk in 0..blocks {
+            let i = 4 * blk;
+            let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let r0 = &self.data[i * self.cols + j0..i * self.cols + j0 + w];
+            let r1 = &self.data[(i + 1) * self.cols + j0..(i + 1) * self.cols + j0 + w];
+            let r2 = &self.data[(i + 2) * self.cols + j0..(i + 2) * self.cols + j0 + w];
+            let r3 = &self.data[(i + 3) * self.cols + j0..(i + 3) * self.cols + j0 + w];
+            for k in 0..w {
+                let s = fmadd(v0, r0[k], out[k]);
+                let s = fmadd(v1, r1[k], s);
+                let s = fmadd(v2, r2[k], s);
+                out[k] = fmadd(v3, r3[k], s);
+            }
+        }
+        for i in 4 * blocks..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.cols + j0..i * self.cols + j0 + w];
+            for (o, x) in out.iter_mut().zip(row) {
+                *o = fmadd(vi, *x, *o);
+            }
         }
     }
 
@@ -169,6 +216,34 @@ mod tests {
         let mut out_t = vec![0.0; 3];
         m.tmatvec(&[1.0, -1.0], &mut out_t);
         assert_eq!(out_t, vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn tmatvec_range_chunks_reassemble_bitwise() {
+        // 11 rows exercises both the 4-row blocks and the remainder, with
+        // zero weights landing inside mixed blocks; every chunking of the
+        // column range must reassemble the full product bit for bit
+        let (rows, cols) = (11, 7);
+        let mut m = Matrix::zeros(rows, cols);
+        let mut state = 1u64;
+        for i in 0..rows {
+            for j in 0..cols {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                m.set(i, j, ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5);
+            }
+        }
+        let v: Vec<f64> =
+            (0..rows).map(|i| if i % 3 == 0 { 0.0 } else { i as f64 - 4.5 }).collect();
+        let mut full = vec![0.0; cols];
+        m.tmatvec(&v, &mut full);
+        for split in 0..=cols {
+            let mut lo = vec![0.0; split];
+            let mut hi = vec![0.0; cols - split];
+            m.tmatvec_range(&v, 0, &mut lo);
+            m.tmatvec_range(&v, split, &mut hi);
+            let got: Vec<f64> = lo.into_iter().chain(hi).collect();
+            assert_eq!(got, full, "split at {split}");
+        }
     }
 
     #[test]

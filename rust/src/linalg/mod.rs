@@ -30,27 +30,51 @@ pub fn norm_inf(x: &[f64]) -> f64 {
     x.iter().fold(0.0, |m, v| m.max(v.abs()))
 }
 
+/// `acc + a·b`, fused into one rounding when the build enables the FMA
+/// target feature, plain multiply-add otherwise.
+///
+/// The fallback is deliberately *not* `f64::mul_add` — without the
+/// instruction that call emulates fused rounding in software at many
+/// times the cost. The two paths differ only in the last ulp, which is
+/// why cross-layout (dense vs CSC) agreement is specified at ≤1e-12
+/// rather than bitwise; thread-count determinism is exact either way,
+/// because chunking never changes which kernel computes a given output
+/// or its accumulation order (see docs/kernels.md).
+#[inline(always)]
+pub(crate) fn fmadd(a: f64, b: f64, acc: f64) -> f64 {
+    #[cfg(target_feature = "fma")]
+    {
+        a.mul_add(b, acc)
+    }
+    #[cfg(not(target_feature = "fma"))]
+    {
+        acc + a * b
+    }
+}
+
 /// Dot product.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than the naive loop
-    // at the sizes the simplex uses, and deterministic.
+    // Eight independent accumulators: the serial FP dependency chain is
+    // what limits the naive loop, and eight lanes let the autovectorizer
+    // keep two 4-wide vector accumulators in flight. Lane assignment and
+    // the final reduction order are fixed for a given length, so the
+    // result is deterministic.
     let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let chunks = n / 8;
+    let mut s = [0.0f64; 8];
     for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+        let i = 8 * k;
+        for (l, sl) in s.iter_mut().enumerate() {
+            *sl = fmadd(a[i + l], b[i + l], *sl);
+        }
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
+    let mut acc = ((s[0] + s[4]) + (s[1] + s[5])) + ((s[2] + s[6]) + (s[3] + s[7]));
+    for i in 8 * chunks..n {
+        acc = fmadd(a[i], b[i], acc);
     }
-    s
+    acc
 }
 
 /// `y += alpha * x`.

@@ -314,7 +314,30 @@ impl ServeState {
 
     fn stats_response(&self) -> Json {
         let cache = self.cache.lock().expect("cache lock");
-        let datasets: Vec<Json> = self.registry.names().into_iter().map(Json::from).collect();
+        // One object per dataset: shape, stored nonzeros, density, and
+        // the estimated resident bytes of the design (dense buffer, or
+        // both CSR+CSC copies for sparse) — enough to see from outside
+        // whether a dataset is riding the sparse kernels and what it
+        // costs to keep resident.
+        let datasets: Vec<Json> = self
+            .registry
+            .names()
+            .into_iter()
+            .filter_map(|name| self.registry.get(&name))
+            .map(|entry| {
+                let x = &entry.ds.x;
+                let cells = (entry.ds.n() * entry.ds.p()).max(1);
+                Json::obj(vec![
+                    kv("name", entry.name.clone()),
+                    kv("n", entry.ds.n()),
+                    kv("p", entry.ds.p()),
+                    kv("nnz", x.nnz()),
+                    kv("density", x.nnz() as f64 / cells as f64),
+                    kv("sparse", x.is_sparse()),
+                    kv("resident_bytes", x.resident_bytes()),
+                ])
+            })
+            .collect();
         ok_response(
             "stats",
             vec![

@@ -867,8 +867,10 @@ impl SimplexSolver {
     }
 
     /// Fill `alpha[j] = a_jᵀρ` for every structural column eligible to
-    /// enter (0.0 for basic or fixed columns), chunking the column range
-    /// across `std::thread::scope` workers when [`SimplexSolver::set_threads`]
+    /// enter (0.0 for basic or fixed columns), with each dot running the
+    /// register-tiled gather kernel of `Column::dot_dense` and the column
+    /// range chunked across `std::thread::scope` workers when
+    /// [`SimplexSolver::set_threads`]
     /// is above 1 and the model clears [`PAR_PRICE_MIN_COLS`] — the same
     /// chunked-range pattern `engine::BackendPricer` uses for `Xᵀv`. Each
     /// α_j is produced by exactly one worker with the serial accumulation

@@ -230,6 +230,16 @@ impl Csc {
     }
 
     /// Dot of column `j` with a dense vector of length `rows`.
+    ///
+    /// Deliberately a single-accumulator ascending-row loop, and it must
+    /// stay one: the serial sparse `Xᵀv` is the CSR scatter
+    /// ([`Csr::tmatvec`]), which also feeds each output column its
+    /// contributions one at a time in ascending row order. Keeping both
+    /// reduction orders identical is what makes chunked parallel pricing
+    /// (CSC range dots) bit-identical to the serial product at any
+    /// thread count — a multi-accumulator tile here would trade that
+    /// contract for a few percent on a gather-bound loop. See
+    /// docs/kernels.md.
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         let (idx, val) = self.col(j);
         let mut s = 0.0;

@@ -296,6 +296,10 @@ impl<'p> RestrictedRank<'p> {
     /// [`PairSet::price`] winner-best sweep (O(n log n) implicit,
     /// O(|P|) enumerated) — returns `(t, 1 − (m_i − m_k))` for the
     /// cap's worth of most violated pairs `t ∉ P′`.
+    ///
+    /// On sparse designs the margin matvec rides `Design::matvec_cols`
+    /// (CSC `col_axpy` over the support), so the whole pair-pricing
+    /// round costs O(Σ_{j∈supp(β)} nnz_j + n log n) — no dense pass.
     pub fn price_pairs(&self, ds: &Dataset, eps: f64) -> Vec<(usize, f64)> {
         let support = self.beta_support();
         let cols: Vec<usize> = support.iter().map(|&(j, _)| j).collect();

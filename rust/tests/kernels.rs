@@ -1,0 +1,195 @@
+//! Cross-layout kernel contracts: the dense (register-tiled) and sparse
+//! (CSR/CSC) implementations of every Backend kernel must agree to
+//! 1e-12 on the same matrix, and the chunked sparse pricing must be
+//! bit-identical at any thread count. See docs/kernels.md for why the
+//! cross-layout bound is a tolerance while the thread bound is exact.
+
+use cutgen::backend::{par_col_dots, par_xtv, Backend, NativeBackend};
+use cutgen::data::synthetic::{generate_sparse_text, SparseTextSpec};
+use cutgen::data::{Dataset, Design};
+use cutgen::rng::Xoshiro256;
+use cutgen::sparse::Coo;
+
+const TOL: f64 = 1e-12;
+
+/// Rebuild the same matrix in the other layout.
+fn dense_twin(x: &Design) -> Design {
+    match x {
+        Design::Sparse { csr, .. } => Design::Dense(csr.to_dense()),
+        Design::Dense(_) => panic!("expected a sparse design"),
+    }
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Assert every Backend kernel agrees across the two layouts of the
+/// same matrix: `xtv`, `xtv_range` at several splits, `xb`, `col_dot`
+/// on every column, and `col_axpy`.
+fn assert_layouts_agree(sparse: &Design, label: &str) {
+    let dense = dense_twin(sparse);
+    let (n, p) = (sparse.rows(), sparse.cols());
+    let sb = NativeBackend::new(sparse);
+    let db = NativeBackend::new(&dense);
+    assert!(sb.supports_range_pricing(), "{label}: sparse backend must support range pricing");
+
+    let mut rng = Xoshiro256::seed_from_u64(0xC0FFEE);
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 0.1).collect();
+
+    // xtv
+    let mut qs = vec![0.0; p];
+    let mut qd = vec![0.0; p];
+    sb.xtv(&v, &mut qs);
+    db.xtv(&v, &mut qd);
+    assert!(max_abs_diff(&qs, &qd) <= TOL, "{label}: xtv disagrees across layouts");
+
+    // xtv_range at a handful of splits, reassembled
+    for j0 in [0, 1, p / 3, p / 2, p.saturating_sub(1)] {
+        let w = p - j0;
+        let mut rs = vec![0.0; w];
+        let mut rd = vec![0.0; w];
+        sb.xtv_range(&v, j0, &mut rs);
+        db.xtv_range(&v, j0, &mut rd);
+        assert!(
+            max_abs_diff(&rs, &rd) <= TOL,
+            "{label}: xtv_range(j0={j0}) disagrees across layouts"
+        );
+        assert!(
+            max_abs_diff(&rs, &qs[j0..]) <= TOL,
+            "{label}: sparse xtv_range(j0={j0}) disagrees with full xtv"
+        );
+    }
+
+    // xb
+    let mut ms = vec![0.0; n];
+    let mut md = vec![0.0; n];
+    sb.xb(&beta, &mut ms);
+    db.xb(&beta, &mut md);
+    assert!(max_abs_diff(&ms, &md) <= TOL, "{label}: xb disagrees across layouts");
+
+    // col_dot on every column (empty columns must give exactly 0 both ways)
+    for j in 0..p {
+        let (a, b) = (sb.col_dot(j, &v), db.col_dot(j, &v));
+        assert!((a - b).abs() <= TOL, "{label}: col_dot({j}) disagrees: {a} vs {b}");
+    }
+
+    // col_axpy scattered into the same accumulator
+    let mut outs = vec![0.0; n];
+    let mut outd = vec![0.0; n];
+    for j in (0..p).step_by((p / 7).max(1)) {
+        sb.col_axpy(j, 0.5 + j as f64 * 1e-3, &mut outs);
+        db.col_axpy(j, 0.5 + j as f64 * 1e-3, &mut outd);
+    }
+    assert!(max_abs_diff(&outs, &outd) <= TOL, "{label}: col_axpy disagrees across layouts");
+}
+
+/// Random power-law text design — the Table 3 regime.
+#[test]
+fn kernels_agree_on_power_law_design() {
+    let spec = SparseTextSpec { n: 300, p: 900, density: 0.02, k0: 10, zipf: 1.1 };
+    let ds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(11));
+    assert!(ds.x.is_sparse());
+    assert_layouts_agree(&ds.x, "power-law");
+}
+
+/// Adversarial: empty columns, empty rows, and a dense-ish stripe.
+#[test]
+fn kernels_agree_with_empty_columns_and_rows() {
+    let (n, p) = (40, 60);
+    let mut coo = Coo::new(n, p);
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    for j in 0..p {
+        // every third column left completely empty
+        if j % 3 == 2 {
+            continue;
+        }
+        // rows 10..20 never touched (empty rows in CSR)
+        for i in (0..n).filter(|&i| !(10..20).contains(&i)).step_by(1 + j % 5) {
+            coo.push(i, j, rng.normal());
+        }
+    }
+    assert_layouts_agree(&Design::sparse(coo.to_csr()), "empty-cols-rows");
+}
+
+/// Adversarial: exactly one stored entry per (non-empty) column.
+#[test]
+fn kernels_agree_on_single_nnz_columns() {
+    let (n, p) = (50, 80);
+    let mut coo = Coo::new(n, p);
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    for j in 0..p {
+        if j % 7 == 6 {
+            continue; // a few empty columns among the singletons
+        }
+        coo.push((j * 13) % n, j, rng.normal() * 2.0);
+    }
+    assert_layouts_agree(&Design::sparse(coo.to_csr()), "single-nnz");
+}
+
+/// The determinism contract: nnz-balanced chunked sparse pricing is
+/// *bitwise* identical across thread counts (not merely within 1e-12).
+/// The spec keeps nnz above the PAR_MIN_WORK spawn gate so the threaded
+/// path really runs.
+#[test]
+fn sparse_pricing_thread_counts_bit_identical() {
+    let spec = SparseTextSpec { n: 2000, p: 2000, density: 0.02, k0: 20, zipf: 1.1 };
+    let ds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(31));
+    assert!(ds.x.nnz() >= 1 << 15, "spec must exceed the spawn gate (nnz = {})", ds.x.nnz());
+    let backend = NativeBackend::new(&ds.x);
+    let mut rng = Xoshiro256::seed_from_u64(32);
+    let v: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
+
+    let mut base = vec![0.0; ds.p()];
+    par_xtv(&backend, 1, &v, &mut base);
+    for t in [2usize, 4] {
+        let mut out = vec![0.0; ds.p()];
+        par_xtv(&backend, t, &v, &mut out);
+        assert_eq!(base, out, "par_xtv not bit-identical at {t} threads");
+    }
+
+    let cols: Vec<usize> = (0..ds.p()).step_by(2).collect();
+    let serial = par_col_dots(&backend, 1, &cols, &v);
+    for t in [2usize, 4] {
+        assert_eq!(
+            serial,
+            par_col_dots(&backend, t, &cols, &v),
+            "par_col_dots not bit-identical at {t} threads"
+        );
+    }
+}
+
+/// End-to-end: column generation run on the sparse design and on its
+/// dense twin selects the same support and reaches the same objective.
+#[test]
+fn engine_working_set_identical_dense_vs_sparse() {
+    use cutgen::coordinator::l1svm::column_generation;
+    use cutgen::coordinator::GenParams;
+
+    let spec = SparseTextSpec { n: 120, p: 500, density: 0.03, k0: 8, zipf: 1.1 };
+    let sds = generate_sparse_text(&spec, &mut Xoshiro256::seed_from_u64(41));
+    let dds = Dataset { x: dense_twin(&sds.x), y: sds.y.clone() };
+
+    let lam = 0.05 * sds.lambda_max_l1();
+    let params = GenParams::default();
+    let sb = NativeBackend::new(&sds.x);
+    let db = NativeBackend::new(&dds.x);
+    let ssol = column_generation(&sds, &sb, lam, &[0, 1], &params);
+    let dsol = column_generation(&dds, &db, lam, &[0, 1], &params);
+
+    let support = |beta: &[f64]| -> Vec<usize> {
+        beta.iter()
+            .enumerate()
+            .filter(|(_, b)| b.abs() > 1e-9)
+            .map(|(j, _)| j)
+            .collect()
+    };
+    assert_eq!(
+        support(&ssol.beta),
+        support(&dsol.beta),
+        "dense and sparse solves selected different supports"
+    );
+    let rel = (ssol.objective - dsol.objective).abs() / dsol.objective.abs().max(1.0);
+    assert!(rel <= 1e-9, "objectives diverged: {} vs {}", ssol.objective, dsol.objective);
+}
