@@ -17,7 +17,8 @@
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
 //!                 [--seed-budget K] [--threads T] [--trace]
 //! cutgen serve    [--port 7878] [--host 127.0.0.1] [--workers W]
-//!                 [--cache-cap N] [--stdin]
+//!                 [--cache-cap N] [--cache-bytes B] [--persist-dir DIR]
+//!                 [--max-inflight N] [--queue-cap N] [--stdin]
 //! cutgen client   [--port 7878] [--host H] --send '<json>' | --file requests.jsonl
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
@@ -542,10 +543,28 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
 
 /// `cutgen serve`: run the persistent solve service. `--stdin` speaks
 /// the protocol over stdin/stdout (tests, CI, piping); otherwise a TCP
-/// listener with a worker pool. See `docs/serving.md`.
+/// listener with a worker pool and a bounded accept queue
+/// (`--queue-cap`). `--cache-bytes` bounds the warm cache's resident
+/// bytes (0 = entry cap only), `--persist-dir` spills snapshots to disk
+/// so warm starts survive restarts, and `--max-inflight` caps
+/// concurrent solves (0 = unlimited); excess load is rejected with a
+/// `retry_after` hint. See `docs/serving.md`.
 fn serve_cmd(args: &Args) -> Result<()> {
     let cache_cap = args.get_usize("cache-cap", crate::serve::DEFAULT_CACHE_CAP)?;
-    let state = crate::serve::ServeState::new(cache_cap);
+    let cache_bytes = args.get_usize("cache-bytes", 0)?;
+    let max_inflight = args.get_usize("max-inflight", 0)?;
+    let mut state = crate::serve::ServeState::new(cache_cap);
+    if cache_bytes > 0 {
+        state = state.with_cache_bytes(cache_bytes);
+    }
+    if max_inflight > 0 {
+        state = state.with_max_inflight(max_inflight);
+    }
+    if let Some(dir) = args.get("persist-dir") {
+        state = state
+            .with_persist_dir(dir)
+            .with_context(|| format!("opening persist dir {dir}"))?;
+    }
     if args.get("stdin").is_some() {
         crate::serve::transport::serve_stdin(&state)?;
         return Ok(());
@@ -553,6 +572,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let host = args.get("host").unwrap_or("127.0.0.1");
     let port = args.get_usize("port", 7878)?;
     let workers = args.get_usize("workers", 4)?.max(1);
+    let queue_cap = args.get_usize("queue-cap", 64)?.max(1);
     let addr = format!("{host}:{port}");
     let listener = std::net::TcpListener::bind(&addr)
         .with_context(|| format!("binding {addr}"))?;
@@ -560,7 +580,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         "cutgen serve: listening on {addr} ({workers} workers, cache cap {cache_cap}); \
          send {{\"op\":\"shutdown\"}} to stop"
     );
-    crate::serve::transport::serve_tcp(&state, listener, workers)?;
+    crate::serve::transport::serve_tcp(&state, listener, workers, queue_cap)?;
     Ok(())
 }
 

@@ -10,8 +10,9 @@
 //! on the same [`L1Problem`].
 
 use crate::backend::Backend;
+use crate::coordinator::group::{GroupProblem, RestrictedGroup};
 use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
-use crate::coordinator::report::{dantzig_report, l1_report, ranksvm_report};
+use crate::coordinator::report::{dantzig_report, group_report, l1_report, ranksvm_report};
 use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine, Initializer, Snapshot, WorkingSet};
@@ -137,14 +138,59 @@ pub fn regularization_path(
     (out, final_sol)
 }
 
-/// Fold one engine run's counters into the path-cumulative stats.
-fn accumulate(stats: &mut GenStats, step: GenStats) {
+/// Fold one engine run's counters into the path-cumulative stats
+/// (`converged`/`stalled` reflect the last step; `timed_out` sticks once
+/// any step is cut short). Shared with the serve layer's chained Slope
+/// grid, which cannot reuse one restricted model down the path.
+pub(crate) fn accumulate(stats: &mut GenStats, step: GenStats) {
     stats.rounds += step.rounds;
     stats.cols_added += step.cols_added;
     stats.rows_added += step.rows_added;
     stats.simplex_iters += step.simplex_iters;
     stats.converged = step.converged;
     stats.stalled = step.stalled;
+    stats.timed_out |= step.timed_out;
+}
+
+/// Warm-started λ-path for the **Group-SVM** over a decreasing grid
+/// (§2.4 down a grid). λ only appears in the per-group costs `λ·v_g`, so
+/// each step rewrites the costs in place
+/// ([`GroupProblem::set_lambda`]) and re-solves from the previous basis
+/// and group working set — a primal-simplex warm start at every grid
+/// point, exactly Algorithm 2's mechanics with groups as the column
+/// channel.
+pub fn group_path(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    groups: &[Vec<usize>],
+    lambdas: &[f64],
+    params: &GenParams,
+) -> Vec<PathSolution> {
+    assert!(!lambdas.is_empty());
+    debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let seed = Initializer::for_path(params).seed_group(ds, groups, lambdas[0]).ws.cols;
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut rg = RestrictedGroup::new(ds, groups, lambdas[0], &seed);
+    rg.set_threads(params.threads);
+    let mut prob = GroupProblem::new(rg, ds, &pricer);
+    let engine = GenEngine::new(params);
+    let mut stats = GenStats { cols_added: seed.len(), ..Default::default() };
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        prob.set_lambda(lambda);
+        accumulate(&mut stats, engine.run(&mut prob));
+        let (support, b0) = prob.inner().beta_support();
+        let report = group_report(ds, groups, &support, b0, lambda);
+        out.push(PathSolution {
+            lambda,
+            objective: report.objective,
+            support: report.support,
+            working_set: prob.inner().g_set().len(),
+            stats,
+            ws: prob.export_working_set(),
+        });
+    }
+    out
 }
 
 /// Warm-started λ-path for the **Dantzig selector** over a decreasing
@@ -335,6 +381,47 @@ mod tests {
                 pt.objective,
                 direct.objective
             );
+        }
+    }
+
+    #[test]
+    fn group_path_matches_independent_solves() {
+        use crate::coordinator::group::group_column_generation;
+        use crate::data::synthetic::{generate_group, GroupSpec};
+        let spec = GroupSpec {
+            n: 30,
+            n_groups: 8,
+            group_size: 4,
+            k0_groups: 2,
+            rho: 0.2,
+            standardize: true,
+        };
+        let gd = generate_group(&spec, &mut Xoshiro256::seed_from_u64(114));
+        let backend = NativeBackend::new(&gd.data.x);
+        let grid = geometric_grid(gd.data.lambda_max_group(&gd.groups), 5, 0.6);
+        let params = GenParams { eps: 1e-7, seed_budget: 3, ..Default::default() };
+        let path = group_path(&gd.data, &backend, &gd.groups, &grid, &params);
+        assert_eq!(path.len(), 5);
+        assert_eq!(path[0].support, 0, "β must be zero at λ_max");
+        for w in path.windows(2) {
+            assert!(w[1].objective <= w[0].objective + 1e-6, "objective decreases with λ");
+            assert!(w[1].working_set >= w[0].working_set, "group working set only grows");
+        }
+        for pt in &path[1..] {
+            let direct =
+                group_column_generation(&gd.data, &backend, &gd.groups, pt.lambda, &[0], &params);
+            assert!(
+                (pt.objective - direct.objective).abs() / direct.objective.max(1e-9) < 1e-5,
+                "λ={}: path {} direct {}",
+                pt.lambda,
+                pt.objective,
+                direct.objective
+            );
+        }
+        // every point carries a cacheable snapshot of its group set
+        for pt in &path {
+            assert_eq!(pt.ws.cols.len(), pt.working_set);
+            assert!(pt.ws.rows.is_empty(), "group snapshots carry group indices only");
         }
     }
 

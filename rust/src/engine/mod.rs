@@ -149,6 +149,11 @@ pub struct GenStats {
     pub converged: bool,
     /// Aborted by stall detection (see [`GenParams::stall_rounds`]).
     pub stalled: bool,
+    /// Aborted by the caller's stop callback (see
+    /// [`GenEngine::with_should_stop`]) — e.g. a serve-layer deadline or
+    /// shutdown. The restricted solution of the last completed round is
+    /// still feasible and its objective bounds the converged one.
+    pub timed_out: bool,
 }
 
 /// A serializable snapshot of a restricted problem's working sets.
@@ -358,12 +363,26 @@ pub fn select_violators(mut priced: Vec<(usize, f64)>, cap: usize) -> Vec<usize>
 /// ```
 pub struct GenEngine<'p> {
     params: &'p GenParams,
+    should_stop: Option<&'p dyn Fn() -> bool>,
 }
 
 impl<'p> GenEngine<'p> {
     /// Bind the engine to a parameter set.
     pub fn new(params: &'p GenParams) -> Self {
-        Self { params }
+        Self { params, should_stop: None }
+    }
+
+    /// Install a cooperative stop callback, polled once per generation
+    /// round *after* the restricted re-solve and *before* pricing. When it
+    /// returns `true` the loop exits with [`GenStats::timed_out`] set and
+    /// the problem left at the last completed round's optimal restricted
+    /// solution — always primal-feasible for the full problem's restricted
+    /// relaxation, with objective ≥ the fully converged one. At least one
+    /// restricted solve always completes, so a caller with an
+    /// already-expired deadline still gets a valid (seed-quality) answer.
+    pub fn with_should_stop(mut self, f: &'p dyn Fn() -> bool) -> Self {
+        self.should_stop = Some(f);
+        self
     }
 
     /// Run the generation loop to ε-optimality (or the round cap / stall
@@ -381,6 +400,19 @@ impl<'p> GenEngine<'p> {
             let st = prob.solve();
             debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
             let obj = prob.objective();
+            // Deadline/cancellation: checked after the re-solve so the
+            // model always holds a consistent optimal restricted solution
+            // when we bail, and before pricing so an expired caller never
+            // pays another O(np) scan.
+            if let Some(stop) = self.should_stop {
+                if stop() {
+                    stats.timed_out = true;
+                    if p.trace {
+                        eprintln!("[engine] stopped by caller after round {}", round + 1);
+                    }
+                    break;
+                }
+            }
             let viol_rows = prob.price_rows(p.eps);
             let viol_cols = prob.price_cols(p.eps);
             if p.trace {
@@ -524,5 +556,88 @@ mod tests {
         assert_eq!(stats.rounds, 13);
         assert!(!stats.converged);
         assert!(!stats.stalled);
+    }
+
+    /// A toy that converges after bringing three columns in, mirroring the
+    /// module doctest — used to pin the stop-callback semantics.
+    struct Grow {
+        cols_in: usize,
+    }
+    impl RestrictedProblem for Grow {
+        fn solve(&mut self) -> Status {
+            Status::Optimal
+        }
+        fn objective(&self) -> f64 {
+            -(self.cols_in as f64)
+        }
+        fn simplex_iters(&self) -> usize {
+            self.cols_in
+        }
+        fn price_rows(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+            Vec::new()
+        }
+        fn price_cols(&mut self, _eps: f64) -> Vec<(usize, f64)> {
+            if self.cols_in < 3 {
+                vec![(self.cols_in, 1.0)]
+            } else {
+                Vec::new()
+            }
+        }
+        fn add_rows(&mut self, _idx: &[usize]) {}
+        fn add_cols(&mut self, idx: &[usize]) {
+            self.cols_in += idx.len();
+        }
+    }
+
+    #[test]
+    fn expired_stop_callback_still_completes_one_solve() {
+        let params = GenParams::default();
+        let stop = || true; // deadline already expired at entry
+        let mut prob = Grow { cols_in: 0 };
+        let stats = GenEngine::new(&params).with_should_stop(&stop).run(&mut prob);
+        assert!(stats.timed_out);
+        assert!(!stats.converged);
+        assert!(!stats.stalled);
+        assert_eq!(stats.rounds, 1, "exactly one restricted solve must run");
+        assert_eq!(stats.cols_added, 0, "stop fires before any expansion");
+        // The restricted objective never undercuts the converged one
+        // (column generation only decreases the objective as columns
+        // enter): here 0.0 (no columns) vs -3.0 converged.
+        let converged = GenEngine::new(&params).run(&mut Grow { cols_in: 0 });
+        assert!(converged.converged);
+        assert!(prob.objective() >= -3.0);
+        assert!(!converged.timed_out);
+    }
+
+    #[test]
+    fn generous_stop_callback_is_identical_to_none() {
+        let params = GenParams::default();
+        let stop = || false; // never fires
+        let mut with_cb = Grow { cols_in: 0 };
+        let s1 = GenEngine::new(&params).with_should_stop(&stop).run(&mut with_cb);
+        let mut without = Grow { cols_in: 0 };
+        let s2 = GenEngine::new(&params).run(&mut without);
+        assert!(s1.converged && s2.converged);
+        assert!(!s1.timed_out && !s2.timed_out);
+        assert_eq!(s1.rounds, s2.rounds);
+        assert_eq!(s1.cols_added, s2.cols_added);
+        assert_eq!(with_cb.cols_in, without.cols_in);
+    }
+
+    #[test]
+    fn mid_run_stop_keeps_partial_expansion() {
+        let params = GenParams::default();
+        let calls = std::cell::Cell::new(0usize);
+        // fire on the second poll: one expanding round completes first
+        let stop = move || {
+            calls.set(calls.get() + 1);
+            calls.get() >= 2
+        };
+        let mut prob = Grow { cols_in: 0 };
+        let stats = GenEngine::new(&params).with_should_stop(&stop).run(&mut prob);
+        assert!(stats.timed_out);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.cols_added, 1);
+        assert_eq!(prob.cols_in, 1);
     }
 }

@@ -11,11 +11,13 @@
 //! [`NEIGHBORHOOD`] buckets, so a hit means the cached λ is within a
 //! factor of roughly `STEP^(NEIGHBORHOOD + ½)` of the request.
 //!
-//! Bounded: beyond `cap` entries the oldest-inserted key is evicted
-//! (generation working sets are small — tens of indices — so the default
-//! cap is generous).
+//! Bounded two ways: by entry count (`cap`) and optionally by estimated
+//! resident bytes (see [`WarmCache::set_max_bytes`]). Eviction is
+//! least-recently-used — every lookup hit refreshes its entry's recency,
+//! so a daemon hammered at a few hot λ's keeps those snapshots alive no
+//! matter how much one-off traffic flows past them.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 
 use super::protocol::Workload;
 use crate::engine::WorkingSet;
@@ -58,6 +60,16 @@ pub struct CacheEntry {
     pub ws: WorkingSet,
 }
 
+impl CacheEntry {
+    /// Estimated resident bytes of this entry: the two index vectors plus
+    /// a fixed overhead for the key, the scalars, and the map slot. The
+    /// same sizing convention as `Design::resident_bytes` — an accounting
+    /// estimate, not an allocator measurement.
+    pub fn resident_bytes(&self) -> usize {
+        96 + 8 * (self.ws.cols.len() + self.ws.rows.len())
+    }
+}
+
 /// A cache hit: the entry plus how many buckets away it was found.
 #[derive(Clone, Debug)]
 pub struct CacheHit {
@@ -67,28 +79,53 @@ pub struct CacheHit {
     pub distance: i64,
 }
 
-/// Bounded warm-start cache with hit/miss counters.
+/// An entry plus its last-touched tick for LRU ordering.
+struct Slot {
+    entry: CacheEntry,
+    last_used: u64,
+}
+
+/// Bounded warm-start cache with hit/miss counters and LRU eviction.
 pub struct WarmCache {
-    map: HashMap<CacheKey, CacheEntry>,
-    /// Keys in insertion order (each key appears once) for FIFO eviction.
-    order: VecDeque<CacheKey>,
+    map: HashMap<CacheKey, Slot>,
     cap: usize,
+    /// Byte budget (0 = unbounded); see [`WarmCache::set_max_bytes`].
+    max_bytes: usize,
+    /// Current estimated resident bytes across all entries.
+    bytes: usize,
+    /// Monotone logical clock; bumped on every lookup hit and insert.
+    clock: u64,
     /// Lookups that found a snapshot.
     pub hits: u64,
     /// Lookups that found nothing within the neighborhood.
     pub misses: u64,
+    /// Entries evicted to satisfy the entry cap or byte budget.
+    pub evictions: u64,
 }
 
 impl WarmCache {
-    /// Cache bounded to `cap` entries (clamped to ≥ 1).
+    /// Cache bounded to `cap` entries (clamped to ≥ 1), no byte budget.
     pub fn new(cap: usize) -> Self {
         Self {
             map: HashMap::new(),
-            order: VecDeque::new(),
             cap: cap.max(1),
+            max_bytes: 0,
+            bytes: 0,
+            clock: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
+    }
+
+    /// Bound the cache's estimated resident bytes (0 = unbounded). The
+    /// least-recently-used entries are evicted until the total fits; a
+    /// single entry larger than the budget is kept (the cache never
+    /// evicts itself empty), so the bound is `max(max_bytes, largest
+    /// entry)`.
+    pub fn set_max_bytes(&mut self, max_bytes: usize) {
+        self.max_bytes = max_bytes;
+        self.evict_over_budget();
     }
 
     /// Number of stored snapshots.
@@ -101,8 +138,14 @@ impl WarmCache {
         self.map.is_empty()
     }
 
+    /// Estimated resident bytes of all stored snapshots.
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+
     /// Find the nearest snapshot for `(fingerprint, workload)` within
-    /// [`NEIGHBORHOOD`] buckets of λ, preferring smaller distances.
+    /// [`NEIGHBORHOOD`] buckets of λ, preferring smaller distances. A hit
+    /// refreshes the entry's recency.
     pub fn lookup(
         &mut self,
         fingerprint: u64,
@@ -113,9 +156,11 @@ impl WarmCache {
         for distance in 0..=NEIGHBORHOOD {
             for b in [bucket - distance, bucket + distance] {
                 let key = CacheKey { fingerprint, workload, bucket: b };
-                if let Some(entry) = self.map.get(&key) {
+                if let Some(slot) = self.map.get_mut(&key) {
+                    self.clock += 1;
+                    slot.last_used = self.clock;
                     self.hits += 1;
-                    return Some(CacheHit { entry: entry.clone(), distance });
+                    return Some(CacheHit { entry: slot.entry.clone(), distance });
                 }
                 if distance == 0 {
                     break; // bucket − 0 == bucket + 0
@@ -127,15 +172,35 @@ impl WarmCache {
     }
 
     /// Store a snapshot under λ's bucket (replacing that bucket's prior
-    /// snapshot, if any) and evict the oldest key beyond the cap.
+    /// snapshot, if any) and evict least-recently-used entries beyond the
+    /// entry cap or byte budget.
     pub fn insert(&mut self, fingerprint: u64, workload: Workload, entry: CacheEntry) {
         let key = CacheKey { fingerprint, workload, bucket: lambda_bucket(entry.lambda) };
-        if self.map.insert(key, entry).is_none() {
-            self.order.push_back(key);
+        self.clock += 1;
+        let added = entry.resident_bytes();
+        if let Some(old) = self.map.insert(key, Slot { entry, last_used: self.clock }) {
+            self.bytes -= old.entry.resident_bytes();
         }
-        while self.map.len() > self.cap {
-            let oldest = self.order.pop_front().expect("order tracks map");
-            self.map.remove(&oldest);
+        self.bytes += added;
+        self.evict_over_budget();
+    }
+
+    /// Evict least-recently-used entries while over the entry cap or the
+    /// byte budget, always keeping at least one entry.
+    fn evict_over_budget(&mut self) {
+        while self.map.len() > 1
+            && (self.map.len() > self.cap || (self.max_bytes > 0 && self.bytes > self.max_bytes))
+        {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(key, _)| *key)
+                .expect("non-empty map has a minimum");
+            if let Some(slot) = self.map.remove(&victim) {
+                self.bytes -= slot.entry.resident_bytes();
+                self.evictions += 1;
+            }
         }
     }
 }
@@ -185,17 +250,67 @@ mod tests {
     }
 
     #[test]
-    fn eviction_is_fifo_and_bounded() {
+    fn eviction_is_bounded_by_the_entry_cap() {
         let mut c = WarmCache::new(2);
         c.insert(1, Workload::L1svm, entry(1.0));
         c.insert(1, Workload::L1svm, entry(10.0));
         c.insert(1, Workload::L1svm, entry(100.0));
         assert_eq!(c.len(), 2);
-        assert!(c.lookup(1, Workload::L1svm, 1.0).is_none(), "oldest evicted");
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_none(), "least-recent evicted");
         assert!(c.lookup(1, Workload::L1svm, 10.0).is_some());
         assert!(c.lookup(1, Workload::L1svm, 100.0).is_some());
-        // same-bucket reinsert replaces in place without growing the order
+        assert_eq!(c.evictions, 1);
+        // same-bucket reinsert replaces in place without growing the cache
         c.insert(1, Workload::L1svm, entry(100.0));
         assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn eviction_respects_recency_not_insertion_order() {
+        let mut c = WarmCache::new(2);
+        c.insert(1, Workload::L1svm, entry(1.0));
+        c.insert(1, Workload::L1svm, entry(10.0));
+        // touch the older entry: it becomes most-recent
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_some());
+        c.insert(1, Workload::L1svm, entry(100.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_some(), "touched entry survives");
+        assert!(c.lookup(1, Workload::L1svm, 10.0).is_none(), "untouched entry evicted");
+        assert!(c.lookup(1, Workload::L1svm, 100.0).is_some());
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_and_tracks_accounting() {
+        fn big(lambda: f64, cols: usize) -> CacheEntry {
+            CacheEntry {
+                lambda,
+                objective: 1.0,
+                ws: WorkingSet { cols: (0..cols).collect(), rows: vec![] },
+            }
+        }
+        let mut c = WarmCache::new(1000);
+        // each entry: 96 + 8·100 = 896 bytes; budget fits two, not three
+        c.set_max_bytes(2 * 896 + 10);
+        c.insert(1, Workload::L1svm, big(1.0, 100));
+        assert_eq!(c.resident_bytes(), 896);
+        c.insert(1, Workload::L1svm, big(10.0, 100));
+        assert_eq!(c.resident_bytes(), 2 * 896);
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_some()); // refresh λ=1
+        c.insert(1, Workload::L1svm, big(100.0, 100));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.resident_bytes(), 2 * 896);
+        assert_eq!(c.evictions, 1);
+        assert!(c.lookup(1, Workload::L1svm, 10.0).is_none(), "LRU entry evicted");
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_some());
+        // a single entry over the budget is still retained
+        let mut tiny = WarmCache::new(1000);
+        tiny.set_max_bytes(8);
+        tiny.insert(1, Workload::L1svm, big(1.0, 100));
+        assert_eq!(tiny.len(), 1, "never evicts down to empty");
+        // replacing a bucket updates accounting instead of double-counting
+        tiny.set_max_bytes(0);
+        tiny.insert(1, Workload::L1svm, big(1.0, 10));
+        assert_eq!(tiny.resident_bytes(), 96 + 80);
     }
 }

@@ -23,6 +23,31 @@
 //!   `auto|screening|fista|blockcd|subsample`, `"seed_budget"` sizes the
 //!   seed).
 //!
+//! Production hardening (all opt-in per request or per daemon):
+//!
+//! * **deadlines** — a request's `"deadline_ms"` installs a cooperative
+//!   stop callback in the generation loop
+//!   (`engine::GenEngine::with_should_stop`); an expired solve returns
+//!   the best-so-far restricted solution with `"timed_out":true`
+//!   instead of holding a worker until convergence;
+//! * **LRU + byte-budgeted cache** — [`cache::WarmCache`] evicts by
+//!   recency under both an entry cap and an optional resident-byte
+//!   budget ([`ServeState::with_cache_bytes`]), reported in `stats`;
+//! * **snapshot persistence** — with a persist directory
+//!   ([`ServeState::with_persist_dir`]) every cache insert is spilled
+//!   to disk ([`persist::SnapshotStore`]) and an in-memory miss lazily
+//!   probes the store, so a restarted daemon warm-hits its
+//!   predecessor's λ's;
+//! * **batched solves** — the `batch` op runs heterogeneous
+//!   `(workload, λ)` requests against one dataset through the shared
+//!   warm-start machinery (later items warm-hit earlier items'
+//!   snapshots) under one shared deadline;
+//! * **admission control** — [`ServeState::with_max_inflight`] bounds
+//!   concurrently executing solve/grid/batch requests; beyond the bound
+//!   the daemon answers `{"ok":false,…,"retry_after":…}` immediately
+//!   instead of queueing unboundedly (the TCP accept queue is bounded
+//!   the same way in [`transport::serve_tcp`]).
+//!
 //! The protocol is line-delimited JSON (one request object per line, one
 //! response per line, in order — [`json`] is the hand-rolled
 //! reader/writer) over two transports ([`transport`]): a
@@ -35,18 +60,21 @@
 
 pub mod cache;
 pub mod json;
+pub mod persist;
 pub mod protocol;
 pub mod registry;
 pub mod transport;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::group::{GroupProblem, RestrictedGroup};
 use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
 use crate::coordinator::path::{
-    dantzig_path, geometric_grid, ranksvm_path, regularization_path, PathSolution,
+    accumulate, dantzig_path, geometric_grid, group_path, ranksvm_path, regularization_path,
+    PathSolution,
 };
 use crate::coordinator::report::{
     dantzig_report, group_report, l1_report, ranksvm_report, slope_report,
@@ -63,13 +91,58 @@ use crate::workloads::pairset::PairSet;
 use crate::workloads::ranksvm::{lambda_max_rank, pair_rows_cap, RankProblem, RestrictedRank};
 use crate::{bail, ensure, err};
 
-use cache::{CacheEntry, CacheHit, WarmCache};
+use cache::{lambda_bucket, CacheEntry, CacheHit, WarmCache, NEIGHBORHOOD};
 use json::{kv, Json};
+use persist::SnapshotStore;
 use protocol::{err_response, ok_response, Req, Workload};
 use registry::{DatasetEntry, Registry, SynthOpts};
 
 /// Default bound on cached working-set snapshots.
 pub const DEFAULT_CACHE_CAP: usize = 256;
+
+/// Hard cap on `"requests"` items in one `batch` op — a bound on how
+/// long one protocol line can monopolize a worker, not a throughput
+/// knob (split larger sweeps across lines; responses stream per line).
+pub const MAX_BATCH_REQUESTS: usize = 1024;
+
+/// Backoff hint (milliseconds) carried by admission-control rejections.
+pub const RETRY_AFTER_MS: usize = 250;
+
+/// `{"ok":false,…}` with the `retry_after` backoff hint — what an
+/// admission-controlled daemon answers (instead of queueing) when all
+/// solve slots are busy. Shared by the dispatch layer and the TCP
+/// accept-queue bound in [`transport::serve_tcp`].
+pub fn busy_response() -> Json {
+    Json::obj(vec![
+        kv("ok", false),
+        kv("error", "server at capacity, retry later"),
+        kv("retry_after", RETRY_AFTER_MS),
+    ])
+}
+
+/// A per-request wall-clock budget. One instance is shared by every
+/// solve a request covers (all items of a `batch`), so the budget bounds
+/// the request, not each solve.
+struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    fn expired(&self) -> bool {
+        self.start.elapsed() >= self.budget
+    }
+}
+
+/// Parse the optional `"deadline_ms"` field (0 or absent = none) into a
+/// running deadline.
+fn deadline_from(req: &Req) -> Result<Option<Deadline>> {
+    let ms = req.usize_or("deadline_ms", 0)?;
+    Ok((ms > 0).then(|| Deadline {
+        start: Instant::now(),
+        budget: Duration::from_millis(ms as u64),
+    }))
+}
 
 /// All shared service state: registry, warm-start cache, counters, and
 /// the shutdown flag. One instance serves every connection; requests
@@ -78,24 +151,126 @@ pub struct ServeState {
     /// The dataset registry (name → `Arc`-shared entry).
     pub registry: Registry,
     cache: Mutex<WarmCache>,
+    /// Disk spill/reload for snapshots (None = memory-only cache).
+    store: Option<SnapshotStore>,
     requests: AtomicU64,
+    /// In-memory misses that were then served from the snapshot store.
+    disk_hits: AtomicU64,
+    /// Solve/grid/batch requests currently executing.
+    inflight: AtomicUsize,
+    /// Admission bound on concurrently executing solve/grid/batch
+    /// requests (`usize::MAX` = unbounded; 0 = reject all heavy ops,
+    /// i.e. drain mode).
+    max_inflight: usize,
     shutdown: AtomicBool,
 }
 
 impl ServeState {
-    /// Fresh state with a warm-start cache bounded to `cache_cap`.
+    /// Fresh state with a warm-start cache bounded to `cache_cap`
+    /// entries (no byte budget, no persistence, unbounded admission).
     pub fn new(cache_cap: usize) -> Self {
         Self {
             registry: Registry::new(),
             cache: Mutex::new(WarmCache::new(cache_cap)),
+            store: None,
             requests: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            inflight: AtomicUsize::new(0),
+            max_inflight: usize::MAX,
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    /// Bound the warm cache's estimated resident bytes (0 = unbounded);
+    /// see [`WarmCache::set_max_bytes`].
+    pub fn with_cache_bytes(self, max_bytes: usize) -> Self {
+        self.cache.lock().expect("cache lock").set_max_bytes(max_bytes);
+        self
+    }
+
+    /// Spill warm-start snapshots to `dir` (created if missing) and
+    /// lazily reload them on in-memory misses, so the cache survives a
+    /// daemon restart. See [`persist::SnapshotStore`] for the on-disk
+    /// format.
+    pub fn with_persist_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        self.store = Some(SnapshotStore::open(dir)?);
+        Ok(self)
+    }
+
+    /// Bound concurrently executing solve/grid/batch requests: beyond
+    /// `max` the daemon responds [`busy_response`] immediately instead
+    /// of queueing. 0 rejects every heavy op (drain mode); lightweight
+    /// ops (`ping`, `stats`, `register`, `shutdown`) are never gated.
+    pub fn with_max_inflight(mut self, max: usize) -> Self {
+        self.max_inflight = max;
+        self
     }
 
     /// Whether a `shutdown` request has been received.
     pub fn shutdown_requested(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Try to claim a solve slot; `None` means the daemon is at its
+    /// admission bound and the request must be rejected with
+    /// [`busy_response`]. The returned guard releases the slot on drop
+    /// (including on panic or error paths).
+    fn admit(&self) -> Option<InflightGuard<'_>> {
+        let mut cur = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.max_inflight {
+                return None;
+            }
+            match self.inflight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return Some(InflightGuard(self)),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Warm-start lookup: the in-memory cache first, then (on a miss,
+    /// when persistence is on) the snapshot store, scanning the same
+    /// λ-bucket neighborhood the cache does. A disk hit is promoted
+    /// into the in-memory cache so the next request stays off the
+    /// filesystem.
+    fn warm_lookup(&self, fp: u64, workload: Workload, lambda: f64) -> Option<CacheHit> {
+        let mem = self.cache.lock().expect("cache lock").lookup(fp, workload, lambda);
+        if mem.is_some() {
+            return mem;
+        }
+        let store = self.store.as_ref()?;
+        let bucket = lambda_bucket(lambda);
+        for distance in 0..=NEIGHBORHOOD {
+            for b in [bucket - distance, bucket + distance] {
+                if let Some(entry) = store.load(fp, workload, b) {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    self.cache.lock().expect("cache lock").insert(fp, workload, entry.clone());
+                    return Some(CacheHit { entry, distance });
+                }
+                if distance == 0 {
+                    break; // bucket − 0 == bucket + 0
+                }
+            }
+        }
+        None
+    }
+
+    /// Insert a snapshot into the in-memory cache, spilling it to the
+    /// snapshot store first when persistence is on. A failed spill is
+    /// logged and swallowed — persistence is an optimization, never a
+    /// reason to fail the solve that produced the snapshot.
+    fn cache_store(&self, fp: u64, workload: Workload, entry: CacheEntry) {
+        if let Some(store) = &self.store {
+            if let Err(e) = store.save(fp, workload, &entry) {
+                eprintln!("[serve] snapshot spill failed: {e}");
+            }
+        }
+        self.cache.lock().expect("cache lock").insert(fp, workload, entry);
     }
 
     /// Handle one request line, returning the response line. Never
@@ -121,15 +296,26 @@ impl ServeState {
     fn dispatch(&self, op: &str, req: &Req) -> Result<Json> {
         match op {
             "register" => self.handle_register(req),
-            "solve" => self.handle_solve(req),
-            "grid" => self.handle_grid(req),
+            // the heavy ops pass admission control: over the inflight
+            // bound they are rejected with a retry_after hint instead of
+            // queueing unboundedly behind a busy worker pool
+            "solve" | "grid" | "batch" => match self.admit() {
+                Some(_slot) => match op {
+                    "solve" => self.handle_solve(req),
+                    "grid" => self.handle_grid(req),
+                    _ => self.handle_batch(req),
+                },
+                None => Ok(busy_response()),
+            },
             "stats" => Ok(self.stats_response()),
             "ping" => Ok(ok_response("ping", Vec::new())),
             "shutdown" => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(ok_response("shutdown", Vec::new()))
             }
-            other => bail!("unknown op {other:?} (register|solve|grid|stats|ping|shutdown)"),
+            other => {
+                bail!("unknown op {other:?} (register|solve|grid|batch|stats|ping|shutdown)")
+            }
         }
     }
 
@@ -170,24 +356,53 @@ impl ServeState {
             .registry
             .get(name)
             .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
+        let deadline = deadline_from(req)?;
+        self.solve_request(name, &entry, req, deadline.as_ref())
+    }
+
+    /// One fixed-λ solve against an already resolved dataset entry —
+    /// the body shared by `solve` (per-request deadline) and each `batch`
+    /// item (deadline shared across the whole batch).
+    fn solve_request(
+        &self,
+        name: &str,
+        entry: &DatasetEntry,
+        req: &Req,
+        deadline: Option<&Deadline>,
+    ) -> Result<Json> {
         let workload = Workload::parse(req.str_req("workload")?)?;
         let mut gen = gen_from_req(req)?;
         gen.max_cols_per_round = req.usize_or("max_cols_per_round", 0)?;
         gen.max_rows_per_round = req.usize_or("max_rows_per_round", 0)?;
         let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
-        let lambda = lambda_for(&entry, workload, req, group_size)?;
-        let fp = cache_fp(&entry, workload, group_size);
+        let lambda = lambda_for(entry, workload, req, group_size)?;
+        let fp = cache_fp(entry, workload, group_size);
 
         let hit: Option<CacheHit> = if use_cache {
-            self.cache.lock().expect("cache lock").lookup(fp, workload, lambda)
+            self.warm_lookup(fp, workload, lambda)
         } else {
             None
         };
         let seed = hit.as_ref().map(|h| &h.entry.ws);
-        let core = solve_one(&entry, workload, lambda, seed, &gen, group_size)?;
-        if use_cache {
-            self.cache.lock().expect("cache lock").insert(
+        // Cooperative stop: the engine polls this once per round, so an
+        // expired deadline (or a daemon shutting down) returns the
+        // best-so-far restricted solution instead of holding the worker.
+        let stop = || {
+            if self.shutdown_requested() {
+                return true;
+            }
+            match deadline {
+                Some(d) => d.expired(),
+                None => false,
+            }
+        };
+        let core = solve_one(entry, workload, lambda, seed, &gen, group_size, Some(&stop))?;
+        // Only converged (or stalled-out) working sets feed the cache: a
+        // deadline-truncated expansion is a fine answer for its caller
+        // but a poor seed to advertise as "converged near this λ".
+        if use_cache && !core.stats.timed_out {
+            self.cache_store(
                 fp,
                 workload,
                 CacheEntry { lambda, objective: core.objective, ws: core.ws.clone() },
@@ -207,6 +422,7 @@ impl ServeState {
             kv("rows_added", core.stats.rows_added),
             kv("simplex_iters", core.stats.simplex_iters),
             kv("converged", core.stats.converged),
+            kv("timed_out", core.stats.timed_out),
             kv("working_cols", core.ws.cols.len()),
             kv("working_rows", core.ws.rows.len()),
             kv("warm", hit.is_some()),
@@ -216,6 +432,58 @@ impl ServeState {
             fields.push(kv("bucket_distance", h.distance as f64));
         }
         Ok(ok_response("solve", fields))
+    }
+
+    /// The `batch` op: heterogeneous `(workload, λ)` solve items against
+    /// **one** dataset, processed in order through the shared dataset
+    /// views and warm-start cache — later items warm-hit the snapshots
+    /// earlier items just produced, which is what amortizes a
+    /// heterogeneous estimator sweep. One `"deadline_ms"` budget covers
+    /// the whole batch; per-item failures come back as inline
+    /// `{"ok":false,…}` objects in `"results"` without failing the rest.
+    fn handle_batch(&self, req: &Req) -> Result<Json> {
+        let name = req.str_req("dataset")?;
+        let entry = self
+            .registry
+            .get(name)
+            .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
+        let items = req
+            .0
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("batch needs a \"requests\" array of solve objects"))?;
+        ensure!(!items.is_empty(), "batch \"requests\" must be non-empty");
+        ensure!(
+            items.len() <= MAX_BATCH_REQUESTS,
+            "batch capped at {MAX_BATCH_REQUESTS} requests, got {}",
+            items.len()
+        );
+        let deadline = deadline_from(req)?;
+        let mut results = Vec::with_capacity(items.len());
+        let mut warm_hits = 0usize;
+        let mut timed_out = 0usize;
+        for item in items {
+            let resp = self
+                .solve_request(name, &entry, &Req(item), deadline.as_ref())
+                .unwrap_or_else(|e| err_response(&e.to_string()));
+            if resp.get("warm").and_then(Json::as_bool) == Some(true) {
+                warm_hits += 1;
+            }
+            if resp.get("timed_out").and_then(Json::as_bool) == Some(true) {
+                timed_out += 1;
+            }
+            results.push(resp);
+        }
+        Ok(ok_response(
+            "batch",
+            vec![
+                kv("dataset", name),
+                kv("count", results.len()),
+                kv("warm_hits", warm_hits),
+                kv("timed_out", timed_out),
+                kv("results", results),
+            ],
+        ))
     }
 
     fn handle_grid(&self, req: &Req) -> Result<Json> {
@@ -232,6 +500,7 @@ impl ServeState {
             "grid ratio must be in (0, 1), got {ratio}"
         );
         let gen = gen_from_req(req)?;
+        let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
         let path: Vec<PathSolution> = match workload {
             Workload::L1svm => {
@@ -239,6 +508,39 @@ impl ServeState {
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
                 regularization_path(ds, &backend, &grid, &gen).0
+            }
+            Workload::Group => {
+                let ds = entry.classification();
+                let groups = contiguous_groups(ds.p(), group_size)?;
+                let backend = NativeBackend::new(&ds.x);
+                let grid = geometric_grid(ds.lambda_max_group(&groups), k, ratio);
+                group_path(ds, &backend, &groups, &grid, &gen)
+            }
+            Workload::Slope => {
+                // RestrictedSlope binds its BH weight sequence at
+                // construction (the weights themselves scale with λ̃), so
+                // there is no in-place λ̃ move to warm-start through —
+                // the slope grid chains per-point solves instead, each
+                // seeded from the previous point's exported columns.
+                let grid =
+                    geometric_grid(entry.classification().lambda_max_l1(), k, ratio);
+                let mut out: Vec<PathSolution> = Vec::with_capacity(grid.len());
+                let mut prev: Option<WorkingSet> = None;
+                let mut stats = GenStats::default();
+                for &lt in &grid {
+                    let core = solve_slope(&entry, lt, prev.as_ref(), &gen, None)?;
+                    accumulate(&mut stats, core.stats);
+                    prev = Some(core.ws.clone());
+                    out.push(PathSolution {
+                        lambda: lt,
+                        objective: core.objective,
+                        support: core.support,
+                        working_set: core.ws.cols.len(),
+                        stats,
+                        ws: core.ws,
+                    });
+                }
+                out
             }
             Workload::Ranksvm => {
                 let ds = &entry.ds;
@@ -254,25 +556,19 @@ impl ServeState {
                 let grid = geometric_grid(lambda_max_dantzig(ds), k, ratio);
                 dantzig_path(ds, &backend, &grid, &gen)
             }
-            other => bail!(
-                "grid routes through the warm-started path drivers, available for \
-                 l1svm|ranksvm|dantzig (got {:?})",
-                other.as_str()
-            ),
         };
         // Seed the warm-start cache at EVERY visited λ: a later fixed-λ
         // solve anywhere near the grid resumes from the matching
         // snapshot instead of starting cold.
         let mut seeded = 0usize;
         if use_cache {
-            // same key derivation as `solve`, so grid-seeded snapshots
-            // actually hit on later fixed-λ requests (grid workloads
-            // exclude Group, so the group size never applies here)
-            let fp = cache_fp(&entry, workload, 0);
-            let mut cache = self.cache.lock().expect("cache lock");
+            // same key derivation as `solve` (including the group-size
+            // fold for Group), so grid-seeded snapshots actually hit on
+            // later fixed-λ requests
+            let fp = cache_fp(&entry, workload, group_size);
             for pt in &path {
                 if !pt.ws.is_empty() {
-                    cache.insert(
+                    self.cache_store(
                         fp,
                         workload,
                         CacheEntry {
@@ -327,7 +623,7 @@ impl ServeState {
             .map(|entry| {
                 let x = &entry.ds.x;
                 let cells = (entry.ds.n() * entry.ds.p()).max(1);
-                Json::obj(vec![
+                let mut fields = vec![
                     kv("name", entry.name.clone()),
                     kv("n", entry.ds.n()),
                     kv("p", entry.ds.p()),
@@ -335,7 +631,14 @@ impl ServeState {
                     kv("density", x.nnz() as f64 / cells as f64),
                     kv("sparse", x.is_sparse()),
                     kv("resident_bytes", x.resident_bytes()),
-                ])
+                ];
+                // the pair set is the other resident derived structure;
+                // report it only when some ranking request built it (the
+                // accessor never forces the construction)
+                if let Some(pairs) = entry.built_pairs() {
+                    fields.push(kv("pairs_resident_bytes", pairs.resident_bytes()));
+                }
+                Json::obj(fields)
             })
             .collect();
         ok_response(
@@ -346,8 +649,22 @@ impl ServeState {
                 kv("cache_entries", cache.len()),
                 kv("cache_hits", cache.hits as usize),
                 kv("cache_misses", cache.misses as usize),
+                kv("cache_bytes", cache.resident_bytes()),
+                kv("cache_evictions", cache.evictions as usize),
+                kv("cache_disk_hits", self.disk_hits.load(Ordering::Relaxed) as usize),
             ],
         )
+    }
+}
+
+/// RAII token for one admitted solve/grid/batch request: releases the
+/// inflight slot on drop, so errors and panics can never leak admission
+/// capacity.
+struct InflightGuard<'a>(&'a ServeState);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -517,10 +834,22 @@ pub struct SolveCore {
     pub seeded_by: &'static str,
 }
 
+/// Build the engine for one solve, installing the caller's cooperative
+/// stop callback (deadline/shutdown) when one is given.
+fn engine_for<'p>(gen: &'p GenParams, stop: Option<&'p dyn Fn() -> bool>) -> GenEngine<'p> {
+    match stop {
+        Some(f) => GenEngine::new(gen).with_should_stop(f),
+        None => GenEngine::new(gen),
+    }
+}
+
 /// Solve one request: seed the restricted model from `seed` when warm,
 /// from the shared [`Initializer`] otherwise (a cache miss runs the §4
 /// first-order seed by default — [`InitStrategy::Auto`] — instead of
 /// bare screening), run the engine, and export the final working sets.
+/// `stop` (when given) is polled once per generation round: a `true`
+/// return ends the run with [`GenStats::timed_out`] set and the
+/// best-so-far restricted solution in the result.
 pub fn solve_one(
     entry: &DatasetEntry,
     workload: Workload,
@@ -528,13 +857,14 @@ pub fn solve_one(
     seed: Option<&WorkingSet>,
     gen: &GenParams,
     group_size: usize,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     match workload {
-        Workload::L1svm => solve_l1(entry, lambda, seed, gen),
-        Workload::Group => solve_group(entry, lambda, seed, gen, group_size),
-        Workload::Slope => solve_slope(entry, lambda, seed, gen),
-        Workload::Ranksvm => solve_ranksvm(entry, lambda, seed, gen),
-        Workload::Dantzig => solve_dantzig(entry, lambda, seed, gen),
+        Workload::L1svm => solve_l1(entry, lambda, seed, gen, stop),
+        Workload::Group => solve_group(entry, lambda, seed, gen, group_size, stop),
+        Workload::Slope => solve_slope(entry, lambda, seed, gen, stop),
+        Workload::Ranksvm => solve_ranksvm(entry, lambda, seed, gen, stop),
+        Workload::Dantzig => solve_dantzig(entry, lambda, seed, gen, stop),
     }
 }
 
@@ -543,6 +873,7 @@ fn solve_l1(
     lambda: f64,
     seed: Option<&WorkingSet>,
     gen: &GenParams,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     let ds = entry.classification();
     let backend = NativeBackend::new(&ds.x);
@@ -560,7 +891,7 @@ fn solve_l1(
     let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &j_init);
     rl1.set_threads(gen.threads);
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
-    let stats = GenEngine::new(gen).run(&mut prob);
+    let stats = engine_for(gen, stop).run(&mut prob);
     let mut ws = prob.export_working_set();
     // Algorithm 1 keeps every margin row in the model; snapshotting the
     // full [n] would only bloat the cache.
@@ -583,6 +914,7 @@ fn solve_group(
     seed: Option<&WorkingSet>,
     gen: &GenParams,
     group_size: usize,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     let ds = entry.classification();
     let groups = contiguous_groups(ds.p(), group_size)?;
@@ -602,7 +934,7 @@ fn solve_group(
     let mut rg = RestrictedGroup::new(ds, &groups, lambda, &g_init);
     rg.set_threads(gen.threads);
     let mut prob = GroupProblem::new(rg, ds, &pricer);
-    let stats = GenEngine::new(gen).run(&mut prob);
+    let stats = engine_for(gen, stop).run(&mut prob);
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
     let report = group_report(ds, &groups, &support, b0, lambda);
@@ -621,6 +953,7 @@ fn solve_slope(
     lambda: f64,
     seed: Option<&WorkingSet>,
     gen: &GenParams,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     let ds = entry.classification();
     let weights = bh_slope_weights(ds.p(), lambda);
@@ -641,7 +974,7 @@ fn solve_slope(
     let mut rs = RestrictedSlope::new(ds, &weights, &j_init);
     rs.set_threads(gen.threads);
     let mut prob = SlopeProblem::new(rs, ds, &pricer, true);
-    let stats = GenEngine::new(&eng).run(&mut prob);
+    let stats = engine_for(&eng, stop).run(&mut prob);
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
     let report = slope_report(ds, &weights, &support, b0);
@@ -660,6 +993,7 @@ fn solve_ranksvm(
     lambda: f64,
     seed: Option<&WorkingSet>,
     gen: &GenParams,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     let ds = &entry.ds;
     let mut owned_pairs = None;
@@ -681,7 +1015,7 @@ fn solve_ranksvm(
     rr.set_threads(gen.threads);
     rr.set_pair_cap(pair_rows_cap(gen));
     let mut prob = RankProblem::new(rr, ds, &pricer);
-    let stats = GenEngine::new(gen).run(&mut prob);
+    let stats = engine_for(gen, stop).run(&mut prob);
     let ws = prob.export_working_set();
     let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
     Ok(SolveCore {
@@ -699,6 +1033,7 @@ fn solve_dantzig(
     lambda: f64,
     seed: Option<&WorkingSet>,
     gen: &GenParams,
+    stop: Option<&dyn Fn() -> bool>,
 ) -> Result<SolveCore> {
     let ds = &entry.ds;
     let backend = NativeBackend::new(&ds.x);
@@ -717,7 +1052,7 @@ fn solve_dantzig(
             cold.strategy.as_str()
         }
     };
-    let stats = GenEngine::new(gen).run(&mut prob);
+    let stats = engine_for(gen, stop).run(&mut prob);
     let ws = prob.export_working_set();
     let report = dantzig_report(ds.p(), &prob.inner().beta_support());
     Ok(SolveCore {

@@ -1,0 +1,207 @@
+//! Disk persistence for warm-start snapshots.
+//!
+//! A long-running daemon accumulates converged working sets that are
+//! expensive to recompute and tiny to store (tens of indices). The
+//! [`SnapshotStore`] spills every cache insert to one JSON file per
+//! `(fingerprint, workload, λ-bucket)` key, and the serve layer lazily
+//! probes the store on an in-memory miss — so a restarted daemon
+//! warm-hits the λ's its predecessor already solved. The dataset content
+//! fingerprint is part of both the filename and the document, so a stale
+//! file can never seed a solve on different data: mismatches (and any
+//! other corruption) load as `None`, which is just a cold solve.
+//!
+//! Writes are atomic per entry: the document goes to a unique temporary
+//! file in the same directory and is `rename`d into place, so a crash
+//! mid-write leaves either the old snapshot or none — never a torn file.
+//!
+//! On-disk format (one compact JSON object per file, named
+//! `{fingerprint:016x}-{workload}-b{bucket}.json`):
+//!
+//! ```json
+//! {"fingerprint":"00a1b2…","workload":"l1svm","lambda":0.81,
+//!  "objective":57.31,"cols":[3,17,42],"rows":[]}
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::cache::{lambda_bucket, CacheEntry};
+use super::json::{kv, Json};
+use super::protocol::Workload;
+use crate::engine::WorkingSet;
+use crate::err;
+use crate::error::Result;
+
+/// A directory of spilled warm-start snapshots, one JSON file per cache
+/// key. See the module docs for the on-disk format.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    /// Distinguishes concurrent writers' temporary files within one
+    /// process; the pid distinguishes processes.
+    tmp_counter: AtomicU64,
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a snapshot directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SnapshotStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| err!("persist: cannot create {}: {e}", dir.display()))?;
+        Ok(SnapshotStore { dir, tmp_counter: AtomicU64::new(0) })
+    }
+
+    /// The directory snapshots are spilled to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_for(&self, fingerprint: u64, workload: Workload, bucket: i64) -> PathBuf {
+        self.dir
+            .join(format!("{fingerprint:016x}-{}-b{bucket}.json", workload.as_str()))
+    }
+
+    /// Spill one snapshot, atomically replacing any prior file for its
+    /// key (the key's bucket is derived from `entry.lambda`).
+    pub fn save(&self, fingerprint: u64, workload: Workload, entry: &CacheEntry) -> Result<()> {
+        let bucket = lambda_bucket(entry.lambda);
+        let doc = Json::obj(vec![
+            kv("fingerprint", format!("{fingerprint:016x}")),
+            kv("workload", workload.as_str()),
+            kv("lambda", entry.lambda),
+            kv("objective", entry.objective),
+            kv(
+                "cols",
+                entry.ws.cols.iter().map(|&j| Json::from(j)).collect::<Vec<_>>(),
+            ),
+            kv(
+                "rows",
+                entry.ws.rows.iter().map(|&i| Json::from(i)).collect::<Vec<_>>(),
+            ),
+        ]);
+        let tick = self.tmp_counter.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!(".tmp-{}-{tick}", std::process::id()));
+        fs::write(&tmp, format!("{doc}\n"))
+            .map_err(|e| err!("persist: cannot write {}: {e}", tmp.display()))?;
+        let path = self.file_for(fingerprint, workload, bucket);
+        fs::rename(&tmp, &path).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            err!("persist: cannot rename into {}: {e}", path.display())
+        })
+    }
+
+    /// Load the snapshot for a key, if a valid one is on disk. Any
+    /// corruption — unreadable file, bad JSON, fingerprint/workload/λ
+    /// mismatch — returns `None`: a disk miss is always safe (it just
+    /// means a cold solve), so this never surfaces an error.
+    pub fn load(&self, fingerprint: u64, workload: Workload, bucket: i64) -> Option<CacheEntry> {
+        let path = self.file_for(fingerprint, workload, bucket);
+        let text = fs::read_to_string(&path).ok()?;
+        let doc = Json::parse(text.trim()).ok()?;
+        if doc.get("fingerprint")?.as_str()? != format!("{fingerprint:016x}") {
+            return None;
+        }
+        if doc.get("workload")?.as_str()? != workload.as_str() {
+            return None;
+        }
+        let lambda = doc.get("lambda")?.as_f64()?;
+        if lambda_bucket(lambda) != bucket {
+            return None;
+        }
+        let objective = doc.get("objective")?.as_f64()?;
+        let cols = index_vec(doc.get("cols")?)?;
+        let rows = index_vec(doc.get("rows")?)?;
+        Some(CacheEntry { lambda, objective, ws: WorkingSet { cols, rows } })
+    }
+}
+
+/// Strictly decode an array of non-negative integer indices.
+fn index_vec(v: &Json) -> Option<Vec<usize>> {
+    v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cutgen-persist-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn entry(lambda: f64) -> CacheEntry {
+        CacheEntry {
+            lambda,
+            objective: 3.25,
+            ws: WorkingSet { cols: vec![3, 17, 42], rows: vec![5] },
+        }
+    }
+
+    #[test]
+    fn roundtrips_snapshots_exactly() {
+        let dir = scratch("roundtrip");
+        let store = SnapshotStore::open(&dir).unwrap();
+        let e = entry(0.8125);
+        store.save(0xdead_beef, Workload::Ranksvm, &e).unwrap();
+        let back = store
+            .load(0xdead_beef, Workload::Ranksvm, lambda_bucket(0.8125))
+            .expect("saved snapshot loads");
+        assert_eq!(back.lambda, e.lambda, "f64 text roundtrip is exact");
+        assert_eq!(back.objective, e.objective);
+        assert_eq!(back.ws, e.ws);
+        // wrong key coordinates miss
+        assert!(store.load(0xdead_beef, Workload::L1svm, lambda_bucket(0.8125)).is_none());
+        assert!(store.load(0xbeef, Workload::Ranksvm, lambda_bucket(0.8125)).is_none());
+        assert!(store
+            .load(0xdead_beef, Workload::Ranksvm, lambda_bucket(0.8125) + 9)
+            .is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_load_as_misses() {
+        let dir = scratch("corrupt");
+        let store = SnapshotStore::open(&dir).unwrap();
+        let e = entry(1.0);
+        store.save(7, Workload::L1svm, &e).unwrap();
+        let path = dir.join(format!("{:016x}-l1svm-b{}.json", 7, lambda_bucket(1.0)));
+        assert!(path.is_file(), "snapshot file exists at the documented name");
+        for bad in [
+            "",                                     // empty
+            "{\"fingerprint\":",                    // truncated JSON
+            "{\"fingerprint\":\"0000000000000007\"}", // fields missing
+            // fingerprint mismatch: a file copied across datasets
+            "{\"fingerprint\":\"0000000000000008\",\"workload\":\"l1svm\",\"lambda\":1.0,\"objective\":1.0,\"cols\":[],\"rows\":[]}",
+            // λ disagrees with the bucket in the filename
+            "{\"fingerprint\":\"0000000000000007\",\"workload\":\"l1svm\",\"lambda\":99.0,\"objective\":1.0,\"cols\":[],\"rows\":[]}",
+            // non-integer working-set index
+            "{\"fingerprint\":\"0000000000000007\",\"workload\":\"l1svm\",\"lambda\":1.0,\"objective\":1.0,\"cols\":[1.5],\"rows\":[]}",
+        ] {
+            fs::write(&path, bad).unwrap();
+            assert!(
+                store.load(7, Workload::L1svm, lambda_bucket(1.0)).is_none(),
+                "loaded corrupt doc {bad:?}"
+            );
+        }
+        // a rewrite through save() repairs the key
+        store.save(7, Workload::L1svm, &e).unwrap();
+        assert!(store.load(7, Workload::L1svm, lambda_bucket(1.0)).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn degenerate_lambda_bucket_is_storable() {
+        let dir = scratch("degenerate");
+        let store = SnapshotStore::open(&dir).unwrap();
+        let e = CacheEntry { lambda: 0.0, objective: 0.0, ws: WorkingSet::default() };
+        store.save(1, Workload::Dantzig, &e).unwrap();
+        let back = store.load(1, Workload::Dantzig, lambda_bucket(0.0)).unwrap();
+        assert_eq!(back.lambda, 0.0);
+        assert!(back.ws.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

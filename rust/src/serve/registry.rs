@@ -83,6 +83,14 @@ impl DatasetEntry {
     pub fn pairs(&self) -> &PairSet {
         self.pairs.get_or_init(|| PairSet::build(&self.ds.y, PairMode::Auto))
     }
+
+    /// The comparison-pair set *if it has already been built* — `None`
+    /// before the first ranking request. Memory accounting (`stats`)
+    /// uses this so reporting a dataset's footprint never forces the
+    /// pair construction it is trying to measure.
+    pub fn built_pairs(&self) -> Option<&PairSet> {
+        self.pairs.get()
+    }
 }
 
 /// Content fingerprint: FNV-1a over the dimensions, stored-nonzero

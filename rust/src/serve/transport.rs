@@ -7,9 +7,18 @@
 //!   lets tests and CI exercise the full protocol without opening a
 //!   port.
 //! * [`serve_tcp`] — `std::net::TcpListener` with a scoped worker pool:
-//!   the accept loop hands connections to `workers` threads over an
-//!   mpsc channel; each connection is one protocol session (many
-//!   requests, responses in order).
+//!   the accept loop hands connections to `workers` threads over a
+//!   **bounded** mpsc channel; each connection is one protocol session
+//!   (many requests, responses in order). When the queue is full the
+//!   acceptor answers [`busy_response`] and closes instead of queueing
+//!   unboundedly.
+//!
+//! Framing is hardened against hostile input through [`Framer`]: lines
+//! are capped at [`MAX_LINE_BYTES`] (an over-cap request draws a typed
+//! error the moment the cap is crossed — a slow-loris writer cannot make
+//! the daemon buffer unboundedly, or wait forever for its newline), and
+//! invalid UTF-8 draws a typed error instead of tearing the session
+//! down.
 //!
 //! Shutdown: the `shutdown` op flips the state flag; the worker that
 //! served it pokes the listener with an empty connection so the
@@ -17,33 +26,174 @@
 
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{mpsc, Mutex};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::Mutex;
 use std::time::Duration;
 
-use super::ServeState;
+use super::protocol::err_response;
+use super::{busy_response, ServeState};
 use crate::error::{Context, Result};
 
-/// Run the protocol over a line-oriented reader/writer pair until EOF
-/// or a `shutdown` request.
-pub fn serve_lines<R: BufRead, W: Write>(
-    state: &ServeState,
-    reader: R,
-    mut out: W,
-) -> std::io::Result<()> {
-    for line in reader.lines() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let resp = state.handle_line(line);
-        writeln!(out, "{resp}")?;
-        out.flush()?;
-        if state.shutdown_requested() {
-            break;
+/// Hard cap on one request line (1 MiB). Protocol objects are a few
+/// hundred bytes; even a `batch` at [`super::MAX_BATCH_REQUESTS`] items
+/// fits comfortably.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// What [`Framer::feed`] found in the input it consumed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete line is buffered — read it with [`Framer::line`],
+    /// then release it with [`Framer::clear`].
+    Line,
+    /// The current line crossed the byte cap and was discarded. Emitted
+    /// at most once per offending line, possibly before its newline has
+    /// even arrived; the line's remaining bytes are then swallowed
+    /// silently.
+    Oversized,
+    /// More input is needed.
+    More,
+}
+
+/// Incremental line framer with a hard byte cap.
+///
+/// Feed it raw chunks as they arrive; it hands back complete
+/// newline-terminated lines and polices the cap *while buffering*, so a
+/// peer trickling an endless line (slow-loris) is answered and cut off
+/// after `cap` bytes instead of growing the buffer without bound.
+pub struct Framer {
+    buf: Vec<u8>,
+    /// Discarding the tail of an oversized line (until its newline).
+    skipping: bool,
+    cap: usize,
+}
+
+impl Framer {
+    /// Framer with the given per-line byte cap.
+    pub fn new(cap: usize) -> Self {
+        Self { buf: Vec::new(), skipping: false, cap }
+    }
+
+    /// Consume a prefix of `chunk` (up to and including one newline) and
+    /// report what it completed. Returns `(bytes_consumed, frame)`; call
+    /// again with the rest of the chunk after handling the frame.
+    pub fn feed(&mut self, chunk: &[u8]) -> (usize, Frame) {
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(k) => {
+                let consumed = k + 1;
+                if self.skipping {
+                    // tail of a line already reported as oversized
+                    self.skipping = false;
+                    (consumed, Frame::More)
+                } else if self.buf.len() + k > self.cap {
+                    self.buf.clear();
+                    (consumed, Frame::Oversized)
+                } else {
+                    self.buf.extend_from_slice(&chunk[..k]);
+                    (consumed, Frame::Line)
+                }
+            }
+            None => {
+                let consumed = chunk.len();
+                if self.skipping {
+                    (consumed, Frame::More)
+                } else if self.buf.len() + chunk.len() > self.cap {
+                    // report now, newline or not: the offender must not
+                    // be able to buffer (or stall) past the cap
+                    self.buf.clear();
+                    self.skipping = true;
+                    (consumed, Frame::Oversized)
+                } else {
+                    self.buf.extend_from_slice(chunk);
+                    (consumed, Frame::More)
+                }
+            }
         }
     }
-    Ok(())
+
+    /// The buffered line (no newline) after a [`Frame::Line`].
+    pub fn line(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Release the buffered line and get ready for the next one.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// At EOF: an unterminated final line, if a well-sized one is
+    /// pending (an oversized tail was already reported and stays
+    /// swallowed).
+    pub fn take_trailing(&mut self) -> Option<Vec<u8>> {
+        if self.skipping || self.buf.is_empty() {
+            return None;
+        }
+        Some(std::mem::take(&mut self.buf))
+    }
+}
+
+/// The response for a line that crossed [`MAX_LINE_BYTES`].
+fn oversized_response() -> String {
+    err_response(&format!("request line exceeds {MAX_LINE_BYTES} bytes")).to_string()
+}
+
+/// Handle one framed line: UTF-8-validate, skip blanks, dispatch, write
+/// the response. Returns `Ok(true)` when the session should end (a
+/// `shutdown` request has been served).
+fn respond_line<W: Write>(
+    state: &ServeState,
+    raw: &[u8],
+    out: &mut W,
+) -> std::io::Result<bool> {
+    let resp = match std::str::from_utf8(raw) {
+        Ok(text) => {
+            let text = text.trim();
+            if text.is_empty() {
+                return Ok(state.shutdown_requested());
+            }
+            state.handle_line(text)
+        }
+        Err(_) => err_response("request line is not valid UTF-8").to_string(),
+    };
+    writeln!(out, "{resp}")?;
+    out.flush()?;
+    Ok(state.shutdown_requested())
+}
+
+/// Run the protocol over a line-oriented reader/writer pair until EOF
+/// or a `shutdown` request, with [`Framer`] hardening (byte-capped
+/// lines, typed errors for oversized or non-UTF-8 input).
+pub fn serve_lines<R: BufRead, W: Write>(
+    state: &ServeState,
+    mut reader: R,
+    mut out: W,
+) -> std::io::Result<()> {
+    let mut framer = Framer::new(MAX_LINE_BYTES);
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: an unterminated trailing line still gets its response
+            if let Some(last) = framer.take_trailing() {
+                respond_line(state, &last, &mut out)?;
+            }
+            return Ok(());
+        }
+        let (consumed, frame) = framer.feed(chunk);
+        reader.consume(consumed);
+        match frame {
+            Frame::Line => {
+                let done = respond_line(state, framer.line(), &mut out)?;
+                framer.clear();
+                if done {
+                    return Ok(());
+                }
+            }
+            Frame::Oversized => {
+                writeln!(out, "{}", oversized_response())?;
+                out.flush()?;
+            }
+            Frame::More => {}
+        }
+    }
 }
 
 /// The stdin/stdout transport.
@@ -56,55 +206,69 @@ pub fn serve_stdin(state: &ServeState) -> std::io::Result<()> {
 fn handle_conn(state: &ServeState, stream: TcpStream) {
     // An idle session must not pin the worker open across a shutdown:
     // poll the read with a timeout and re-check the flag between
-    // attempts. A timed-out read may leave a partial line in `line`
-    // (read_line appends what it consumed before erroring), so the
-    // buffer is only cleared after a complete line is processed.
+    // attempts. Partial input survives in the Framer across timeouts,
+    // so a slow writer's request is assembled across polls — up to the
+    // byte cap.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
     let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
     };
     let mut writer = stream;
-    let mut line = String::new();
+    let mut framer = Framer::new(MAX_LINE_BYTES);
     loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // peer closed
-            Ok(_) => {
-                let req = line.trim();
-                if !req.is_empty() {
-                    let resp = state.handle_line(req);
-                    // peer hangups mid-write are the peer's business
-                    if writeln!(writer, "{resp}").and_then(|()| writer.flush()).is_err() {
-                        break;
-                    }
-                }
-                line.clear();
-                if state.shutdown_requested() {
-                    break;
-                }
-            }
+        let chunk = match reader.fill_buf() {
+            Ok(chunk) if chunk.is_empty() => break, // peer closed
+            Ok(chunk) => chunk,
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                 if state.shutdown_requested() {
                     break;
                 }
+                continue;
             }
             Err(_) => break,
+        };
+        let (consumed, frame) = framer.feed(chunk);
+        reader.consume(consumed);
+        match frame {
+            Frame::Line => {
+                // peer hangups mid-write are the peer's business
+                let outcome = respond_line(state, framer.line(), &mut writer);
+                framer.clear();
+                match outcome {
+                    Ok(false) => {}
+                    Ok(true) | Err(_) => break,
+                }
+            }
+            Frame::Oversized => {
+                if writeln!(writer, "{}", oversized_response())
+                    .and_then(|()| writer.flush())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Frame::More => {}
         }
     }
 }
 
 /// The TCP transport: accept connections and serve each as one protocol
 /// session on a pool of `workers` scoped threads (clamped to ≥ 1).
-/// Returns after a `shutdown` request has been served and the pool has
-/// drained.
+/// `queue_cap` bounds connections waiting for a free worker (clamped to
+/// ≥ 1): past it the acceptor writes [`busy_response`] — with its
+/// `retry_after` backoff hint — and closes, so load shedding is explicit
+/// and immediate instead of an unbounded backlog. Returns after a
+/// `shutdown` request has been served and the pool has drained.
 pub fn serve_tcp(
     state: &ServeState,
     listener: TcpListener,
     workers: usize,
+    queue_cap: usize,
 ) -> std::io::Result<()> {
     let workers = workers.max(1);
     let local = listener.local_addr()?;
-    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(queue_cap.max(1));
     let rx = Mutex::new(rx);
     std::thread::scope(|scope| -> std::io::Result<()> {
         for _ in 0..workers {
@@ -128,8 +292,14 @@ pub fn serve_tcp(
             if state.shutdown_requested() {
                 break; // this was the wake-up poke
             }
-            if tx.send(stream).is_err() {
-                break;
+            match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(mut stream)) => {
+                    // bounded backlog: shed the connection with a typed
+                    // busy line instead of queueing it invisibly
+                    let _ = writeln!(stream, "{}", busy_response());
+                }
+                Err(TrySendError::Disconnected(_)) => break,
             }
         }
         drop(tx);
@@ -171,4 +341,59 @@ pub fn client_send_many(addr: &str, lines: &[String]) -> Result<Vec<String>> {
         }
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framer_splits_lines_across_chunks() {
+        let mut f = Framer::new(64);
+        let (c, fr) = f.feed(b"{\"op\":");
+        assert_eq!((c, fr), (6, Frame::More));
+        let (c, fr) = f.feed(b"\"ping\"}\nrest");
+        assert_eq!((c, fr), (8, Frame::Line), "consumes through the newline only");
+        assert_eq!(f.line(), b"{\"op\":\"ping\"}");
+        f.clear();
+        let (c, fr) = f.feed(b"rest");
+        assert_eq!((c, fr), (4, Frame::More));
+        assert_eq!(f.take_trailing().as_deref(), Some(&b"rest"[..]));
+        assert!(f.take_trailing().is_none(), "trailing line is taken once");
+    }
+
+    #[test]
+    fn framer_rejects_oversized_terminated_line() {
+        let mut f = Framer::new(8);
+        let (c, fr) = f.feed(b"0123456789ABC\nnext\n");
+        assert_eq!(fr, Frame::Oversized);
+        assert_eq!(c, 14, "consumes through the offending newline");
+        let (c, fr) = f.feed(b"next\n");
+        assert_eq!((c, fr), (5, Frame::Line), "session recovers on the next line");
+        assert_eq!(f.line(), b"next");
+    }
+
+    #[test]
+    fn framer_reports_slow_loris_before_the_newline_arrives() {
+        let mut f = Framer::new(8);
+        assert_eq!(f.feed(b"01234"), (5, Frame::More));
+        // cap crossed mid-line: reported immediately, no newline needed
+        assert_eq!(f.feed(b"56789"), (5, Frame::Oversized));
+        // the rest of the endless line is swallowed without re-reporting
+        assert_eq!(f.feed(b"AAAAAAAA"), (8, Frame::More));
+        assert!(f.take_trailing().is_none(), "oversized tail never resurfaces");
+        // ...until its newline finally lands, then framing resumes
+        assert_eq!(f.feed(b"tail\n"), (5, Frame::More));
+        assert_eq!(f.feed(b"ok\n"), (3, Frame::Line));
+        assert_eq!(f.line(), b"ok");
+    }
+
+    #[test]
+    fn framer_cap_counts_the_whole_buffered_line() {
+        let mut f = Framer::new(8);
+        assert_eq!(f.feed(b"0123"), (4, Frame::More));
+        assert_eq!(f.feed(b"4567"), (4, Frame::More), "exactly at cap is fine");
+        assert_eq!(f.feed(b"\n"), (1, Frame::Line));
+        assert_eq!(f.line(), b"01234567");
+    }
 }

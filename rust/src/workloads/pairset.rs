@@ -209,6 +209,18 @@ impl PairSet {
         self.pairs.is_some()
     }
 
+    /// Estimated resident bytes: the four per-sample u32 index arrays,
+    /// the `n+1` offset array, and (when enumerated) the materialized
+    /// pair list. The same accounting convention as
+    /// `Design::resident_bytes` — buffer payloads, not allocator
+    /// overhead — so the serve layer's `stats` can report what a cached
+    /// pair set costs to keep alive.
+    pub fn resident_bytes(&self) -> usize {
+        16 * self.n
+            + 8 * self.offset.len()
+            + self.pairs.as_ref().map_or(0, |p| 8 * p.len())
+    }
+
     /// Representation name for logs and bench labels.
     pub fn mode(&self) -> &'static str {
         if self.pairs.is_some() {

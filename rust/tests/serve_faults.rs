@@ -1,0 +1,416 @@
+//! Fault-injection tests for the solve service: hostile or broken
+//! clients must draw typed `{"ok":false,…}` responses — never a panic,
+//! a torn session, or a leaked worker. Covers malformed and truncated
+//! JSON frames, invalid UTF-8, oversized requests, slow-loris writes,
+//! mid-solve client disconnects, shutdown racing a solve, admission
+//! control under saturation, corrupted snapshot spills, and the
+//! serve-level deadline contract.
+//!
+//! CI runs this suite single-threaded (`--test-threads=1`): several
+//! tests own TCP listeners and wall-clock timing, and serializing them
+//! keeps the timing assertions honest on loaded runners.
+
+use std::io::{BufRead, BufReader, Cursor, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cutgen::serve::json::Json;
+use cutgen::serve::transport::{
+    client_send, client_send_many, serve_lines, serve_tcp, MAX_LINE_BYTES,
+};
+use cutgen::serve::ServeState;
+
+fn get_usize(v: &Json, key: &str) -> usize {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_usize().unwrap()
+}
+
+fn get_f64(v: &Json, key: &str) -> f64 {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_f64().unwrap()
+}
+
+fn get_bool(v: &Json, key: &str) -> bool {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_bool().unwrap()
+}
+
+fn assert_ok(v: &Json) {
+    assert!(get_bool(v, "ok"), "request failed: {v}");
+}
+
+fn assert_err(v: &Json) {
+    assert!(!get_bool(v, "ok"), "expected a typed error, got: {v}");
+    assert!(v.get("error").unwrap().as_str().is_some(), "errors carry a message: {v}");
+}
+
+const REGISTER: &str =
+    r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":11}}"#;
+
+/// Every malformed or truncated frame gets its own typed error response
+/// and the session keeps serving — including raw bytes that are not
+/// valid UTF-8, which a `String`-based reader would have torn down.
+#[test]
+fn malformed_frames_get_typed_errors_and_the_session_survives() {
+    let state = ServeState::new(8);
+    let mut script: Vec<u8> = Vec::new();
+    script.extend_from_slice(b"not json at all\n");
+    script.extend_from_slice(b"{\"op\":\"pi\n"); // truncated mid-string
+    script.extend_from_slice(b"{\"op\":\"solve\",\n"); // truncated mid-object
+    script.extend_from_slice(b"\xff\xfe\x80bad bytes\n"); // invalid UTF-8
+    script.extend_from_slice(b"\n"); // blank lines are skipped, not answered
+    script.extend_from_slice(b"{\"op\":\"ping\"}\n");
+    script.extend_from_slice(b"{\"op\":\"ping\"}"); // unterminated EOF line still served
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&state, Cursor::new(script), &mut out).unwrap();
+    let resp: Vec<Json> = std::str::from_utf8(&out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}")))
+        .collect();
+    assert_eq!(resp.len(), 6, "four errors + two pongs (blank line skipped)");
+    for r in &resp[..4] {
+        assert_err(r);
+    }
+    assert!(
+        resp[3].get("error").unwrap().as_str().unwrap().contains("UTF-8"),
+        "the byte-garbage line must name the encoding problem: {}",
+        resp[3]
+    );
+    assert_ok(&resp[4]);
+    assert_ok(&resp[5]);
+}
+
+/// A request line past [`MAX_LINE_BYTES`] draws a typed error and is
+/// discarded whole; the next line is served normally.
+#[test]
+fn oversized_lines_are_rejected_and_the_session_recovers() {
+    let state = ServeState::new(8);
+    let mut script: Vec<u8> = Vec::with_capacity(MAX_LINE_BYTES + 64);
+    script.extend_from_slice(br#"{"op":"ping","pad":""#);
+    script.resize(MAX_LINE_BYTES + 10, b'a');
+    script.extend_from_slice(b"\"}\n");
+    script.extend_from_slice(b"{\"op\":\"ping\"}\n");
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&state, Cursor::new(script), &mut out).unwrap();
+    let resp: Vec<Json> = std::str::from_utf8(&out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(resp.len(), 2);
+    assert_err(&resp[0]);
+    assert!(
+        resp[0].get("error").unwrap().as_str().unwrap().contains("exceeds"),
+        "oversized rejection must say so: {}",
+        resp[0]
+    );
+    assert_ok(&resp[1]);
+}
+
+/// Slow-loris defense over TCP: a client trickling an endless line is
+/// answered with the oversized error as soon as the cap is crossed —
+/// *before* any newline arrives — instead of growing the server's
+/// buffer until memory runs out; the session then recovers once the
+/// line finally terminates.
+#[test]
+fn slow_loris_write_is_answered_before_its_newline() {
+    let state = ServeState::new(8);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let state_ref = &state;
+        let server = scope.spawn(move || serve_tcp(state_ref, listener, 2, 4));
+
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let chunk = vec![b'x'; 600_000];
+        stream.write_all(&chunk).unwrap(); // under the 1 MiB cap: no response yet
+        std::thread::sleep(Duration::from_millis(300)); // the loris stalls…
+        stream.write_all(&chunk).unwrap(); // …then crosses the cap, newline still unsent
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_err(&resp);
+        assert!(
+            resp.get("error").unwrap().as_str().unwrap().contains("exceeds"),
+            "the trickled line must be rejected for size: {resp}"
+        );
+        // terminating the swallowed line restores normal service
+        stream.write_all(b"\n{\"op\":\"ping\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_ok(&Json::parse(line.trim()).unwrap());
+        drop(reader);
+        drop(stream);
+
+        let bye = client_send(&addr, r#"{"op":"shutdown"}"#).unwrap();
+        assert_ok(&Json::parse(&bye).unwrap());
+        server.join().unwrap().unwrap();
+    });
+}
+
+/// A client that fires a solve and vanishes without reading must not
+/// leak the worker: with a single-worker pool, a fresh client is served
+/// immediately afterwards.
+#[test]
+fn mid_solve_client_disconnect_does_not_leak_the_worker() {
+    let state = ServeState::new(8);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let state_ref = &state;
+        let server = scope.spawn(move || serve_tcp(state_ref, listener, 1, 4));
+
+        {
+            let mut rude = TcpStream::connect(&addr).unwrap();
+            rude.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            writeln!(rude, "{REGISTER}").unwrap();
+            let mut reader = BufReader::new(rude.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_ok(&Json::parse(line.trim()).unwrap());
+            // fire the solve and hang up without reading the response
+            writeln!(
+                rude,
+                r#"{{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05}}"#
+            )
+            .unwrap();
+            rude.flush().unwrap();
+        } // both halves dropped here: the peer is gone mid-solve
+
+        // the lone worker must finish the orphaned session and take this one
+        let responses = client_send_many(
+            &addr,
+            &[REGISTER.to_string(), r#"{"op":"ping"}"#.to_string()],
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 2, "the worker must survive the disconnect");
+        for r in &responses {
+            assert_ok(&Json::parse(r).unwrap());
+        }
+
+        let bye = client_send(&addr, r#"{"op":"shutdown"}"#).unwrap();
+        assert_ok(&Json::parse(&bye).unwrap());
+        server.join().unwrap().unwrap();
+    });
+}
+
+/// A shutdown that lands while a solve is in flight: the solve's stop
+/// callback sees the flag, abandons generation after the in-progress
+/// round, and still returns a well-formed best-so-far response
+/// (`timed_out` set, objective present) instead of panicking or
+/// hanging. Requesting shutdown *first* makes the race deterministic:
+/// the very first poll sees the flag.
+#[test]
+fn shutdown_during_solve_returns_best_so_far() {
+    let state = ServeState::new(8);
+    assert_ok(&Json::parse(&state.handle_line(REGISTER)).unwrap());
+    assert_ok(&Json::parse(&state.handle_line(r#"{"op":"shutdown"}"#)).unwrap());
+    let resp = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"cache":false}"#,
+    ))
+    .unwrap();
+    assert_ok(&resp);
+    assert!(get_bool(&resp, "timed_out"), "the flag must stop generation: {resp}");
+    assert!(!get_bool(&resp, "converged"));
+    assert_eq!(get_usize(&resp, "rounds"), 1, "exactly the in-progress round completes");
+    assert!(get_f64(&resp, "objective").is_finite(), "best-so-far is still a solution");
+}
+
+/// Admission control: a saturated server (here: zero solve slots, the
+/// drain configuration) rejects solve-class requests with the typed
+/// busy response and its `retry_after` backoff hint, while lightweight
+/// ops — register, ping, stats — are never gated.
+#[test]
+fn admission_control_rejects_solves_when_saturated() {
+    let state = ServeState::new(8).with_max_inflight(0);
+    assert_ok(&Json::parse(&state.handle_line(REGISTER)).unwrap());
+    assert_ok(&Json::parse(&state.handle_line(r#"{"op":"ping"}"#)).unwrap());
+    assert_ok(&Json::parse(&state.handle_line(r#"{"op":"stats"}"#)).unwrap());
+    for gated in [
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05}"#,
+        r#"{"op":"grid","dataset":"d","workload":"l1svm","grid":3}"#,
+        r#"{"op":"batch","dataset":"d","requests":[{"workload":"l1svm"}]}"#,
+    ] {
+        let resp = Json::parse(&state.handle_line(gated)).unwrap();
+        assert_err(&resp);
+        assert_eq!(
+            get_usize(&resp, "retry_after"),
+            cutgen::serve::RETRY_AFTER_MS,
+            "rejections must carry the backoff hint: {resp}"
+        );
+    }
+    // a server with slots admits the same request
+    let open = ServeState::new(8).with_max_inflight(2);
+    assert_ok(&Json::parse(&open.handle_line(REGISTER)).unwrap());
+    assert_ok(&Json::parse(&open.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05}"#,
+    ))
+    .unwrap());
+}
+
+/// Corrupted snapshot spills degrade to cold solves: a restarted server
+/// whose persist dir was vandalized serves the request correctly
+/// (cold, converged) instead of panicking or reporting a bogus warm
+/// start.
+#[test]
+fn corrupt_persist_files_degrade_to_cold_solves() {
+    let dir =
+        std::env::temp_dir().join(format!("cutgen-persist-faults-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let solve =
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"eps":1e-6}"#;
+    let first = ServeState::new(8).with_persist_dir(&dir).unwrap();
+    assert_ok(&Json::parse(&first.handle_line(REGISTER)).unwrap());
+    let cold = Json::parse(&first.handle_line(solve)).unwrap();
+    assert_ok(&cold);
+    drop(first);
+    // vandalize every spilled snapshot
+    let mut clobbered = 0usize;
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let path = f.unwrap().path();
+        std::fs::write(&path, b"{not json").unwrap();
+        clobbered += 1;
+    }
+    assert!(clobbered >= 1, "the first life must have spilled a snapshot");
+    let second = ServeState::new(8).with_persist_dir(&dir).unwrap();
+    assert_ok(&Json::parse(&second.handle_line(REGISTER)).unwrap());
+    let resp = Json::parse(&second.handle_line(solve)).unwrap();
+    assert_ok(&resp);
+    assert!(!get_bool(&resp, "warm"), "corrupt spills must read as misses: {resp}");
+    assert!(get_bool(&resp, "converged"));
+    let reference = get_f64(&cold, "objective");
+    let after = get_f64(&resp, "objective");
+    assert!(
+        (after - reference).abs() / reference.max(1e-9) <= 1e-6,
+        "the cold re-solve must match the original: {after} vs {reference}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The serve-level deadline contract. A deadline too tight to converge
+/// still returns `ok` with a feasible best-so-far answer: `timed_out`
+/// is reported honestly, and the restricted objective can only sit at
+/// or above the fully converged one (column generation improves the
+/// objective monotonically as columns enter).
+#[test]
+fn deadline_capped_solve_returns_feasible_best_so_far() {
+    let state = ServeState::new(8);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"big","synthetic":{"kind":"l1","n":100,"p":400,"seed":29}}"#,
+    ))
+    .unwrap());
+    let full = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"big","workload":"l1svm","lambda_frac":0.02,"eps":1e-8,"max_cols_per_round":1,"cache":false}"#,
+    ))
+    .unwrap();
+    assert_ok(&full);
+    assert!(get_bool(&full, "converged"));
+    assert!(!get_bool(&full, "timed_out"));
+    let capped = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"big","workload":"l1svm","lambda_frac":0.02,"eps":1e-8,"max_cols_per_round":1,"cache":false,"deadline_ms":1}"#,
+    ))
+    .unwrap();
+    assert_ok(&capped);
+    assert!(
+        get_bool(&capped, "converged") || get_bool(&capped, "timed_out"),
+        "a capped solve either finishes or says it was cut: {capped}"
+    );
+    let full_obj = get_f64(&full, "objective");
+    let capped_obj = get_f64(&capped, "objective");
+    assert!(capped_obj.is_finite(), "best-so-far must be a real solution");
+    assert!(
+        capped_obj >= full_obj * (1.0 - 1e-9),
+        "a restricted objective cannot beat the converged one: {capped_obj} vs {full_obj}"
+    );
+    if get_bool(&capped, "timed_out") {
+        assert!(
+            get_usize(&capped, "rounds") <= get_usize(&full, "rounds"),
+            "a cut solve cannot run longer than the full one"
+        );
+    }
+}
+
+/// A generous deadline is observationally free: with the cache pinned
+/// off, the response is **byte-identical** to the same request with no
+/// deadline at all — `timed_out:false` is always present, so the field
+/// layout does not depend on whether a deadline was supplied.
+#[test]
+fn generous_deadline_is_byte_identical_to_none() {
+    let state = ServeState::new(8);
+    assert_ok(&Json::parse(&state.handle_line(REGISTER)).unwrap());
+    let bare = state.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"cache":false}"#,
+    );
+    let generous = state.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"cache":false,"deadline_ms":600000}"#,
+    );
+    assert_ok(&Json::parse(&bare).unwrap());
+    assert_eq!(bare, generous, "a generous deadline must not perturb the response");
+}
+
+/// Batch-level faults: non-object items and unknown workloads fail
+/// inline without poisoning their neighbors, and the session keeps
+/// serving afterwards.
+#[test]
+fn broken_batch_items_fail_inline_only() {
+    let state = ServeState::new(8);
+    assert_ok(&Json::parse(&state.handle_line(REGISTER)).unwrap());
+    let resp = Json::parse(&state.handle_line(concat!(
+        r#"{"op":"batch","dataset":"d","requests":["#,
+        r#"42,"#,
+        r#"{"workload":"lasso"},"#,
+        r#"{"workload":"l1svm","lambda_frac":0.05}"#,
+        r#"]}"#,
+    )))
+    .unwrap();
+    assert_ok(&resp);
+    assert_eq!(get_usize(&resp, "count"), 3);
+    let results = resp.get("results").unwrap().as_arr().unwrap();
+    assert_err(&results[0]);
+    assert_err(&results[1]);
+    assert_ok(&results[2]);
+    assert_ok(&Json::parse(&state.handle_line(r#"{"op":"ping"}"#)).unwrap());
+}
+
+/// TCP handshake under a full accept queue: with a saturated bounded
+/// queue the acceptor itself answers the busy response and closes —
+/// load shedding is visible to the client rather than an invisible,
+/// unbounded backlog. (`drain` keeps a worker pinned so queued
+/// connections stay queued.)
+#[test]
+fn full_accept_queue_sheds_load_with_the_busy_response() {
+    let state = ServeState::new(8);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let state_ref = &state;
+        let server = scope.spawn(move || serve_tcp(state_ref, listener, 1, 1));
+
+        // pin the only worker with an open, idle session
+        let pin = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // fill the queue with a second idle connection
+        let queued = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // the third must be shed by the acceptor with a busy line
+        let mut shed = TcpStream::connect(&addr).unwrap();
+        shed.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut line = String::new();
+        let n = BufReader::new(shed.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(n > 0, "the shed connection must get the busy line before close");
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_err(&resp);
+        assert_eq!(get_usize(&resp, "retry_after"), cutgen::serve::RETRY_AFTER_MS);
+        // …and nothing more: the acceptor hung up
+        let mut rest = Vec::new();
+        let _ = shed.read_to_end(&mut rest);
+        assert!(rest.is_empty(), "shed connections are closed after the busy line");
+        drop(shed);
+        drop(pin); // frees the worker, which then drains `queued`
+        drop(queued);
+
+        let bye = client_send(&addr, r#"{"op":"shutdown"}"#).unwrap();
+        assert_ok(&Json::parse(&bye).unwrap());
+        server.join().unwrap().unwrap();
+    });
+}
