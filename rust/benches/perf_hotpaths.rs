@@ -525,6 +525,47 @@ fn main() {
         }
     }
 
+    // 10. instrumentation overhead — the engine always reads its span
+    // clocks; the only optional cost is fanning each round event into a
+    // TraceSink (what `"trace": true` turns on in serve, via a bounded
+    // RingSink). sink=off is the default path for every solve, so the
+    // pair brackets the full price of round tracing end to end.
+    {
+        use cutgen::coordinator::GenParams;
+        use cutgen::obs::RingSink;
+        use std::sync::Arc;
+
+        let off = GenParams::default();
+        let on = GenParams { sink: Some(Arc::new(RingSink::new(512))), ..GenParams::default() };
+        let before = recs.len();
+        for (tag, params) in [("off", &off), ("ring", &on)] {
+            bench(&mut recs, &format!("engine solve sink={tag} n=100"), 0.0, || {
+                let sol = cutgen::coordinator::l1svm::column_generation(
+                    &ds2,
+                    &be2,
+                    lam,
+                    &[0, 1],
+                    params,
+                );
+                black_box(sol.objective);
+            });
+        }
+        let base = recs[before].us_per_op;
+        let traced = recs[before + 1].us_per_op;
+        let overhead = (traced - base) / base * 100.0;
+        println!(
+            "    ring-sink tracing overhead {overhead:+.2}% \
+             ({base:.1} -> {traced:.1} us/op)"
+        );
+        // emission is one struct copy per round: anything past 2% is a
+        // regression. The absolute floor keeps smoke-mode timer noise on
+        // a sub-millisecond solve from flaking the run.
+        assert!(
+            overhead <= 2.0 || traced - base <= 150.0,
+            "ring-sink tracing costs {overhead:.2}% (> 2%) on the end-to-end solve"
+        );
+    }
+
     if json {
         write_json(&recs, if smoke { "smoke" } else { "default" }, &agree_note);
     }

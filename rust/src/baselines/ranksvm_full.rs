@@ -37,7 +37,8 @@ pub fn solve_full_ranksvm(
     let mut solver = SimplexSolver::new(model);
     let st = solver.solve();
     if st != Status::Optimal {
-        eprintln!("[ranksvm_full] solve did not reach optimality: {st:?}");
+        let msg = format!("[ranksvm_full] solve did not reach optimality: {st:?}");
+        crate::obs::stderr_line(&msg);
     }
     let mut beta = vec![0.0; p];
     for j in 0..p {

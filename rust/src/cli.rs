@@ -7,19 +7,20 @@
 //!                 [--lambda-frac F] [--method fo-clg|clg|cng|clcng|full-lp|psm]
 //!                 [--backend native|pjrt] [--eps E] [--group-size G]
 //!                 [--init auto|screening|fista|blockcd|subsample] [--seed-budget K]
-//!                 [--threads T] [--trace]
+//!                 [--threads T] [--trace] [--trace-json FILE]
 //! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--seed-budget K] [--threads T]
 //! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
 //!                 [--pair-mode auto|enumerate|implicit]
-//!                 [--seed-budget K] [--threads T] [--trace]
+//!                 [--seed-budget K] [--threads T] [--trace] [--trace-json FILE]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
-//!                 [--seed-budget K] [--threads T] [--trace]
+//!                 [--seed-budget K] [--threads T] [--trace] [--trace-json FILE]
 //! cutgen serve    [--port 7878] [--host 127.0.0.1] [--workers W]
 //!                 [--cache-cap N] [--cache-bytes B] [--persist-dir DIR]
-//!                 [--max-inflight N] [--queue-cap N] [--stdin]
+//!                 [--max-inflight N] [--queue-cap N] [--slow-solve-ms MS] [--stdin]
 //! cutgen client   [--port 7878] [--host H] --send '<json>' | --file requests.jsonl
+//!                 | --metrics
 //! cutgen bench    --exp table1|…|fig4|all [--scale smoke|default|paper]
 //! ```
 //!
@@ -32,6 +33,11 @@
 //! them. `--pair-mode` picks RankSVM's comparison-pair representation
 //! (`auto` enumerates small candidate sets, goes implicit — O(n log n)
 //! pricing, no O(n²) list — beyond; see `docs/ranksvm-scaling.md`).
+//!
+//! `--trace` prints one human-readable stderr line per generation
+//! round; `--trace-json FILE` additionally streams the typed round
+//! events as JSONL (schema in `docs/observability.md`) for offline
+//! time-breakdown analysis. The two compose — either or both.
 
 use std::collections::BTreeMap;
 
@@ -98,8 +104,8 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer")),
         }
     }
-    /// Generation params with the shared `--eps/--threads/--trace/--init/
-    /// --seed-budget/--pair-mode` knobs folded in.
+    /// Generation params with the shared `--eps/--threads/--trace/
+    /// --trace-json/--init/--seed-budget/--pair-mode` knobs folded in.
     fn gen_params(&self) -> Result<GenParams> {
         let init = match self.get("init") {
             Some(s) => InitStrategy::parse(s)?,
@@ -109,10 +115,22 @@ impl Args {
             Some(s) => PairMode::parse(s)?,
             None => PairMode::Auto,
         };
+        // --trace-json streams typed round events to a JSONL file,
+        // independent of the human-readable --trace stderr lines
+        let sink: Option<std::sync::Arc<dyn crate::obs::TraceSink>> =
+            match self.get("trace-json") {
+                Some(path) => {
+                    let s = crate::obs::JsonlSink::create(std::path::Path::new(path))
+                        .with_context(|| format!("creating --trace-json file {path}"))?;
+                    Some(std::sync::Arc::new(s))
+                }
+                None => None,
+            };
         Ok(GenParams {
             eps: self.get_f64("eps", 1e-2)?,
             threads: self.get_usize("threads", 1)?.max(1),
             trace: self.get("trace").is_some(),
+            sink,
             init,
             seed_budget: self
                 .get_usize("seed-budget", crate::engine::DEFAULT_SEED_BUDGET)?
@@ -548,17 +566,23 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
 /// bytes (0 = entry cap only), `--persist-dir` spills snapshots to disk
 /// so warm starts survive restarts, and `--max-inflight` caps
 /// concurrent solves (0 = unlimited); excess load is rejected with a
-/// `retry_after` hint. See `docs/serving.md`.
+/// `retry_after` hint. `--slow-solve-ms` logs a structured stderr line
+/// (with the round trace) for any solve/grid over the threshold. See
+/// `docs/serving.md` and `docs/observability.md`.
 fn serve_cmd(args: &Args) -> Result<()> {
     let cache_cap = args.get_usize("cache-cap", crate::serve::DEFAULT_CACHE_CAP)?;
     let cache_bytes = args.get_usize("cache-bytes", 0)?;
     let max_inflight = args.get_usize("max-inflight", 0)?;
+    let slow_solve_ms = args.get_usize("slow-solve-ms", 0)?;
     let mut state = crate::serve::ServeState::new(cache_cap);
     if cache_bytes > 0 {
         state = state.with_cache_bytes(cache_bytes);
     }
     if max_inflight > 0 {
         state = state.with_max_inflight(max_inflight);
+    }
+    if slow_solve_ms > 0 {
+        state = state.with_slow_solve_ms(slow_solve_ms as u64);
     }
     if let Some(dir) = args.get("persist-dir") {
         state = state
@@ -576,20 +600,32 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let addr = format!("{host}:{port}");
     let listener = std::net::TcpListener::bind(&addr)
         .with_context(|| format!("binding {addr}"))?;
-    eprintln!(
+    crate::obs::stderr_line(&format!(
         "cutgen serve: listening on {addr} ({workers} workers, cache cap {cache_cap}); \
          send {{\"op\":\"shutdown\"}} to stop"
-    );
+    ));
     crate::serve::transport::serve_tcp(&state, listener, workers, queue_cap)?;
     Ok(())
 }
 
 /// `cutgen client`: send request lines to a running server and print the
 /// response lines. `--send` takes one inline JSON request; `--file`
-/// streams a `.jsonl` file through one connection.
+/// streams a `.jsonl` file through one connection; `--metrics` fetches
+/// the server's Prometheus text exposition and prints it raw (ready to
+/// pipe to a scrape file or `promtool`).
 fn client_cmd(args: &Args) -> Result<()> {
     let host = args.get("host").unwrap_or("127.0.0.1");
     let addr = format!("{host}:{}", args.get_usize("port", 7878)?);
+    if args.get("metrics").is_some() {
+        let resp = crate::serve::transport::client_send(&addr, "{\"op\":\"metrics\"}")?;
+        let doc = crate::serve::json::Json::parse(&resp)?;
+        match doc.get("exposition").and_then(|v| v.as_str()) {
+            // the exposition text ends with its own newline
+            Some(text) => print!("{text}"),
+            None => bail!("server returned no exposition: {resp}"),
+        }
+        return Ok(());
+    }
     if let Some(line) = args.get("send") {
         println!("{}", crate::serve::transport::client_send(&addr, line)?);
         return Ok(());
@@ -711,6 +747,30 @@ mod tests {
         // --grid and an explicit non-gen --method conflict loudly
         let d = args(&["dantzig", "--synthetic", "20,12", "--grid", "3", "--method", "full-lp"]);
         assert!(main_with(d).is_err());
+    }
+
+    #[test]
+    fn trace_json_flag_streams_round_events() {
+        let out = std::env::temp_dir()
+            .join(format!("cutgen_cli_trace_{}.jsonl", std::process::id()));
+        let a = args(&[
+            "train",
+            "--synthetic",
+            "30,80",
+            "--method",
+            "clg",
+            "--trace-json",
+            out.to_str().unwrap(),
+        ]);
+        main_with(a).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty(), "at least one round event");
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"round\"")));
+        for l in &lines {
+            crate::serve::json::Json::parse(l).expect("every trace line is valid JSON");
+        }
     }
 
     #[test]

@@ -223,6 +223,9 @@ impl RestrictedProblem for GroupProblem<'_, '_> {
     fn add_cols(&mut self, idx: &[usize]) {
         self.rg.add_groups(self.ds, idx);
     }
+    fn working_set_size(&self) -> usize {
+        self.rg.g_set().len()
+    }
 }
 
 /// Initial groups at λ_max via eq. (19).

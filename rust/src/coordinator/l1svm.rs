@@ -301,6 +301,9 @@ impl RestrictedProblem for L1Problem<'_> {
     fn add_cols(&mut self, idx: &[usize]) {
         self.rl1.add_features(self.ds, idx);
     }
+    fn working_set_size(&self) -> usize {
+        self.rl1.j_set().len() + self.rl1.i_set().len()
+    }
 }
 
 fn finish(

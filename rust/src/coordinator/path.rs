@@ -17,6 +17,7 @@ use crate::coordinator::{GenParams, GenStats, SvmSolution};
 use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine, Initializer, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
+use crate::obs::Span;
 use crate::workloads::dantzig::{DantzigProblem, RestrictedDantzig};
 use crate::workloads::pairset::PairSet;
 use crate::workloads::ranksvm::{pair_rows_cap, RankProblem, RestrictedRank};
@@ -62,6 +63,11 @@ pub struct PathSolution {
     pub working_set: usize,
     /// Cumulative generation stats up to and including this step.
     pub stats: GenStats,
+    /// This step's own engine-run delta (the first point also carries
+    /// the seed phase's `seed_ns`): per-λ rounds, simplex iterations,
+    /// span timings, and whether *this* point was cut short by the
+    /// caller's deadline — what the serve `grid` op reports per point.
+    pub step: GenStats,
     /// Snapshot of the working sets after this step — lets callers (the
     /// serve `grid` endpoint) seed a warm-start cache at **every**
     /// visited λ, not just the last. For the L1 path the row channel is
@@ -88,22 +94,47 @@ pub fn regularization_path(
     lambdas: &[f64],
     params: &GenParams,
 ) -> (Vec<PathSolution>, SvmSolution) {
+    regularization_path_with_stop(ds, backend, lambdas, params, None)
+}
+
+/// [`regularization_path`] with a cooperative stop callback threaded
+/// into every engine run (the serve layer's grid deadline). When a
+/// step is cut short the path stops at that point — later λ values
+/// would only re-poll the expired deadline — so the returned vector
+/// may be shorter than `lambdas`; the last entry has
+/// [`GenStats::timed_out`] set in its `step`.
+pub fn regularization_path_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambdas: &[f64],
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> (Vec<PathSolution>, SvmSolution) {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
     let all_i: Vec<usize> = (0..ds.n()).collect();
+    let seed_span = Span::start();
     let init = Initializer::for_path(params).seed_l1_cols(ds, backend, lambdas[0]).ws.cols;
+    let seed_ns = seed_span.elapsed_ns();
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rl1 = RestrictedL1::new(ds, lambdas[0], &all_i, &init);
     rl1.set_threads(params.threads);
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
-    let engine = GenEngine::new(params);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
     let mut stats = GenStats { cols_added: init.len(), ..Default::default() };
     let mut out = Vec::with_capacity(lambdas.len());
 
-    for &lambda in lambdas {
+    for (k, &lambda) in lambdas.iter().enumerate() {
         prob.set_lambda(lambda);
         // column generation at this λ (warm-started from previous λ)
-        accumulate(&mut stats, engine.run(&mut prob));
+        let mut step = engine.run(&mut prob);
+        if k == 0 {
+            step.seed_ns = seed_ns; // the seed phase belongs to the first point
+        }
+        accumulate(&mut stats, step);
         let (support, b0) = prob.inner().beta_support();
         let report = l1_report(ds, &support, b0, lambda);
         let mut ws = prob.export_working_set();
@@ -114,8 +145,12 @@ pub fn regularization_path(
             support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            step,
             ws,
         });
+        if step.timed_out {
+            break;
+        }
     }
 
     // materialize the final solution
@@ -147,6 +182,9 @@ pub(crate) fn accumulate(stats: &mut GenStats, step: GenStats) {
     stats.cols_added += step.cols_added;
     stats.rows_added += step.rows_added;
     stats.simplex_iters += step.simplex_iters;
+    stats.solve_ns += step.solve_ns;
+    stats.pricing_ns += step.pricing_ns;
+    stats.seed_ns += step.seed_ns;
     stats.converged = step.converged;
     stats.stalled = step.stalled;
     stats.timed_out |= step.timed_out;
@@ -166,19 +204,41 @@ pub fn group_path(
     lambdas: &[f64],
     params: &GenParams,
 ) -> Vec<PathSolution> {
+    group_path_with_stop(ds, backend, groups, lambdas, params, None)
+}
+
+/// [`group_path`] with a cooperative stop callback; same early-exit
+/// contract as [`regularization_path_with_stop`].
+pub fn group_path_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    groups: &[Vec<usize>],
+    lambdas: &[f64],
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> Vec<PathSolution> {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let seed_span = Span::start();
     let seed = Initializer::for_path(params).seed_group(ds, groups, lambdas[0]).ws.cols;
+    let seed_ns = seed_span.elapsed_ns();
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rg = RestrictedGroup::new(ds, groups, lambdas[0], &seed);
     rg.set_threads(params.threads);
     let mut prob = GroupProblem::new(rg, ds, &pricer);
-    let engine = GenEngine::new(params);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
     let mut stats = GenStats { cols_added: seed.len(), ..Default::default() };
     let mut out = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
+    for (k, &lambda) in lambdas.iter().enumerate() {
         prob.set_lambda(lambda);
-        accumulate(&mut stats, engine.run(&mut prob));
+        let mut step = engine.run(&mut prob);
+        if k == 0 {
+            step.seed_ns = seed_ns;
+        }
+        accumulate(&mut stats, step);
         let (support, b0) = prob.inner().beta_support();
         let report = group_report(ds, groups, &support, b0, lambda);
         out.push(PathSolution {
@@ -187,8 +247,12 @@ pub fn group_path(
             support: report.support,
             working_set: prob.inner().g_set().len(),
             stats,
+            step,
             ws: prob.export_working_set(),
         });
+        if step.timed_out {
+            break;
+        }
     }
     out
 }
@@ -205,20 +269,41 @@ pub fn dantzig_path(
     lambdas: &[f64],
     params: &GenParams,
 ) -> Vec<PathSolution> {
+    dantzig_path_with_stop(ds, backend, lambdas, params, None)
+}
+
+/// [`dantzig_path`] with a cooperative stop callback; same early-exit
+/// contract as [`regularization_path_with_stop`].
+pub fn dantzig_path_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambdas: &[f64],
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> Vec<PathSolution> {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let seed_span = Span::start();
     let seed = Initializer::for_path(params).seed_dantzig(ds, backend, lambdas[0]).ws.rows;
+    let seed_ns = seed_span.elapsed_ns();
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rd = RestrictedDantzig::new(ds, lambdas[0], &seed);
     rd.set_threads(params.threads);
     let mut prob = DantzigProblem::new(rd, ds, &pricer);
-    let engine = GenEngine::new(params);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
     let mut stats =
         GenStats { cols_added: seed.len(), rows_added: seed.len(), ..Default::default() };
     let mut out = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
+    for (k, &lambda) in lambdas.iter().enumerate() {
         prob.set_lambda(lambda);
-        accumulate(&mut stats, engine.run(&mut prob));
+        let mut step = engine.run(&mut prob);
+        if k == 0 {
+            step.seed_ns = seed_ns;
+        }
+        accumulate(&mut stats, step);
         let report = dantzig_report(ds.p(), &prob.inner().beta_support());
         out.push(PathSolution {
             lambda,
@@ -229,8 +314,12 @@ pub fn dantzig_path(
             support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            step,
             ws: prob.export_working_set(),
         });
+        if step.timed_out {
+            break;
+        }
     }
     out
 }
@@ -246,24 +335,46 @@ pub fn ranksvm_path(
     lambdas: &[f64],
     params: &GenParams,
 ) -> Vec<PathSolution> {
+    ranksvm_path_with_stop(ds, backend, pairs, lambdas, params, None)
+}
+
+/// [`ranksvm_path`] with a cooperative stop callback; same early-exit
+/// contract as [`regularization_path_with_stop`].
+pub fn ranksvm_path_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &PairSet,
+    lambdas: &[f64],
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> Vec<PathSolution> {
     assert!(!lambdas.is_empty());
     debug_assert!(lambdas.windows(2).all(|w| w[0] >= w[1]), "grid must decrease");
+    let seed_span = Span::start();
     let seed = Initializer::for_path(params).seed_ranksvm(ds, backend, pairs, lambdas[0]).ws;
+    let seed_ns = seed_span.elapsed_ns();
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rr = RestrictedRank::new(ds, pairs, lambdas[0], &seed.rows, &seed.cols);
     rr.set_threads(params.threads);
     rr.set_pair_cap(pair_rows_cap(params));
     let mut prob = RankProblem::new(rr, ds, &pricer);
-    let engine = GenEngine::new(params);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
     let mut stats = GenStats {
         cols_added: seed.cols.len(),
         rows_added: seed.rows.len(),
         ..Default::default()
     };
     let mut out = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
+    for (k, &lambda) in lambdas.iter().enumerate() {
         prob.set_lambda(lambda);
-        accumulate(&mut stats, engine.run(&mut prob));
+        let mut step = engine.run(&mut prob);
+        if k == 0 {
+            step.seed_ns = seed_ns;
+        }
+        accumulate(&mut stats, step);
         let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
         out.push(PathSolution {
             lambda,
@@ -271,8 +382,12 @@ pub fn ranksvm_path(
             support: report.support,
             working_set: prob.inner().j_set().len(),
             stats,
+            step,
             ws: prob.export_working_set(),
         });
+        if step.timed_out {
+            break;
+        }
     }
     out
 }
@@ -351,6 +466,29 @@ mod tests {
             assert_eq!(pt.ws.cols.len(), pt.working_set);
             assert!(pt.ws.rows.is_empty(), "L1 path snapshots carry columns only");
         }
+    }
+
+    #[test]
+    fn path_stop_callback_truncates_and_marks_steps() {
+        let d = ds();
+        let backend = NativeBackend::new(&d.x);
+        let grid = geometric_grid(d.lambda_max_l1(), 5, 0.5);
+        let params = GenParams { seed_budget: 5, ..Default::default() };
+        let stop = || true; // deadline already expired at entry
+        let (path, _) = regularization_path_with_stop(&d, &backend, &grid, &params, Some(&stop));
+        assert_eq!(path.len(), 1, "expired deadline stops after the first point");
+        assert!(path[0].step.timed_out);
+        assert!(path[0].stats.timed_out);
+        // without a callback: full path, per-point deltas sum to the
+        // cumulative stats, and the seed span lands on the first point
+        let (full, _) = regularization_path(&d, &backend, &grid, &params);
+        assert_eq!(full.len(), 5);
+        let sum_rounds: usize = full.iter().map(|p| p.step.rounds).sum();
+        assert_eq!(sum_rounds, full.last().unwrap().stats.rounds);
+        let sum_solve: u64 = full.iter().map(|p| p.step.solve_ns).sum();
+        assert_eq!(sum_solve, full.last().unwrap().stats.solve_ns);
+        assert!(full.iter().all(|p| !p.step.timed_out));
+        assert_eq!(full[0].step.seed_ns, full.last().unwrap().stats.seed_ns);
     }
 
     #[test]

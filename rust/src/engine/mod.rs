@@ -34,9 +34,12 @@ pub mod init;
 
 pub use init::{InitStrategy, Initializer, Seed, DEFAULT_SEED_BUDGET};
 
+use std::sync::Arc;
+
 use crate::backend::{par_xtv, Backend};
 use crate::bail;
 use crate::error::Result;
+use crate::obs::{RoundEvent, Span, StderrSink, TraceSink};
 use crate::simplex::Status;
 
 /// How RankSVM's comparison-pair channel represents its O(n²) implicit
@@ -114,6 +117,12 @@ pub struct GenParams {
     pub pair_mode: PairMode,
     /// Print one line per round to stderr.
     pub trace: bool,
+    /// Optional structured sink receiving one typed [`RoundEvent`] per
+    /// round plus terminal messages (stall/stop), independent of
+    /// [`GenParams::trace`]'s stderr lines: a [`crate::obs::RingSink`]
+    /// for serve's `"trace": true` responses, a
+    /// [`crate::obs::JsonlSink`] for `--trace-json`.
+    pub sink: Option<Arc<dyn TraceSink>>,
 }
 
 impl Default for GenParams {
@@ -129,6 +138,7 @@ impl Default for GenParams {
             seed_budget: DEFAULT_SEED_BUDGET,
             pair_mode: PairMode::Auto,
             trace: false,
+            sink: None,
         }
     }
 }
@@ -154,6 +164,15 @@ pub struct GenStats {
     /// shutdown. The restricted solution of the last completed round is
     /// still feasible and its objective bounds the converged one.
     pub timed_out: bool,
+    /// Wall-clock nanoseconds in restricted re-solves (the simplex
+    /// share of the paper's time-breakdown tables).
+    pub solve_ns: u64,
+    /// Wall-clock nanoseconds pricing left-out rows and columns.
+    pub pricing_ns: u64,
+    /// Wall-clock nanoseconds in the [`Initializer`] seed phase —
+    /// filled by the drivers that own seeding (coordinators, serve),
+    /// not by [`GenEngine::run`] itself.
+    pub seed_ns: u64,
 }
 
 /// A serializable snapshot of a restricted problem's working sets.
@@ -230,6 +249,12 @@ pub trait RestrictedProblem {
     fn add_rows(&mut self, idx: &[usize]);
     /// Bring the selected columns into the model.
     fn add_cols(&mut self, idx: &[usize]);
+    /// Current working-set size (columns + rows in the restricted
+    /// model), reported in [`RoundEvent`]s. Defaults to 0 for adapters
+    /// that don't track it.
+    fn working_set_size(&self) -> usize {
+        0
+    }
 }
 
 /// Scores candidate columns from a dual-derived vector: `q = Xᵀv`.
@@ -391,13 +416,36 @@ impl<'p> GenEngine<'p> {
     /// across several runs on one warm model (the regularization path).
     pub fn run(&self, prob: &mut dyn RestrictedProblem) -> GenStats {
         let p = self.params;
+        // `--trace` keeps its historical stderr lines via the stderr
+        // sink; a structured sink (ring, JSONL) rides along
+        // independently. Both receive identical events.
+        let stderr_sink = if p.trace { Some(StderrSink) } else { None };
+        let emit_round = |ev: &RoundEvent| {
+            if let Some(s) = &stderr_sink {
+                s.round(ev);
+            }
+            if let Some(s) = &p.sink {
+                s.round(ev);
+            }
+        };
+        let emit_message = |text: &str| {
+            if let Some(s) = &stderr_sink {
+                s.message(text);
+            }
+            if let Some(s) = &p.sink {
+                s.message(text);
+            }
+        };
         let iters0 = prob.simplex_iters();
         let mut stats = GenStats::default();
         let mut last_obj = f64::NAN;
         let mut stall = 0usize;
         for round in 0..p.max_rounds {
             stats.rounds += 1;
+            let span = Span::start();
             let st = prob.solve();
+            let solve_ns = span.elapsed_ns();
+            stats.solve_ns += solve_ns;
             debug_assert_eq!(st, Status::Optimal, "restricted LP not optimal: {st:?}");
             let obj = prob.objective();
             // Deadline/cancellation: checked after the re-solve so the
@@ -407,33 +455,43 @@ impl<'p> GenEngine<'p> {
             if let Some(stop) = self.should_stop {
                 if stop() {
                     stats.timed_out = true;
-                    if p.trace {
-                        eprintln!("[engine] stopped by caller after round {}", round + 1);
-                    }
+                    emit_message(&format!("stopped by caller after round {}", round + 1));
                     break;
                 }
             }
+            let span = Span::start();
             let viol_rows = prob.price_rows(p.eps);
             let viol_cols = prob.price_cols(p.eps);
-            if p.trace {
-                eprintln!(
-                    "[engine] round {:>4}: obj {obj:.6e}, viol rows/cols {}/{}, simplex {}",
-                    round + 1,
-                    viol_rows.len(),
-                    viol_cols.len(),
-                    prob.simplex_iters() - iters0,
-                );
-            }
+            let pricing_ns = span.elapsed_ns();
+            stats.pricing_ns += pricing_ns;
+            let mut ev = RoundEvent {
+                round: round + 1,
+                objective: obj,
+                viol_rows: viol_rows.len(),
+                viol_cols: viol_cols.len(),
+                working_set: prob.working_set_size(),
+                simplex_iters: prob.simplex_iters() - iters0,
+                solve_ns,
+                pricing_ns,
+                ..RoundEvent::default()
+            };
             if viol_rows.is_empty() && viol_cols.is_empty() {
                 stats.converged = true;
+                emit_round(&ev);
                 break;
             }
             let add_rows = select_violators(viol_rows, p.max_rows_per_round);
             let add_cols = select_violators(viol_cols, p.max_cols_per_round);
             stats.rows_added += add_rows.len();
             stats.cols_added += add_cols.len();
+            let span = Span::start();
             prob.add_rows(&add_rows);
             prob.add_cols(&add_cols);
+            ev.expand_ns = span.elapsed_ns();
+            ev.rows_added = add_rows.len();
+            ev.cols_added = add_cols.len();
+            ev.working_set = prob.working_set_size();
+            emit_round(&ev);
             // Stall guard: the restricted objective is monotone under
             // expansion; many consecutive rounds with an exactly unchanged
             // objective while still generating means the loop is stuck.
@@ -441,9 +499,7 @@ impl<'p> GenEngine<'p> {
                 stall += 1;
                 if p.stall_rounds > 0 && stall >= p.stall_rounds {
                     stats.stalled = true;
-                    if p.trace {
-                        eprintln!("[engine] stalled after {} flat rounds", stall);
-                    }
+                    emit_message(&format!("stalled after {stall} flat rounds"));
                     break;
                 }
             } else {
@@ -622,6 +678,29 @@ mod tests {
         assert_eq!(s1.rounds, s2.rounds);
         assert_eq!(s1.cols_added, s2.cols_added);
         assert_eq!(with_cb.cols_in, without.cols_in);
+    }
+
+    #[test]
+    fn ring_sink_events_agree_with_stats() {
+        use crate::obs::RingSink;
+        let ring = Arc::new(RingSink::new(64));
+        let sink: Arc<dyn TraceSink> = ring.clone();
+        let params = GenParams { sink: Some(sink), ..Default::default() };
+        let mut prob = Grow { cols_in: 0 };
+        let stats = GenEngine::new(&params).run(&mut prob);
+        assert!(stats.converged);
+        let events = ring.events();
+        assert_eq!(events.len(), stats.rounds, "one event per round");
+        assert_eq!(events.iter().map(|e| e.cols_added).sum::<usize>(), stats.cols_added);
+        assert_eq!(events.iter().map(|e| e.rows_added).sum::<usize>(), stats.rows_added);
+        assert_eq!(events.last().unwrap().simplex_iters, stats.simplex_iters);
+        // per-round spans sum exactly to the cumulative GenStats spans
+        assert_eq!(events.iter().map(|e| e.solve_ns).sum::<u64>(), stats.solve_ns);
+        assert_eq!(events.iter().map(|e| e.pricing_ns).sum::<u64>(), stats.pricing_ns);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.round, i + 1, "rounds are 1-based and consecutive");
+        }
+        assert_eq!(ring.dropped(), 0);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod error;
 pub mod exps;
 pub mod fom;
 pub mod linalg;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

@@ -4,12 +4,12 @@ fn main() {
     let args = match cutgen::cli::parse_args(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}");
+            cutgen::obs::stderr_line(&format!("error: {e}"));
             std::process::exit(2);
         }
     };
     if let Err(e) = cutgen::cli::main_with(args) {
-        eprintln!("error: {e:#}");
+        cutgen::obs::stderr_line(&format!("error: {e:#}"));
         std::process::exit(1);
     }
 }

@@ -1,0 +1,418 @@
+//! Atomic metric instruments and a Prometheus text-exposition registry.
+//!
+//! Three instrument kinds, all updated with relaxed atomics so they are
+//! cheap enough to leave on in every build:
+//!
+//! * [`Counter`] — monotone `u64` (requests served, cache hits, sheds);
+//! * [`Gauge`] — signed level (`i64`: inflight solves, queue depth,
+//!   resident cache bytes);
+//! * [`Histogram`] — fixed-boundary latency distribution in
+//!   nanoseconds; [`latency_bounds`] gives the standard log-spaced
+//!   ladder (100 µs · 4^k, twelve buckets from 100 µs to ~7 min, plus
+//!   the implicit `+Inf` overflow bucket).
+//!
+//! A [`Registry`] hands out `Arc` handles keyed by `(name, labels)` —
+//! registering the same series twice returns the same handle — and
+//! [`Registry::render`] writes the whole registry in Prometheus text
+//! exposition format (`# HELP`/`# TYPE` headers, cumulative
+//! `_bucket{le="…"}` series, `_sum` in seconds, `_count`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A monotonically increasing counter (relaxed atomic `u64`).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed instantaneous level (relaxed atomic `i64`).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// Overwrite the level.
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `n` (may be negative).
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Subtract `n`.
+    pub fn sub(&self, n: i64) {
+        self.v.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// The standard request-latency bucket ladder: 100 µs · 4^k nanoseconds
+/// for k = 0..12 (100 µs, 400 µs, 1.6 ms, … ~7 min), log-spaced so one
+/// ladder covers both sub-millisecond warm hits and multi-second cold
+/// grids. Observations beyond the last bound land in the implicit
+/// `+Inf` overflow bucket.
+pub fn latency_bounds() -> Vec<u64> {
+    let mut bounds = Vec::with_capacity(12);
+    let mut ns = 100_000u64; // 100 µs
+    for _ in 0..12 {
+        bounds.push(ns);
+        ns *= 4;
+    }
+    bounds
+}
+
+/// A fixed-boundary histogram over nanosecond observations.
+///
+/// Bucket semantics match Prometheus: an observation `x` lands in the
+/// first bucket whose upper bound satisfies `x <= bound`, or in the
+/// `+Inf` overflow bucket past the last bound. Internally the buckets
+/// are *disjoint* counts; [`Registry::render`] emits the cumulative
+/// `_bucket{le=…}` form the exposition format requires.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    buckets: Vec<AtomicU64>, // bounds.len() + 1: last is +Inf overflow
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    /// Build with strictly increasing upper bounds (nanoseconds).
+    pub fn new(bounds: &[u64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        Self {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation of `ns` nanoseconds.
+    pub fn observe_ns(&self, ns: u64) {
+        let idx = self.bounds.partition_point(|&b| b < ns);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one observation from a [`Duration`].
+    pub fn observe(&self, d: Duration) {
+        self.observe_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations in nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Upper bounds (nanoseconds), excluding the implicit `+Inf`.
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Per-bucket *disjoint* counts; the last entry is the `+Inf`
+    /// overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// One registered series: a label set and its instrument handle.
+#[derive(Debug)]
+struct Family<T> {
+    help: String,
+    // keyed by the rendered label block ("" or `{k="v",…}`) — dedupes
+    // re-registration and gives deterministic exposition order
+    series: BTreeMap<String, Arc<T>>,
+}
+
+impl<T> Family<T> {
+    fn new(help: &str) -> Self {
+        Self { help: help.to_string(), series: BTreeMap::new() }
+    }
+}
+
+/// A process-wide metric registry.
+///
+/// Handles are `Arc`s: fetch once at wiring time, update lock-free
+/// forever after. The internal mutexes are touched only by
+/// registration and [`Registry::render`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Family<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Family<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Family<Histogram>>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter series `name{labels}`.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = label_block(labels);
+        let mut map = self.counters.lock().unwrap();
+        let fam = map.entry(name.to_string()).or_insert_with(|| Family::new(help));
+        Arc::clone(fam.series.entry(key).or_default())
+    }
+
+    /// Get or create the gauge series `name{labels}`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = label_block(labels);
+        let mut map = self.gauges.lock().unwrap();
+        let fam = map.entry(name.to_string()).or_insert_with(|| Family::new(help));
+        Arc::clone(fam.series.entry(key).or_default())
+    }
+
+    /// Get or create the histogram series `name{labels}` with the given
+    /// bucket bounds (nanoseconds; see [`latency_bounds`]).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[u64],
+    ) -> Arc<Histogram> {
+        let key = label_block(labels);
+        let mut map = self.histograms.lock().unwrap();
+        let fam = map.entry(name.to_string()).or_insert_with(|| Family::new(help));
+        Arc::clone(fam.series.entry(key).or_insert_with(|| Arc::new(Histogram::new(bounds))))
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    ///
+    /// Counters first, then gauges, then histograms, each family sorted
+    /// by name and each series by label block, so the output is
+    /// deterministic and diff-friendly. Histogram `_sum` and `le`
+    /// bounds are emitted in seconds per Prometheus convention.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in self.counters.lock().unwrap().iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (block, c) in &fam.series {
+                let _ = writeln!(out, "{name}{block} {}", c.get());
+            }
+        }
+        for (name, fam) in self.gauges.lock().unwrap().iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            for (block, g) in &fam.series {
+                let _ = writeln!(out, "{name}{block} {}", g.get());
+            }
+        }
+        for (name, fam) in self.histograms.lock().unwrap().iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (block, h) in &fam.series {
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (i, bound) in h.bounds().iter().enumerate() {
+                    cum += counts[i];
+                    let le = secs(*bound);
+                    let _ = writeln!(out, "{name}_bucket{} {cum}", with_le(block, &le));
+                }
+                let total = h.count();
+                let _ = writeln!(out, "{name}_bucket{} {total}", with_le(block, "+Inf"));
+                let _ = writeln!(out, "{name}_sum{block} {}", secs(h.sum_ns()));
+                let _ = writeln!(out, "{name}_count{block} {total}");
+            }
+        }
+        out
+    }
+}
+
+/// Render a label set as `{k="v",…}` (or `""` when empty), escaping
+/// backslash, double-quote, and newline per the exposition format.
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    out.push('}');
+    out
+}
+
+/// Splice an `le="…"` label into an existing (possibly empty) block.
+fn with_le(block: &str, le: &str) -> String {
+    if block.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        // block ends in '}': replace it with `,le="…"}`
+        format!("{},le=\"{le}\"}}", &block[..block.len() - 1])
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Nanoseconds as seconds, shortest round-trip decimal (`0.0001`, `2.5`).
+fn secs(ns: u64) -> String {
+    format!("{}", ns as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_bounds_are_log_spaced() {
+        let b = latency_bounds();
+        assert_eq!(b.len(), 12);
+        assert_eq!(b[0], 100_000); // 100 µs
+        for w in b.windows(2) {
+            assert_eq!(w[1], w[0] * 4);
+        }
+        // top of the ladder covers a multi-minute grid solve
+        assert!(b[11] > 400_000_000_000); // > 400 s
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_inclusive() {
+        let h = Histogram::new(&[100, 1_000, 10_000]);
+        h.observe_ns(0); // below everything -> first bucket
+        h.observe_ns(100); // exactly on a bound -> that bucket (le semantics)
+        h.observe_ns(101); // just past -> next bucket
+        h.observe_ns(1_000);
+        h.observe_ns(10_000);
+        h.observe_ns(10_001); // past the last bound -> +Inf overflow
+        h.observe_ns(u64::MAX / 2);
+        assert_eq!(h.bucket_counts(), vec![2, 2, 2, 1]);
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum_ns(), 100 + 101 + 1_000 + 10_000 + 10_001 + u64::MAX / 2);
+    }
+
+    #[test]
+    fn exposition_golden() {
+        let reg = Registry::new();
+        reg.counter("cutgen_requests_total", "Requests handled.", &[("op", "solve")]).add(3);
+        reg.counter("cutgen_requests_total", "Requests handled.", &[("op", "ping")]).inc();
+        reg.gauge("cutgen_inflight", "Heavy ops in flight.", &[]).set(2);
+        let h = reg.histogram(
+            "cutgen_latency",
+            "Request latency.",
+            &[("op", "solve")],
+            &[1_000_000, 4_000_000], // 1 ms, 4 ms
+        );
+        h.observe_ns(500_000); // 0.5 ms -> first bucket
+        h.observe_ns(2_000_000); // 2 ms -> second bucket
+        h.observe_ns(9_000_000); // 9 ms -> +Inf
+        let got = reg.render();
+        let want = "\
+# HELP cutgen_requests_total Requests handled.
+# TYPE cutgen_requests_total counter
+cutgen_requests_total{op=\"ping\"} 1
+cutgen_requests_total{op=\"solve\"} 3
+# HELP cutgen_inflight Heavy ops in flight.
+# TYPE cutgen_inflight gauge
+cutgen_inflight 2
+# HELP cutgen_latency Request latency.
+# TYPE cutgen_latency histogram
+cutgen_latency_bucket{op=\"solve\",le=\"0.001\"} 1
+cutgen_latency_bucket{op=\"solve\",le=\"0.004\"} 2
+cutgen_latency_bucket{op=\"solve\",le=\"+Inf\"} 3
+cutgen_latency_sum{op=\"solve\"} 0.0115
+cutgen_latency_count{op=\"solve\"} 3
+";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reregistration_returns_the_same_series() {
+        let reg = Registry::new();
+        let a = reg.counter("c", "h", &[("k", "v")]);
+        let b = reg.counter("c", "h", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        assert!(Arc::ptr_eq(&a, &b));
+        // distinct labels are distinct series
+        let c = reg.counter("c", "h", &[("k", "w")]);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter("c", "h", &[("k", "a\"b\\c\nd")]).inc();
+        let out = reg.render();
+        assert!(out.contains("c{k=\"a\\\"b\\\\c\\nd\"} 1"), "got: {out}");
+    }
+
+    #[test]
+    fn counters_are_monotone_under_scoped_workers() {
+        let reg = Registry::new();
+        let c = reg.counter("work_total", "units", &[]);
+        let g = reg.gauge("level", "level", &[]);
+        let h = reg.histogram("lat", "lat", &[], &latency_bounds());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for i in 0..1_000u64 {
+                        c.inc();
+                        g.add(1);
+                        h.observe_ns(i * 1_000);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8_000);
+        assert_eq!(g.get(), 8_000);
+        assert_eq!(h.count(), 8_000);
+        let per_thread: u64 = (0..1_000u64).map(|i| i * 1_000).sum();
+        assert_eq!(h.sum_ns(), 8 * per_thread);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 8_000);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: metrics registry, structured round tracing, and the
+//! monotonic span helper behind both.
+//!
+//! The source paper's central claim is a *timing* claim — generation
+//! beats monolithic solves because restricted re-solves and pricing
+//! scans are cheap per round — so this layer makes every solve explain
+//! where its time went, in two always-cheap forms:
+//!
+//! * [`metrics`] — a zero-dependency registry of atomic [`Counter`]s,
+//!   [`Gauge`]s, and fixed-boundary log-spaced latency [`Histogram`]s,
+//!   rendered on demand in Prometheus text-exposition format
+//!   ([`Registry::render`]). Instruments are lock-free on the hot path
+//!   (relaxed atomics); the registry lock is only taken at
+//!   registration and render time.
+//! * [`trace`] — typed per-round events ([`RoundEvent`]) emitted by
+//!   `GenEngine::run` through a [`TraceSink`]: human stderr lines
+//!   ([`StderrSink`], what `--trace` prints), JSONL files
+//!   ([`JsonlSink`], `--trace-json`), or a bounded in-memory ring
+//!   ([`RingSink`], what serve returns for `"trace": true` requests and
+//!   logs for slow solves).
+//!
+//! [`stderr_line`] is the one sanctioned way to write to stderr from
+//! library code: a single `write_all` per line, so concurrent serve
+//! workers never interleave half-lines (CI lints `eprintln!` outside
+//! this module). [`Span`] wraps `std::time::Instant` for the wall-clock
+//! sections (`solve_ns`/`pricing_ns`/`seed_ns`) that survive into
+//! `GenStats` and the serve layer's reports.
+
+#![warn(missing_docs)]
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{latency_bounds, Counter, Gauge, Histogram, Registry};
+pub use trace::{stderr_line, JsonlSink, RingSink, RoundEvent, Span, StderrSink, TraceSink};

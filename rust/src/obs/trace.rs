@@ -1,0 +1,341 @@
+//! Structured round tracing: typed events, sinks, and the span timer.
+//!
+//! `GenEngine::run` emits one [`RoundEvent`] per generation round
+//! through an optional [`TraceSink`] — the machine-readable form of the
+//! `--trace` stderr lines, carrying the per-round wall-clock spans
+//! (restricted re-solve, pricing scan, working-set expansion) that back
+//! the paper's solve-time breakdown tables. Three sinks cover the three
+//! consumers:
+//!
+//! * [`StderrSink`] — the human form; byte-for-byte the historical
+//!   `--trace` output, but written one atomic line at a time via
+//!   [`stderr_line`] so concurrent serve workers never interleave;
+//! * [`JsonlSink`] — one JSON object per line to a file
+//!   (`--trace-json PATH`); `docs/observability.md` shows how to fold
+//!   the file into a paper-style time-breakdown table;
+//! * [`RingSink`] — a bounded in-memory ring the serve layer drains
+//!   into `"trace": true` responses and slow-solve log lines.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What happened in one generation round.
+///
+/// Counts are per-round deltas except `working_set` (the restricted
+/// model's total column+row count after this round's expansion) and
+/// `simplex_iters` (cumulative for the run, matching the `--trace`
+/// line). Spans are wall-clock nanoseconds from a monotonic [`Span`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundEvent {
+    /// 1-based round number within this engine run.
+    pub round: usize,
+    /// Restricted objective after this round's re-solve.
+    pub objective: f64,
+    /// Rows (constraints/cuts) priced above ε this round.
+    pub viol_rows: usize,
+    /// Columns priced above ε this round.
+    pub viol_cols: usize,
+    /// Rows actually brought into the model (after the round cap).
+    pub rows_added: usize,
+    /// Columns actually brought into the model (after the round cap).
+    pub cols_added: usize,
+    /// Working-set size (columns + rows) after expansion; 0 for
+    /// adapters that don't report it.
+    pub working_set: usize,
+    /// Simplex iterations accumulated by this run so far.
+    pub simplex_iters: usize,
+    /// Nanoseconds in this round's restricted re-solve.
+    pub solve_ns: u64,
+    /// Nanoseconds pricing left-out rows and columns this round.
+    pub pricing_ns: u64,
+    /// Nanoseconds expanding the working sets this round.
+    pub expand_ns: u64,
+}
+
+/// Receives engine trace output.
+///
+/// Implementations must be thread-safe (`Send + Sync`): one sink may
+/// be shared by concurrent serve workers, and `GenParams` clones carry
+/// the sink across threads. `Debug` keeps `GenParams`'s derive intact.
+pub trait TraceSink: Send + Sync + std::fmt::Debug {
+    /// One generation round completed.
+    fn round(&self, ev: &RoundEvent);
+    /// A non-round engine message (caller stop, stall abort).
+    fn message(&self, text: &str);
+}
+
+/// A monotonic wall-clock section timer.
+///
+/// ```
+/// use cutgen::obs::Span;
+/// let span = Span::start();
+/// let ns = span.elapsed_ns(); // nanoseconds since start, monotonic
+/// assert!(ns < 1_000_000_000);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Span(Instant);
+
+impl Span {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Span(Instant::now())
+    }
+
+    /// Nanoseconds since [`Span::start`] (saturating at `u64::MAX`).
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+}
+
+/// Write one line to stderr in a single `write_all`.
+///
+/// The one sanctioned stderr path for library code: a lone `eprintln!`
+/// interleaves with other writers mid-line under concurrency, so CI
+/// lints `eprintln!` out of `rust/src` and everything routes through
+/// here instead.
+pub fn stderr_line(line: &str) {
+    let mut buf = String::with_capacity(line.len() + 1);
+    buf.push_str(line);
+    buf.push('\n');
+    let mut err = io::stderr().lock();
+    let _ = err.write_all(buf.as_bytes());
+}
+
+/// The human sink: reproduces the historical `--trace` stderr lines.
+#[derive(Debug, Default)]
+pub struct StderrSink;
+
+impl TraceSink for StderrSink {
+    fn round(&self, ev: &RoundEvent) {
+        stderr_line(&format!(
+            "[engine] round {:>4}: obj {:.6e}, viol rows/cols {}/{}, simplex {}",
+            ev.round, ev.objective, ev.viol_rows, ev.viol_cols, ev.simplex_iters,
+        ));
+    }
+
+    fn message(&self, text: &str) {
+        stderr_line(&format!("[engine] {text}"));
+    }
+}
+
+/// One JSON object per line to a file, flushed per event so traces
+/// survive a crash mid-solve.
+#[derive(Debug)]
+pub struct JsonlSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl JsonlSink {
+    /// Create (truncating) the trace file.
+    pub fn create(path: &Path) -> io::Result<Self> {
+        Ok(Self { w: Mutex::new(BufWriter::new(File::create(path)?)) })
+    }
+
+    fn write_line(&self, line: &str) {
+        let mut w = self.w.lock().unwrap();
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn round(&self, ev: &RoundEvent) {
+        self.write_line(&round_json(ev));
+    }
+
+    fn message(&self, text: &str) {
+        self.write_line(&format!("{{\"event\":\"message\",\"text\":\"{}\"}}", json_escape(text)));
+    }
+}
+
+/// Serialize a [`RoundEvent`] as one JSONL record (`"event":"round"`).
+pub fn round_json(ev: &RoundEvent) -> String {
+    let mut s = String::with_capacity(192);
+    s.push_str("{\"event\":\"round\"");
+    let _ = write!(s, ",\"round\":{}", ev.round);
+    let _ = write!(s, ",\"objective\":{}", json_f64(ev.objective));
+    let _ = write!(s, ",\"viol_rows\":{}", ev.viol_rows);
+    let _ = write!(s, ",\"viol_cols\":{}", ev.viol_cols);
+    let _ = write!(s, ",\"rows_added\":{}", ev.rows_added);
+    let _ = write!(s, ",\"cols_added\":{}", ev.cols_added);
+    let _ = write!(s, ",\"working_set\":{}", ev.working_set);
+    let _ = write!(s, ",\"simplex_iters\":{}", ev.simplex_iters);
+    let _ = write!(s, ",\"solve_ns\":{}", ev.solve_ns);
+    let _ = write!(s, ",\"pricing_ns\":{}", ev.pricing_ns);
+    let _ = write!(s, ",\"expand_ns\":{}", ev.expand_ns);
+    s.push('}');
+    s
+}
+
+/// A finite f64 as a JSON number, non-finite as `null`.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A bounded in-memory ring of the most recent round events.
+///
+/// Serve attaches one per traced request and drains it into the
+/// response; the bound caps memory for pathological round counts, and
+/// [`RingSink::dropped`] says how many early rounds were truncated.
+/// Non-round messages are not buffered (they are terminal one-liners
+/// already summarized by `GenStats`).
+#[derive(Debug)]
+pub struct RingSink {
+    cap: usize,
+    inner: Mutex<Ring>,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    events: VecDeque<RoundEvent>,
+    dropped: u64,
+}
+
+impl RingSink {
+    /// A ring keeping the last `cap` rounds (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), inner: Mutex::new(Ring::default()) }
+    }
+
+    /// The buffered events, oldest first.
+    pub fn events(&self) -> Vec<RoundEvent> {
+        self.inner.lock().unwrap().events.iter().copied().collect()
+    }
+
+    /// How many early rounds were evicted to honor the bound.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+impl TraceSink for RingSink {
+    fn round(&self, ev: &RoundEvent) {
+        let mut ring = self.inner.lock().unwrap();
+        if ring.events.len() == self.cap {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(*ev);
+    }
+
+    fn message(&self, _text: &str) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(round: usize) -> RoundEvent {
+        RoundEvent { round, objective: -0.5, cols_added: 1, solve_ns: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_events() {
+        let ring = RingSink::new(4);
+        for r in 1..=10 {
+            ring.round(&ev(r));
+        }
+        let evs = ring.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.round).collect::<Vec<_>>(), vec![7, 8, 9, 10]);
+        assert_eq!(ring.dropped(), 6);
+    }
+
+    #[test]
+    fn ring_under_capacity_drops_nothing() {
+        let ring = RingSink::new(8);
+        for r in 1..=3 {
+            ring.round(&ev(r));
+        }
+        assert_eq!(ring.events().len(), 3);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn round_json_is_stable_and_parseable() {
+        let e = RoundEvent {
+            round: 3,
+            objective: -1.25,
+            viol_rows: 2,
+            viol_cols: 7,
+            rows_added: 2,
+            cols_added: 5,
+            working_set: 40,
+            simplex_iters: 19,
+            solve_ns: 1_000,
+            pricing_ns: 2_000,
+            expand_ns: 30,
+        };
+        let line = round_json(&e);
+        assert_eq!(
+            line,
+            "{\"event\":\"round\",\"round\":3,\"objective\":-1.25,\"viol_rows\":2,\
+             \"viol_cols\":7,\"rows_added\":2,\"cols_added\":5,\"working_set\":40,\
+             \"simplex_iters\":19,\"solve_ns\":1000,\"pricing_ns\":2000,\"expand_ns\":30}"
+        );
+        // round-trips through the serve-layer parser
+        let v = crate::serve::json::Json::parse(&line).expect("valid JSON");
+        assert_eq!(v.get("round").and_then(|j| j.as_usize()), Some(3));
+        assert_eq!(v.get("objective").and_then(|j| j.as_f64()), Some(-1.25));
+    }
+
+    #[test]
+    fn non_finite_objectives_serialize_as_null() {
+        let line = round_json(&RoundEvent { objective: f64::NAN, ..Default::default() });
+        assert!(line.contains("\"objective\":null"), "got: {line}");
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        let path =
+            std::env::temp_dir().join(format!("cutgen_trace_test_{}.jsonl", std::process::id()));
+        let sink = JsonlSink::create(&path).expect("create trace file");
+        sink.round(&ev(1));
+        sink.round(&ev(2));
+        sink.message("stalled after 5 flat rounds");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"round\":1"));
+        assert!(lines[2].contains("\"event\":\"message\""));
+        for l in &lines {
+            crate::serve::json::Json::parse(l).expect("each line is valid JSON");
+        }
+    }
+
+    #[test]
+    fn span_is_monotone() {
+        let span = Span::start();
+        let a = span.elapsed_ns();
+        let b = span.elapsed_ns();
+        assert!(b >= a);
+    }
+}

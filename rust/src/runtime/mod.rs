@@ -575,7 +575,8 @@ mod pjrt_tests {
 
     fn runtime() -> Option<PjrtRuntime> {
         if !PjrtRuntime::artifacts_available() {
-            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            let msg = "skipping PJRT test: artifacts not built (run `make artifacts`)";
+            crate::obs::stderr_line(msg);
             return None;
         }
         Some(PjrtRuntime::load(PjrtRuntime::default_dir()).expect("load artifacts"))

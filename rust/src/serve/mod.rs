@@ -46,7 +46,14 @@
 //!   concurrently executing solve/grid/batch requests; beyond the bound
 //!   the daemon answers `{"ok":false,…,"retry_after":…}` immediately
 //!   instead of queueing unboundedly (the TCP accept queue is bounded
-//!   the same way in [`transport::serve_tcp`]).
+//!   the same way in [`transport::serve_tcp`]);
+//! * **observability** — every request is counted and latency-bucketed
+//!   into the always-on [`obs::Registry`] (the `metrics` op renders it
+//!   as Prometheus text exposition); `"trace": true` on a solve/grid
+//!   returns the per-round engine events inline, and `--slow-solve-ms`
+//!   logs a structured line (with the ring-buffered round trace) for
+//!   any heavy request over the threshold. `docs/observability.md` is
+//!   the metric and trace-schema catalogue.
 //!
 //! The protocol is line-delimited JSON (one request object per line, one
 //! response per line, in order — [`json`] is the hand-rolled
@@ -66,15 +73,15 @@ pub mod registry;
 pub mod transport;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::group::{GroupProblem, RestrictedGroup};
 use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
 use crate::coordinator::path::{
-    accumulate, dantzig_path, geometric_grid, group_path, ranksvm_path, regularization_path,
-    PathSolution,
+    accumulate, dantzig_path_with_stop, geometric_grid, group_path_with_stop,
+    ranksvm_path_with_stop, regularization_path_with_stop, PathSolution,
 };
 use crate::coordinator::report::{
     dantzig_report, group_report, l1_report, ranksvm_report, slope_report,
@@ -86,6 +93,7 @@ use crate::engine::{
 };
 use crate::error::Result;
 use crate::fom::objective::bh_slope_weights;
+use crate::obs::{self, latency_bounds, stderr_line, RingSink, RoundEvent, Span, TraceSink};
 use crate::workloads::dantzig::{lambda_max_dantzig, DantzigProblem, RestrictedDantzig};
 use crate::workloads::pairset::PairSet;
 use crate::workloads::ranksvm::{lambda_max_rank, pair_rows_cap, RankProblem, RestrictedRank};
@@ -107,6 +115,11 @@ pub const MAX_BATCH_REQUESTS: usize = 1024;
 
 /// Backoff hint (milliseconds) carried by admission-control rejections.
 pub const RETRY_AFTER_MS: usize = 250;
+
+/// Bound on ring-buffered round events per traced request (`"trace":
+/// true` responses and slow-solve log lines keep the *last* this many
+/// rounds; earlier rounds are counted in `"trace_dropped"`).
+pub const TRACE_RING_CAP: usize = 512;
 
 /// `{"ok":false,…}` with the `retry_after` backoff hint — what an
 /// admission-controlled daemon answers (instead of queueing) when all
@@ -163,6 +176,17 @@ pub struct ServeState {
     /// i.e. drain mode).
     max_inflight: usize,
     shutdown: AtomicBool,
+    /// Always-on metrics registry, rendered by the `metrics` op.
+    /// Request counters and latency histograms are recorded at dispatch
+    /// time; cache/gauge mirrors are refreshed at scrape time from
+    /// their authoritative sources, so `metrics` and `stats` agree.
+    pub metrics: obs::Registry,
+    /// Monotone per-request id, threaded through log lines so a slow
+    /// solve's trace can be correlated with transport-level logging.
+    next_req_id: AtomicU64,
+    /// Heavy requests slower than this (milliseconds; 0 = disabled) log
+    /// one structured stderr line carrying their round trace.
+    slow_solve_ms: u64,
 }
 
 impl ServeState {
@@ -178,6 +202,9 @@ impl ServeState {
             inflight: AtomicUsize::new(0),
             max_inflight: usize::MAX,
             shutdown: AtomicBool::new(false),
+            metrics: obs::Registry::new(),
+            next_req_id: AtomicU64::new(0),
+            slow_solve_ms: 0,
         }
     }
 
@@ -200,9 +227,18 @@ impl ServeState {
     /// Bound concurrently executing solve/grid/batch requests: beyond
     /// `max` the daemon responds [`busy_response`] immediately instead
     /// of queueing. 0 rejects every heavy op (drain mode); lightweight
-    /// ops (`ping`, `stats`, `register`, `shutdown`) are never gated.
+    /// ops (`ping`, `stats`, `metrics`, `register`, `shutdown`) are
+    /// never gated.
     pub fn with_max_inflight(mut self, max: usize) -> Self {
         self.max_inflight = max;
+        self
+    }
+
+    /// Log a structured slow-solve line (request id, span breakdown,
+    /// and the ring-buffered round trace) for any solve/grid slower
+    /// than `ms` milliseconds. 0 disables the threshold.
+    pub fn with_slow_solve_ms(mut self, ms: u64) -> Self {
+        self.slow_solve_ms = ms;
         self
     }
 
@@ -267,7 +303,7 @@ impl ServeState {
     fn cache_store(&self, fp: u64, workload: Workload, entry: CacheEntry) {
         if let Some(store) = &self.store {
             if let Err(e) = store.save(fp, workload, &entry) {
-                eprintln!("[serve] snapshot spill failed: {e}");
+                stderr_line(&format!("[serve] snapshot spill failed: {e}"));
             }
         }
         self.cache.lock().expect("cache lock").insert(fp, workload, entry);
@@ -275,25 +311,45 @@ impl ServeState {
 
     /// Handle one request line, returning the response line. Never
     /// panics on protocol input: parse and dispatch errors become
-    /// `{"ok":false,"error":…}` responses.
+    /// `{"ok":false,"error":…}` responses. Every line — including
+    /// malformed ones — is counted and latency-bucketed into the
+    /// metrics registry under its `(op, workload)` pair.
     pub fn handle_line(&self, line: &str) -> String {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let req_id = self.next_req_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let span = Span::start();
+        let mut op_label = "invalid";
+        let mut wl_label = "none";
         let resp = match Json::parse(line) {
             Ok(doc) => {
                 let req = Req(&doc);
                 match req.str_req("op") {
-                    Ok(op) => self
-                        .dispatch(op, &req)
-                        .unwrap_or_else(|e| err_response(&e.to_string())),
+                    Ok(op) => {
+                        op_label = op_metric_label(op);
+                        wl_label = workload_metric_label(&req);
+                        self.dispatch(op, &req, req_id)
+                            .unwrap_or_else(|e| err_response(&e.to_string()))
+                    }
                     Err(e) => err_response(&e.to_string()),
                 }
             }
             Err(e) => err_response(&e.to_string()),
         };
+        self.metrics
+            .counter("cutgen_requests_total", "Requests handled, by op.", &[("op", op_label)])
+            .inc();
+        self.metrics
+            .histogram(
+                "cutgen_request_latency_seconds",
+                "Wall-clock request latency, by op and workload.",
+                &[("op", op_label), ("workload", wl_label)],
+                &latency_bounds(),
+            )
+            .observe_ns(span.elapsed_ns());
         resp.to_string()
     }
 
-    fn dispatch(&self, op: &str, req: &Req) -> Result<Json> {
+    fn dispatch(&self, op: &str, req: &Req, req_id: u64) -> Result<Json> {
         match op {
             "register" => self.handle_register(req),
             // the heavy ops pass admission control: over the inflight
@@ -301,20 +357,33 @@ impl ServeState {
             // queueing unboundedly behind a busy worker pool
             "solve" | "grid" | "batch" => match self.admit() {
                 Some(_slot) => match op {
-                    "solve" => self.handle_solve(req),
-                    "grid" => self.handle_grid(req),
-                    _ => self.handle_batch(req),
+                    "solve" => self.handle_solve(req, req_id),
+                    "grid" => self.handle_grid(req, req_id),
+                    _ => self.handle_batch(req, req_id),
                 },
-                None => Ok(busy_response()),
+                None => {
+                    self.metrics
+                        .counter(
+                            "cutgen_admission_rejections_total",
+                            "Heavy requests rejected at the inflight bound.",
+                            &[],
+                        )
+                        .inc();
+                    Ok(busy_response())
+                }
             },
             "stats" => Ok(self.stats_response()),
+            "metrics" => Ok(self.metrics_response()),
             "ping" => Ok(ok_response("ping", Vec::new())),
             "shutdown" => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(ok_response("shutdown", Vec::new()))
             }
             other => {
-                bail!("unknown op {other:?} (register|solve|grid|batch|stats|ping|shutdown)")
+                bail!(
+                    "unknown op {other:?} \
+                     (register|solve|grid|batch|stats|metrics|ping|shutdown)"
+                )
             }
         }
     }
@@ -350,32 +419,45 @@ impl ServeState {
         ))
     }
 
-    fn handle_solve(&self, req: &Req) -> Result<Json> {
+    fn handle_solve(&self, req: &Req, req_id: u64) -> Result<Json> {
         let name = req.str_req("dataset")?;
         let entry = self
             .registry
             .get(name)
             .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
         let deadline = deadline_from(req)?;
-        self.solve_request(name, &entry, req, deadline.as_ref())
+        self.solve_request(name, &entry, req, deadline.as_ref(), req_id)
     }
 
     /// One fixed-λ solve against an already resolved dataset entry —
     /// the body shared by `solve` (per-request deadline) and each `batch`
     /// item (deadline shared across the whole batch).
+    ///
+    /// `"trace": true` attaches a bounded [`RingSink`] to the engine and
+    /// returns the captured round events inline (`"trace"` array plus a
+    /// `"trace_dropped"` count once a run outgrows [`TRACE_RING_CAP`]);
+    /// the same ring feeds the `--slow-solve-ms` log line.
     fn solve_request(
         &self,
         name: &str,
         entry: &DatasetEntry,
         req: &Req,
         deadline: Option<&Deadline>,
+        req_id: u64,
     ) -> Result<Json> {
+        let wall = Span::start();
         let workload = Workload::parse(req.str_req("workload")?)?;
         let mut gen = gen_from_req(req)?;
         gen.max_cols_per_round = req.usize_or("max_cols_per_round", 0)?;
         gen.max_rows_per_round = req.usize_or("max_rows_per_round", 0)?;
         let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
+        let want_trace = req.bool_or("trace", false)?;
+        let ring = (want_trace || self.slow_solve_ms > 0)
+            .then(|| Arc::new(RingSink::new(TRACE_RING_CAP)));
+        if let Some(r) = &ring {
+            gen.sink = Some(Arc::clone(r) as Arc<dyn TraceSink>);
+        }
         let lambda = lambda_for(entry, workload, req, group_size)?;
         let fp = cache_fp(entry, workload, group_size);
 
@@ -408,7 +490,11 @@ impl ServeState {
                 CacheEntry { lambda, objective: core.objective, ws: core.ws.clone() },
             );
         }
+        if core.stats.timed_out {
+            self.observe_timeout();
+        }
 
+        let wall_ns = wall.elapsed_ns();
         let mut fields = vec![
             kv("dataset", name),
             kv("workload", workload.as_str()),
@@ -431,6 +517,26 @@ impl ServeState {
             fields.push(kv("warm_lambda", h.entry.lambda));
             fields.push(kv("bucket_distance", h.distance as f64));
         }
+        // Timing fields ride along only when tracing was asked for:
+        // wall clocks are nondeterministic, and untraced responses stay
+        // byte-identical across runs (a documented protocol property).
+        if want_trace {
+            fields.push(kv("wall_ms", ns_to_ms(wall_ns)));
+            fields.push(kv("solve_ms", ns_to_ms(core.stats.solve_ns)));
+            fields.push(kv("pricing_ms", ns_to_ms(core.stats.pricing_ns)));
+            fields.push(kv("seed_ms", ns_to_ms(core.stats.seed_ns)));
+            let r = ring.as_ref().expect("ring exists when trace was requested");
+            fields.push(kv("trace", trace_events_json(&r.events())));
+            fields.push(kv("trace_dropped", r.dropped() as usize));
+        }
+        let ctx = SlowLogCtx {
+            req_id,
+            op: "solve",
+            dataset: name,
+            workload: workload.as_str(),
+            lambda,
+        };
+        self.maybe_log_slow(&ctx, wall_ns, &core.stats, ring.as_deref());
         Ok(ok_response("solve", fields))
     }
 
@@ -441,7 +547,7 @@ impl ServeState {
     /// heterogeneous estimator sweep. One `"deadline_ms"` budget covers
     /// the whole batch; per-item failures come back as inline
     /// `{"ok":false,…}` objects in `"results"` without failing the rest.
-    fn handle_batch(&self, req: &Req) -> Result<Json> {
+    fn handle_batch(&self, req: &Req, req_id: u64) -> Result<Json> {
         let name = req.str_req("dataset")?;
         let entry = self
             .registry
@@ -464,7 +570,7 @@ impl ServeState {
         let mut timed_out = 0usize;
         for item in items {
             let resp = self
-                .solve_request(name, &entry, &Req(item), deadline.as_ref())
+                .solve_request(name, &entry, &Req(item), deadline.as_ref(), req_id)
                 .unwrap_or_else(|e| err_response(&e.to_string()));
             if resp.get("warm").and_then(Json::as_bool) == Some(true) {
                 warm_hits += 1;
@@ -486,7 +592,8 @@ impl ServeState {
         ))
     }
 
-    fn handle_grid(&self, req: &Req) -> Result<Json> {
+    fn handle_grid(&self, req: &Req, req_id: u64) -> Result<Json> {
+        let wall = Span::start();
         let name = req.str_req("dataset")?;
         let entry = self
             .registry
@@ -499,22 +606,43 @@ impl ServeState {
             ratio > 0.0 && ratio < 1.0,
             "grid ratio must be in (0, 1), got {ratio}"
         );
-        let gen = gen_from_req(req)?;
+        let mut gen = gen_from_req(req)?;
         let group_size = req.usize_or("group_size", 10)?.max(1);
         let use_cache = req.bool_or("cache", true)?;
+        let want_trace = req.bool_or("trace", false)?;
+        let ring = (want_trace || self.slow_solve_ms > 0)
+            .then(|| Arc::new(RingSink::new(TRACE_RING_CAP)));
+        if let Some(r) = &ring {
+            gen.sink = Some(Arc::clone(r) as Arc<dyn TraceSink>);
+        }
+        let deadline = deadline_from(req)?;
+        // Same cooperative stop as `solve`, shared across the whole λ
+        // grid: an expired budget truncates the path after the point it
+        // ran out on (marked `"timed_out"` per point) instead of holding
+        // the worker to the end of the grid.
+        let stop = || {
+            if self.shutdown_requested() {
+                return true;
+            }
+            match &deadline {
+                Some(d) => d.expired(),
+                None => false,
+            }
+        };
+        let stop_ref: Option<&dyn Fn() -> bool> = Some(&stop);
         let path: Vec<PathSolution> = match workload {
             Workload::L1svm => {
                 let ds = entry.classification();
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
-                regularization_path(ds, &backend, &grid, &gen).0
+                regularization_path_with_stop(ds, &backend, &grid, &gen, stop_ref).0
             }
             Workload::Group => {
                 let ds = entry.classification();
                 let groups = contiguous_groups(ds.p(), group_size)?;
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(ds.lambda_max_group(&groups), k, ratio);
-                group_path(ds, &backend, &groups, &grid, &gen)
+                group_path_with_stop(ds, &backend, &groups, &grid, &gen, stop_ref)
             }
             Workload::Slope => {
                 // RestrictedSlope binds its BH weight sequence at
@@ -528,8 +656,9 @@ impl ServeState {
                 let mut prev: Option<WorkingSet> = None;
                 let mut stats = GenStats::default();
                 for &lt in &grid {
-                    let core = solve_slope(&entry, lt, prev.as_ref(), &gen, None)?;
-                    accumulate(&mut stats, core.stats);
+                    let core = solve_slope(&entry, lt, prev.as_ref(), &gen, stop_ref)?;
+                    let step = core.stats;
+                    accumulate(&mut stats, step);
                     prev = Some(core.ws.clone());
                     out.push(PathSolution {
                         lambda: lt,
@@ -537,8 +666,12 @@ impl ServeState {
                         support: core.support,
                         working_set: core.ws.cols.len(),
                         stats,
+                        step,
                         ws: core.ws,
                     });
+                    if step.timed_out {
+                        break;
+                    }
                 }
                 out
             }
@@ -548,13 +681,13 @@ impl ServeState {
                 let pairs = pairs_for(&entry, gen.pair_mode, &mut owned_pairs)?;
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(lambda_max_rank(ds, pairs), k, ratio);
-                ranksvm_path(ds, &backend, pairs, &grid, &gen)
+                ranksvm_path_with_stop(ds, &backend, pairs, &grid, &gen, stop_ref)
             }
             Workload::Dantzig => {
                 let ds = &entry.ds;
                 let backend = NativeBackend::new(&ds.x);
                 let grid = geometric_grid(lambda_max_dantzig(ds), k, ratio);
-                dantzig_path(ds, &backend, &grid, &gen)
+                dantzig_path_with_stop(ds, &backend, &grid, &gen, stop_ref)
             }
         };
         // Seed the warm-start cache at EVERY visited λ: a later fixed-λ
@@ -583,29 +716,65 @@ impl ServeState {
         }
         let last = path.last().expect("grid has at least one point");
         let (rounds, simplex_iters) = (last.stats.rounds, last.stats.simplex_iters);
+        let final_stats = last.stats;
+        let final_lambda = last.lambda;
+        // Per-point rollups the way `batch` reports them: every point
+        // after the first warm-starts from its predecessor's working
+        // set, and a point that hit the shared deadline carries its own
+        // `timed_out` flag (the path is truncated right after it).
+        let timed_out = path.iter().filter(|pt| pt.step.timed_out).count();
+        let warm_hits = path.len().saturating_sub(1);
         let points: Vec<Json> = path
             .into_iter()
-            .map(|pt| {
+            .enumerate()
+            .map(|(i, pt)| {
                 Json::obj(vec![
                     kv("lambda", pt.lambda),
                     kv("objective", pt.objective),
                     kv("support", pt.support),
                     kv("working_set", pt.working_set),
+                    kv("rounds", pt.step.rounds),
+                    kv("simplex_iters", pt.step.simplex_iters),
+                    kv("warm", i > 0),
+                    kv("timed_out", pt.step.timed_out),
                 ])
             })
             .collect();
-        Ok(ok_response(
-            "grid",
-            vec![
-                kv("dataset", name),
-                kv("workload", workload.as_str()),
-                kv("points", points.len()),
-                kv("rounds", rounds),
-                kv("simplex_iters", simplex_iters),
-                kv("cache_seeded", seeded),
-                kv("path", points),
-            ],
-        ))
+        if timed_out > 0 {
+            self.observe_timeout();
+        }
+        let wall_ns = wall.elapsed_ns();
+        let mut fields = vec![
+            kv("dataset", name),
+            kv("workload", workload.as_str()),
+            kv("points", points.len()),
+            kv("rounds", rounds),
+            kv("simplex_iters", simplex_iters),
+            kv("cache_seeded", seeded),
+            kv("warm_hits", warm_hits),
+            kv("timed_out", timed_out),
+            kv("path", points),
+        ];
+        // same convention as `solve`: nondeterministic wall clocks only
+        // appear when the request opted into tracing
+        if want_trace {
+            fields.push(kv("wall_ms", ns_to_ms(wall_ns)));
+            fields.push(kv("solve_ms", ns_to_ms(final_stats.solve_ns)));
+            fields.push(kv("pricing_ms", ns_to_ms(final_stats.pricing_ns)));
+            fields.push(kv("seed_ms", ns_to_ms(final_stats.seed_ns)));
+            let r = ring.as_ref().expect("ring exists when trace was requested");
+            fields.push(kv("trace", trace_events_json(&r.events())));
+            fields.push(kv("trace_dropped", r.dropped() as usize));
+        }
+        let ctx = SlowLogCtx {
+            req_id,
+            op: "grid",
+            dataset: name,
+            workload: workload.as_str(),
+            lambda: final_lambda,
+        };
+        self.maybe_log_slow(&ctx, wall_ns, &final_stats, ring.as_deref());
+        Ok(ok_response("grid", fields))
     }
 
     fn stats_response(&self) -> Json {
@@ -655,6 +824,190 @@ impl ServeState {
             ],
         )
     }
+
+    /// The `metrics` op: refresh the scrape-time mirrors (cache
+    /// counters, resident-byte gauges, inflight) from their
+    /// authoritative sources, then render the whole registry as
+    /// Prometheus text exposition inside the JSON envelope.
+    ///
+    /// Mirroring at scrape time — rather than instrumenting every cache
+    /// event site — keeps the hot paths untouched and guarantees the
+    /// counters agree with what the `stats` op reports.
+    fn metrics_response(&self) -> Json {
+        {
+            let cache = self.cache.lock().expect("cache lock");
+            sync_counter(
+                &self.metrics,
+                "cutgen_cache_hits_total",
+                "Warm-cache lookups that found a seed in the λ-bucket neighborhood.",
+                cache.hits,
+            );
+            sync_counter(
+                &self.metrics,
+                "cutgen_cache_misses_total",
+                "Warm-cache lookups that found nothing within the neighborhood.",
+                cache.misses,
+            );
+            sync_counter(
+                &self.metrics,
+                "cutgen_cache_evictions_total",
+                "Snapshots evicted to satisfy the entry cap or byte budget.",
+                cache.evictions,
+            );
+            self.metrics
+                .gauge("cutgen_cache_entries", "Resident warm-cache snapshots.", &[])
+                .set(cache.len() as i64);
+            self.metrics
+                .gauge(
+                    "cutgen_cache_resident_bytes",
+                    "Estimated bytes held by resident warm-cache snapshots.",
+                    &[],
+                )
+                .set(cache.resident_bytes() as i64);
+        }
+        sync_counter(
+            &self.metrics,
+            "cutgen_cache_disk_hits_total",
+            "In-memory misses that were then served from the snapshot store.",
+            self.disk_hits.load(Ordering::Relaxed),
+        );
+        self.metrics
+            .gauge("cutgen_inflight", "Solve/grid/batch requests currently executing.", &[])
+            .set(self.inflight.load(Ordering::SeqCst) as i64);
+        for name in self.registry.names() {
+            if let Some(entry) = self.registry.get(&name) {
+                self.metrics
+                    .gauge(
+                        "cutgen_dataset_resident_bytes",
+                        "Estimated resident bytes of a registered design matrix.",
+                        &[("dataset", name.as_str())],
+                    )
+                    .set(entry.ds.x.resident_bytes() as i64);
+            }
+        }
+        ok_response("metrics", vec![kv("exposition", self.metrics.render())])
+    }
+
+    /// Count one deadline/shutdown-truncated solve (or grid).
+    fn observe_timeout(&self) {
+        self.metrics
+            .counter(
+                "cutgen_timeouts_total",
+                "Solves cut short by a deadline or daemon shutdown.",
+                &[],
+            )
+            .inc();
+    }
+
+    /// When `--slow-solve-ms` is set and this request ran longer, log
+    /// one structured stderr line — request id, identity, span
+    /// breakdown, and the ring-buffered round trace — so a production
+    /// outlier can be diagnosed offline without re-running it traced.
+    fn maybe_log_slow(
+        &self,
+        ctx: &SlowLogCtx<'_>,
+        wall_ns: u64,
+        stats: &GenStats,
+        ring: Option<&RingSink>,
+    ) {
+        if self.slow_solve_ms == 0 || wall_ns < self.slow_solve_ms.saturating_mul(1_000_000) {
+            return;
+        }
+        let mut fields = vec![
+            kv("req_id", ctx.req_id as f64),
+            kv("op", ctx.op),
+            kv("dataset", ctx.dataset),
+            kv("workload", ctx.workload),
+            kv("lambda", ctx.lambda),
+            kv("wall_ms", ns_to_ms(wall_ns)),
+            kv("solve_ms", ns_to_ms(stats.solve_ns)),
+            kv("pricing_ms", ns_to_ms(stats.pricing_ns)),
+            kv("seed_ms", ns_to_ms(stats.seed_ns)),
+            kv("rounds", stats.rounds),
+            kv("timed_out", stats.timed_out),
+        ];
+        if let Some(r) = ring {
+            fields.push(kv("trace", trace_events_json(&r.events())));
+        }
+        stderr_line(&format!("[serve] slow-solve {}", Json::obj(fields)));
+    }
+}
+
+/// What a slow-solve log line identifies: the request id and the
+/// `(op, dataset, workload, λ)` it ran.
+struct SlowLogCtx<'a> {
+    req_id: u64,
+    op: &'static str,
+    dataset: &'a str,
+    workload: &'static str,
+    lambda: f64,
+}
+
+/// Top a registry counter up to `value` at scrape time. The sources
+/// mirrored this way (the warm cache's own counters, the disk-hit
+/// count) only grow, so the delta is never negative and the exposed
+/// counter stays monotone across scrapes.
+fn sync_counter(metrics: &obs::Registry, name: &str, help: &str, value: u64) {
+    let c = metrics.counter(name, help, &[]);
+    let cur = c.get();
+    if value > cur {
+        c.add(value - cur);
+    }
+}
+
+/// Known op names pass through; anything else folds into `"other"` so
+/// arbitrary request strings cannot grow the label space unboundedly.
+fn op_metric_label(op: &str) -> &'static str {
+    match op {
+        "register" => "register",
+        "solve" => "solve",
+        "grid" => "grid",
+        "batch" => "batch",
+        "stats" => "stats",
+        "metrics" => "metrics",
+        "ping" => "ping",
+        "shutdown" => "shutdown",
+        _ => "other",
+    }
+}
+
+/// The request's workload as a bounded metric label: a recognized
+/// `"workload"` field maps to its canonical name, everything else
+/// (absent, malformed, or an op that has no workload) to `"none"`.
+fn workload_metric_label(req: &Req) -> &'static str {
+    match req.str_opt("workload").map(Workload::parse) {
+        Some(Ok(w)) => w.as_str(),
+        _ => "none",
+    }
+}
+
+/// Nanoseconds as fractional milliseconds for response fields.
+fn ns_to_ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Ring-captured round events as a JSON array — the `"trace"` response
+/// field and the slow-solve log payload.
+fn trace_events_json(events: &[RoundEvent]) -> Json {
+    Json::from(events.iter().map(round_event_json).collect::<Vec<Json>>())
+}
+
+/// One engine round event as a JSON object (span fields stay in
+/// nanoseconds, matching the JSONL sink schema in `obs::trace`).
+fn round_event_json(ev: &RoundEvent) -> Json {
+    Json::obj(vec![
+        kv("round", ev.round),
+        kv("objective", ev.objective),
+        kv("viol_rows", ev.viol_rows),
+        kv("viol_cols", ev.viol_cols),
+        kv("rows_added", ev.rows_added),
+        kv("cols_added", ev.cols_added),
+        kv("working_set", ev.working_set),
+        kv("simplex_iters", ev.simplex_iters),
+        kv("solve_ns", ev.solve_ns as f64),
+        kv("pricing_ns", ev.pricing_ns as f64),
+        kv("expand_ns", ev.expand_ns as f64),
+    ])
 }
 
 /// RAII token for one admitted solve/grid/batch request: releases the
@@ -879,6 +1232,7 @@ fn solve_l1(
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
     let all_i: Vec<usize> = (0..ds.n()).collect();
+    let seed_span = Span::start();
     let (j_init, seeded_by): (Vec<usize>, &'static str) = match seed {
         Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
         _ => {
@@ -888,10 +1242,12 @@ fn solve_l1(
             (s.ws.cols, s.strategy.as_str())
         }
     };
+    let seed_ns = seed_span.elapsed_ns();
     let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &j_init);
     rl1.set_threads(gen.threads);
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
-    let stats = engine_for(gen, stop).run(&mut prob);
+    let mut stats = engine_for(gen, stop).run(&mut prob);
+    stats.seed_ns = seed_ns;
     let mut ws = prob.export_working_set();
     // Algorithm 1 keeps every margin row in the model; snapshotting the
     // full [n] would only bloat the cache.
@@ -920,6 +1276,7 @@ fn solve_group(
     let groups = contiguous_groups(ds.p(), group_size)?;
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
+    let seed_span = Span::start();
     let (g_init, seeded_by): (Vec<usize>, &'static str) = match seed {
         Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
         _ => {
@@ -927,6 +1284,7 @@ fn solve_group(
             (s.ws.cols, s.strategy.as_str())
         }
     };
+    let seed_ns = seed_span.elapsed_ns();
     ensure!(
         g_init.iter().all(|&g| g < groups.len()),
         "snapshot group index out of range for group_size {group_size}"
@@ -934,7 +1292,8 @@ fn solve_group(
     let mut rg = RestrictedGroup::new(ds, &groups, lambda, &g_init);
     rg.set_threads(gen.threads);
     let mut prob = GroupProblem::new(rg, ds, &pricer);
-    let stats = engine_for(gen, stop).run(&mut prob);
+    let mut stats = engine_for(gen, stop).run(&mut prob);
+    stats.seed_ns = seed_ns;
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
     let report = group_report(ds, &groups, &support, b0, lambda);
@@ -959,6 +1318,7 @@ fn solve_slope(
     let weights = bh_slope_weights(ds.p(), lambda);
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
+    let seed_span = Span::start();
     let (j_init, seeded_by): (Vec<usize>, &'static str) = match seed {
         Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
         _ => {
@@ -966,6 +1326,7 @@ fn solve_slope(
             (s.ws.cols, s.strategy.as_str())
         }
     };
+    let seed_ns = seed_span.elapsed_ns();
     // Slope caps column additions per round (paper: 10).
     let mut eng = gen.clone();
     if eng.max_cols_per_round == 0 {
@@ -974,7 +1335,8 @@ fn solve_slope(
     let mut rs = RestrictedSlope::new(ds, &weights, &j_init);
     rs.set_threads(gen.threads);
     let mut prob = SlopeProblem::new(rs, ds, &pricer, true);
-    let stats = engine_for(&eng, stop).run(&mut prob);
+    let mut stats = engine_for(&eng, stop).run(&mut prob);
+    stats.seed_ns = seed_ns;
     let ws = prob.export_working_set();
     let (support, b0) = prob.inner().beta_support();
     let report = slope_report(ds, &weights, &support, b0);
@@ -1000,6 +1362,7 @@ fn solve_ranksvm(
     let pairs = pairs_for(entry, gen.pair_mode, &mut owned_pairs)?;
     let backend = NativeBackend::new(&ds.x);
     let pricer = BackendPricer::new(&backend, gen.threads);
+    let seed_span = Span::start();
     let (t_init, j_init, seeded_by) = match seed {
         Some(ws) if !ws.is_empty() => (ws.rows.clone(), ws.cols.clone(), "cache"),
         _ => {
@@ -1007,6 +1370,7 @@ fn solve_ranksvm(
             (s.ws.rows, s.ws.cols, s.strategy.as_str())
         }
     };
+    let seed_ns = seed_span.elapsed_ns();
     ensure!(
         t_init.iter().all(|&t| t < pairs.len()),
         "snapshot pair index out of range (stale pair enumeration?)"
@@ -1015,7 +1379,8 @@ fn solve_ranksvm(
     rr.set_threads(gen.threads);
     rr.set_pair_cap(pair_rows_cap(gen));
     let mut prob = RankProblem::new(rr, ds, &pricer);
-    let stats = engine_for(gen, stop).run(&mut prob);
+    let mut stats = engine_for(gen, stop).run(&mut prob);
+    stats.seed_ns = seed_ns;
     let ws = prob.export_working_set();
     let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
     Ok(SolveCore {
@@ -1041,6 +1406,7 @@ fn solve_dantzig(
     let mut rd = RestrictedDantzig::new(ds, lambda, &[]);
     rd.set_threads(gen.threads);
     let mut prob = DantzigProblem::new(rd, ds, &pricer);
+    let seed_span = Span::start();
     let seeded_by = match seed {
         Some(ws) if !ws.is_empty() => {
             prob.import_working_set(ws);
@@ -1052,7 +1418,9 @@ fn solve_dantzig(
             cold.strategy.as_str()
         }
     };
-    let stats = engine_for(gen, stop).run(&mut prob);
+    let seed_ns = seed_span.elapsed_ns();
+    let mut stats = engine_for(gen, stop).run(&mut prob);
+    stats.seed_ns = seed_ns;
     let ws = prob.export_working_set();
     let report = dantzig_report(ds.p(), &prob.inner().beta_support());
     Ok(SolveCore {

@@ -270,13 +270,27 @@ pub fn serve_tcp(
     let local = listener.local_addr()?;
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(queue_cap.max(1));
     let rx = Mutex::new(rx);
+    // sync_channel has no len(): the acceptor and workers keep the
+    // depth gauge themselves (inc on enqueue, dec on dequeue)
+    let depth = state.metrics.gauge(
+        "cutgen_accept_queue_depth",
+        "Accepted connections waiting for a free worker.",
+        &[],
+    );
+    let sheds = state.metrics.counter(
+        "cutgen_queue_sheds_total",
+        "Connections shed at the bounded accept queue.",
+        &[],
+    );
     std::thread::scope(|scope| -> std::io::Result<()> {
         for _ in 0..workers {
             let rx = &rx;
+            let depth = &depth;
             scope.spawn(move || loop {
                 let next = rx.lock().expect("queue lock").recv();
                 match next {
                     Ok(stream) => {
+                        depth.sub(1);
                         handle_conn(state, stream);
                         if state.shutdown_requested() {
                             // wake the blocking accept so the loop exits
@@ -293,10 +307,11 @@ pub fn serve_tcp(
                 break; // this was the wake-up poke
             }
             match tx.try_send(stream) {
-                Ok(()) => {}
+                Ok(()) => depth.add(1),
                 Err(TrySendError::Full(mut stream)) => {
                     // bounded backlog: shed the connection with a typed
                     // busy line instead of queueing it invisibly
+                    sheds.inc();
                     let _ = writeln!(stream, "{}", busy_response());
                 }
                 Err(TrySendError::Disconnected(_)) => break,

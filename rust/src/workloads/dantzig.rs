@@ -328,6 +328,9 @@ impl RestrictedProblem for DantzigProblem<'_> {
     fn add_cols(&mut self, idx: &[usize]) {
         self.rd.add_coef_cols(self.ds, idx);
     }
+    fn working_set_size(&self) -> usize {
+        self.rd.j_set().len() + self.rd.i_set().len()
+    }
 }
 
 /// Package the restricted solution as an [`SvmSolution`] (`beta0` is 0 —

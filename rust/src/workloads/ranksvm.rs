@@ -406,6 +406,9 @@ impl RestrictedProblem for RankProblem<'_, '_> {
     fn add_cols(&mut self, idx: &[usize]) {
         self.rr.add_features(self.ds, idx);
     }
+    fn working_set_size(&self) -> usize {
+        self.rr.j_set().len() + self.rr.t_set().len()
+    }
 }
 
 /// Package the restricted solution as an [`SvmSolution`]: `beta0` is 0

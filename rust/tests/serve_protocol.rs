@@ -532,6 +532,154 @@ fn batch_serves_mixed_workloads_through_one_cache() {
     }
 }
 
+/// `"trace": true` on a solve returns the typed per-round engine events
+/// inline, and they must agree with the response's own counters: one
+/// event per round, per-round `cols_added` summing to the reported
+/// total, the last event's cumulative `simplex_iters` matching, and the
+/// per-round solve spans summing to the reported `solve_ms` (both come
+/// from the same engine clocks, so they agree to rounding).
+#[test]
+fn trace_events_agree_with_reported_stats() {
+    let state = ServeState::new(16);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":50,"p":120,"seed":31}}"#,
+    ))
+    .unwrap());
+    let resp = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"eps":1e-7,"cache":false,"trace":true,"init":"screening","max_cols_per_round":5}"#,
+    ))
+    .unwrap();
+    assert_ok(&resp);
+    let events = resp.get("trace").unwrap().as_arr().unwrap();
+    assert_eq!(get_usize(&resp, "trace_dropped"), 0);
+    assert_eq!(events.len(), get_usize(&resp, "rounds"), "one event per round: {resp}");
+    let cols_added: usize = events.iter().map(|e| get_usize(e, "cols_added")).sum();
+    assert_eq!(cols_added, get_usize(&resp, "cols_added"));
+    let last = events.last().unwrap();
+    assert_eq!(get_usize(last, "simplex_iters"), get_usize(&resp, "simplex_iters"));
+    for (k, e) in events.iter().enumerate() {
+        assert_eq!(get_usize(e, "round"), k + 1, "rounds are 1-based and consecutive");
+    }
+    // span totals: the per-round solve clocks sum to the reported
+    // solve_ms, and the full breakdown fits inside the request wall time
+    let solve_ns: f64 = events.iter().map(|e| get_f64(e, "solve_ns")).sum();
+    let solve_ms = get_f64(&resp, "solve_ms");
+    assert!(
+        (solve_ns / 1e6 - solve_ms).abs() <= 1e-3 + solve_ms * 1e-6,
+        "per-round solve spans {solve_ns}ns vs reported {solve_ms}ms"
+    );
+    let wall_ms = get_f64(&resp, "wall_ms");
+    let parts = solve_ms + get_f64(&resp, "pricing_ms") + get_f64(&resp, "seed_ms");
+    assert!(
+        parts <= wall_ms,
+        "span breakdown ({parts}ms) cannot exceed the wall clock ({wall_ms}ms): {resp}"
+    );
+    // untraced responses carry none of the nondeterministic fields
+    let plain = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"cache":false}"#,
+    ))
+    .unwrap();
+    assert_ok(&plain);
+    for absent in ["trace", "wall_ms", "solve_ms"] {
+        assert!(plain.get(absent).is_none(), "{absent} must be trace-gated: {plain}");
+    }
+}
+
+/// The `metrics` op: after real traffic the exposition text must carry
+/// the request-latency histogram, per-op request counters, and cache
+/// counters that agree with the `stats` op — and every line must parse
+/// as Prometheus text exposition (`# HELP`/`# TYPE` or `name{…} value`).
+#[test]
+fn metrics_op_renders_agreeing_exposition() {
+    let state = ServeState::new(16);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":23}}"#,
+    ))
+    .unwrap());
+    let solve = r#"{"op":"solve","dataset":"d","workload":"l1svm","lambda_frac":0.05,"eps":1e-6}"#;
+    assert_ok(&Json::parse(&state.handle_line(solve)).unwrap());
+    assert_ok(&Json::parse(&state.handle_line(solve)).unwrap()); // warm hit
+    let stats = Json::parse(&state.handle_line(r#"{"op":"stats"}"#)).unwrap();
+    let metrics = Json::parse(&state.handle_line(r#"{"op":"metrics"}"#)).unwrap();
+    assert_ok(&metrics);
+    let text = metrics.get("exposition").unwrap().as_str().unwrap().to_string();
+    // the request-latency histogram saw both solves
+    assert!(
+        text.contains(
+            "cutgen_request_latency_seconds_bucket{op=\"solve\",workload=\"l1svm\",le=\"+Inf\"} 2"
+        ),
+        "missing solve latency histogram:\n{text}"
+    );
+    assert!(text.contains("cutgen_request_latency_seconds_count{op=\"solve\",workload=\"l1svm\"} 2"));
+    assert!(text.contains("cutgen_requests_total{op=\"solve\"} 2"), "got:\n{text}");
+    assert!(text.contains("cutgen_requests_total{op=\"register\"} 1"));
+    // scrape-time mirrors agree with the stats op
+    let hits = get_usize(&stats, "cache_hits");
+    let misses = get_usize(&stats, "cache_misses");
+    assert!(hits >= 1, "second solve must warm-hit: {stats}");
+    assert!(text.contains(&format!("cutgen_cache_hits_total {hits}")), "got:\n{text}");
+    assert!(text.contains(&format!("cutgen_cache_misses_total {misses}")));
+    assert!(text.contains("cutgen_inflight 0"), "no solve is executing at scrape time");
+    assert!(
+        text.contains("cutgen_dataset_resident_bytes{dataset=\"d\"}"),
+        "per-dataset gauge missing:\n{text}"
+    );
+    // well-formed exposition: HELP/TYPE headers or `name{…} value` lines
+    for line in text.lines() {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad: {line}"));
+        assert!(!series.is_empty());
+        assert!(
+            value == "+Inf" || value.parse::<f64>().is_ok(),
+            "unparseable sample value in {line:?}"
+        );
+    }
+    // counters are monotone across scrapes
+    let again = Json::parse(&state.handle_line(r#"{"op":"metrics"}"#)).unwrap();
+    let text2 = again.get("exposition").unwrap().as_str().unwrap();
+    assert!(
+        text2.contains("cutgen_requests_total{op=\"metrics\"} 1"),
+        "the first metrics scrape is itself counted:\n{text2}"
+    );
+}
+
+/// Grid responses carry per-point engine stats (`rounds`,
+/// `simplex_iters`, `warm`, `timed_out`) plus `warm_hits`/`timed_out`
+/// rollups, and `"trace": true` returns ring-buffered round events that
+/// account for every generation round the path drivers ran.
+#[test]
+fn grid_reports_per_point_stats_and_rollups() {
+    let state = ServeState::new(16);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":27}}"#,
+    ))
+    .unwrap());
+    let resp = Json::parse(&state.handle_line(
+        r#"{"op":"grid","dataset":"d","workload":"l1svm","grid":4,"ratio":0.6,"trace":true}"#,
+    ))
+    .unwrap();
+    assert_ok(&resp);
+    let path = resp.get("path").unwrap().as_arr().unwrap();
+    assert_eq!(path.len(), 4);
+    assert!(!get_bool(&path[0], "warm"), "λ_max point starts cold");
+    for pt in &path[1..] {
+        assert!(get_bool(pt, "warm"), "later points warm-start from their predecessor");
+    }
+    for pt in path {
+        assert!(!get_bool(pt, "timed_out"), "no deadline was set: {pt}");
+    }
+    assert_eq!(get_usize(&resp, "warm_hits"), 3);
+    assert_eq!(get_usize(&resp, "timed_out"), 0);
+    // per-point rounds sum to the path total, which is what the ring saw
+    let per_point: usize = path.iter().map(|pt| get_usize(pt, "rounds")).sum();
+    assert_eq!(per_point, get_usize(&resp, "rounds"), "step rounds must sum: {resp}");
+    let events = resp.get("trace").unwrap().as_arr().unwrap();
+    assert_eq!(get_usize(&resp, "trace_dropped"), 0);
+    assert_eq!(events.len(), per_point, "one traced event per engine round");
+}
+
 /// The TCP transport: worker pool serves a multi-request session, and a
 /// `shutdown` request stops the server.
 #[test]
