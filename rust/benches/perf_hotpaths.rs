@@ -566,6 +566,42 @@ fn main() {
         );
     }
 
+    // 11. path exact vs warm-grid (l1svm, 50 points) — the parametric
+    // ride prices the implicit column space only at basis-change
+    // breakpoints, so over the same λ range a dense 50-point grid pays
+    // for ≥ 50 pricing rounds where the exact path pays one per
+    // breakpoint (plus expansions). Both drivers are run end to end on
+    // the same draw; the printed round counts are the claim.
+    {
+        use cutgen::coordinator::path::{geometric_grid, regularization_path};
+        use cutgen::coordinator::path_exact::l1svm_path_exact;
+        use cutgen::coordinator::GenParams;
+
+        let (xn, xp) = if smoke { (40, 200) } else { (100, 1000) };
+        let xds = generate_l1(&SyntheticSpec::paper_default(xn, xp), &mut rng);
+        let xbe = NativeBackend::new(&xds.x);
+        let xlmax = xds.lambda_max_l1();
+        let xparams = GenParams { eps: 1e-6, ..Default::default() };
+        let ratio = 0.5f64.powf(1.0 / 49.0);
+        let grid = geometric_grid(xlmax, 50, ratio);
+        bench(&mut recs, &format!("path warm-grid (l1svm, 50 pts) n={xn} p={xp}"), 0.0, || {
+            let (pts, _) = regularization_path(&xds, &xbe, &grid, &xparams);
+            black_box(pts.len());
+        });
+        bench(&mut recs, &format!("path exact (l1svm, 50 pts range) n={xn} p={xp}"), 0.0, || {
+            let path = l1svm_path_exact(&xds, &xbe, xlmax, 0.5 * xlmax, &xparams);
+            black_box(path.points.len());
+        });
+        let (pts, _) = regularization_path(&xds, &xbe, &grid, &xparams);
+        let grid_rounds = pts.last().map_or(0, |p| p.stats.rounds);
+        let path = l1svm_path_exact(&xds, &xbe, xlmax, 0.5 * xlmax, &xparams);
+        println!(
+            "    path exact: {} breakpoints, {} pricing rounds vs warm-grid {} rounds \
+             over 50 λ's (same range)",
+            path.stats.breakpoints, path.stats.pricing_rounds, grid_rounds
+        );
+    }
+
     if json {
         write_json(&recs, if smoke { "smoke" } else { "default" }, &agree_note);
     }

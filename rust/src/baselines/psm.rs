@@ -25,7 +25,9 @@ pub fn psm_l1svm(ds: &Dataset, lambda: f64) -> PsmResult {
     let n = ds.n();
     let p = ds.p();
     let lambda_max = ds.lambda_max_l1();
-    let lambda_start = lambda_max * 1.001;
+    // Clamp so the ride is always downward even when the caller's λ sits
+    // above λ_max (the λ_max sanity tests do exactly that).
+    let lambda_start = (lambda_max * 1.001).max(lambda);
 
     // Full model, costs at λ_start.
     let mut model = LpModel::new();
@@ -59,7 +61,8 @@ pub fn psm_l1svm(ds: &Dataset, lambda: f64) -> PsmResult {
     }
     let solver = SimplexSolver::new(model);
     let mut psm = ParametricSimplex::new(solver, c_fix, c_var);
-    let (path, status) = psm.run(lambda_start, lambda, 100_000);
+    let (path, status) =
+        psm.run(lambda_start, lambda, 100_000).expect("lambda_start clamped >= lambda");
 
     let mut beta = vec![0.0; p];
     for j in 0..p {

@@ -8,16 +8,18 @@
 //!                 [--backend native|pjrt] [--eps E] [--group-size G]
 //!                 [--init auto|screening|fista|blockcd|subsample] [--seed-budget K]
 //!                 [--threads T] [--trace] [--trace-json FILE]
-//! cutgen path     --synthetic N,P [--grid K] [--ratio R] [--seed-budget K] [--threads T]
+//! cutgen path     --synthetic N,P [--path grid|exact] [--grid K] [--ratio R]
+//!                 [--lambda-min-frac F] [--seed-budget K] [--threads T]
 //! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
-//!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
+//!                 [--method gen|full-lp] [--grid K] [--path exact] [--eps E] [--init S]
 //!                 [--pair-mode auto|enumerate|implicit]
 //!                 [--seed-budget K] [--threads T] [--trace] [--trace-json FILE]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
-//!                 [--method gen|full-lp] [--grid K] [--eps E] [--init S]
+//!                 [--method gen|full-lp] [--grid K] [--path exact] [--eps E] [--init S]
 //!                 [--seed-budget K] [--threads T] [--trace] [--trace-json FILE]
 //! cutgen serve    [--port 7878] [--host 127.0.0.1] [--workers W]
-//!                 [--cache-cap N] [--cache-bytes B] [--persist-dir DIR]
+//!                 [--cache-cap N] [--cache-bytes B] [--registry-bytes B]
+//!                 [--persist-dir DIR]
 //!                 [--max-inflight N] [--queue-cap N] [--slow-solve-ms MS] [--stdin]
 //! cutgen client   [--port 7878] [--host H] --send '<json>' | --file requests.jsonl
 //!                 | --metrics
@@ -33,6 +35,14 @@
 //! them. `--pair-mode` picks RankSVM's comparison-pair representation
 //! (`auto` enumerates small candidate sets, goes implicit — O(n log n)
 //! pricing, no O(n²) list — beyond; see `docs/ranksvm-scaling.md`).
+//!
+//! `--path exact` switches the λ-path subcommands from the fixed
+//! geometric grid (Algorithm 2) to the exact parametric breakpoint ride
+//! of `coordinator::path_exact` — it descends from λ_max to
+//! `--lambda-min-frac`·λ_max (default 0.05) and prices the implicit
+//! space only where the restricted basis changes; see
+//! `docs/path-exact.md`. Group/Slope keep the grid (no parametric
+//! certificate exists for them).
 //!
 //! `--trace` prints one human-readable stderr line per generation
 //! round; `--trace-json FILE` additionally streams the typed round
@@ -323,15 +333,13 @@ fn train(args: &Args) -> Result<()> {
                     "clg" => {
                         // §4 default behavior: FOM-seeded cold solve
                         // (--init screening restores the bare top-k seed);
-                        // column-only — Algorithm 1 keeps all margin rows
+                        // column-only — Algorithm 1 keeps all margin rows.
+                        // The seed's primal guess also picks the starting
+                        // basis via crossover.
                         let seed =
                             Initializer::from_params(&gen).seed_l1_cols(&ds, backend, lambda);
-                        crate::coordinator::l1svm::column_generation(
-                            &ds,
-                            backend,
-                            lambda,
-                            &seed.ws.cols,
-                            &gen,
+                        crate::coordinator::l1svm::column_generation_seeded(
+                            &ds, backend, lambda, &seed, &gen,
                         )
                     }
                     "cng" => {
@@ -399,11 +407,24 @@ fn path_cmd(args: &Args) -> Result<()> {
     let k = args.get_usize("grid", 20)?;
     let ratio = args.get_f64("ratio", 0.7)?;
     let gen = args.gen_params()?;
-    let grid = geometric_grid(ds.lambda_max_l1(), k, ratio);
+    let lmax = ds.lambda_max_l1();
     let backend = NativeBackend::new(&ds.x);
-    let ((path, _), t) =
-        crate::exps::time_it(|| regularization_path(&ds, &backend, &grid, &gen));
-    report_path(&path, t);
+    match args.get("path").unwrap_or("grid") {
+        "grid" => {
+            let grid = geometric_grid(lmax, k, ratio);
+            let ((path, _), t) =
+                crate::exps::time_it(|| regularization_path(&ds, &backend, &grid, &gen));
+            report_path(&path, t);
+        }
+        "exact" => {
+            let llo = args.get_f64("lambda-min-frac", 0.05)? * lmax;
+            let (path, t) = crate::exps::time_it(|| {
+                crate::coordinator::path_exact::l1svm_path_exact(&ds, &backend, lmax, llo, &gen)
+            });
+            report_exact_path(&path, t);
+        }
+        other => bail!("unknown --path {other:?} (grid|exact)"),
+    }
     Ok(())
 }
 
@@ -455,6 +476,30 @@ fn report_path(path: &[crate::coordinator::path::PathSolution], secs: f64) {
     );
 }
 
+/// Print an exact-path breakpoint table (one row per basis change).
+fn report_exact_path(path: &crate::coordinator::path_exact::ExactPath, secs: f64) {
+    println!(
+        "{:>12} {:>12} {:>8} {:>8} {:>9}",
+        "lambda", "objective", "nnz", "|J|", "expanded"
+    );
+    for pt in &path.points {
+        println!(
+            "{:>12.5} {:>12.5} {:>8} {:>8} {:>9}",
+            pt.lambda, pt.objective, pt.support, pt.working_set, pt.expanded
+        );
+    }
+    println!(
+        "total {secs:.3}s: {} breakpoints ({} expanding), {} pricing rounds, {} simplex \
+         iterations{}{}",
+        path.stats.breakpoints,
+        path.stats.expansions,
+        path.stats.pricing_rounds,
+        path.stats.simplex_iters,
+        if path.timed_out { ", timed out" } else { "" },
+        if path.truncated { ", truncated" } else { "" },
+    );
+}
+
 fn ranksvm_cmd(args: &Args) -> Result<()> {
     let ds = load_or_generate_regression(args, true)?;
     let gen = args.gen_params()?;
@@ -471,6 +516,16 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
         pairs.mode(),
         gen.init.as_str()
     );
+    if args.get("path") == Some("exact") {
+        let llo = args.get_f64("lambda-min-frac", 0.05)? * lmax;
+        let (path, t) = crate::exps::time_it(|| {
+            crate::coordinator::path_exact::ranksvm_path_exact(
+                &ds, &backend, &pairs, lmax, llo, &gen,
+            )
+        });
+        report_exact_path(&path, t);
+        return Ok(());
+    }
     if let Some(k) = args.get("grid") {
         ensure!(
             matches!(args.get("method"), None | Some("gen")),
@@ -523,6 +578,14 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
         ds.p(),
         gen.init.as_str()
     );
+    if args.get("path") == Some("exact") {
+        let llo = args.get_f64("lambda-min-frac", 0.3)? * lmax;
+        let (path, t) = crate::exps::time_it(|| {
+            crate::coordinator::path_exact::dantzig_path_exact(&ds, &backend, lmax, llo, &gen)
+        });
+        report_exact_path(&path, t);
+        return Ok(());
+    }
     if let Some(k) = args.get("grid") {
         ensure!(
             matches!(args.get("method"), None | Some("gen")),
@@ -567,16 +630,23 @@ fn dantzig_cmd(args: &Args) -> Result<()> {
 /// so warm starts survive restarts, and `--max-inflight` caps
 /// concurrent solves (0 = unlimited); excess load is rejected with a
 /// `retry_after` hint. `--slow-solve-ms` logs a structured stderr line
-/// (with the round trace) for any solve/grid over the threshold. See
+/// (with the round trace) for any solve/grid over the threshold.
+/// `--registry-bytes` bounds the resident bytes of *registered
+/// datasets* (0 = unbounded): past the budget the least-recently-used
+/// dataset is evicted, exactly as if it had been `unregister`ed. See
 /// `docs/serving.md` and `docs/observability.md`.
 fn serve_cmd(args: &Args) -> Result<()> {
     let cache_cap = args.get_usize("cache-cap", crate::serve::DEFAULT_CACHE_CAP)?;
     let cache_bytes = args.get_usize("cache-bytes", 0)?;
+    let registry_bytes = args.get_usize("registry-bytes", 0)?;
     let max_inflight = args.get_usize("max-inflight", 0)?;
     let slow_solve_ms = args.get_usize("slow-solve-ms", 0)?;
     let mut state = crate::serve::ServeState::new(cache_cap);
     if cache_bytes > 0 {
         state = state.with_cache_bytes(cache_bytes);
+    }
+    if registry_bytes > 0 {
+        state = state.with_registry_bytes(registry_bytes);
     }
     if max_inflight > 0 {
         state = state.with_max_inflight(max_inflight);
@@ -713,6 +783,43 @@ mod tests {
     fn path_on_tiny_synthetic_runs() {
         let a = args(&["path", "--synthetic", "30,60", "--grid", "5"]);
         main_with(a).unwrap();
+    }
+
+    #[test]
+    fn path_exact_on_tiny_synthetic_runs() {
+        let a = args(&[
+            "path",
+            "--synthetic",
+            "30,60",
+            "--path",
+            "exact",
+            "--lambda-min-frac",
+            "0.3",
+        ]);
+        main_with(a).unwrap();
+        let bad = args(&["path", "--synthetic", "30,60", "--path", "magic"]);
+        assert!(main_with(bad).is_err(), "unknown path mode must error");
+        // the exact ride is wired for the ranksvm/dantzig subcommands too
+        let r = args(&[
+            "ranksvm",
+            "--synthetic",
+            "15,20",
+            "--path",
+            "exact",
+            "--lambda-min-frac",
+            "0.4",
+        ]);
+        main_with(r).unwrap();
+        let d = args(&[
+            "dantzig",
+            "--synthetic",
+            "25,15",
+            "--path",
+            "exact",
+            "--lambda-min-frac",
+            "0.5",
+        ]);
+        main_with(d).unwrap();
     }
 
     #[test]

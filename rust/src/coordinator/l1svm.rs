@@ -26,6 +26,8 @@ pub struct RestrictedL1 {
     rows_i: Vec<usize>,
     /// sample i → LP row position (None when i ∉ I).
     row_pos: Vec<Option<usize>>,
+    /// Row positions currently retired (see [`RestrictedL1::retire_samples`]).
+    retired: Vec<bool>,
     /// Feature index handled by column-pair position t.
     cols_j: Vec<usize>,
     /// feature j → column-pair position.
@@ -37,6 +39,11 @@ pub struct RestrictedL1 {
     bm: Vec<VarId>,
     /// Intercept variable.
     b0: VarId,
+    /// Cost decomposition `cost_v(λ) = cfix[v] + λ·cvar[v]` over all
+    /// structural variables, maintained alongside every `add_*` — the
+    /// exact-path driver's breakpoint scan reads it.
+    cfix: Vec<f64>,
+    cvar: Vec<f64>,
 }
 
 impl RestrictedL1 {
@@ -51,12 +58,15 @@ impl RestrictedL1 {
             lambda,
             rows_i: Vec::new(),
             row_pos: vec![None; n],
+            retired: Vec::new(),
             cols_j: Vec::new(),
             pos_j: vec![None; p],
             xi: Vec::new(),
             bp: Vec::new(),
             bm: Vec::new(),
             b0,
+            cfix: vec![0.0],
+            cvar: vec![0.0],
         };
         me.add_samples(ds, i_set);
         me.add_features(ds, j_set);
@@ -74,10 +84,20 @@ impl RestrictedL1 {
     }
 
     /// Bring samples into I: appends the margin rows
-    /// `ξ_i + Σ_{j∈J} y_i x_ij (β⁺_j − β⁻_j) + y_i β₀ ≥ 1`.
+    /// `ξ_i + Σ_{j∈J} y_i x_ij (β⁺_j − β⁻_j) + y_i β₀ ≥ 1`. A previously
+    /// [retired](RestrictedL1::retire_samples) sample is re-armed in
+    /// place: its row bounds and ξ cost are restored, and the next solve
+    /// warm-resumes dual-feasibly (bound tightening never disturbs the
+    /// reduced costs).
     pub fn add_samples(&mut self, ds: &Dataset, samples: &[usize]) {
         for &i in samples {
-            if self.row_pos[i].is_some() {
+            if let Some(r) = self.row_pos[i] {
+                if self.retired[r] {
+                    self.solver.set_row_bounds(r, 1.0, f64::INFINITY);
+                    self.solver.set_col_cost(self.xi[r], 1.0);
+                    self.cfix[self.xi[r]] = 1.0;
+                    self.retired[r] = false;
+                }
                 continue;
             }
             self.row_pos[i] = Some(self.rows_i.len());
@@ -95,8 +115,35 @@ impl RestrictedL1 {
             }
             self.solver.add_row(1.0, f64::INFINITY, &coefs);
             self.rows_i.push(i);
+            self.retired.push(false);
             self.xi.push(xi);
+            self.cfix.push(1.0);
+            self.cvar.push(0.0);
         }
+    }
+
+    /// Retire samples from the model without rebuilding it: the margin
+    /// row is relaxed to `(−∞, ∞)` and the ξ cost zeroed, so the sample
+    /// contributes neither a constraint nor hinge loss. The basis
+    /// survives — relaxing bounds leaves every reduced cost unchanged,
+    /// so the next solve is a short primal cleanup rather than a cold
+    /// start. [`RestrictedL1::add_samples`] re-arms retired samples.
+    pub fn retire_samples(&mut self, samples: &[usize]) {
+        for &i in samples {
+            if let Some(r) = self.row_pos[i] {
+                if !self.retired[r] {
+                    self.solver.set_row_bounds(r, f64::NEG_INFINITY, f64::INFINITY);
+                    self.solver.set_col_cost(self.xi[r], 0.0);
+                    self.cfix[self.xi[r]] = 0.0;
+                    self.retired[r] = true;
+                }
+            }
+        }
+    }
+
+    /// Number of samples currently active (in I and not retired).
+    pub fn active_samples(&self) -> usize {
+        self.retired.iter().filter(|&&t| !t).count()
     }
 
     /// Bring features into J: appends the β⁺/β⁻ column pair with
@@ -125,6 +172,8 @@ impl RestrictedL1 {
             self.cols_j.push(j);
             self.bp.push(bp);
             self.bm.push(bm);
+            self.cfix.extend_from_slice(&[0.0, 0.0]);
+            self.cvar.extend_from_slice(&[1.0, 1.0]);
         }
     }
 
@@ -142,6 +191,72 @@ impl RestrictedL1 {
     /// [`crate::simplex::SimplexSolver::set_threads`]).
     pub fn set_threads(&mut self, threads: usize) {
         self.solver.set_threads(threads);
+    }
+
+    /// Largest λ' in `[lambda_lo, lambda)` where the current basis stops
+    /// being cost-optimal for the *restricted* model — the exact-path
+    /// driver's breakpoint scan (two BTRANs + one nonbasic pass).
+    pub(crate) fn next_breakpoint(&mut self, lambda: f64, lambda_lo: f64) -> Option<f64> {
+        crate::simplex::next_cost_breakpoint(
+            &mut self.solver,
+            &self.cfix,
+            &self.cvar,
+            lambda,
+            lambda_lo,
+        )
+    }
+
+    /// Seat a primal guess `(β, β₀)` as the starting basis. The guessed
+    /// support (intercept first, then working-set features by |β_j|,
+    /// then the slacks of guess-violated margins by violation size) is
+    /// matched greedily to rows and crossed over to a vertex; a
+    /// FISTA-quality guess lands a few pivots from the optimum, vs. a
+    /// full dual-simplex pass from the all-logical crash basis. Returns
+    /// whether the crossover succeeded — on `false` the solver is left
+    /// on its cold-start path and the next [`RestrictedL1::solve`] is
+    /// simply a cold solve.
+    pub fn crossover_from(&mut self, ds: &Dataset, beta: &[f64], beta0: f64) -> bool {
+        let mut support: Vec<(usize, f64)> = self
+            .cols_j
+            .iter()
+            .enumerate()
+            .filter_map(|(t, &j)| {
+                let b = beta.get(j).copied().unwrap_or(0.0);
+                if b != 0.0 {
+                    Some((t, b))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        support.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        let mut preferred: Vec<VarId> = Vec::with_capacity(1 + support.len() + self.rows_i.len());
+        preferred.push(self.b0);
+        for &(t, b) in &support {
+            preferred.push(if b > 0.0 { self.bp[t] } else { self.bm[t] });
+        }
+        // margins of the FULL guess (not just the working set) pick the
+        // slacks likely basic at the optimum
+        let cols: Vec<usize> =
+            (0..beta.len()).filter(|&j| beta[j] != 0.0).collect();
+        let vals: Vec<f64> = cols.iter().map(|&j| beta[j]).collect();
+        let mut xb = vec![0.0; ds.n()];
+        ds.x.matvec_cols(&cols, &vals, &mut xb);
+        let mut violated: Vec<(usize, f64)> = Vec::new();
+        for (r, &i) in self.rows_i.iter().enumerate() {
+            if self.retired[r] {
+                continue;
+            }
+            let slack = 1.0 - ds.y[i] * (xb[i] + beta0);
+            if slack > 0.0 {
+                violated.push((r, slack));
+            }
+        }
+        violated.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for &(r, _) in &violated {
+            preferred.push(self.xi[r]);
+        }
+        self.solver.crossover_from_guess(&preferred)
     }
 
     /// Solve the restricted LP (warm-started).
@@ -255,6 +370,12 @@ impl<'a> L1Problem<'a> {
         &self.rl1
     }
 
+    /// Mutable access to the wrapped restricted model (the exact-path
+    /// driver's breakpoint scan and the incremental re-solve edits).
+    pub fn inner_mut(&mut self) -> &mut RestrictedL1 {
+        &mut self.rl1
+    }
+
     /// Change λ in place (warm-start preserving) — the path driver's hook.
     pub fn set_lambda(&mut self, lambda: f64) {
         self.rl1.set_lambda(lambda);
@@ -304,6 +425,9 @@ impl RestrictedProblem for L1Problem<'_> {
     fn working_set_size(&self) -> usize {
         self.rl1.j_set().len() + self.rl1.i_set().len()
     }
+    fn reprice_at(&mut self, lambda: f64) {
+        self.rl1.set_lambda(lambda);
+    }
 }
 
 fn finish(
@@ -348,6 +472,38 @@ pub fn column_generation(
     let pricer = BackendPricer::new(backend, params.threads);
     let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &seed_j);
     rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
+    let mut stats = GenEngine::new(params).run(&mut prob);
+    stats.cols_added += seed_j.len();
+    finish(ds, prob.inner(), lambda, stats)
+}
+
+/// [`column_generation`] seeded by a full [`crate::engine::Seed`]: the
+/// working set comes from `seed.ws.cols` (screening fallback when
+/// empty) and, when the seed carries a FOM primal, the guess is crossed
+/// over into the starting basis ([`RestrictedL1::crossover_from`]) so
+/// the first restricted solve starts pivots — not a dual-simplex pass —
+/// from the optimum.
+pub fn column_generation_seeded(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda: f64,
+    seed: &crate::engine::Seed,
+    params: &GenParams,
+) -> SvmSolution {
+    let all_i: Vec<usize> = (0..ds.n()).collect();
+    let seed_j: Vec<usize> = if seed.ws.cols.is_empty() {
+        crate::coordinator::path::initial_columns(ds, params.seed_budget)
+    } else {
+        seed.ws.cols.clone()
+    };
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &seed_j);
+    rl1.set_threads(params.threads);
+    if let Some((beta, beta0)) = &seed.primal {
+        // a failed crossover leaves the cold-start path intact
+        let _ = rl1.crossover_from(ds, beta, *beta0);
+    }
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.cols_added += seed_j.len();
@@ -519,6 +675,83 @@ mod tests {
 
     // threads=1 vs threads=4 equivalence is covered end-to-end (dense and
     // sparse) by tests/integration.rs::parallel_pricing_produces_identical_working_sets.
+
+    #[test]
+    fn fom_crossover_starts_with_fewer_iters_than_support_only() {
+        use crate::engine::{InitStrategy, Initializer};
+        let ds = small_ds(80, 60, 98);
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.2 * ds.lambda_max_l1();
+        let seed = Initializer::new(InitStrategy::Fista, 10).seed_l1_cols(&ds, &backend, lambda);
+        let (beta, beta0) = seed.primal.clone().expect("FISTA seed carries a primal");
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        // arm A: the support alone seeds the working set (pre-crossover
+        // behavior) — the cold solve is a full dual-simplex pass
+        let mut cold = RestrictedL1::new(&ds, lambda, &all_i, &seed.ws.cols);
+        assert_eq!(cold.solve(), Status::Optimal);
+        let iters_cold = cold.simplex_iters();
+        // arm B: same working set, FOM primal crossed over into the basis
+        let mut warm = RestrictedL1::new(&ds, lambda, &all_i, &seed.ws.cols);
+        warm.crossover_from(&ds, &beta, beta0);
+        assert_eq!(warm.solve(), Status::Optimal);
+        let iters_warm = warm.simplex_iters();
+        assert!(
+            (cold.objective() - warm.objective()).abs() < 1e-7,
+            "cold {} warm {}",
+            cold.objective(),
+            warm.objective()
+        );
+        assert!(
+            iters_warm < iters_cold,
+            "crossover must start closer: warm {iters_warm} vs cold {iters_cold}"
+        );
+        // the seeded driver wires the same crossover end to end
+        let sol = column_generation_seeded(
+            &ds,
+            &backend,
+            lambda,
+            &seed,
+            &GenParams { eps: 1e-6, ..Default::default() },
+        );
+        let full = full_lp_objective(&ds, lambda);
+        assert!((sol.objective - full).abs() / full.max(1e-9) < 1e-5);
+    }
+
+    #[test]
+    fn retire_and_rearm_samples_matches_cold_reduced_solve() {
+        let ds = small_ds(50, 20, 99);
+        let lambda = 0.1 * ds.lambda_max_l1();
+        let all_i: Vec<usize> = (0..ds.n()).collect();
+        let all_j: Vec<usize> = (0..ds.p()).collect();
+        let mut warm = RestrictedL1::new(&ds, lambda, &all_i, &all_j);
+        assert_eq!(warm.solve(), Status::Optimal);
+        let obj_full = warm.objective();
+        // retire the last 10 samples; warm re-solve must match a cold
+        // build on the reduced index set
+        let gone: Vec<usize> = (40..50).collect();
+        warm.retire_samples(&gone);
+        assert_eq!(warm.active_samples(), 40);
+        assert_eq!(warm.solve(), Status::Optimal);
+        let kept: Vec<usize> = (0..40).collect();
+        let mut cold = RestrictedL1::new(&ds, lambda, &kept, &all_j);
+        assert_eq!(cold.solve(), Status::Optimal);
+        assert!(
+            (warm.objective() - cold.objective()).abs() < 1e-7,
+            "warm {} cold {}",
+            warm.objective(),
+            cold.objective()
+        );
+        // re-arm: bounds restore dual-feasibly, recovering the original
+        warm.add_samples(&ds, &gone);
+        assert_eq!(warm.active_samples(), 50);
+        assert_eq!(warm.solve(), Status::Optimal);
+        assert!(
+            (warm.objective() - obj_full).abs() < 1e-7,
+            "re-armed {} original {}",
+            warm.objective(),
+            obj_full
+        );
+    }
 
     #[test]
     fn restricted_lp_duals_in_unit_box() {

@@ -11,6 +11,9 @@
 //! * [`l1svm`] — Algorithms 1 (column generation), 3 (constraint
 //!   generation), 4 (combined) for the L1-SVM LP (Problems 5/8/11/13);
 //! * [`path`] — Algorithm 2, the warm-started regularization path;
+//! * [`path_exact`] — the exact parametric λ-path: ride the restricted
+//!   LP's basis-change breakpoints and price the implicit space only
+//!   there, instead of re-solving on a fixed grid;
 //! * [`group`] — column generation on groups for Group-SVM (§2.4);
 //! * [`slope`] — Algorithms 5–7 for Slope-SVM: permutation cuts for the
 //!   exponential epigraph (§3.1) paired with column generation using the
@@ -24,6 +27,7 @@
 pub mod group;
 pub mod l1svm;
 pub mod path;
+pub mod path_exact;
 pub mod report;
 pub mod slope;
 

@@ -1,0 +1,525 @@
+//! **Exact parametric λ-path** with interleaved cut generation.
+//!
+//! Where [`crate::coordinator::path`] (Algorithm 2) solves the problem
+//! at a *fixed grid* of λ values, this driver rides the cost-parametric
+//! basis path of the **restricted** LP from λ_hi down to λ_lo and only
+//! stops where something actually changes:
+//!
+//! 1. converge the restricted problem at the current λ with the usual
+//!    solve → price → expand loop ([`crate::engine::GenEngine::run`]);
+//! 2. ask the restricted model for the next basis-change breakpoint
+//!    below λ (two BTRANs and one nonbasic scan — no pivots, no
+//!    pricing);
+//! 3. hop just past that crossing, re-cost the model in place
+//!    ([`crate::engine::RestrictedProblem::reprice_at`] — the basis is
+//!    kept, so the re-solve is a warm start a pivot or two from
+//!    optimal), and go to 1.
+//!
+//! The full implicit column/constraint space is priced **only at
+//! breakpoints** — O(#breakpoints) pricing sweeps instead of O(#grid).
+//! Between consecutive breakpoints the emitted [`ExactSegment`]
+//! interpolates the full-problem objective *exactly* (up to the 1e-9
+//! nudge used to step past each crossing):
+//!
+//! * **L1-SVM** (pure column generation): the full objective f*(λ) is
+//!   concave in λ and bounded above by the restricted objective r*(λ),
+//!   which is affine on a segment with no basis change and equal to
+//!   f* at both endpoints — a chord sandwich, so f* equals the chord.
+//! * **RankSVM** (cost-parametric with row cuts): the primal vertex is
+//!   constant on a segment, so the set of violated pair rows is
+//!   constant; endpoint feasibility certifies the interior.
+//! * **Dantzig selector** (RHS-parametric): the basis and duals are
+//!   constant on a segment, so column pricing is constant and each
+//!   row violation |correlation| − λ is convex in λ — clean endpoints
+//!   certify the interior.
+//!
+//! Group-SVM and Slope-SVM have no such certificate — the group ∞-norm
+//! and the epigraph permutation cuts are not cost-parametric in a form
+//! the simplex ratio scan covers — so they deliberately keep the
+//! warm-started grid drivers in [`crate::coordinator::path`]; the serve
+//! layer returns a typed error pointing there. See
+//! `docs/path-exact.md` for the full argument.
+
+use std::sync::Arc;
+
+use crate::backend::Backend;
+use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
+use crate::coordinator::path::accumulate;
+use crate::coordinator::report::{dantzig_report, l1_report, ranksvm_report};
+use crate::coordinator::{GenParams, GenStats};
+use crate::data::Dataset;
+use crate::engine::{
+    BackendPricer, GenEngine, Initializer, RestrictedProblem, Snapshot, WorkingSet,
+};
+use crate::obs::{Span, TraceSink};
+use crate::workloads::dantzig::{DantzigProblem, RestrictedDantzig};
+use crate::workloads::pairset::PairSet;
+use crate::workloads::ranksvm::{pair_rows_cap, RankProblem, RestrictedRank};
+
+/// Step taken past each crossing so the re-solve lands strictly on the
+/// far side of the degenerate point. Contributes O(1e-9) to the
+/// interpolation error — far below the 1e-6 exactness contract.
+const NUDGE: f64 = 1e-9;
+
+/// Hard cap on emitted breakpoints: a runaway guard for adversarial
+/// inputs (the path of an n×p instance has finitely many vertices, but
+/// degenerate ties can revisit). Hitting it sets [`ExactPath::truncated`].
+const MAX_BREAKPOINTS: usize = 4096;
+
+/// One examined λ on the exact path: a basis-change breakpoint of the
+/// restricted LP (or one of the two interval endpoints).
+#[derive(Clone, Debug)]
+pub struct ExactBreakpoint {
+    /// λ value (just below the actual crossing, see [`NUDGE`]).
+    pub lambda: f64,
+    /// Full-problem objective at this λ.
+    pub objective: f64,
+    /// Support size of β*(λ).
+    pub support: usize,
+    /// Size of the column working set J after this step.
+    pub working_set: usize,
+    /// Whether pricing at this breakpoint expanded the working set
+    /// (columns or rows entered the restricted model).
+    pub expanded: bool,
+    /// Snapshot of the working sets — lets the serve `path_exact` op
+    /// seed the warm cache at **every** breakpoint.
+    pub ws: WorkingSet,
+}
+
+/// A λ-interval between two consecutive breakpoints on which the
+/// full-problem objective is affine (see the module docs for why).
+#[derive(Clone, Copy, Debug)]
+pub struct ExactSegment {
+    /// Upper λ endpoint (the earlier breakpoint; the path rides down).
+    pub lambda_hi: f64,
+    /// Lower λ endpoint.
+    pub lambda_lo: f64,
+    /// Full-problem objective at `lambda_hi`.
+    pub obj_hi: f64,
+    /// Full-problem objective at `lambda_lo`.
+    pub obj_lo: f64,
+}
+
+impl ExactSegment {
+    /// Interpolate the full-problem objective at `lambda ∈ [lo, hi]`.
+    pub fn objective_at(&self, lambda: f64) -> f64 {
+        let width = self.lambda_hi - self.lambda_lo;
+        if width <= f64::EPSILON * self.lambda_hi.abs().max(1.0) {
+            return self.obj_lo;
+        }
+        let t = (lambda - self.lambda_lo) / width;
+        self.obj_lo + t * (self.obj_hi - self.obj_lo)
+    }
+}
+
+/// Counters for one exact-path run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactPathStats {
+    /// Breakpoints examined (= points emitted).
+    pub breakpoints: usize,
+    /// Full pricing sweeps performed (engine solve/price rounds summed
+    /// over all breakpoints) — the number the grid driver pays per grid
+    /// point and this driver pays per breakpoint.
+    pub pricing_rounds: usize,
+    /// Breakpoints at which pricing actually grew the working set.
+    pub expansions: usize,
+    /// Simplex iterations summed over all re-solves.
+    pub simplex_iters: usize,
+    /// Cumulative engine counters (same shape the grid path reports).
+    pub gen: GenStats,
+}
+
+/// The exact λ-path: breakpoints, interpolable segments, counters.
+#[derive(Clone, Debug, Default)]
+pub struct ExactPath {
+    /// Examined points, λ decreasing; first is λ_hi, last is λ_lo
+    /// unless the run was cut short.
+    pub points: Vec<ExactBreakpoint>,
+    /// One segment per consecutive pair of points.
+    pub segments: Vec<ExactSegment>,
+    /// Counters.
+    pub stats: ExactPathStats,
+    /// A deadline/stop callback cut the ride short; `points` covers
+    /// only [last λ, λ_hi].
+    pub timed_out: bool,
+    /// The [`MAX_BREAKPOINTS`] guard fired before reaching λ_lo.
+    pub truncated: bool,
+}
+
+impl ExactPath {
+    /// Full-problem objective at any λ covered by the path, by exact
+    /// linear interpolation on the containing segment. `None` outside
+    /// [last λ, first λ].
+    pub fn objective_at(&self, lambda: f64) -> Option<f64> {
+        let first = self.points.first()?;
+        let slack = 1e-12 * first.lambda.abs().max(1.0);
+        for seg in &self.segments {
+            if lambda >= seg.lambda_lo - slack && lambda <= seg.lambda_hi + slack {
+                return Some(seg.objective_at(lambda));
+            }
+        }
+        if (lambda - first.lambda).abs() <= slack {
+            return Some(first.objective);
+        }
+        None
+    }
+}
+
+/// Shared bookkeeping: fold an engine run into the counters, append the
+/// point (and the segment from the previous one), emit the trace event.
+#[allow(clippy::too_many_arguments)]
+fn push_point(
+    path: &mut ExactPath,
+    sink: &Option<Arc<dyn TraceSink>>,
+    step: GenStats,
+    lambda: f64,
+    objective: f64,
+    support: usize,
+    working_set: usize,
+    ws: WorkingSet,
+) {
+    accumulate(&mut path.stats.gen, step);
+    path.stats.pricing_rounds += step.rounds;
+    path.stats.simplex_iters += step.simplex_iters;
+    let expanded = step.cols_added + step.rows_added > 0;
+    path.stats.expansions += expanded as usize;
+    path.stats.breakpoints += 1;
+    if let Some(prev) = path.points.last() {
+        path.segments.push(ExactSegment {
+            lambda_hi: prev.lambda,
+            lambda_lo: lambda,
+            obj_hi: prev.objective,
+            obj_lo: objective,
+        });
+    }
+    if let Some(s) = sink {
+        s.breakpoint(lambda, objective, expanded);
+    }
+    path.points.push(ExactBreakpoint { lambda, objective, support, working_set, expanded, ws });
+    if step.timed_out {
+        path.timed_out = true;
+    }
+}
+
+/// Decide where to hop next: just past the restricted model's next
+/// basis-change crossing, or straight to λ_lo when the basis holds all
+/// the way down.
+fn next_lambda(crossing: Option<f64>, lambda: f64, lambda_lo: f64) -> f64 {
+    let next = crossing.map(|c| (c - NUDGE).max(lambda_lo)).unwrap_or(lambda_lo);
+    // The scan only reports crossings strictly below λ; keep the ride
+    // downward even if a degenerate tie slips through.
+    if next >= lambda {
+        lambda_lo
+    } else {
+        next
+    }
+}
+
+/// Exact λ-path for the **L1-SVM** (column generation on the same
+/// restricted model the grid driver uses; every margin row stays in).
+pub fn l1svm_path_exact(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+) -> ExactPath {
+    l1svm_path_exact_with_stop(ds, backend, lambda_hi, lambda_lo, params, None)
+}
+
+/// [`l1svm_path_exact`] with a cooperative stop callback (the serve
+/// layer's deadline); when a step is cut short the path stops there and
+/// [`ExactPath::timed_out`] is set.
+pub fn l1svm_path_exact_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> ExactPath {
+    assert!(lambda_hi >= lambda_lo, "exact path rides downward: need lambda_hi >= lambda_lo");
+    assert!(lambda_lo >= 0.0, "negative regularization");
+    let all_i: Vec<usize> = (0..ds.n()).collect();
+    let seed_span = Span::start();
+    let init = Initializer::for_path(params).seed_l1_cols(ds, backend, lambda_hi).ws.cols;
+    let seed_ns = seed_span.elapsed_ns();
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut rl1 = RestrictedL1::new(ds, lambda_hi, &all_i, &init);
+    rl1.set_threads(params.threads);
+    let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
+    let mut path = ExactPath {
+        stats: ExactPathStats {
+            gen: GenStats { cols_added: init.len(), ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut lambda = lambda_hi;
+    let mut step = engine.run(&mut prob);
+    step.seed_ns = seed_ns;
+    let (support, b0) = prob.inner().beta_support();
+    let report = l1_report(ds, &support, b0, lambda);
+    let mut ws = prob.export_working_set();
+    ws.rows.clear(); // like Algorithm 2: every margin row stays in the model
+    let j = prob.inner().j_set().len();
+    push_point(&mut path, &params.sink, step, lambda, report.objective, report.support, j, ws);
+
+    while lambda > lambda_lo && !path.timed_out {
+        if path.points.len() >= MAX_BREAKPOINTS {
+            path.truncated = true;
+            break;
+        }
+        let crossing = prob.inner_mut().next_breakpoint(lambda, lambda_lo);
+        let next = next_lambda(crossing, lambda, lambda_lo);
+        prob.reprice_at(next);
+        let step = engine.run(&mut prob);
+        let (support, b0) = prob.inner().beta_support();
+        let report = l1_report(ds, &support, b0, next);
+        let mut ws = prob.export_working_set();
+        ws.rows.clear();
+        let j = prob.inner().j_set().len();
+        push_point(&mut path, &params.sink, step, next, report.objective, report.support, j, ws);
+        lambda = next;
+    }
+    path
+}
+
+/// Exact λ-path for **RankSVM** (columns and pair-row cuts both priced
+/// at every breakpoint).
+pub fn ranksvm_path_exact(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &PairSet,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+) -> ExactPath {
+    ranksvm_path_exact_with_stop(ds, backend, pairs, lambda_hi, lambda_lo, params, None)
+}
+
+/// [`ranksvm_path_exact`] with a cooperative stop callback; same
+/// early-exit contract as [`l1svm_path_exact_with_stop`].
+pub fn ranksvm_path_exact_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &PairSet,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> ExactPath {
+    assert!(lambda_hi >= lambda_lo, "exact path rides downward: need lambda_hi >= lambda_lo");
+    assert!(lambda_lo >= 0.0, "negative regularization");
+    let seed_span = Span::start();
+    let seed = Initializer::for_path(params).seed_ranksvm(ds, backend, pairs, lambda_hi).ws;
+    let seed_ns = seed_span.elapsed_ns();
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut rr = RestrictedRank::new(ds, pairs, lambda_hi, &seed.rows, &seed.cols);
+    rr.set_threads(params.threads);
+    rr.set_pair_cap(pair_rows_cap(params));
+    let mut prob = RankProblem::new(rr, ds, &pricer);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
+    let mut path = ExactPath {
+        stats: ExactPathStats {
+            gen: GenStats {
+                cols_added: seed.cols.len(),
+                rows_added: seed.rows.len(),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut lambda = lambda_hi;
+    let mut step = engine.run(&mut prob);
+    step.seed_ns = seed_ns;
+    let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
+    let ws = prob.export_working_set();
+    let j = prob.inner().j_set().len();
+    push_point(&mut path, &params.sink, step, lambda, report.objective, report.support, j, ws);
+
+    while lambda > lambda_lo && !path.timed_out {
+        if path.points.len() >= MAX_BREAKPOINTS {
+            path.truncated = true;
+            break;
+        }
+        let crossing = prob.inner_mut().next_breakpoint(lambda, lambda_lo);
+        let next = next_lambda(crossing, lambda, lambda_lo);
+        prob.reprice_at(next);
+        let step = engine.run(&mut prob);
+        let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), next);
+        let ws = prob.export_working_set();
+        let j = prob.inner().j_set().len();
+        push_point(&mut path, &params.sink, step, next, report.objective, report.support, j, ws);
+        lambda = next;
+    }
+    path
+}
+
+/// Exact λ-path for the **Dantzig selector**. λ enters through the
+/// correlation-row *ranges* rather than the costs, so the breakpoint
+/// scan is the RHS-parametric ratio test and each hop is a dual-simplex
+/// warm start; the objective reported is the restricted `Σ(β⁺+β⁻)`,
+/// exactly as [`crate::coordinator::path::dantzig_path`] reports it.
+pub fn dantzig_path_exact(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+) -> ExactPath {
+    dantzig_path_exact_with_stop(ds, backend, lambda_hi, lambda_lo, params, None)
+}
+
+/// [`dantzig_path_exact`] with a cooperative stop callback; same
+/// early-exit contract as [`l1svm_path_exact_with_stop`].
+pub fn dantzig_path_exact_with_stop(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    lambda_hi: f64,
+    lambda_lo: f64,
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> ExactPath {
+    assert!(lambda_hi >= lambda_lo, "exact path rides downward: need lambda_hi >= lambda_lo");
+    assert!(lambda_lo >= 0.0, "negative regularization");
+    let seed_span = Span::start();
+    let seed = Initializer::for_path(params).seed_dantzig(ds, backend, lambda_hi).ws.rows;
+    let seed_ns = seed_span.elapsed_ns();
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut rd = RestrictedDantzig::new(ds, lambda_hi, &seed);
+    rd.set_threads(params.threads);
+    let mut prob = DantzigProblem::new(rd, ds, &pricer);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
+    let mut path = ExactPath {
+        stats: ExactPathStats {
+            gen: GenStats {
+                cols_added: seed.len(),
+                rows_added: seed.len(),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let mut lambda = lambda_hi;
+    let mut step = engine.run(&mut prob);
+    step.seed_ns = seed_ns;
+    let report = dantzig_report(ds.p(), &prob.inner().beta_support());
+    let obj = prob.inner().objective();
+    let ws = prob.export_working_set();
+    let j = prob.inner().j_set().len();
+    push_point(&mut path, &params.sink, step, lambda, obj, report.support, j, ws);
+
+    while lambda > lambda_lo && !path.timed_out {
+        if path.points.len() >= MAX_BREAKPOINTS {
+            path.truncated = true;
+            break;
+        }
+        let crossing = prob.inner_mut().next_breakpoint(lambda, lambda_lo);
+        let next = next_lambda(crossing, lambda, lambda_lo);
+        prob.reprice_at(next);
+        let step = engine.run(&mut prob);
+        let report = dantzig_report(ds.p(), &prob.inner().beta_support());
+        let obj = prob.inner().objective();
+        let ws = prob.export_working_set();
+        let j = prob.inner().j_set().len();
+        push_point(&mut path, &params.sink, step, next, obj, report.support, j, ws);
+        lambda = next;
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::l1svm::column_generation;
+    use crate::data::synthetic::{generate_l1, SyntheticSpec};
+    use crate::rng::Xoshiro256;
+
+    fn ds() -> Dataset {
+        let spec = SyntheticSpec { n: 40, p: 80, k0: 5, rho: 0.1, standardize: true };
+        generate_l1(&spec, &mut Xoshiro256::seed_from_u64(111))
+    }
+
+    #[test]
+    fn segment_interpolation_is_linear() {
+        let seg = ExactSegment { lambda_hi: 2.0, lambda_lo: 1.0, obj_hi: 10.0, obj_lo: 4.0 };
+        assert!((seg.objective_at(2.0) - 10.0).abs() < 1e-12);
+        assert!((seg.objective_at(1.0) - 4.0).abs() < 1e-12);
+        assert!((seg.objective_at(1.5) - 7.0).abs() < 1e-12);
+        // degenerate (zero-width) segments answer with the low endpoint
+        let flat = ExactSegment { lambda_hi: 1.0, lambda_lo: 1.0, obj_hi: 3.0, obj_lo: 3.0 };
+        assert_eq!(flat.objective_at(1.0), 3.0);
+    }
+
+    #[test]
+    fn exact_path_rides_down_and_matches_direct_solves() {
+        let d = ds();
+        let backend = NativeBackend::new(&d.x);
+        let lmax = d.lambda_max_l1();
+        let llo = 0.2 * lmax;
+        let params = GenParams { eps: 1e-8, seed_budget: 5, ..Default::default() };
+        let path = l1svm_path_exact(&d, &backend, lmax, llo, &params);
+        assert!(!path.timed_out && !path.truncated);
+        assert!(path.points.len() >= 2, "a fifth of λ_max must cross at least one breakpoint");
+        assert_eq!(path.segments.len(), path.points.len() - 1);
+        // endpoints: λ_max carries the zero solution, λ_lo reaches it
+        assert_eq!(path.points[0].support, 0);
+        assert!((path.points[0].objective - d.n() as f64).abs() < 1e-6);
+        assert!((path.points.last().unwrap().lambda - llo).abs() < 1e-9);
+        // λ decreasing, objective non-increasing, segments contiguous
+        for (k, w) in path.points.windows(2).enumerate() {
+            assert!(w[1].lambda < w[0].lambda);
+            assert!(w[1].objective <= w[0].objective + 1e-7);
+            assert_eq!(path.segments[k].lambda_hi, w[0].lambda);
+            assert_eq!(path.segments[k].lambda_lo, w[1].lambda);
+        }
+        // interpolated objective at an interior λ matches a fresh solve
+        let seg = path
+            .segments
+            .iter()
+            .max_by(|a, b| {
+                let wa = a.lambda_hi - a.lambda_lo;
+                let wb = b.lambda_hi - b.lambda_lo;
+                wa.partial_cmp(&wb).unwrap()
+            })
+            .unwrap();
+        let mid = 0.5 * (seg.lambda_hi + seg.lambda_lo);
+        let interp = path.objective_at(mid).expect("mid lies on the path");
+        let direct = column_generation(&d, &backend, mid, &[0, 1], &params);
+        let rel = (interp - direct.objective).abs() / direct.objective.max(1e-9);
+        assert!(rel < 1e-6, "interp {interp} direct {} rel {rel}", direct.objective);
+        // outside the covered interval there is no answer
+        assert!(path.objective_at(lmax * 1.5).is_none());
+        assert!(path.objective_at(llo * 0.5).is_none());
+    }
+
+    #[test]
+    fn stop_callback_cuts_the_ride_short() {
+        let d = ds();
+        let backend = NativeBackend::new(&d.x);
+        let lmax = d.lambda_max_l1();
+        let params = GenParams { seed_budget: 5, ..Default::default() };
+        let stop = || true; // deadline already expired at entry
+        let path =
+            l1svm_path_exact_with_stop(&d, &backend, lmax, 0.1 * lmax, &params, Some(&stop));
+        assert!(path.timed_out);
+        assert_eq!(path.points.len(), 1, "expired deadline stops at the first point");
+    }
+}

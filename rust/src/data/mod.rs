@@ -362,6 +362,50 @@ impl Design {
             }
         }
     }
+
+    /// Stack selected rows of `self` on top of selected rows of `other`.
+    /// Column counts must match. Dense × dense stays dense; any sparse
+    /// operand yields a sparse result. The serve layer's incremental
+    /// `update` op uses this to derive a dataset from a registered
+    /// parent (retired samples dropped, appended samples drawn from
+    /// another registered dataset) in a single pass.
+    pub fn stack_rows(&self, rows: &[usize], other: &Design, other_rows: &[usize]) -> Design {
+        assert_eq!(self.cols(), other.cols(), "stack_rows: column counts differ");
+        let total = rows.len() + other_rows.len();
+        if let (Design::Dense(a), Design::Dense(b)) = (self, other) {
+            let mut out = Matrix::zeros(total, a.cols());
+            for (k, &i) in rows.iter().enumerate() {
+                out.row_mut(k).copy_from_slice(a.row(i));
+            }
+            for (k, &i) in other_rows.iter().enumerate() {
+                out.row_mut(rows.len() + k).copy_from_slice(b.row(i));
+            }
+            return Design::Dense(out);
+        }
+        fn push_rows(coo: &mut crate::sparse::Coo, d: &Design, src: &[usize], base: usize) {
+            for (k, &i) in src.iter().enumerate() {
+                match d {
+                    Design::Dense(m) => {
+                        for (j, &v) in m.row(i).iter().enumerate() {
+                            if v != 0.0 {
+                                coo.push(base + k, j, v);
+                            }
+                        }
+                    }
+                    Design::Sparse { csr, .. } => {
+                        let (idx, val) = csr.row(i);
+                        for (j, v) in idx.iter().zip(val) {
+                            coo.push(base + k, *j, *v);
+                        }
+                    }
+                }
+            }
+        }
+        let mut coo = crate::sparse::Coo::new(total, self.cols());
+        push_rows(&mut coo, self, rows, 0);
+        push_rows(&mut coo, other, other_rows, rows.len());
+        Design::sparse(coo.to_csr())
+    }
 }
 
 #[cfg(test)]
@@ -468,6 +512,35 @@ mod tests {
         assert!((lg - 6.0).abs() < 1e-12);
         let lg_all = d.lambda_max_group(&[vec![0, 1]]);
         assert!((lg_all - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stack_rows_dense_sparse_combinations() {
+        let d = dense_ds();
+        let s = sparse_ds();
+        // Dense × dense stays dense and preserves row order.
+        let dd = d.x.stack_rows(&[0, 2], &d.x, &[1]);
+        assert!(matches!(dd, Design::Dense(_)));
+        assert_eq!(dd.rows(), 3);
+        assert_eq!(dd.get(0, 1), d.x.get(0, 1));
+        assert_eq!(dd.get(1, 0), d.x.get(2, 0));
+        assert_eq!(dd.get(2, 1), d.x.get(1, 1));
+        // A sparse operand (either side) yields sparse with the same values.
+        for (a, b) in [(&d.x, &s.x), (&s.x, &d.x), (&s.x, &s.x)] {
+            let m = a.stack_rows(&[2, 1], b, &[0, 2]);
+            assert!(matches!(m, Design::Sparse { .. }));
+            assert_eq!(m.rows(), 4);
+            for j in 0..2 {
+                assert_eq!(m.get(0, j), a.get(2, j));
+                assert_eq!(m.get(1, j), a.get(1, j));
+                assert_eq!(m.get(2, j), b.get(0, j));
+                assert_eq!(m.get(3, j), b.get(2, j));
+            }
+        }
+        // Empty selections are fine.
+        let empty = d.x.stack_rows(&[], &s.x, &[1]);
+        assert_eq!(empty.rows(), 1);
+        assert_eq!(empty.get(0, 1), s.x.get(1, 1));
     }
 
     #[test]

@@ -114,7 +114,12 @@ pub struct Seed {
     /// spaces are the workload's own (features, groups, pairs — see
     /// [`WorkingSet`]).
     pub ws: WorkingSet,
-    /// The FOM's `(β, β₀)` (None for pure screening).
+    /// The FOM's `(β, β₀)` (None for pure screening). Beyond selecting
+    /// the working set, the L1 driver feeds this into
+    /// `RestrictedL1::crossover_from`, which seats the guessed support
+    /// as the starting basis — a FISTA-quality guess typically lands a
+    /// few pivots from the optimal vertex, vs. a full dual-simplex pass
+    /// from the all-logical crash basis.
     pub primal: Option<(Vec<f64>, f64)>,
     /// The strategy that actually ran (`Auto` resolved).
     pub strategy: InitStrategy,

@@ -255,6 +255,14 @@ pub trait RestrictedProblem {
     fn working_set_size(&self) -> usize {
         0
     }
+    /// Move the problem to a new regularization value `λ` without
+    /// discarding the basis, so the next [`RestrictedProblem::solve`]
+    /// warm-resumes from the current vertex. The exact-path drivers in
+    /// `crate::coordinator::path_exact` call this at every basis
+    /// breakpoint before re-running the engine; workloads without a
+    /// parametric cost/rhs structure keep the no-op default (the engine
+    /// itself never calls it).
+    fn reprice_at(&mut self, _lambda: f64) {}
 }
 
 /// Scores candidate columns from a dual-derived vector: `q = Xᵀv`.

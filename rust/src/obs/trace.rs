@@ -67,6 +67,15 @@ pub trait TraceSink: Send + Sync + std::fmt::Debug {
     fn round(&self, ev: &RoundEvent);
     /// A non-round engine message (caller stop, stall abort).
     fn message(&self, text: &str);
+    /// An exact-path breakpoint was emitted (λ, full objective, whether
+    /// full-space pricing expanded the working set there). Default:
+    /// routed through [`TraceSink::message`], so existing sinks pick it
+    /// up without changes.
+    fn breakpoint(&self, lambda: f64, objective: f64, expanded: bool) {
+        self.message(&format!(
+            "path breakpoint: lambda {lambda:.6e}, obj {objective:.6e}, expanded {expanded}"
+        ));
+    }
 }
 
 /// A monotonic wall-clock section timer.

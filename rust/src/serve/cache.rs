@@ -185,6 +185,53 @@ impl WarmCache {
         self.evict_over_budget();
     }
 
+    /// Remove every snapshot stored under `fingerprint` (all workloads,
+    /// all λ-buckets) and return how many were removed. Used by the
+    /// `unregister` op and registry-level eviction. This reclaims bytes,
+    /// not correctness: entries are keyed by *content* fingerprint, so a
+    /// snapshot left behind could only ever be hit again by re-registering
+    /// byte-identical data — for which it is a valid warm start. Purged
+    /// entries are not counted in [`WarmCache::evictions`] (they were
+    /// invalidated, not squeezed out by the budget).
+    pub fn purge_fingerprint(&mut self, fingerprint: u64) -> usize {
+        let victims: Vec<CacheKey> =
+            self.map.keys().filter(|k| k.fingerprint == fingerprint).copied().collect();
+        for key in &victims {
+            if let Some(slot) = self.map.remove(key) {
+                self.bytes -= slot.entry.resident_bytes();
+            }
+        }
+        victims.len()
+    }
+
+    /// Re-key the snapshots stored under `from` to `to`, for the
+    /// workloads whose working sets index *features*, not samples:
+    /// L1-SVM and Slope columns, and Dantzig rows (which are feature
+    /// correlation constraints). RankSVM snapshots index sample pairs
+    /// and Group snapshots fold the grouping into their key, so both are
+    /// skipped. Returns the number of snapshots copied. This is what
+    /// lets an `update`-derived dataset (samples retired or appended)
+    /// start warm from its parent's λ-path.
+    pub fn translate_fingerprint(&mut self, from: u64, to: u64) -> usize {
+        if from == to {
+            return 0;
+        }
+        let items: Vec<(Workload, CacheEntry)> = self
+            .map
+            .iter()
+            .filter(|(k, _)| {
+                k.fingerprint == from
+                    && matches!(k.workload, Workload::L1svm | Workload::Slope | Workload::Dantzig)
+            })
+            .map(|(k, slot)| (k.workload, slot.entry.clone()))
+            .collect();
+        let copied = items.len();
+        for (workload, entry) in items {
+            self.insert(to, workload, entry);
+        }
+        copied
+    }
+
     /// Evict least-recently-used entries while over the entry cap or the
     /// byte budget, always keeping at least one entry.
     fn evict_over_budget(&mut self) {
@@ -278,6 +325,39 @@ mod tests {
         assert!(c.lookup(1, Workload::L1svm, 1.0).is_some(), "touched entry survives");
         assert!(c.lookup(1, Workload::L1svm, 10.0).is_none(), "untouched entry evicted");
         assert!(c.lookup(1, Workload::L1svm, 100.0).is_some());
+    }
+
+    #[test]
+    fn purge_drops_all_buckets_of_a_fingerprint() {
+        let mut c = WarmCache::new(16);
+        c.insert(1, Workload::L1svm, entry(1.0));
+        c.insert(1, Workload::L1svm, entry(10.0));
+        c.insert(1, Workload::Ranksvm, entry(1.0));
+        c.insert(2, Workload::L1svm, entry(1.0));
+        let bytes_before = c.resident_bytes();
+        assert_eq!(c.purge_fingerprint(1), 3);
+        assert_eq!(c.len(), 1);
+        assert!(c.resident_bytes() < bytes_before);
+        assert!(c.lookup(2, Workload::L1svm, 1.0).is_some());
+        assert_eq!(c.evictions, 0, "purges are not budget evictions");
+        assert_eq!(c.purge_fingerprint(99), 0);
+    }
+
+    #[test]
+    fn translate_copies_feature_indexed_workloads_only() {
+        let mut c = WarmCache::new(16);
+        c.insert(1, Workload::L1svm, entry(1.0));
+        c.insert(1, Workload::Slope, entry(1.0));
+        c.insert(1, Workload::Dantzig, entry(2.0));
+        c.insert(1, Workload::Ranksvm, entry(1.0));
+        assert_eq!(c.translate_fingerprint(1, 9), 3);
+        assert!(c.lookup(9, Workload::L1svm, 1.0).is_some());
+        assert!(c.lookup(9, Workload::Slope, 1.0).is_some());
+        assert!(c.lookup(9, Workload::Dantzig, 2.0).is_some());
+        assert!(c.lookup(9, Workload::Ranksvm, 1.0).is_none(), "pair-indexed: skipped");
+        // originals survive the translation
+        assert!(c.lookup(1, Workload::L1svm, 1.0).is_some());
+        assert_eq!(c.translate_fingerprint(1, 1), 0, "same-fingerprint no-op");
     }
 
     #[test]

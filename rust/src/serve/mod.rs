@@ -17,6 +17,17 @@
 //!   drivers in `coordinator::path` and seeds the warm-start cache at
 //!   **every** visited λ, so later fixed-λ requests near the grid resume
 //!   warm;
+//! * an **exact-path endpoint** (`path_exact`) that rides the
+//!   parametric-simplex breakpoint path of [`crate::coordinator::path_exact`]
+//!   — pricing the implicit column/constraint space only where the
+//!   restricted basis actually changes — and seeds the cache at every
+//!   breakpoint, so the whole λ-segment structure becomes warm-start
+//!   coverage;
+//! * **incremental datasets** — the `update` op derives a new
+//!   registered dataset from a parent (samples retired by index and/or
+//!   appended from another registered dataset) and re-keys the parent's
+//!   feature-indexed snapshots to the child's fingerprint, so the
+//!   derived dataset re-solves warm instead of cold;
 //! * **first-order cold starts**: a cache miss seeds the restricted
 //!   model through the shared `engine::Initializer` (§4 FOM seeding by
 //!   default; the request's `"init"` field picks
@@ -33,6 +44,12 @@
 //! * **LRU + byte-budgeted cache** — [`cache::WarmCache`] evicts by
 //!   recency under both an entry cap and an optional resident-byte
 //!   budget ([`ServeState::with_cache_bytes`]), reported in `stats`;
+//! * **registry-level eviction** — the `unregister` op drops a dataset
+//!   and purges its warm-cache snapshots, and
+//!   [`ServeState::with_registry_bytes`] bounds the total estimated
+//!   bytes of registered datasets, evicting the least-recently-used
+//!   dataset (exactly as if it had been `unregister`ed) when a
+//!   registration pushes the registry over budget;
 //! * **snapshot persistence** — with a persist directory
 //!   ([`ServeState::with_persist_dir`]) every cache insert is spilled
 //!   to disk ([`persist::SnapshotStore`]) and an in-memory miss lazily
@@ -82,6 +99,10 @@ use crate::coordinator::l1svm::{L1Problem, RestrictedL1};
 use crate::coordinator::path::{
     accumulate, dantzig_path_with_stop, geometric_grid, group_path_with_stop,
     ranksvm_path_with_stop, regularization_path_with_stop, PathSolution,
+};
+use crate::coordinator::path_exact::{
+    dantzig_path_exact_with_stop, l1svm_path_exact_with_stop, ranksvm_path_exact_with_stop,
+    ExactPath,
 };
 use crate::coordinator::report::{
     dantzig_report, group_report, l1_report, ranksvm_report, slope_report,
@@ -176,6 +197,11 @@ pub struct ServeState {
     /// i.e. drain mode).
     max_inflight: usize,
     shutdown: AtomicBool,
+    /// Byte budget for registered datasets (0 = unbounded); see
+    /// [`ServeState::with_registry_bytes`].
+    registry_max_bytes: usize,
+    /// Datasets evicted to satisfy the registry byte budget.
+    registry_evictions: AtomicU64,
     /// Always-on metrics registry, rendered by the `metrics` op.
     /// Request counters and latency histograms are recorded at dispatch
     /// time; cache/gauge mirrors are refreshed at scrape time from
@@ -202,6 +228,8 @@ impl ServeState {
             inflight: AtomicUsize::new(0),
             max_inflight: usize::MAX,
             shutdown: AtomicBool::new(false),
+            registry_max_bytes: 0,
+            registry_evictions: AtomicU64::new(0),
             metrics: obs::Registry::new(),
             next_req_id: AtomicU64::new(0),
             slow_solve_ms: 0,
@@ -212,6 +240,18 @@ impl ServeState {
     /// see [`WarmCache::set_max_bytes`].
     pub fn with_cache_bytes(self, max_bytes: usize) -> Self {
         self.cache.lock().expect("cache lock").set_max_bytes(max_bytes);
+        self
+    }
+
+    /// Bound the total estimated resident bytes of registered datasets
+    /// (0 = unbounded). When a registration pushes the registry over the
+    /// budget, least-recently-used datasets are evicted exactly as if
+    /// they had been `unregister`ed — name dropped, warm-cache
+    /// snapshots purged — until the total fits, never evicting the
+    /// dataset that was just registered (the bound is therefore
+    /// `max(registry_bytes, largest single dataset)`).
+    pub fn with_registry_bytes(mut self, max_bytes: usize) -> Self {
+        self.registry_max_bytes = max_bytes;
         self
     }
 
@@ -352,13 +392,16 @@ impl ServeState {
     fn dispatch(&self, op: &str, req: &Req, req_id: u64) -> Result<Json> {
         match op {
             "register" => self.handle_register(req),
+            "unregister" => self.handle_unregister(req),
+            "update" => self.handle_update(req),
             // the heavy ops pass admission control: over the inflight
             // bound they are rejected with a retry_after hint instead of
             // queueing unboundedly behind a busy worker pool
-            "solve" | "grid" | "batch" => match self.admit() {
+            "solve" | "grid" | "path_exact" | "batch" => match self.admit() {
                 Some(_slot) => match op {
                     "solve" => self.handle_solve(req, req_id),
                     "grid" => self.handle_grid(req, req_id),
+                    "path_exact" => self.handle_path_exact(req, req_id),
                     _ => self.handle_batch(req, req_id),
                 },
                 None => {
@@ -381,8 +424,8 @@ impl ServeState {
             }
             other => {
                 bail!(
-                    "unknown op {other:?} \
-                     (register|solve|grid|batch|stats|metrics|ping|shutdown)"
+                    "unknown op {other:?} (register|unregister|update|solve|grid|\
+                     path_exact|batch|stats|metrics|ping|shutdown)"
                 )
             }
         }
@@ -406,6 +449,7 @@ impl ServeState {
         } else {
             bail!("register needs a \"path\" (libsvm file) or a \"synthetic\" spec");
         };
+        self.enforce_registry_budget(name);
         Ok(ok_response(
             "register",
             vec![
@@ -415,6 +459,152 @@ impl ServeState {
                 kv("nnz", entry.ds.x.nnz()),
                 kv("sparse", entry.ds.x.is_sparse()),
                 kv("fingerprint", format!("{:016x}", entry.fingerprint)),
+            ],
+        ))
+    }
+
+    /// The `unregister` op: drop a dataset and purge its warm-cache
+    /// snapshots. Only the *directly derivable* cache keys are purged —
+    /// the base content fingerprint, plus the RankSVM fold when the
+    /// pair set was built. Group snapshots fold their group size into
+    /// the key and are left to normal LRU eviction: cache entries are
+    /// content-keyed, so a leftover snapshot is unreferenced bytes, not
+    /// a correctness hazard (see [`WarmCache::purge_fingerprint`]).
+    fn handle_unregister(&self, req: &Req) -> Result<Json> {
+        let name = req.str_req("name")?;
+        let entry = self
+            .registry
+            .remove(name)
+            .ok_or_else(|| err!("unknown dataset {name:?} (nothing to unregister)"))?;
+        let freed = entry.resident_bytes();
+        let purged = self.purge_cache_for(&entry);
+        Ok(ok_response(
+            "unregister",
+            vec![
+                kv("name", name),
+                kv("freed_bytes", freed),
+                kv("cache_purged", purged),
+            ],
+        ))
+    }
+
+    /// Purge the warm-cache snapshots derivable from a removed entry's
+    /// fingerprint, returning how many were dropped.
+    fn purge_cache_for(&self, entry: &DatasetEntry) -> usize {
+        let mut cache = self.cache.lock().expect("cache lock");
+        let mut purged = cache.purge_fingerprint(entry.fingerprint);
+        if let Some(pairs) = entry.built_pairs() {
+            purged += cache.purge_fingerprint(entry.fingerprint ^ pairs.fingerprint());
+        }
+        purged
+    }
+
+    /// Evict least-recently-used datasets (never `keep`, the name that
+    /// was just registered) while the registry is over its byte budget,
+    /// treating each victim exactly like an `unregister`. No-op when no
+    /// budget is configured.
+    fn enforce_registry_budget(&self, keep: &str) {
+        if self.registry_max_bytes == 0 {
+            return;
+        }
+        while self.registry.len() > 1
+            && self.registry.resident_bytes() > self.registry_max_bytes
+        {
+            let Some(victim) = self.registry.lru_victim(keep) else { break };
+            let Some(entry) = self.registry.remove(&victim) else { break };
+            self.registry_evictions.fetch_add(1, Ordering::Relaxed);
+            let purged = self.purge_cache_for(&entry);
+            stderr_line(&format!(
+                "[serve] registry over budget: evicted dataset {victim:?} \
+                 ({} bytes, {purged} cache snapshots purged)",
+                entry.resident_bytes()
+            ));
+        }
+    }
+
+    /// The `update` op: derive a new registered dataset from a parent —
+    /// `"retire"` drops samples by index, `"append_from"` pulls rows
+    /// from another registered dataset (same p) — then re-key the
+    /// parent's *feature-indexed* warm-cache snapshots (L1-SVM, Slope,
+    /// Dantzig) to the child's fingerprint. The paper's warm-start
+    /// invariants make those snapshots honest seeds: a changed sample
+    /// set moves the optimal basis, but the parent's support is a
+    /// dual-feasible working set to resume generation from, so the
+    /// child's first solves converge in a few rounds instead of cold.
+    /// RankSVM snapshots index sample pairs and Group keys fold the
+    /// grouping, so neither is translated.
+    fn handle_update(&self, req: &Req) -> Result<Json> {
+        let parent_name = req.str_req("dataset")?;
+        let name = req.str_req("name")?;
+        let parent = self
+            .registry
+            .get(parent_name)
+            .ok_or_else(|| err!("unknown dataset {parent_name:?} (register it first)"))?;
+        let n = parent.ds.n();
+        let retire = index_list(req.0.get("retire"), "retire", n)?;
+        let mut keep_mask = vec![true; n];
+        for &i in &retire {
+            keep_mask[i] = false;
+        }
+        let kept: Vec<usize> = (0..n).filter(|&i| keep_mask[i]).collect();
+        let retired = n - kept.len();
+        let (append_src, append_rows): (Option<Arc<DatasetEntry>>, Vec<usize>) =
+            match req.0.get("append_from") {
+                None => (None, Vec::new()),
+                Some(spec) => {
+                    let s = Req(spec);
+                    let src_name = s.str_req("dataset")?;
+                    let src = self.registry.get(src_name).ok_or_else(|| {
+                        err!("unknown append_from dataset {src_name:?} (register it first)")
+                    })?;
+                    ensure!(
+                        src.ds.p() == parent.ds.p(),
+                        "append_from dataset has p = {}, parent has p = {}",
+                        src.ds.p(),
+                        parent.ds.p()
+                    );
+                    let rows = match spec.get("rows") {
+                        None => (0..src.ds.n()).collect(),
+                        Some(_) => index_list(spec.get("rows"), "rows", src.ds.n())?,
+                    };
+                    ensure!(!rows.is_empty(), "append_from \"rows\" must be non-empty");
+                    (Some(src), rows)
+                }
+            };
+        ensure!(
+            retired > 0 || !append_rows.is_empty(),
+            "update needs \"retire\" indices and/or an \"append_from\" spec"
+        );
+        ensure!(
+            !kept.is_empty() || !append_rows.is_empty(),
+            "update would produce an empty dataset"
+        );
+        let x = match &append_src {
+            Some(src) => parent.ds.x.stack_rows(&kept, &src.ds.x, &append_rows),
+            None => parent.ds.x.subset_rows(&kept),
+        };
+        let mut y: Vec<f64> = kept.iter().map(|&i| parent.ds.y[i]).collect();
+        if let Some(src) = &append_src {
+            y.extend(append_rows.iter().map(|&i| src.ds.y[i]));
+        }
+        let entry = self.registry.insert(name, crate::data::Dataset { x, y });
+        self.enforce_registry_budget(name);
+        let translated = self
+            .cache
+            .lock()
+            .expect("cache lock")
+            .translate_fingerprint(parent.fingerprint, entry.fingerprint);
+        Ok(ok_response(
+            "update",
+            vec![
+                kv("name", name),
+                kv("parent", parent_name),
+                kv("n", entry.ds.n()),
+                kv("p", entry.ds.p()),
+                kv("retired", retired),
+                kv("appended", append_rows.len()),
+                kv("fingerprint", format!("{:016x}", entry.fingerprint)),
+                kv("cache_translated", translated),
             ],
         ))
     }
@@ -777,6 +967,176 @@ impl ServeState {
         Ok(ok_response("grid", fields))
     }
 
+    /// The `path_exact` op: ride the parametric-simplex breakpoint path
+    /// from λ_max down to `lambda_min_frac · λ_max`, pricing the
+    /// implicit space only at basis changes (see
+    /// [`crate::coordinator::path_exact`]), and seed the warm-start
+    /// cache at **every** breakpoint. The response carries both the
+    /// breakpoints and the affine segments between them, so a client
+    /// can interpolate the exact objective at any intermediate λ
+    /// without another solve. Supported for the workloads with a
+    /// parametric-λ certificate (l1svm, ranksvm, dantzig); group and
+    /// slope requests are refused with a pointer to the `grid` op.
+    fn handle_path_exact(&self, req: &Req, req_id: u64) -> Result<Json> {
+        let wall = Span::start();
+        let name = req.str_req("dataset")?;
+        let entry = self
+            .registry
+            .get(name)
+            .ok_or_else(|| err!("unknown dataset {name:?} (register it first)"))?;
+        let workload = Workload::parse(req.str_req("workload")?)?;
+        let mut gen = gen_from_req(req)?;
+        let use_cache = req.bool_or("cache", true)?;
+        let want_trace = req.bool_or("trace", false)?;
+        let ring = (want_trace || self.slow_solve_ms > 0)
+            .then(|| Arc::new(RingSink::new(TRACE_RING_CAP)));
+        if let Some(r) = &ring {
+            gen.sink = Some(Arc::clone(r) as Arc<dyn TraceSink>);
+        }
+        let frac_default = match workload {
+            Workload::Dantzig => 0.3,
+            _ => 0.05,
+        };
+        let frac = req.f64_or("lambda_min_frac", frac_default)?;
+        ensure!(
+            frac > 0.0 && frac < 1.0,
+            "lambda_min_frac must be in (0, 1), got {frac}"
+        );
+        let deadline = deadline_from(req)?;
+        let stop = || {
+            if self.shutdown_requested() {
+                return true;
+            }
+            match &deadline {
+                Some(d) => d.expired(),
+                None => false,
+            }
+        };
+        let stop_ref: Option<&dyn Fn() -> bool> = Some(&stop);
+        let path: ExactPath = match workload {
+            Workload::L1svm => {
+                let ds = entry.classification();
+                let backend = NativeBackend::new(&ds.x);
+                let lmax = ds.lambda_max_l1();
+                l1svm_path_exact_with_stop(ds, &backend, lmax, frac * lmax, &gen, stop_ref)
+            }
+            Workload::Ranksvm => {
+                let ds = &entry.ds;
+                let mut owned_pairs = None;
+                let pairs = pairs_for(&entry, gen.pair_mode, &mut owned_pairs)?;
+                let backend = NativeBackend::new(&ds.x);
+                let lmax = lambda_max_rank(ds, pairs);
+                ranksvm_path_exact_with_stop(
+                    ds, &backend, pairs, lmax, frac * lmax, &gen, stop_ref,
+                )
+            }
+            Workload::Dantzig => {
+                let ds = &entry.ds;
+                let backend = NativeBackend::new(&ds.x);
+                let lmax = lambda_max_dantzig(ds);
+                dantzig_path_exact_with_stop(ds, &backend, lmax, frac * lmax, &gen, stop_ref)
+            }
+            Workload::Group | Workload::Slope => bail!(
+                "path_exact supports l1svm|ranksvm|dantzig; the {} workload has no \
+                 parametric-simplex segment certificate — use the \"grid\" op \
+                 (warm-started Algorithm 2) instead",
+                workload.as_str()
+            ),
+        };
+        // Seed the cache at every breakpoint — the exact analogue of the
+        // grid op's per-point seeding, except the λ's are exactly where
+        // the solution structure changes. A timed-out ride's last point
+        // is withheld: its expansion may not have converged, and only
+        // converged working sets are advertised as seeds (same policy as
+        // `solve`).
+        let mut seeded = 0usize;
+        if use_cache {
+            let cacheable = if path.timed_out {
+                &path.points[..path.points.len().saturating_sub(1)]
+            } else {
+                &path.points[..]
+            };
+            let fp = cache_fp(&entry, workload, 1);
+            for pt in cacheable {
+                if !pt.ws.is_empty() {
+                    self.cache_store(
+                        fp,
+                        workload,
+                        CacheEntry {
+                            lambda: pt.lambda,
+                            objective: pt.objective,
+                            ws: pt.ws.clone(),
+                        },
+                    );
+                    seeded += 1;
+                }
+            }
+        }
+        if path.timed_out {
+            self.observe_timeout();
+        }
+        let final_lambda = path.points.last().map_or(0.0, |pt| pt.lambda);
+        let points: Vec<Json> = path
+            .points
+            .iter()
+            .map(|pt| {
+                Json::obj(vec![
+                    kv("lambda", pt.lambda),
+                    kv("objective", pt.objective),
+                    kv("support", pt.support),
+                    kv("working_set", pt.working_set),
+                    kv("expanded", pt.expanded),
+                ])
+            })
+            .collect();
+        let segments: Vec<Json> = path
+            .segments
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    kv("lambda_hi", s.lambda_hi),
+                    kv("lambda_lo", s.lambda_lo),
+                    kv("obj_hi", s.obj_hi),
+                    kv("obj_lo", s.obj_lo),
+                ])
+            })
+            .collect();
+        let wall_ns = wall.elapsed_ns();
+        let mut fields = vec![
+            kv("dataset", name),
+            kv("workload", workload.as_str()),
+            kv("breakpoints", path.stats.breakpoints),
+            kv("expansions", path.stats.expansions),
+            kv("pricing_rounds", path.stats.pricing_rounds),
+            kv("simplex_iters", path.stats.simplex_iters),
+            kv("cache_seeded", seeded),
+            kv("timed_out", path.timed_out),
+            kv("truncated", path.truncated),
+            kv("points", points),
+            kv("segments", segments),
+        ];
+        // same convention as `solve`/`grid`: nondeterministic wall
+        // clocks only appear when the request opted into tracing
+        if want_trace {
+            fields.push(kv("wall_ms", ns_to_ms(wall_ns)));
+            fields.push(kv("solve_ms", ns_to_ms(path.stats.gen.solve_ns)));
+            fields.push(kv("pricing_ms", ns_to_ms(path.stats.gen.pricing_ns)));
+            fields.push(kv("seed_ms", ns_to_ms(path.stats.gen.seed_ns)));
+            let r = ring.as_ref().expect("ring exists when trace was requested");
+            fields.push(kv("trace", trace_events_json(&r.events())));
+            fields.push(kv("trace_dropped", r.dropped() as usize));
+        }
+        let ctx = SlowLogCtx {
+            req_id,
+            op: "path_exact",
+            dataset: name,
+            workload: workload.as_str(),
+            lambda: final_lambda,
+        };
+        self.maybe_log_slow(&ctx, wall_ns, &path.stats.gen, ring.as_deref());
+        Ok(ok_response("path_exact", fields))
+    }
+
     fn stats_response(&self) -> Json {
         let cache = self.cache.lock().expect("cache lock");
         // One object per dataset: shape, stored nonzeros, density, and
@@ -815,6 +1175,11 @@ impl ServeState {
             vec![
                 kv("requests", self.requests.load(Ordering::Relaxed) as usize),
                 kv("datasets", datasets),
+                kv("registry_bytes", self.registry.resident_bytes()),
+                kv(
+                    "registry_evictions",
+                    self.registry_evictions.load(Ordering::Relaxed) as usize,
+                ),
                 kv("cache_entries", cache.len()),
                 kv("cache_hits", cache.hits as usize),
                 kv("cache_misses", cache.misses as usize),
@@ -871,6 +1236,19 @@ impl ServeState {
             "In-memory misses that were then served from the snapshot store.",
             self.disk_hits.load(Ordering::Relaxed),
         );
+        sync_counter(
+            &self.metrics,
+            "cutgen_registry_evictions_total",
+            "Datasets evicted to satisfy the registry byte budget.",
+            self.registry_evictions.load(Ordering::Relaxed),
+        );
+        self.metrics
+            .gauge(
+                "cutgen_registry_resident_bytes",
+                "Estimated bytes held by all registered datasets and their views.",
+                &[],
+            )
+            .set(self.registry.resident_bytes() as i64);
         self.metrics
             .gauge("cutgen_inflight", "Solve/grid/batch requests currently executing.", &[])
             .set(self.inflight.load(Ordering::SeqCst) as i64);
@@ -960,8 +1338,11 @@ fn sync_counter(metrics: &obs::Registry, name: &str, help: &str, value: u64) {
 fn op_metric_label(op: &str) -> &'static str {
     match op {
         "register" => "register",
+        "unregister" => "unregister",
+        "update" => "update",
         "solve" => "solve",
         "grid" => "grid",
+        "path_exact" => "path_exact",
         "batch" => "batch",
         "stats" => "stats",
         "metrics" => "metrics",
@@ -1162,6 +1543,24 @@ fn init_for(req: &Req) -> Result<InitStrategy> {
     }
 }
 
+/// Parse an optional array field of sample indices, validating each
+/// against the exclusive bound `n`. An absent field parses as empty.
+fn index_list(field: Option<&Json>, what: &str, n: usize) -> Result<Vec<usize>> {
+    let Some(v) = field else { return Ok(Vec::new()) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| err!("field {what:?} must be an array of sample indices"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let i = item
+            .as_usize()
+            .ok_or_else(|| err!("{what:?} entries must be non-negative integers"))?;
+        ensure!(i < n, "{what:?} index {i} out of range (n = {n})");
+        out.push(i);
+    }
+    Ok(out)
+}
+
 fn contiguous_groups(p: usize, group_size: usize) -> Result<Vec<Vec<usize>>> {
     let gs = group_size.max(1);
     ensure!(p % gs == 0, "group workload needs p divisible by group_size ({p} % {gs} != 0)");
@@ -1233,18 +1632,27 @@ fn solve_l1(
     let pricer = BackendPricer::new(&backend, gen.threads);
     let all_i: Vec<usize> = (0..ds.n()).collect();
     let seed_span = Span::start();
+    let mut primal_guess: Option<(Vec<f64>, f64)> = None;
     let (j_init, seeded_by): (Vec<usize>, &'static str) = match seed {
         Some(ws) if !ws.cols.is_empty() => (ws.cols.clone(), "cache"),
         _ => {
             // Algorithm 1 keeps all margin rows: the column-only seed
             // skips the discarded violated-row scan
             let s = Initializer::from_params(gen).seed_l1_cols(ds, &backend, lambda);
+            primal_guess = s.primal;
             (s.ws.cols, s.strategy.as_str())
         }
     };
     let seed_ns = seed_span.elapsed_ns();
     let mut rl1 = RestrictedL1::new(ds, lambda, &all_i, &j_init);
     rl1.set_threads(gen.threads);
+    // A first-order seed also carries an approximate primal point:
+    // cross it over to a starting basis so the first restricted solve
+    // starts near the FOM solution instead of from the slack basis.
+    if let Some((beta, b0)) = &primal_guess {
+        // a failed crossover leaves the cold-start path intact
+        let _ = rl1.crossover_from(ds, beta, *b0);
+    }
     let mut prob = L1Problem::new(rl1, ds, &pricer, false, true);
     let mut stats = engine_for(gen, stop).run(&mut prob);
     stats.seed_ns = seed_ns;

@@ -24,6 +24,7 @@
 //! resurrect stale working sets.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::bail;
@@ -49,6 +50,9 @@ pub struct DatasetEntry {
     class_view: OnceLock<Dataset>,
     /// RankSVM comparison-pair set, built at most once.
     pairs: OnceLock<PairSet>,
+    /// Logical tick of the last registry access (insert or lookup) —
+    /// the recency the `--registry-bytes` LRU eviction orders by.
+    last_used: AtomicU64,
 }
 
 impl DatasetEntry {
@@ -61,7 +65,23 @@ impl DatasetEntry {
             fingerprint,
             class_view: OnceLock::new(),
             pairs: OnceLock::new(),
+            last_used: AtomicU64::new(0),
         }
+    }
+
+    /// Estimated resident bytes of this entry: the design, the response
+    /// vector, and any lazily built views (±1 labels, comparison pairs)
+    /// that exist right now. The same sizing convention as
+    /// `Design::resident_bytes` — an accounting estimate, not an
+    /// allocator measurement.
+    pub fn resident_bytes(&self) -> usize {
+        self.ds.x.resident_bytes()
+            + 8 * self.ds.y.len()
+            + self
+                .class_view
+                .get()
+                .map_or(0, |d| d.x.resident_bytes() + 8 * d.y.len())
+            + self.built_pairs().map_or(0, |p| p.resident_bytes())
     }
 
     /// The dataset with labels mapped to ±1 (hinge-loss workloads).
@@ -187,10 +207,14 @@ pub fn generate_synthetic(
 }
 
 /// Name → dataset map behind a read-write lock: registrations are rare,
-/// lookups are every request.
+/// lookups are every request. Every insert and lookup stamps the entry
+/// with a monotone tick so the serve layer's `--registry-bytes` budget
+/// can evict the least-recently-used dataset.
 #[derive(Default)]
 pub struct Registry {
     map: RwLock<HashMap<String, Arc<DatasetEntry>>>,
+    /// Monotone logical clock behind the per-entry recency stamps.
+    clock: AtomicU64,
 }
 
 impl Registry {
@@ -199,11 +223,18 @@ impl Registry {
         Self::default()
     }
 
+    /// Next recency tick (relaxed: ordering between concurrent touches
+    /// only needs to be *some* total order, not a synchronized one).
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// Insert (or replace) a dataset under `name`. Replacement is safe
     /// for the warm-start cache because entries are keyed by content
     /// fingerprint, not by name.
     pub fn insert(&self, name: &str, ds: Dataset) -> Arc<DatasetEntry> {
         let entry = Arc::new(DatasetEntry::new(name, ds));
+        entry.last_used.store(self.tick(), Ordering::Relaxed);
         self.map.write().expect("registry lock").insert(name.to_string(), entry.clone());
         entry
     }
@@ -227,9 +258,38 @@ impl Registry {
         Ok(self.insert(name, generate_synthetic(kind, n, p, seed, opts)?))
     }
 
-    /// Shared handle to a registered dataset.
+    /// Shared handle to a registered dataset. Refreshes its recency.
     pub fn get(&self, name: &str) -> Option<Arc<DatasetEntry>> {
-        self.map.read().expect("registry lock").get(name).cloned()
+        let entry = self.map.read().expect("registry lock").get(name).cloned()?;
+        entry.last_used.store(self.tick(), Ordering::Relaxed);
+        Some(entry)
+    }
+
+    /// Drop a dataset, returning the removed entry so the caller can
+    /// release derived state (warm-cache snapshots keyed by its
+    /// fingerprint). Live `Arc` handles held by in-flight requests stay
+    /// valid — removal only unpublishes the name.
+    pub fn remove(&self, name: &str) -> Option<Arc<DatasetEntry>> {
+        self.map.write().expect("registry lock").remove(name)
+    }
+
+    /// Estimated resident bytes across all registered datasets — the
+    /// quantity the serve layer's `--registry-bytes` budget bounds.
+    pub fn resident_bytes(&self) -> usize {
+        self.map.read().expect("registry lock").values().map(|e| e.resident_bytes()).sum()
+    }
+
+    /// Name of the least-recently-used dataset other than `except` (a
+    /// just-registered entry must never evict itself). `None` when no
+    /// other dataset exists.
+    pub fn lru_victim(&self, except: &str) -> Option<String> {
+        self.map
+            .read()
+            .expect("registry lock")
+            .iter()
+            .filter(|(name, _)| name.as_str() != except)
+            .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+            .map(|(name, _)| name.clone())
     }
 
     /// Number of registered datasets.
@@ -300,6 +360,31 @@ mod tests {
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.names(), vec!["d".to_string()]);
         assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn remove_bytes_and_lru_ordering() {
+        let reg = Registry::new();
+        reg.register_synthetic("a", "l1", 12, 8, 1, &SynthOpts::default()).unwrap();
+        reg.register_synthetic("b", "l1", 12, 8, 2, &SynthOpts::default()).unwrap();
+        assert!(reg.resident_bytes() >= 2 * (12 * 8 * 8 + 12 * 8), "two dense designs + y");
+        // "a" was inserted first, so it is the LRU victim ...
+        assert_eq!(reg.lru_victim("").as_deref(), Some("a"));
+        // ... until a lookup refreshes it, which shifts the victim to "b"
+        reg.get("a").unwrap();
+        assert_eq!(reg.lru_victim("").as_deref(), Some("b"));
+        // the `except` guard protects a just-registered name
+        assert_eq!(reg.lru_victim("b").as_deref(), Some("a"));
+        let removed = reg.remove("b").expect("b was registered");
+        assert_eq!(removed.name, "b");
+        assert_eq!(reg.len(), 1);
+        assert!(reg.remove("b").is_none(), "second removal is a no-op");
+        assert_eq!(reg.lru_victim("a"), None, "no victim besides the protected entry");
+        // entry bytes grow when a lazy view is built
+        let e = reg.get("a").unwrap();
+        let before = e.resident_bytes();
+        e.pairs();
+        assert!(e.resident_bytes() > before, "built pair set is accounted");
     }
 
     #[test]

@@ -36,6 +36,7 @@ mod solver;
 pub use basis::Basis;
 pub use model::{LpModel, RowId, VarId};
 pub use parametric::{ParametricSimplex, PathPoint};
+pub(crate) use parametric::next_cost_breakpoint;
 pub use solver::{SimplexSolver, SolveStats, Status, VarStatus};
 
 /// Numerical tolerances shared by the solver components.

@@ -11,6 +11,7 @@
 //! measures.
 
 use super::solver::{BVar, SimplexSolver, Status, VarStatus};
+use crate::error::Result;
 
 /// One breakpoint on the optimal-basis path.
 #[derive(Clone, Copy, Debug)]
@@ -52,13 +53,26 @@ impl ParametricSimplex {
     /// Solve to optimality at `lambda_start`, then ride the path down to
     /// `lambda_target`, recording every breakpoint. Returns the path; the
     /// solver is left optimal at `lambda_target`.
-    pub fn run(&mut self, lambda_start: f64, lambda_target: f64, max_breakpoints: usize) -> (Vec<PathPoint>, Status) {
-        assert!(lambda_target <= lambda_start);
+    ///
+    /// Errors (instead of panicking) when `lambda_target > lambda_start`:
+    /// user-supplied grids reach this driver unordered, and the serve
+    /// layer's never-panics contract turns that into a typed response.
+    pub fn run(
+        &mut self,
+        lambda_start: f64,
+        lambda_target: f64,
+        max_breakpoints: usize,
+    ) -> Result<(Vec<PathPoint>, Status)> {
+        crate::ensure!(
+            lambda_target <= lambda_start,
+            "parametric path: lambda_target {lambda_target} exceeds lambda_start {lambda_start} \
+             (the path rides downward; order the grid high to low)"
+        );
         let mut path = Vec::new();
         self.apply_lambda(lambda_start);
         let st = self.solver.solve();
         if st != Status::Optimal {
-            return (path, st);
+            return Ok((path, st));
         }
         let mut lambda = lambda_start;
         path.push(PathPoint { lambda, objective: self.solver.objective(), pivots: self.pivots });
@@ -67,53 +81,10 @@ impl ParametricSimplex {
             if lambda <= lambda_target {
                 break;
             }
-            // Reduced-cost decomposition at the current basis:
-            // d_j(λ) = d_fix_j + λ·d_var_j for every nonbasic j.
-            let c_fix = self.c_fix.clone();
-            let c_var = self.c_var.clone();
-            let y_fix = self.solver.duals_for_costs(&|v| match v {
-                BVar::Col(j) => c_fix[j],
-                BVar::Log(_) => 0.0,
-            });
-            let y_var = self.solver.duals_for_costs(&|v| match v {
-                BVar::Col(j) => c_var[j],
-                BVar::Log(_) => 0.0,
-            });
             // Find the largest λ' < λ where some nonbasic reduced cost
             // crosses zero in the violating direction.
-            let mut next: Option<(BVar, f64)> = None;
-            for v in self.solver.nonbasic_vars() {
-                let (dfix, dvar) = match v {
-                    BVar::Col(j) => (
-                        c_fix[j] - self.solver.column_dot(v, &y_fix),
-                        c_var[j] - self.solver.column_dot(v, &y_var),
-                    ),
-                    BVar::Log(r) => (y_fix[r], y_var[r]),
-                };
-                if dvar.abs() < 1e-12 {
-                    continue; // reduced cost does not move with λ
-                }
-                let crossing = -dfix / dvar;
-                if crossing >= lambda - 1e-10 || crossing < lambda_target - 1e-10 {
-                    // ignore crossings outside (target, λ)
-                    if crossing < lambda_target - 1e-10 {
-                        continue;
-                    }
-                    continue;
-                }
-                let violating = match self.solver.status_of_pub(v) {
-                    VarStatus::AtLower => dvar > 0.0,  // d decreases as λ ↓
-                    VarStatus::AtUpper => dvar < 0.0,  // d increases as λ ↓
-                    VarStatus::FreeZero => true,
-                    VarStatus::Basic(_) => false,
-                };
-                if !violating {
-                    continue;
-                }
-                if next.map_or(true, |(_, l)| crossing > l) {
-                    next = Some((v, crossing));
-                }
-            }
+            let next =
+                next_cost_breakpoint(&mut self.solver, &self.c_fix, &self.c_var, lambda, lambda_target);
 
             match next {
                 None => {
@@ -127,7 +98,7 @@ impl ParametricSimplex {
                     });
                     break;
                 }
-                Some((_, crossing)) => {
+                Some(crossing) => {
                     // Move just past the breakpoint and re-optimize with the
                     // (primal-feasible) warm basis.
                     lambda = (crossing - 1e-9).max(lambda_target);
@@ -135,7 +106,7 @@ impl ParametricSimplex {
                     let st = self.solver.solve();
                     self.pivots = self.solver.stats.primal_iters + self.solver.stats.dual_iters;
                     if st != Status::Optimal {
-                        return (path, st);
+                        return Ok((path, st));
                     }
                     path.push(PathPoint {
                         lambda,
@@ -154,9 +125,9 @@ impl ParametricSimplex {
                 objective: self.solver.objective(),
                 pivots: self.pivots,
             });
-            return (path, st);
+            return Ok((path, st));
         }
-        (path, Status::Optimal)
+        Ok((path, Status::Optimal))
     }
 
     /// Cost of variable `v` at the λ most recently applied.
@@ -177,4 +148,62 @@ impl ParametricSimplex {
             BVar::Log(_) => self.solver.cost_of_pub(v),
         }
     }
+}
+
+/// Largest λ' in `[lambda_lo, lambda)` at which some nonbasic reduced
+/// cost of the current basis crosses zero in the violating direction,
+/// under the cost decomposition `c_j(λ) = c_fix[j] + λ·c_var[j]` over
+/// structural variables (logicals are cost-free). `None` means the
+/// basis stays cost-optimal all the way down to `lambda_lo`.
+///
+/// Reduced costs decompose the same way the costs do:
+/// `d_j(λ) = d_fix_j + λ·d_var_j` with `d_fix/d_var` from one BTRAN
+/// each, so the scan is two dual solves plus one pass over the
+/// nonbasic variables. Shared by the full-model PSM baseline above and
+/// the restricted exact-path drivers in `coordinator`.
+pub(crate) fn next_cost_breakpoint(
+    solver: &mut SimplexSolver,
+    c_fix: &[f64],
+    c_var: &[f64],
+    lambda: f64,
+    lambda_lo: f64,
+) -> Option<f64> {
+    let y_fix = solver.duals_for_costs(&|v| match v {
+        BVar::Col(j) => c_fix[j],
+        BVar::Log(_) => 0.0,
+    });
+    let y_var = solver.duals_for_costs(&|v| match v {
+        BVar::Col(j) => c_var[j],
+        BVar::Log(_) => 0.0,
+    });
+    let mut next: Option<f64> = None;
+    for v in solver.nonbasic_vars() {
+        let (dfix, dvar) = match v {
+            BVar::Col(j) => (
+                c_fix[j] - solver.column_dot(v, &y_fix),
+                c_var[j] - solver.column_dot(v, &y_var),
+            ),
+            BVar::Log(r) => (y_fix[r], y_var[r]),
+        };
+        if dvar.abs() < 1e-12 {
+            continue; // reduced cost does not move with λ
+        }
+        let crossing = -dfix / dvar;
+        if crossing >= lambda - 1e-10 || crossing < lambda_lo - 1e-10 {
+            continue; // outside (lambda_lo, λ)
+        }
+        let violating = match solver.status_of_pub(v) {
+            VarStatus::AtLower => dvar > 0.0,  // d decreases as λ ↓
+            VarStatus::AtUpper => dvar < 0.0,  // d increases as λ ↓
+            VarStatus::FreeZero => true,
+            VarStatus::Basic(_) => false,
+        };
+        if !violating {
+            continue;
+        }
+        if next.map_or(true, |l| crossing > l) {
+            next = Some(crossing);
+        }
+    }
+    next
 }

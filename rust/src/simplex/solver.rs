@@ -1036,4 +1036,203 @@ impl SimplexSolver {
         self.cost_of(v)
     }
 
+    // ------------------------------------------------------------------
+    // Parametric-path and crossover hooks (same crate only)
+    // ------------------------------------------------------------------
+
+    /// RHS-parametric breakpoint scan for models whose **every** row
+    /// range moves as `[centers[r] − λ, centers[r] + λ]` (the Dantzig
+    /// selector's restricted LP). With the basis fixed, each basic value
+    /// is affine in λ: `x_B(λ') = x_B + (λ' − λ)·w` with `w = B⁻¹d`,
+    /// where `d_r` is the λ-derivative of the nonbasic logical sitting
+    /// on row `r`'s moving bound (−1 at the lower bound, +1 at the
+    /// upper; 0 for basic logicals). Returns the largest λ' in
+    /// `[lambda_lo, lambda)` at which some basic variable hits a
+    /// (possibly itself moving) bound — the RHS analogue of the
+    /// cost-parametric scan in `parametric.rs` — or `None` when the
+    /// basis stays primal-feasible down to `lambda_lo`.
+    pub(crate) fn next_rhs_breakpoint(
+        &mut self,
+        centers: &[f64],
+        lambda: f64,
+        lambda_lo: f64,
+    ) -> Option<f64> {
+        let m = self.model.num_rows();
+        debug_assert_eq!(centers.len(), m);
+        if m == 0 {
+            return None;
+        }
+        self.ensure_factorized();
+        self.recompute_x_basic();
+        let mut d = vec![0.0; m];
+        for r in 0..m {
+            match self.row_status[r] {
+                VarStatus::AtLower => d[r] = -1.0,
+                VarStatus::AtUpper => d[r] = 1.0,
+                _ => {}
+            }
+        }
+        self.factor.as_ref().expect("factorized").ftran(&mut d);
+        let mut next: Option<f64> = None;
+        let mut push = |cand: f64, next: &mut Option<f64>| {
+            if cand < lambda - 1e-10
+                && cand >= lambda_lo - 1e-10
+                && next.map_or(true, |l| cand > l)
+            {
+                *next = Some(cand);
+            }
+        };
+        for (pos, &v) in self.basis_vars.iter().enumerate() {
+            let w = d[pos];
+            let x = self.x_basic[pos];
+            match v {
+                BVar::Col(j) => {
+                    // Fixed bounds: x + (λ'−λ)·w hits lb or ub.
+                    if w.abs() < 1e-12 {
+                        continue;
+                    }
+                    let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+                    if lb.is_finite() {
+                        push(lambda + (lb - x) / w, &mut next);
+                    }
+                    if ub.is_finite() {
+                        push(lambda + (ub - x) / w, &mut next);
+                    }
+                }
+                BVar::Log(r) => {
+                    // Moving bounds: x + (λ'−λ)·w = centers[r] ∓ λ'.
+                    let c = centers[r];
+                    if (w + 1.0).abs() > 1e-12 {
+                        push((c - x + lambda * w) / (w + 1.0), &mut next);
+                    }
+                    if (w - 1.0).abs() > 1e-12 {
+                        push((c - x + lambda * w) / (w - 1.0), &mut next);
+                    }
+                }
+            }
+        }
+        next
+    }
+
+    /// Crossover from an external primal guess: seat the `preferred`
+    /// structural variables in the basis (greedily matched to rows by
+    /// largest remaining |coefficient|), pin any out-of-bounds basic
+    /// values by temporarily relaxing the violated bound to the value
+    /// itself, run the primal simplex on the pinned problem, then
+    /// restore the true bounds. Costs, duals and reduced costs never
+    /// involve bounds, so the restore leaves the solver dual-feasible
+    /// near the guess and the next [`SimplexSolver::solve`] finishes
+    /// with a short dual-simplex cleanup instead of replaying the
+    /// expansion from the all-logical crash basis. Returns `false`
+    /// (leaving a cold-startable state) when no seat survives — an
+    /// empty guess, all-zero candidate columns, or a numerically
+    /// singular seating that `repair_basis` reset.
+    pub(crate) fn crossover_from_guess(&mut self, preferred: &[VarId]) -> bool {
+        let m = self.model.num_rows();
+        if m == 0 || preferred.is_empty() {
+            return false;
+        }
+        // Reset every structural to its nonbasic snap.
+        for j in 0..self.model.num_vars() {
+            let (lb, ub) = (self.model.lb[j], self.model.ub[j]);
+            self.col_status[j] = if lb.is_finite() {
+                VarStatus::AtLower
+            } else if ub.is_finite() {
+                VarStatus::AtUpper
+            } else {
+                VarStatus::FreeZero
+            };
+        }
+        // Greedy seat assignment: each preferred variable takes the
+        // untaken row where its coefficient is largest.
+        let mut taken = vec![false; m];
+        let mut seated = vec![false; self.model.num_vars()];
+        let mut seats: Vec<(usize, VarId)> = Vec::new();
+        for &j in preferred {
+            if j >= seated.len() || seated[j] || seats.len() == m {
+                continue;
+            }
+            let col = &self.model.cols[j];
+            let mut best: Option<(usize, f64)> = None;
+            for (&r, &val) in col.rows.iter().zip(&col.vals) {
+                if !taken[r] && best.map_or(true, |(_, a)| val.abs() > a) {
+                    best = Some((r, val.abs()));
+                }
+            }
+            if let Some((r, a)) = best {
+                if a > 1e-9 {
+                    taken[r] = true;
+                    seated[j] = true;
+                    seats.push((r, j));
+                }
+            }
+        }
+        if seats.is_empty() {
+            return false;
+        }
+        self.basis_vars = (0..m).map(BVar::Log).collect();
+        for r in 0..m {
+            self.row_status[r] = VarStatus::Basic(r);
+        }
+        for &(r, j) in &seats {
+            self.basis_vars[r] = BVar::Col(j);
+            self.col_status[j] = VarStatus::Basic(r);
+            let (lo, hi) = (self.model.row_lo[r], self.model.row_hi[r]);
+            self.row_status[r] = if lo.is_finite() {
+                VarStatus::AtLower
+            } else if hi.is_finite() {
+                VarStatus::AtUpper
+            } else {
+                VarStatus::FreeZero
+            };
+        }
+        self.factor = None;
+        self.refactorize(); // a singular seating repairs to all-logical
+        let (_, j0) = seats[0];
+        if !matches!(self.col_status[j0], VarStatus::Basic(_)) {
+            return false; // repair_basis reset the seating
+        }
+        // Pin out-of-bounds basic values at themselves so the pinned
+        // problem starts primal feasible without drifting away from the
+        // guess (the relaxed bound equals the current value, so the
+        // optimizer gains no new room below/above it).
+        let mut pinned: Vec<(BVar, f64, f64)> = Vec::new();
+        for (pos, &v) in self.basis_vars.clone().iter().enumerate() {
+            let (lb, ub) = self.bounds_of(v);
+            let x = self.x_basic[pos];
+            if x < lb - self.tol.feas {
+                pinned.push((v, lb, ub));
+                match v {
+                    BVar::Col(j) => self.model.lb[j] = x,
+                    BVar::Log(r) => self.model.row_lo[r] = x,
+                }
+            } else if x > ub + self.tol.feas {
+                pinned.push((v, lb, ub));
+                match v {
+                    BVar::Col(j) => self.model.ub[j] = x,
+                    BVar::Log(r) => self.model.row_hi[r] = x,
+                }
+            }
+        }
+        self.bland = false;
+        self.stall = 0;
+        let st = self.primal_simplex();
+        for &(v, lo, hi) in &pinned {
+            // Restoring bounds keeps each nonbasic status on the same
+            // side (the value snaps to the restored bound) — the same
+            // dual-feasibility-preserving move `set_row_bounds` makes.
+            match v {
+                BVar::Col(j) => {
+                    self.model.lb[j] = lo;
+                    self.model.ub[j] = hi;
+                }
+                BVar::Log(r) => {
+                    self.model.row_lo[r] = lo;
+                    self.model.row_hi[r] = hi;
+                }
+            }
+        }
+        st == Status::Optimal
+    }
+
 }

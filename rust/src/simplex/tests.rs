@@ -452,7 +452,7 @@ fn parametric_path_matches_direct_solves() {
     }
     let solver = SimplexSolver::new(model);
     let mut psm = ParametricSimplex::new(solver, c_fix, c_var);
-    let (path, st) = psm.run(lambda_hi, lambda_lo, 10_000);
+    let (path, st) = psm.run(lambda_hi, lambda_lo, 10_000).unwrap();
     assert_eq!(st, Status::Optimal);
     assert!(path.len() >= 2, "expected breakpoints, got {}", path.len());
     assert!(
@@ -460,6 +460,59 @@ fn parametric_path_matches_direct_solves() {
         "psm {} direct {}",
         psm.solver.objective(),
         direct.objective()
+    );
+}
+
+#[test]
+fn parametric_run_rejects_unordered_grid() {
+    // An ascending (start, target) pair must surface as a typed error —
+    // the serve layer's never-panics contract routes user grids here.
+    let mut m = LpModel::new();
+    let x = m.add_col_nonneg(1.0, &[]);
+    m.add_row_ge(1.0, &[(x, 1.0)]);
+    let s = SimplexSolver::new(m);
+    let mut psm = ParametricSimplex::new(s, vec![0.0], vec![1.0]);
+    let err = psm.run(1.0, 2.0, 100).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("lambda_target"), "unexpected message: {msg}");
+}
+
+/// Long pivot chains must refactorize within `tol.refactor_every` eta
+/// updates and keep KKT residuals at refactorization quality. With a
+/// deliberately tiny eta budget, a chain of warm re-solves exercises
+/// many refactorize→eta-drift→refactorize cycles on the same basis
+/// machinery; the residuals prove the product-form updates never let
+/// the factorization drift loose.
+#[test]
+fn eta_file_drift_bounded_by_refactor_budget() {
+    let tol = Tolerances { feas: 1e-9, opt: 1e-9, refactor_every: 8, ..Tolerances::default() };
+    let mut rng = Xoshiro256::seed_from_u64(4242);
+    let (solver, _) = random_feasible_lp(&mut rng, 24, 16);
+    let mut s = solver.with_tolerances(tol);
+    assert_eq!(s.solve(), Status::Optimal);
+    // A long chain of bound perturbations, each warm re-solved.
+    for round in 0..25 {
+        for r in 0..16 {
+            let shift = rng.uniform_in(-0.15, 0.15);
+            let lo = s.model().row_lo[r] + shift;
+            let hi = s.model().row_hi[r] + shift;
+            s.set_row_bounds(r, lo, hi);
+        }
+        assert_eq!(s.solve(), Status::Optimal, "round {round}");
+        assert!(s.primal_infeasibility() <= 1e-8, "round {round}: pinf {}", s.primal_infeasibility());
+        let dinf = s.dual_infeasibility();
+        assert!(dinf <= 1e-8, "round {round}: dinf {dinf}");
+    }
+    let iters = s.stats.primal_iters + s.stats.dual_iters;
+    assert!(iters > 4 * tol.refactor_every, "chain too short to exercise drift: {iters} iters");
+    // Every pivot appends at most one eta, and the eta file is rebuilt
+    // whenever it reaches refactor_every — so the refactorization count
+    // must keep pace with the pivot count (2x slack for bound flips,
+    // which iterate without growing the eta file).
+    assert!(
+        s.stats.refactors >= iters / (2 * tol.refactor_every),
+        "eta file outgrew its budget: {} refactors over {iters} iters",
+        s.stats.refactors
     );
 }
 

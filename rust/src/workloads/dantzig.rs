@@ -167,6 +167,18 @@ impl RestrictedDantzig {
         }
     }
 
+    /// Largest λ' in `[lambda_lo, lambda)` where the current basis stops
+    /// being optimal for the *restricted* model. Dantzig is
+    /// RHS-parametric — λ moves the row ranges `[c_i − λ, c_i + λ]`, not
+    /// the costs — so the scan rides the basic solution along the bound
+    /// shrink direction (one FTRAN) and reports the first basic variable
+    /// to hit a bound; see
+    /// `crate::simplex::SimplexSolver::next_rhs_breakpoint`.
+    pub(crate) fn next_breakpoint(&mut self, lambda: f64, lambda_lo: f64) -> Option<f64> {
+        let centers: Vec<f64> = self.rows_i.iter().map(|&i| self.c[i]).collect();
+        self.solver.next_rhs_breakpoint(&centers, lambda, lambda_lo)
+    }
+
     /// Change λ in place: every row's range becomes `[c_i − λ, c_i + λ]`.
     /// The basis and duals are untouched (dual warm start; the next solve
     /// repairs primal feasibility with the dual simplex) — the λ-path
@@ -287,6 +299,12 @@ impl<'a> DantzigProblem<'a> {
         &self.rd
     }
 
+    /// Mutable access to the wrapped restricted model (the exact-path
+    /// driver's breakpoint scan).
+    pub fn inner_mut(&mut self) -> &mut RestrictedDantzig {
+        &mut self.rd
+    }
+
     /// Change λ in place (warm-start preserving) — the path driver's hook.
     pub fn set_lambda(&mut self, lambda: f64) {
         self.rd.set_lambda(lambda);
@@ -330,6 +348,9 @@ impl RestrictedProblem for DantzigProblem<'_> {
     }
     fn working_set_size(&self) -> usize {
         self.rd.j_set().len() + self.rd.i_set().len()
+    }
+    fn reprice_at(&mut self, lambda: f64) {
+        self.rd.set_lambda(lambda);
     }
 }
 

@@ -146,6 +146,10 @@ pub struct RestrictedRank<'p> {
     /// Cap on violated pairs returned per pricing round (0 = every
     /// winner-best pair).
     pair_cap: usize,
+    /// Cost decomposition `cost_v(λ) = cfix[v] + λ·cvar[v]` maintained
+    /// alongside every `add_*` — the exact-path breakpoint scan reads it.
+    cfix: Vec<f64>,
+    cvar: Vec<f64>,
 }
 
 impl<'p> RestrictedRank<'p> {
@@ -170,6 +174,8 @@ impl<'p> RestrictedRank<'p> {
             bm: Vec::new(),
             threads: 1,
             pair_cap: 0,
+            cfix: Vec::new(),
+            cvar: Vec::new(),
         };
         me.add_pairs(ds, t_init);
         me.add_features(ds, j_init);
@@ -207,6 +213,8 @@ impl<'p> RestrictedRank<'p> {
             self.solver.add_row(1.0, f64::INFINITY, &coefs);
             self.row_pos.insert(t, self.rows_t.len());
             self.rows_t.push(t);
+            self.cfix.push(1.0);
+            self.cvar.push(0.0);
         }
     }
 
@@ -238,7 +246,22 @@ impl<'p> RestrictedRank<'p> {
             self.cols_j.push(j);
             self.bp.push(bp);
             self.bm.push(bm);
+            self.cfix.extend_from_slice(&[0.0, 0.0]);
+            self.cvar.extend_from_slice(&[1.0, 1.0]);
         }
+    }
+
+    /// Largest λ' in `[lambda_lo, lambda)` where the current basis stops
+    /// being cost-optimal for the *restricted* model — the exact-path
+    /// driver's breakpoint scan (two BTRANs + one nonbasic pass).
+    pub(crate) fn next_breakpoint(&mut self, lambda: f64, lambda_lo: f64) -> Option<f64> {
+        crate::simplex::next_cost_breakpoint(
+            &mut self.solver,
+            &self.cfix,
+            &self.cvar,
+            lambda,
+            lambda_lo,
+        )
     }
 
     /// Change λ in place (costs of all β halves); keeps the basis for
@@ -364,6 +387,12 @@ impl<'a, 'p> RankProblem<'a, 'p> {
         &self.rr
     }
 
+    /// Mutable access to the wrapped restricted model (the exact-path
+    /// driver's breakpoint scan).
+    pub fn inner_mut(&mut self) -> &mut RestrictedRank<'p> {
+        &mut self.rr
+    }
+
     /// Change λ in place (warm-start preserving) — the path driver's hook.
     pub fn set_lambda(&mut self, lambda: f64) {
         self.rr.set_lambda(lambda);
@@ -408,6 +437,9 @@ impl RestrictedProblem for RankProblem<'_, '_> {
     }
     fn working_set_size(&self) -> usize {
         self.rr.j_set().len() + self.rr.t_set().len()
+    }
+    fn reprice_at(&mut self, lambda: f64) {
+        self.rr.set_lambda(lambda);
     }
 }
 

@@ -1,0 +1,351 @@
+//! End-to-end tests of the exact parametric λ-path: interpolated
+//! objectives agree with independent fixed-λ solves everywhere on the
+//! ridden range (l1svm, ranksvm, dantzig), the exact ride prices
+//! strictly less than a dense warm-started grid, and the serve layer's
+//! `path_exact` / `update` / `unregister` ops (breakpoint cache
+//! seeding, snapshot translation to derived datasets, registry-level
+//! eviction) behave over the line protocol.
+
+use cutgen::backend::NativeBackend;
+use cutgen::coordinator::path::{geometric_grid, regularization_path};
+use cutgen::coordinator::path_exact::{
+    dantzig_path_exact, l1svm_path_exact, ranksvm_path_exact,
+};
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{
+    generate_dantzig, generate_l1, generate_ranksvm, DantzigSpec, RankSpec, SyntheticSpec,
+};
+use cutgen::engine::PairMode;
+use cutgen::rng::Xoshiro256;
+use cutgen::serve::json::Json;
+use cutgen::serve::ServeState;
+use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
+use cutgen::workloads::pairset::PairSet;
+use cutgen::workloads::ranksvm::{lambda_max_rank, ranksvm_generation};
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-9)
+}
+
+fn tight_params() -> GenParams {
+    GenParams { eps: 1e-8, seed_budget: 5, ..Default::default() }
+}
+
+/// The acceptance drive: ride the exact path over [½λ_max, λ_max],
+/// then check it against a dense 50-point warm-started grid
+/// (Algorithm 2) over the same range — every grid objective must match
+/// the interpolated exact objective to ≤ 1e-6 relative, and the exact
+/// ride must have priced the implicit column space strictly fewer
+/// times than the grid did.
+#[test]
+fn l1svm_exact_path_matches_dense_warm_grid_with_fewer_pricing_rounds() {
+    let spec = SyntheticSpec { n: 40, p: 80, k0: 5, rho: 0.1, standardize: true };
+    let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(42));
+    let backend = NativeBackend::new(&ds.x);
+    let params = tight_params();
+    let lmax = ds.lambda_max_l1();
+
+    let path = l1svm_path_exact(&ds, &backend, lmax, 0.5 * lmax, &params);
+    assert!(path.stats.breakpoints >= 2, "expected a ride, got {:?}", path.stats);
+    assert!(!path.timed_out && !path.truncated);
+
+    let ratio = 0.5f64.powf(1.0 / 49.0);
+    let grid = geometric_grid(lmax, 50, ratio);
+    let (grid_points, _) = regularization_path(&ds, &backend, &grid, &params);
+    assert_eq!(grid_points.len(), 50);
+    for pt in &grid_points {
+        let interp = path
+            .objective_at(pt.lambda)
+            .unwrap_or_else(|| panic!("λ = {} not covered by the exact path", pt.lambda));
+        assert!(
+            rel_err(interp, pt.objective) <= 1e-6,
+            "λ = {}: exact-interpolated {interp} vs grid {}",
+            pt.lambda,
+            pt.objective
+        );
+    }
+    let grid_rounds = grid_points.last().unwrap().stats.rounds;
+    assert!(
+        path.stats.pricing_rounds < grid_rounds,
+        "exact path must price strictly less: exact {} vs grid {}",
+        path.stats.pricing_rounds,
+        grid_rounds
+    );
+}
+
+/// RankSVM: interpolated exact objectives match independent fixed-λ
+/// solves on a dense grid inside the ridden range.
+#[test]
+fn ranksvm_exact_path_matches_direct_solves() {
+    let spec = RankSpec { n: 24, p: 30, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+    let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(7));
+    let pairs = PairSet::build(&ds.y, PairMode::Auto);
+    let backend = NativeBackend::new(&ds.x);
+    let params = tight_params();
+    let lmax = lambda_max_rank(&ds, &pairs);
+
+    let path = ranksvm_path_exact(&ds, &backend, &pairs, lmax, 0.45 * lmax, &params);
+    assert!(path.stats.breakpoints >= 2, "expected a ride, got {:?}", path.stats);
+    for &lambda in &geometric_grid(lmax, 8, 0.9) {
+        let direct = ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params);
+        let interp = path.objective_at(lambda).expect("λ inside the ridden range");
+        assert!(
+            rel_err(interp, direct.objective) <= 1e-6,
+            "λ = {lambda}: exact-interpolated {interp} vs direct {}",
+            direct.objective
+        );
+    }
+}
+
+/// Dantzig selector: same dense-grid agreement (RHS-parametric ride).
+#[test]
+fn dantzig_exact_path_matches_direct_solves() {
+    let spec = DantzigSpec { n: 30, p: 40, k0: 5, rho: 0.1, sigma: 0.5, standardize: true };
+    let ds = generate_dantzig(&spec, &mut Xoshiro256::seed_from_u64(13));
+    let backend = NativeBackend::new(&ds.x);
+    let params = tight_params();
+    let lmax = lambda_max_dantzig(&ds);
+
+    let path = dantzig_path_exact(&ds, &backend, lmax, 0.6 * lmax, &params);
+    assert!(path.stats.breakpoints >= 1, "expected at least λ_max, got {:?}", path.stats);
+    for &lambda in &geometric_grid(lmax, 6, 0.92) {
+        let direct = dantzig_generation(&ds, &backend, lambda, &[], &params);
+        let interp = path.objective_at(lambda).expect("λ inside the ridden range");
+        assert!(
+            rel_err(interp, direct.objective) <= 1e-6,
+            "λ = {lambda}: exact-interpolated {interp} vs direct {}",
+            direct.objective
+        );
+    }
+}
+
+/// Breakpoint geometry: λ's strictly decrease, segments tile the ridden
+/// range without gaps, and endpoints carry the endpoint objectives.
+#[test]
+fn exact_path_segments_tile_the_range() {
+    let spec = SyntheticSpec { n: 30, p: 60, k0: 5, rho: 0.1, standardize: true };
+    let ds = generate_l1(&spec, &mut Xoshiro256::seed_from_u64(5));
+    let backend = NativeBackend::new(&ds.x);
+    let lmax = ds.lambda_max_l1();
+    let path = l1svm_path_exact(&ds, &backend, lmax, 0.4 * lmax, &tight_params());
+    assert_eq!(path.segments.len(), path.points.len() - 1);
+    assert_eq!(path.points[0].support, 0, "λ_max starts with an empty model");
+    for w in path.points.windows(2) {
+        assert!(w[1].lambda < w[0].lambda, "λ must strictly decrease");
+    }
+    for (k, seg) in path.segments.iter().enumerate() {
+        assert_eq!(seg.lambda_hi, path.points[k].lambda);
+        assert_eq!(seg.lambda_lo, path.points[k + 1].lambda);
+        assert_eq!(seg.obj_hi, path.points[k].objective);
+        assert_eq!(seg.obj_lo, path.points[k + 1].objective);
+    }
+    // out-of-range λ's interpolate to nothing
+    assert!(path.objective_at(2.0 * lmax).is_none());
+    assert!(path.objective_at(0.01 * lmax).is_none());
+}
+
+// ---------------------------------------------------------------------------
+// serve-layer ops
+// ---------------------------------------------------------------------------
+
+fn get_f64(v: &Json, key: &str) -> f64 {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_f64().unwrap()
+}
+
+fn get_usize(v: &Json, key: &str) -> usize {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_usize().unwrap()
+}
+
+fn get_bool(v: &Json, key: &str) -> bool {
+    v.get(key).unwrap_or_else(|| panic!("missing {key} in {v}")).as_bool().unwrap()
+}
+
+fn assert_ok(v: &Json) {
+    assert!(get_bool(v, "ok"), "request failed: {v}");
+}
+
+/// The `path_exact` op: breakpoints + segments come back over the
+/// protocol, every breakpoint seeds the warm cache (so a later fixed-λ
+/// solve at a breakpoint starts warm), and unsupported workloads are
+/// refused with a pointer to the grid op.
+#[test]
+fn serve_path_exact_seeds_cache_at_every_breakpoint() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"d","synthetic":{"kind":"l1","n":40,"p":80,"seed":11}}"#,
+    ))
+    .unwrap());
+    let resp = Json::parse(&state.handle_line(
+        r#"{"op":"path_exact","dataset":"d","workload":"l1svm","lambda_min_frac":0.4,"eps":1e-7}"#,
+    ))
+    .unwrap();
+    assert_ok(&resp);
+    let points = resp.get("points").unwrap().as_arr().unwrap();
+    let segments = resp.get("segments").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), get_usize(&resp, "breakpoints"));
+    assert_eq!(segments.len(), points.len() - 1);
+    assert!(points.len() >= 2, "expected a ride: {resp}");
+    assert!(!get_bool(&resp, "timed_out"));
+    assert_eq!(get_usize(&points[0], "support"), 0, "λ_max point has empty support");
+    let seeded = get_usize(&resp, "cache_seeded");
+    assert!(seeded >= 1, "breakpoints must seed the cache: {resp}");
+    // a fixed-λ solve at the last breakpoint must start warm
+    let last_lambda = get_f64(points.last().unwrap(), "lambda");
+    let solve = Json::parse(&state.handle_line(&format!(
+        r#"{{"op":"solve","dataset":"d","workload":"l1svm","lambda":{last_lambda},"eps":1e-7}}"#
+    )))
+    .unwrap();
+    assert_ok(&solve);
+    assert!(get_bool(&solve, "warm"), "breakpoint-seeded λ must hit the cache: {solve}");
+    // the interpolated objective at the breakpoint matches the solve
+    let so = get_f64(&solve, "objective");
+    let po = get_f64(points.last().unwrap(), "objective");
+    assert!(rel_err(po, so) <= 1e-6, "breakpoint {po} vs solve {so}");
+    // group/slope have no parametric certificate: refused, grid suggested
+    for wl in ["group", "slope"] {
+        let bad = Json::parse(&state.handle_line(&format!(
+            r#"{{"op":"path_exact","dataset":"d","workload":"{wl}"}}"#
+        )))
+        .unwrap();
+        assert!(!get_bool(&bad, "ok"), "{wl} must be refused");
+        let msg = bad.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("grid"), "error must point to the grid op: {msg}");
+    }
+    // malformed knobs and unknown datasets fail cleanly
+    for bad in [
+        r#"{"op":"path_exact","dataset":"ghost","workload":"l1svm"}"#,
+        r#"{"op":"path_exact","dataset":"d","workload":"l1svm","lambda_min_frac":1.5}"#,
+    ] {
+        let resp = Json::parse(&state.handle_line(bad)).unwrap();
+        assert!(!get_bool(&resp, "ok"), "{bad:?} should fail");
+    }
+}
+
+/// The `update` op: derive a dataset from a registered parent (samples
+/// retired, samples appended from another registered dataset), re-key
+/// the parent's feature-indexed snapshots to the child, and re-solve
+/// warm; `unregister` then drops the parent and purges its snapshots.
+#[test]
+fn serve_update_translates_snapshots_and_unregister_purges() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"parent","synthetic":{"kind":"l1","n":40,"p":80,"seed":11}}"#,
+    ))
+    .unwrap());
+    // populate the parent's warm cache with one converged solve
+    let cold = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"parent","workload":"l1svm","lambda_frac":0.05,"eps":1e-7}"#,
+    ))
+    .unwrap();
+    assert_ok(&cold);
+    let lambda = get_f64(&cold, "lambda");
+
+    // retire three samples into a derived dataset
+    let upd = Json::parse(&state.handle_line(
+        r#"{"op":"update","dataset":"parent","name":"child","retire":[0,1,2]}"#,
+    ))
+    .unwrap();
+    assert_ok(&upd);
+    assert_eq!(get_usize(&upd, "n"), 37);
+    assert_eq!(get_usize(&upd, "p"), 80);
+    assert_eq!(get_usize(&upd, "retired"), 3);
+    assert_eq!(get_usize(&upd, "appended"), 0);
+    assert!(
+        get_usize(&upd, "cache_translated") >= 1,
+        "the parent's l1svm snapshot must translate: {upd}"
+    );
+    // the child's first solve at the parent's λ starts warm from the
+    // translated snapshot (same absolute λ, so the bucket matches)
+    let child = Json::parse(&state.handle_line(&format!(
+        r#"{{"op":"solve","dataset":"child","workload":"l1svm","lambda":{lambda},"eps":1e-7}}"#
+    )))
+    .unwrap();
+    assert_ok(&child);
+    assert!(get_bool(&child, "warm"), "translated snapshot must warm the child: {child}");
+    assert_eq!(child.get("seeded_by").unwrap().as_str(), Some("cache"));
+
+    // append rows from another registered dataset (same p)
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"extra","synthetic":{"kind":"l1","n":10,"p":80,"seed":12}}"#,
+    ))
+    .unwrap());
+    let grown = Json::parse(&state.handle_line(
+        r#"{"op":"update","dataset":"child","name":"grown","append_from":{"dataset":"extra","rows":[0,1,2]}}"#,
+    ))
+    .unwrap();
+    assert_ok(&grown);
+    assert_eq!(get_usize(&grown, "n"), 40);
+    assert_eq!(get_usize(&grown, "appended"), 3);
+
+    // unregister the parent: bytes freed, snapshots purged, name gone
+    let entries_before = {
+        let stats = Json::parse(&state.handle_line(r#"{"op":"stats"}"#)).unwrap();
+        get_usize(&stats, "cache_entries")
+    };
+    let un = Json::parse(&state.handle_line(r#"{"op":"unregister","name":"parent"}"#)).unwrap();
+    assert_ok(&un);
+    assert!(get_usize(&un, "freed_bytes") > 0);
+    assert!(get_usize(&un, "cache_purged") >= 1, "parent snapshots must purge: {un}");
+    let stats = Json::parse(&state.handle_line(r#"{"op":"stats"}"#)).unwrap();
+    assert!(get_usize(&stats, "cache_entries") < entries_before);
+    assert!(get_usize(&stats, "registry_bytes") > 0, "children remain registered");
+    let gone = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"parent","workload":"l1svm"}"#,
+    ))
+    .unwrap();
+    assert!(!get_bool(&gone, "ok"), "unregistered name must be unknown");
+
+    // malformed updates fail cleanly
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"narrow","synthetic":{"kind":"l1","n":10,"p":20,"seed":1}}"#,
+    ))
+    .unwrap());
+    for bad in [
+        r#"{"op":"update","dataset":"child","name":"x"}"#,
+        r#"{"op":"update","dataset":"child","name":"x","retire":[999]}"#,
+        r#"{"op":"update","dataset":"child","name":"x","retire":"all"}"#,
+        r#"{"op":"update","dataset":"ghost","name":"x","retire":[0]}"#,
+        r#"{"op":"update","dataset":"child","name":"x","append_from":{"dataset":"narrow"}}"#,
+        r#"{"op":"unregister","name":"ghost"}"#,
+    ] {
+        let resp = Json::parse(&state.handle_line(bad)).unwrap();
+        assert!(!get_bool(&resp, "ok"), "{bad:?} should fail");
+    }
+}
+
+/// `--registry-bytes`: registering past the budget evicts the
+/// least-recently-used dataset exactly like an `unregister` — name
+/// dropped, snapshots purged — and `stats` counts the eviction.
+#[test]
+fn serve_registry_byte_budget_evicts_lru_dataset() {
+    // one 40×80 dense design ≈ 25.6 KB + responses; budget fits one
+    let state = ServeState::new(64).with_registry_bytes(30_000);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"a","synthetic":{"kind":"l1","n":40,"p":80,"seed":1}}"#,
+    ))
+    .unwrap());
+    // seed a's warm cache so the eviction has snapshots to purge
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"a","workload":"l1svm","lambda_frac":0.05}"#,
+    ))
+    .unwrap());
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"b","synthetic":{"kind":"l1","n":40,"p":80,"seed":2}}"#,
+    ))
+    .unwrap());
+    let stats = Json::parse(&state.handle_line(r#"{"op":"stats"}"#)).unwrap();
+    assert_eq!(get_usize(&stats, "registry_evictions"), 1, "a must be evicted: {stats}");
+    assert_eq!(get_usize(&stats, "cache_entries"), 0, "a's snapshots must purge: {stats}");
+    let datasets = stats.get("datasets").unwrap().as_arr().unwrap();
+    assert_eq!(datasets.len(), 1);
+    assert_eq!(datasets[0].get("name").unwrap().as_str(), Some("b"));
+    let gone =
+        Json::parse(&state.handle_line(r#"{"op":"solve","dataset":"a","workload":"l1svm"}"#))
+            .unwrap();
+    assert!(!get_bool(&gone, "ok"), "evicted dataset must be unknown");
+    // the kept dataset still serves
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"b","workload":"l1svm","lambda_frac":0.05}"#,
+    ))
+    .unwrap());
+}
