@@ -420,6 +420,40 @@ fn main() {
                 );
             }
         }
+
+        // weighted pair channel: the bucketed O(n·L) sweep vs the
+        // enumerated O(|P|) list walk, on a level-structured instance
+        // (L = 8 relevance levels — the ranking-practice regime the
+        // bucketed sweep exists for; see docs/ranksvm-scaling.md)
+        {
+            use cutgen::workloads::pairset::PairCosts;
+            let wsizes: Vec<usize> = if smoke { vec![400] } else { vec![2000, 20_000] };
+            for rn in wsizes {
+                let wy: Vec<f64> = (0..rn).map(|i| ((i * 7 + 3) % 8) as f64).collect();
+                let m: Vec<f64> = (0..rn).map(|_| rng.normal()).collect();
+                for (mode, label) in
+                    [(PairMode::Enumerate, "enumerated"), (PairMode::Implicit, "bucketed")]
+                {
+                    let pairs = PairSet::build(&wy, mode);
+                    let costs = PairCosts::bucketed_by(&pairs, |a, b| {
+                        (1.0 + 0.25 * (a - b) as f64, 1.5)
+                    });
+                    let flops =
+                        if pairs.is_enumerated() { 3.0 * pairs.len() as f64 } else { 0.0 };
+                    bench(
+                        &mut recs,
+                        &format!(
+                            "ranksvm weighted pair-scan {label} n={rn} |P|={}",
+                            pairs.len()
+                        ),
+                        flops,
+                        || {
+                            black_box(pairs.price_weighted(&m, 1e-2, &[], 256, 1, &costs));
+                        },
+                    );
+                }
+            }
+        }
     }
 
     // 7. end-to-end column generation (small, fixed)

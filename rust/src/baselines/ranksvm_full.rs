@@ -16,12 +16,28 @@ pub fn solve_full_ranksvm(
     pairs: &[(usize, usize)],
     lambda: f64,
 ) -> SvmSolution {
+    let costed: Vec<(usize, usize, f64, f64)> =
+        pairs.iter().map(|&(i, k)| (i, k, 1.0, 1.0)).collect();
+    solve_full_ranksvm_weighted(ds, &costed, lambda)
+}
+
+/// The weighted/gapped full LP: each pair carries `(i, k, gap, weight)`
+/// (the [`crate::workloads::ranksvm::ranking_pairs_costed`] reference
+/// enumeration) — the slack costs `weight` and the margin row reads
+/// `ξ + Σ_j (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ gap`:
+/// `min Σ_t w_t ξ_t + λ Σ_j (β⁺_j + β⁻_j)`. Uniform costs reproduce
+/// [`solve_full_ranksvm`] bitwise.
+pub fn solve_full_ranksvm_weighted(
+    ds: &Dataset,
+    pairs: &[(usize, usize, f64, f64)],
+    lambda: f64,
+) -> SvmSolution {
     let p = ds.p();
     let mut model = LpModel::new();
     let bp: Vec<_> = (0..p).map(|_| model.add_col_nonneg(lambda, &[])).collect();
     let bm: Vec<_> = (0..p).map(|_| model.add_col_nonneg(lambda, &[])).collect();
-    for &(i, k) in pairs {
-        let xi = model.add_col_nonneg(1.0, &[]);
+    for &(i, k, g, w) in pairs {
+        let xi = model.add_col_nonneg(w, &[]);
         let mut coefs = Vec::with_capacity(1 + 2 * p);
         coefs.push((xi, 1.0));
         for j in 0..p {
@@ -31,7 +47,7 @@ pub fn solve_full_ranksvm(
                 coefs.push((bm[j], -d));
             }
         }
-        model.add_row_ge(1.0, &coefs);
+        model.add_row_ge(g, &coefs);
     }
 
     let mut solver = SimplexSolver::new(model);

@@ -13,6 +13,8 @@
 //! cutgen ranksvm  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--path exact] [--eps E] [--init S]
 //!                 [--pair-mode auto|enumerate|implicit]
+//!                 [--level-gap G] [--level-weight W]
+//!                 [--target-ratio R] [--ratio-tol T]
 //!                 [--seed-budget K] [--threads T] [--trace] [--trace-json FILE]
 //! cutgen dantzig  --synthetic N,P | --data FILE  [--lambda-frac F]
 //!                 [--method gen|full-lp] [--grid K] [--path exact] [--eps E] [--init S]
@@ -35,6 +37,15 @@
 //! them. `--pair-mode` picks RankSVM's comparison-pair representation
 //! (`auto` enumerates small candidate sets, goes implicit — O(n log n)
 //! pricing, no O(n²) list — beyond; see `docs/ranksvm-scaling.md`).
+//!
+//! RankSVM extras: `--level-gap G` / `--level-weight W` put bucketed
+//! per-level-difference costs on the pairs (gap `1 + G·(a−b−1)`, weight
+//! `W^(a−b−1)` for winner level `a`, loser level `b` — a simple
+//! severity ramp exercising the weighted/gapped machinery end to end);
+//! `--target-ratio R` hands λ selection to the dynamic controller,
+//! which bisects λ until weighted-hinge/‖β‖₁ lands within
+//! `--ratio-tol` (default 0.1, relative) of `R` — see
+//! `coordinator::controller`.
 //!
 //! `--path exact` switches the λ-path subcommands from the fixed
 //! geometric grid (Algorithm 2) to the exact parametric breakpoint ride
@@ -65,7 +76,7 @@ use crate::data::{libsvm, Dataset};
 use crate::engine::{InitStrategy, Initializer, PairMode};
 use crate::exps::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::rng::Xoshiro256;
-use crate::workloads::pairset::PairSet;
+use crate::workloads::pairset::{PairCosts, PairSet};
 
 /// Parsed command line: subcommand + `--key value` options.
 pub struct Args {
@@ -505,17 +516,72 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
     let gen = args.gen_params()?;
     let pairs = PairSet::build(&ds.y, gen.pair_mode);
     ensure!(!pairs.is_empty(), "no comparison pairs: all responses are tied");
-    let lmax = crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
+    let level_gap = args.get_f64("level-gap", 0.0)?;
+    let level_weight = args.get_f64("level-weight", 1.0)?;
+    let costs = if level_gap == 0.0 && level_weight == 1.0 {
+        PairCosts::UNIFORM
+    } else {
+        ensure!(
+            level_gap >= 0.0 && level_gap.is_finite() && level_weight > 0.0
+                && level_weight.is_finite(),
+            "--level-gap must be finite ≥ 0 and --level-weight finite > 0"
+        );
+        // severity ramp in the level difference: adjacent levels keep
+        // the unit costs, wider splits demand more margin and cost more
+        PairCosts::bucketed_by(&pairs, |a, b| {
+            let d = (a - b - 1) as f64;
+            (1.0 + level_gap * d, level_weight.powf(d))
+        })
+    };
+    costs.validate(&pairs).map_err(|e| err!("{e}"))?;
+    let lmax = crate::workloads::ranksvm::lambda_max_rank_weighted(&ds, &pairs, &costs);
     let lambda_frac = args.get_f64("lambda-frac", 0.05)?;
     let backend = NativeBackend::new(&ds.x);
     println!(
-        "RankSVM: n={}, p={}, |P|={} pairs ({}), λ_max={lmax:.4}, init {}",
+        "RankSVM: n={}, p={}, |P|={} pairs ({}, {} scan), λ_max={lmax:.4}, init {}",
         ds.n(),
         ds.p(),
         pairs.len(),
         pairs.mode(),
+        costs.scan(&pairs).as_str(),
         gen.init.as_str()
     );
+    if let Some(r) = args.get("target-ratio") {
+        let ratio: f64 = r.parse().with_context(|| "--target-ratio expects a number")?;
+        ensure!(
+            matches!(args.get("method"), None | Some("gen")) && args.get("grid").is_none()
+                && args.get("path").is_none(),
+            "--target-ratio drives the generation solver at one resolved λ; drop \
+             --method/--grid/--path"
+        );
+        let target = crate::engine::RatioTarget {
+            ratio,
+            tol: args.get_f64("ratio-tol", 0.1)?,
+            ..Default::default()
+        };
+        let (out, t) = crate::exps::time_it(|| {
+            crate::coordinator::controller::resolve_lambda_for_ratio(
+                &ds, &backend, &pairs, &costs, &target, &gen, None,
+            )
+        });
+        let out = out.map_err(|e| err!("{e}"))?;
+        println!(
+            "controller: λ = {:.5} ({:.4}·λ_max), slack/‖β‖₁ = {:.4} (target {ratio}), {} solves",
+            out.lambda,
+            out.lambda / out.lambda_max,
+            out.achieved_ratio,
+            out.solves
+        );
+        report(&out.solution, t);
+        return Ok(());
+    }
+    if args.get("path").is_some() || args.get("grid").is_some() {
+        ensure!(
+            costs.is_uniform(),
+            "--level-gap/--level-weight run the fixed-λ (or --target-ratio) solvers; the λ-path \
+             drivers are uniform-cost"
+        );
+    }
     if args.get("path") == Some("exact") {
         let llo = args.get_f64("lambda-min-frac", 0.05)? * lmax;
         let (path, t) = crate::exps::time_it(|| {
@@ -544,11 +610,13 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
     println!("λ = {lambda:.4} ({lambda_frac}·λ_max)");
     let (sol, t) = match args.get("method").unwrap_or("gen") {
         "gen" => crate::exps::time_it(|| {
-            let seed = Initializer::from_params(&gen).seed_ranksvm(&ds, &backend, &pairs, lambda);
-            crate::workloads::ranksvm::ranksvm_generation(
+            let seed = Initializer::from_params(&gen)
+                .seed_ranksvm_costed(&ds, &backend, &pairs, &costs, lambda);
+            crate::workloads::ranksvm::ranksvm_generation_costed(
                 &ds,
                 &backend,
                 &pairs,
+                &costs,
                 lambda,
                 &seed.ws.rows,
                 &seed.ws.cols,
@@ -558,7 +626,11 @@ fn ranksvm_cmd(args: &Args) -> Result<()> {
         "full-lp" => crate::exps::time_it(|| {
             // the complete-model baseline materializes every pair by
             // definition — small-n cross-checks only
-            crate::baselines::ranksvm_full::solve_full_ranksvm(&ds, &pairs.materialize(), lambda)
+            crate::baselines::ranksvm_full::solve_full_ranksvm_weighted(
+                &ds,
+                &crate::workloads::ranksvm::ranking_pairs_costed(&ds.y, &costs),
+                lambda,
+            )
         }),
         other => bail!("unknown --method {other:?} (gen|full-lp)"),
     };
@@ -841,6 +913,45 @@ mod tests {
         main_with(c).unwrap();
         let bad = args(&["ranksvm", "--synthetic", "15,20", "--pair-mode", "magic"]);
         assert!(main_with(bad).is_err(), "unknown pair mode must error");
+    }
+
+    #[test]
+    fn ranksvm_weighted_and_controller_flags_run() {
+        // bucketed severity ramp through gen and the full-LP baseline
+        let a = args(&[
+            "ranksvm",
+            "--synthetic",
+            "16,20",
+            "--lambda-frac",
+            "0.05",
+            "--level-gap",
+            "0.5",
+            "--level-weight",
+            "1.5",
+        ]);
+        main_with(a).unwrap();
+        let b = args(&[
+            "ranksvm",
+            "--synthetic",
+            "14,12",
+            "--method",
+            "full-lp",
+            "--level-gap",
+            "0.5",
+        ]);
+        main_with(b).unwrap();
+        // the dynamic-λ controller resolves λ from a ratio target
+        let c = args(&["ranksvm", "--synthetic", "16,20", "--target-ratio", "2.0"]);
+        main_with(c).unwrap();
+        // conflicts and bad values error loudly
+        let d = args(&["ranksvm", "--synthetic", "15,20", "--target-ratio", "2.0", "--grid", "3"]);
+        assert!(main_with(d).is_err(), "--target-ratio conflicts with --grid");
+        let e = args(&["ranksvm", "--synthetic", "15,20", "--target-ratio", "-1"]);
+        assert!(main_with(e).is_err(), "negative ratio target must error");
+        let f = args(&["ranksvm", "--synthetic", "15,20", "--grid", "3", "--level-gap", "0.5"]);
+        assert!(main_with(f).is_err(), "the λ-path drivers are uniform-cost");
+        let g = args(&["ranksvm", "--synthetic", "15,20", "--level-weight", "0"]);
+        assert!(main_with(g).is_err(), "zero level weight must error");
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! The dynamic-λ controller (rank2plan's "dynamic regularisation"):
+//! resolve λ so the solution sits at a caller-named **slack/‖β‖₁
+//! ratio** instead of at a caller-named λ.
+//!
+//! The control variable is `r(λ) = hinge_w(β*(λ)) / ‖β*(λ)‖₁` — the
+//! full-problem weighted pairwise hinge over the L1 norm. It is
+//! monotone increasing in λ: more regularization shrinks `‖β‖₁` toward
+//! 0 while the slack grows toward `hinge_w(0) = Σ_t w_t·g_t`, so
+//! `r → +∞` as `λ → λ_max` and `r` is smallest at the bottom of the
+//! bracket. That monotonicity makes the target a **bisection in
+//! log-λ** over `[lo_frac·λ_max, λ_max]`
+//! ([`RatioTarget`]): each probe is one warm-started
+//! column-and-constraint generation solve
+//! ([`crate::workloads::ranksvm::ranksvm_generation_costed`]
+//! mechanics), reusing the previous probe's working set so later
+//! probes converge in a handful of rounds.
+//!
+//! Exhaustion is a **typed error**, not a silent clamp: when the
+//! target ratio lies below `r(lo_frac·λ_max)` (bracket too high) or
+//! the solve budget runs out before the achieved ratio lands within
+//! `tol`, the caller gets [`ControllerError::BracketExhausted`] with
+//! the best bracket seen — CLI and serve surface it verbatim.
+
+use crate::backend::Backend;
+use crate::coordinator::{GenParams, GenStats, SvmSolution};
+use crate::data::Dataset;
+use crate::engine::{
+    BackendPricer, GenEngine, Initializer, RatioTarget, Snapshot, WorkingSet,
+};
+use crate::obs::Span;
+use crate::workloads::pairset::{PairCosts, PairSet};
+use crate::workloads::ranksvm::{
+    lambda_max_rank_weighted, pair_rows_cap, RankProblem, RestrictedRank,
+};
+
+/// Why the controller could not land on the target ratio.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControllerError {
+    /// The target itself is unusable (non-finite or non-positive
+    /// ratio, empty pair set, degenerate λ_max).
+    BadTarget(String),
+    /// The bisection bracket ran dry: either every λ in
+    /// `[lo_frac·λ_max, λ_max]` sits on one side of the target, or the
+    /// solve budget ran out before the achieved ratio landed within
+    /// tolerance. Carries the last bracket and the closest probe.
+    BracketExhausted {
+        /// Target ratio that was asked for.
+        target: f64,
+        /// Ratio achieved by the closest probe.
+        achieved: f64,
+        /// λ of the closest probe.
+        lambda: f64,
+        /// Probes spent.
+        solves: usize,
+    },
+}
+
+impl std::fmt::Display for ControllerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControllerError::BadTarget(msg) => write!(f, "bad ratio target: {msg}"),
+            ControllerError::BracketExhausted { target, achieved, lambda, solves } => write!(
+                f,
+                "bracket exhausted after {solves} solves: target ratio {target} \
+                 unreachable, closest {achieved} at lambda {lambda}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ControllerError {}
+
+/// A resolved dynamic-λ solve.
+#[derive(Clone, Debug)]
+pub struct ControllerOutcome {
+    /// The λ the bisection settled on.
+    pub lambda: f64,
+    /// λ_max of the (weighted) problem — the bracket's upper end.
+    pub lambda_max: f64,
+    /// Achieved `hinge_w/‖β‖₁` at [`Self::lambda`].
+    pub achieved_ratio: f64,
+    /// Solves spent (bracket endpoint + bisection probes).
+    pub solves: usize,
+    /// The solution at the resolved λ (its `stats` are the *last*
+    /// probe's engine counters; [`Self::total`] accumulates all).
+    pub solution: SvmSolution,
+    /// Engine counters summed over every probe.
+    pub total: GenStats,
+    /// Working-set snapshot at the resolved λ — what serve's warm
+    /// cache stores under the resolved λ's bucket.
+    pub ws: WorkingSet,
+}
+
+/// Full-problem ratio `hinge_w/‖β‖₁` of a support, `+∞` at `β = 0`.
+fn ratio_of(ds: &Dataset, pairs: &PairSet, costs: &PairCosts, support: &[(usize, f64)]) -> f64 {
+    let l1: f64 = support.iter().map(|&(_, v)| v.abs()).sum();
+    if l1 <= 0.0 {
+        return f64::INFINITY;
+    }
+    let (cols, vals) = crate::coordinator::report::split_support(support);
+    crate::workloads::ranksvm::pairwise_hinge_support_weighted(ds, pairs, costs, &cols, &vals)
+        / l1
+}
+
+/// Bisect λ toward `target.ratio` (see the module docs). `should_stop`
+/// is threaded into every probe's engine run — a fired deadline
+/// surfaces as `timed_out` in [`ControllerOutcome::total`] and ends
+/// the bisection at the best probe so far (within-tolerance or
+/// [`ControllerError::BracketExhausted`], same as budget exhaustion).
+pub fn resolve_lambda_for_ratio(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &PairSet,
+    costs: &PairCosts,
+    target: &RatioTarget,
+    params: &GenParams,
+    should_stop: Option<&dyn Fn() -> bool>,
+) -> Result<ControllerOutcome, ControllerError> {
+    if !target.ratio.is_finite() || target.ratio <= 0.0 {
+        return Err(ControllerError::BadTarget(format!(
+            "target ratio must be finite and > 0, got {}",
+            target.ratio
+        )));
+    }
+    if !(target.tol.is_finite() && target.tol > 0.0) {
+        return Err(ControllerError::BadTarget(format!(
+            "tolerance must be finite and > 0, got {}",
+            target.tol
+        )));
+    }
+    if !(target.lo_frac > 0.0 && target.lo_frac < 1.0) {
+        return Err(ControllerError::BadTarget(format!(
+            "lo_frac must lie in (0, 1), got {}",
+            target.lo_frac
+        )));
+    }
+    if target.max_solves < 2 {
+        return Err(ControllerError::BadTarget("max_solves must be at least 2".into()));
+    }
+    if pairs.is_empty() {
+        return Err(ControllerError::BadTarget("candidate pair set is empty".into()));
+    }
+    let lambda_max = lambda_max_rank_weighted(ds, pairs, costs);
+    if !(lambda_max.is_finite() && lambda_max > 0.0) {
+        return Err(ControllerError::BadTarget(format!(
+            "degenerate lambda_max {lambda_max}"
+        )));
+    }
+
+    let within = |r: f64| (r - target.ratio).abs() <= target.tol * target.ratio;
+    let seed_span = Span::start();
+    let seed =
+        Initializer::from_params(params).seed_ranksvm_costed(ds, backend, pairs, costs, lambda_max);
+    let seed_ns = seed_span.elapsed_ns();
+
+    let pricer = BackendPricer::new(backend, params.threads);
+    let mut engine = GenEngine::new(params);
+    if let Some(f) = should_stop {
+        engine = engine.with_should_stop(f);
+    }
+    let mut total = GenStats {
+        cols_added: seed.ws.cols.len(),
+        rows_added: seed.ws.rows.len(),
+        seed_ns,
+        ..Default::default()
+    };
+    total.pair_scan = Some(costs.scan(pairs).as_str());
+
+    // One probe: a fresh restricted model at λ, seeded from the warm
+    // working set, driven to ε-optimality (or the deadline).
+    let mut warm = seed.ws;
+    let mut best: Option<(f64, f64, SvmSolution, WorkingSet)> = None; // (λ, ratio, sol, ws)
+    let mut solves = 0usize;
+    let probe = |lambda: f64,
+                     warm: &WorkingSet,
+                     total: &mut GenStats,
+                     solves: &mut usize|
+     -> (f64, SvmSolution, WorkingSet) {
+        let mut rr =
+            RestrictedRank::new_weighted(ds, pairs, costs, lambda, &warm.rows, &warm.cols);
+        rr.set_threads(params.threads);
+        rr.set_pair_cap(pair_rows_cap(params));
+        let mut prob = RankProblem::new(rr, ds, &pricer);
+        let step = engine.run(&mut prob);
+        crate::coordinator::path::accumulate(total, step);
+        *solves += 1;
+        let support = prob.inner().beta_support();
+        let r = ratio_of(ds, pairs, costs, &support);
+        let report = crate::coordinator::report::ranksvm_report_weighted(
+            ds,
+            pairs,
+            costs,
+            &support,
+            lambda,
+        );
+        let ws = prob.export_working_set();
+        let mut cols = ws.cols.clone();
+        cols.sort_unstable();
+        let mut rows = ws.rows.clone();
+        rows.sort_unstable();
+        let sol = SvmSolution {
+            beta: report.beta,
+            beta0: 0.0,
+            objective: report.objective,
+            stats: step,
+            cols,
+            rows,
+        };
+        (r, sol, ws)
+    };
+
+    // Bracket: r(λ) is increasing, r(λ_max) = +∞ ≥ target always, so
+    // only the low end can exclude the target. Probe it first.
+    let mut lo = target.lo_frac * lambda_max;
+    let mut hi = lambda_max;
+    let (r_lo, sol_lo, ws_lo) = probe(lo, &warm, &mut total, &mut solves);
+    warm = ws_lo.clone();
+    if within(r_lo) {
+        return Ok(ControllerOutcome {
+            lambda: lo,
+            lambda_max,
+            achieved_ratio: r_lo,
+            solves,
+            solution: sol_lo,
+            total,
+            ws: ws_lo,
+        });
+    }
+    if r_lo > target.ratio {
+        // even the least-regularized λ in the bracket overshoots: the
+        // whole bracket sits above the target
+        return Err(ControllerError::BracketExhausted {
+            target: target.ratio,
+            achieved: r_lo,
+            lambda: lo,
+            solves,
+        });
+    }
+    best = Some((lo, r_lo, sol_lo, ws_lo));
+
+    while solves < target.max_solves {
+        if total.timed_out {
+            break;
+        }
+        let mid = (lo * hi).sqrt();
+        let (r, sol, ws) = probe(mid, &warm, &mut total, &mut solves);
+        warm = ws.clone();
+        let better = match &best {
+            Some((_, rb, ..)) => {
+                (r.ln() - target.ratio.ln()).abs() < (rb.ln() - target.ratio.ln()).abs()
+            }
+            None => true,
+        };
+        if better || within(r) {
+            best = Some((mid, r, sol, ws));
+        }
+        if within(r) {
+            let (lambda, achieved_ratio, solution, ws) = best.unwrap();
+            return Ok(ControllerOutcome {
+                lambda,
+                lambda_max,
+                achieved_ratio,
+                solves,
+                solution,
+                total,
+                ws,
+            });
+        }
+        if r > target.ratio {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let (lambda, achieved) = best.as_ref().map(|b| (b.0, b.1)).expect("at least one probe ran");
+    Err(ControllerError::BracketExhausted { target: target.ratio, achieved, lambda, solves })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic::{generate_ranksvm, RankSpec};
+    use crate::engine::PairMode;
+    use crate::rng::Xoshiro256;
+
+    fn fixture() -> Dataset {
+        let spec = RankSpec { n: 20, p: 16, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
+        generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(771))
+    }
+
+    #[test]
+    fn bad_targets_are_typed_errors() {
+        let ds = fixture();
+        let backend = NativeBackend::new(&ds.x);
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        let params = GenParams::default();
+        for bad in [
+            RatioTarget { ratio: 0.0, ..Default::default() },
+            RatioTarget { ratio: f64::NAN, ..Default::default() },
+            RatioTarget { tol: 0.0, ..Default::default() },
+            RatioTarget { lo_frac: 1.5, ..Default::default() },
+            RatioTarget { max_solves: 1, ..Default::default() },
+        ] {
+            let r = resolve_lambda_for_ratio(
+                &ds,
+                &backend,
+                &pairs,
+                &PairCosts::UNIFORM,
+                &bad,
+                &params,
+                None,
+            );
+            assert!(matches!(r, Err(ControllerError::BadTarget(_))), "{bad:?} -> {r:?}");
+        }
+    }
+
+    #[test]
+    fn achieved_ratio_lands_within_tolerance() {
+        let ds = fixture();
+        let backend = NativeBackend::new(&ds.x);
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        let params = GenParams { eps: 1e-8, ..Default::default() };
+        let target = RatioTarget { ratio: 2.0, tol: 0.1, ..Default::default() };
+        let out = resolve_lambda_for_ratio(
+            &ds,
+            &backend,
+            &pairs,
+            &PairCosts::UNIFORM,
+            &target,
+            &params,
+            None,
+        )
+        .expect("ratio 2.0 must be reachable");
+        assert!(
+            (out.achieved_ratio - 2.0).abs() <= 0.1 * 2.0 + 1e-12,
+            "achieved {} for target 2.0",
+            out.achieved_ratio
+        );
+        assert!(out.lambda > 0.0 && out.lambda <= out.lambda_max);
+        assert!(out.solves <= target.max_solves);
+        assert_eq!(out.total.pair_scan, Some("uniform"));
+        // the solution really is the solve at the resolved λ
+        let direct = crate::workloads::ranksvm::ranksvm_generation(
+            &ds,
+            &backend,
+            &pairs,
+            out.lambda,
+            &[],
+            &[],
+            &params,
+        );
+        assert!(
+            (out.solution.objective - direct.objective).abs()
+                / direct.objective.abs().max(1e-9)
+                < 1e-5,
+            "controller {} direct {}",
+            out.solution.objective,
+            direct.objective
+        );
+    }
+
+    #[test]
+    fn unreachably_low_target_exhausts_the_bracket() {
+        let ds = fixture();
+        let backend = NativeBackend::new(&ds.x);
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        let params = GenParams::default();
+        // lo_frac close to 1 pins the whole bracket near λ_max where the
+        // ratio is huge; a tiny target is then unreachable
+        let target =
+            RatioTarget { ratio: 1e-6, tol: 0.05, lo_frac: 0.9, ..Default::default() };
+        let err = resolve_lambda_for_ratio(
+            &ds,
+            &backend,
+            &pairs,
+            &PairCosts::UNIFORM,
+            &target,
+            &params,
+            None,
+        )
+        .expect_err("target far below the bracket must be typed as exhaustion");
+        match err {
+            ControllerError::BracketExhausted { target: t, achieved, .. } => {
+                assert_eq!(t, 1e-6);
+                assert!(achieved > t, "achieved {achieved} should overshoot");
+            }
+            other => panic!("expected BracketExhausted, got {other:?}"),
+        }
+        assert!(format!("{err}").contains("bracket exhausted"));
+    }
+
+    #[test]
+    fn resolved_lambda_is_monotone_in_the_target_ratio() {
+        let ds = fixture();
+        let backend = NativeBackend::new(&ds.x);
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        let params = GenParams { eps: 1e-8, ..Default::default() };
+        let mut prev = 0.0;
+        for ratio in [0.5, 2.0, 8.0] {
+            let target = RatioTarget { ratio, tol: 0.1, ..Default::default() };
+            let out = resolve_lambda_for_ratio(
+                &ds,
+                &backend,
+                &pairs,
+                &PairCosts::UNIFORM,
+                &target,
+                &params,
+                None,
+            )
+            .unwrap_or_else(|e| panic!("ratio {ratio}: {e}"));
+            assert!(
+                out.lambda >= prev,
+                "λ({ratio}) = {} dropped below the previous target's {prev}",
+                out.lambda
+            );
+            prev = out.lambda;
+        }
+    }
+}

@@ -19,11 +19,15 @@
 //!   exponential epigraph (§3.1) paired with column generation using the
 //!   O(|J|) pricing rule (eq. 34);
 //! * [`report`] — shared per-workload full-problem objective/support
-//!   reports, consumed by the drivers here and by the serve handlers.
+//!   reports, consumed by the drivers here and by the serve handlers;
+//! * [`controller`] — the dynamic-λ controller: bisect λ toward a
+//!   target slack/‖β‖₁ ratio for (weighted) RankSVM instead of taking
+//!   λ as an input.
 //!
 //! [`GenParams`] and [`GenStats`] live in [`crate::engine`] and are
 //! re-exported here for compatibility.
 
+pub mod controller;
 pub mod group;
 pub mod l1svm;
 pub mod path;

@@ -188,6 +188,7 @@ pub(crate) fn accumulate(stats: &mut GenStats, step: GenStats) {
     stats.converged = step.converged;
     stats.stalled = step.stalled;
     stats.timed_out |= step.timed_out;
+    stats.pair_scan = step.pair_scan.or(stats.pair_scan);
 }
 
 /// Warm-started λ-path for the **Group-SVM** over a decreasing grid
@@ -374,6 +375,7 @@ pub fn ranksvm_path_with_stop(
         if k == 0 {
             step.seed_ns = seed_ns;
         }
+        step.pair_scan = Some(prob.inner().pair_scan());
         accumulate(&mut stats, step);
         let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
         out.push(PathSolution {

@@ -10,8 +10,8 @@
 
 use crate::data::Dataset;
 use crate::fom::objective::{hinge_loss_support, slope_norm};
-use crate::workloads::pairset::PairSet;
-use crate::workloads::ranksvm::pairwise_hinge_support;
+use crate::workloads::pairset::{PairCosts, PairSet};
+use crate::workloads::ranksvm::pairwise_hinge_support_weighted;
 
 /// A solution scored against the full problem.
 #[derive(Clone, Debug)]
@@ -104,8 +104,21 @@ pub fn ranksvm_report(
     support: &[(usize, f64)],
     lambda: f64,
 ) -> Report {
+    ranksvm_report_weighted(ds, pairs, &PairCosts::UNIFORM, support, lambda)
+}
+
+/// Weighted RankSVM: `Σ_t w_t·max(0, g_t − (m_i − m_k))` over ALL
+/// candidate pairs plus `λ‖β‖₁`. Uniform costs reproduce
+/// [`ranksvm_report`] bitwise.
+pub fn ranksvm_report_weighted(
+    ds: &Dataset,
+    pairs: &PairSet,
+    costs: &PairCosts,
+    support: &[(usize, f64)],
+    lambda: f64,
+) -> Report {
     let (cols, vals) = split_support(support);
-    let hinge = pairwise_hinge_support(ds, pairs, &cols, &vals);
+    let hinge = pairwise_hinge_support_weighted(ds, pairs, costs, &cols, &vals);
     let l1: f64 = vals.iter().map(|v| v.abs()).sum();
     Report {
         objective: hinge + lambda * l1,

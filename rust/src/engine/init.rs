@@ -39,7 +39,7 @@ use crate::fom::fista::{fista, FistaParams, FistaResult, Penalty};
 use crate::fom::prox::soft_threshold;
 use crate::fom::screening::{correlation_screen_backend, group_screen_backend, top_k_by_abs};
 use crate::fom::subsample::{subsample_average, violated_samples_capped, SubsampleParams};
-use crate::workloads::pairset::PairSet;
+use crate::workloads::pairset::{PairCosts, PairSet};
 
 /// Default seed-size budget `k` (the paper seeds with ~10 columns).
 pub const DEFAULT_SEED_BUDGET: usize = 10;
@@ -418,17 +418,9 @@ impl Initializer {
     }
 
     /// Seed the RankSVM working sets (pair indices in rows, features in
-    /// cols) at `lambda`. The FOM runs FISTA on the **pairwise-difference
-    /// view**: the implicit design `D` with one row `x_i − x_k` per
-    /// comparison pair, all-ones targets and no intercept
-    /// ([`PairDiffBackend`] streams the pairs through the
-    /// [`crate::workloads::pairset::PairSet`] sorted representation —
-    /// the O(n²) pair list is never materialized — keeping every product
-    /// at `O(np + |P|)`). The FISTA *iterates* are still Θ(|P|)-length
-    /// vectors, so past
-    /// [`crate::workloads::pairset::ENUM_PAIR_CAP`] candidate pairs the
-    /// seed falls back to the O(n log n + np) closed-form screening pick
-    /// — consistent with where the pair channel itself goes implicit.
+    /// cols) at `lambda` — [`Initializer::seed_ranksvm_costed`] with
+    /// uniform costs (`g = w = 1`), bitwise the original unweighted
+    /// seed.
     pub fn seed_ranksvm(
         &self,
         ds: &Dataset,
@@ -436,23 +428,60 @@ impl Initializer {
         pairs: &PairSet,
         lambda: f64,
     ) -> Seed {
-        use crate::workloads::ranksvm::initial_rank_features;
+        self.seed_ranksvm_costed(ds, backend, pairs, &PairCosts::UNIFORM, lambda)
+    }
+
+    /// Seed the weighted/gapped RankSVM working sets at `lambda`. The
+    /// FOM route depends on the cost structure and the candidate-set
+    /// size:
+    ///
+    /// * **uniform costs, ≤ [`crate::workloads::pairset::ENUM_PAIR_CAP`]
+    ///   pairs** — FISTA on the **pairwise-difference view**: the
+    ///   implicit design `D` with one row `x_i − x_k` per pair,
+    ///   all-ones targets and no intercept ([`PairDiffBackend`]
+    ///   streams the pairs in canonical order; the O(n²) list is never
+    ///   materialized). The FISTA *iterates* are Θ(|P|)-length, which
+    ///   is what caps this route;
+    /// * **uniform or bucketed costs beyond the cap (and bucketed at
+    ///   any size)** — the **level-aggregated O(n)-state smoothed-hinge
+    ///   FOM** (after arXiv:1808.07100): the pairwise smoothed-hinge
+    ///   gradient collapses to per-sample coefficients computable from
+    ///   per-level sorted margins (O(n log n) per iteration for uniform
+    ///   costs via a Fenwick sweep, O(n·L·log n) for L-level bucketed
+    ///   costs) — FISTA seeds at any n without a Θ(|P|) iterate;
+    /// * **per-pair costs** — no aggregation structure to exploit: the
+    ///   closed-form weighted screening pick seeds
+    ///   ([`crate::workloads::ranksvm::initial_rank_features_weighted`]),
+    ///   and the generation rounds do the rest.
+    pub fn seed_ranksvm_costed(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        pairs: &PairSet,
+        costs: &PairCosts,
+        lambda: f64,
+    ) -> Seed {
+        use crate::workloads::ranksvm::initial_rank_features_weighted;
         let strat = match self.strategy {
             InitStrategy::Screening => InitStrategy::Screening,
             _ => InitStrategy::Fista,
         };
+        let screening = |primal: Option<(Vec<f64>, f64)>| Seed {
+            ws: WorkingSet {
+                cols: initial_rank_features_weighted(ds, pairs, costs, self.budget),
+                rows: pairs.spread(self.budget),
+            },
+            primal,
+            strategy: InitStrategy::Screening,
+        };
         if strat == InitStrategy::Screening
             || pairs.is_empty()
-            || pairs.len() > crate::workloads::pairset::ENUM_PAIR_CAP
+            || matches!(costs, PairCosts::PerPair { .. })
         {
-            return Seed {
-                ws: WorkingSet {
-                    cols: initial_rank_features(ds, pairs, self.budget),
-                    rows: pairs.spread(self.budget),
-                },
-                primal: None,
-                strategy: InitStrategy::Screening,
-            };
+            return screening(None);
+        }
+        if !costs.is_uniform() || pairs.len() > crate::workloads::pairset::ENUM_PAIR_CAP {
+            return self.aggregated_rank_fista(ds, backend, pairs, costs, lambda);
         }
         let pd = PairDiffBackend::new(backend, pairs, self.fista.threads.max(1));
         let ones = vec![1.0; pairs.len()];
@@ -461,14 +490,7 @@ impl Initializer {
         let cols = support_top_k(&res.beta, self.budget);
         if cols.is_empty() {
             // λ ≥ λ_max: the FOM found nothing — the screening pick seeds
-            return Seed {
-                ws: WorkingSet {
-                    cols: initial_rank_features(ds, pairs, self.budget),
-                    rows: pairs.spread(self.budget),
-                },
-                primal: Some((res.beta, 0.0)),
-                strategy: InitStrategy::Screening,
-            };
+            return screening(Some((res.beta, 0.0)));
         }
         // most violated pairs at the FOM point, capped
         let rows = violated_samples_capped(&pd, &ones, &res.beta, 0.0, 0.0, SEED_ROW_CAP);
@@ -476,6 +498,91 @@ impl Initializer {
         Seed {
             ws: WorkingSet { cols, rows },
             primal: Some((res.beta, 0.0)),
+            strategy: InitStrategy::Fista,
+        }
+    }
+
+    /// The level-aggregated smoothed-hinge FISTA (arXiv:1808.07100):
+    /// minimize `Σ_t w_t·φ_μ(g_t − d_t) + λ‖β‖₁` over the **implicit**
+    /// pair set, where `d_t = m_i − m_k` and `φ_μ` is the Nesterov-
+    /// smoothed hinge, without ever allocating a Θ(|P|) vector. The
+    /// gradient is `Xᵀc` with per-sample coefficients `c` computed by
+    /// [`aggregated_grad_coeffs`] from per-level sorted margins; the
+    /// Lipschitz constant is `σ_max²(X)·2·r_max/μ` with `r_max` the
+    /// largest total pair weight any one sample participates in (each
+    /// pair's rank-one term `(x_i−x_k)(x_i−x_k)ᵀ ⪯ 2(x_ix_iᵀ+x_kx_kᵀ)`).
+    /// The momentum schedule, prox step, and `‖Δβ‖ ≤ eta` stop mirror
+    /// [`crate::fom::fista::fista`] deliberately — keep them in sync.
+    fn aggregated_rank_fista(
+        &self,
+        ds: &Dataset,
+        backend: &dyn Backend,
+        pairs: &PairSet,
+        costs: &PairCosts,
+        lambda: f64,
+    ) -> Seed {
+        use crate::workloads::ranksvm::initial_rank_features_weighted;
+        let n = ds.n();
+        let p = ds.p();
+        let params = &self.fista;
+        // smoothing width: matches the per-sample smoothed hinge, whose
+        // Lipschitz constant σ²/(4τ) corresponds to μ = 4τ
+        let mu = (4.0 * params.tau).max(1e-9);
+        let rmax = max_row_weight(pairs, costs);
+        let l =
+            (sigma_max_sq(backend, params.power_iters) * (2.0 * rmax / mu)).max(1e-12) * 1.05;
+        let inv_l = 1.0 / l;
+        let mut beta = vec![0.0; p];
+        let mut beta_prev = beta.clone();
+        let mut q = 1.0f64;
+        let mut m = vec![0.0; n];
+        let mut coef = vec![0.0; n];
+        let mut grad = vec![0.0; p];
+        for _ in 0..params.max_iters {
+            let q_next = 0.5 * (1.0 + (1.0 + 4.0 * q * q).sqrt());
+            let mom = (q - 1.0) / q_next;
+            let mut alpha: Vec<f64> =
+                beta.iter().zip(&beta_prev).map(|(b, bp)| b + mom * (b - bp)).collect();
+            q = q_next;
+            backend.xb(&alpha, &mut m);
+            coef.iter_mut().for_each(|v| *v = 0.0);
+            aggregated_grad_coeffs(pairs, costs, &m, mu, &mut coef);
+            par_xtv(backend, params.threads, &coef, &mut grad);
+            for (a, g) in alpha.iter_mut().zip(&grad) {
+                *a -= inv_l * g;
+            }
+            soft_threshold(&mut alpha, lambda * inv_l);
+            let mut delta = 0.0;
+            for (a, b) in alpha.iter().zip(&beta) {
+                delta += (a - b) * (a - b);
+            }
+            beta_prev = std::mem::replace(&mut beta, alpha);
+            if delta.sqrt() <= params.eta {
+                break;
+            }
+        }
+        let cols = support_top_k(&beta, self.budget);
+        if cols.is_empty() {
+            // λ ≥ λ_max: nothing survived — the screening pick seeds
+            return Seed {
+                ws: WorkingSet {
+                    cols: initial_rank_features_weighted(ds, pairs, costs, self.budget),
+                    rows: pairs.spread(self.budget),
+                },
+                primal: Some((beta, 0.0)),
+                strategy: InitStrategy::Screening,
+            };
+        }
+        // most violated pairs at the FOM point: the winner-best weighted
+        // sweep, capped — never a Θ(|P|) pass
+        backend.xb(&beta, &mut m);
+        let (viol, _scan) =
+            pairs.price_weighted(&m, 0.0, &[], SEED_ROW_CAP, self.threads.max(1), costs);
+        let rows: Vec<usize> = viol.into_iter().map(|(t, _)| t).collect();
+        let rows = if rows.is_empty() { pairs.spread(self.budget) } else { rows };
+        Seed {
+            ws: WorkingSet { cols, rows },
+            primal: Some((beta, 0.0)),
             strategy: InitStrategy::Fista,
         }
     }
@@ -583,6 +690,212 @@ fn support_top_k(beta: &[f64], k: usize) -> Vec<usize> {
         .into_iter()
         .filter(|&j| beta[j] != 0.0)
         .collect()
+}
+
+/// A 1-indexed Fenwick tree over coordinate-compressed margin values,
+/// carrying `(count, sum)` per node — the range count/sum queries behind
+/// the uniform-cost aggregated gradient sweep.
+struct CountSumFenwick {
+    cnt: Vec<f64>,
+    sum: Vec<f64>,
+}
+
+impl CountSumFenwick {
+    fn new(len: usize) -> Self {
+        Self { cnt: vec![0.0; len + 1], sum: vec![0.0; len + 1] }
+    }
+
+    /// Insert one value `v` at compressed rank `i` (0-based).
+    fn add(&mut self, i: usize, v: f64) {
+        let mut j = i + 1;
+        while j < self.cnt.len() {
+            self.cnt[j] += 1.0;
+            self.sum[j] += v;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// `(count, sum)` of the inserted values with compressed rank `< i`.
+    fn prefix(&self, i: usize) -> (f64, f64) {
+        let (mut c, mut s) = (0.0, 0.0);
+        let mut j = i;
+        while j > 0 {
+            c += self.cnt[j];
+            s += self.sum[j];
+            j &= j - 1;
+        }
+        (c, s)
+    }
+}
+
+/// Per-sample gradient coefficients of the weighted smoothed pairwise
+/// hinge `Σ_t w_t·φ_μ(g_t − (m_i − m_k))` at margins `m`, accumulated
+/// into `c` (length n): with `d = m_i − m_k`, the chain rule scatters
+/// `c[i] += w·φ′(d)` on the winner and `c[k] −= w·φ′(d)` on the loser,
+/// where `φ′(d) = 0` for `d ≥ g`, `(d − g)/μ` for `g − μ < d < g`, and
+/// `−1` for `d ≤ g − μ` — so the full gradient w.r.t. β is `Xᵀc`.
+///
+/// The point is to do this **without enumerating pairs** when costs are
+/// constant per level pair: a sample's sum over one opposing level needs
+/// only that level's margin count and margin sum inside the quadratic
+/// window `(m ± g − μ, m ± g)` plus the count beyond it. Bucketed costs
+/// use per-level sorted margins + prefix sums + two binary searches per
+/// (sample, level) — O(n·L·log n); uniform costs collapse further to one
+/// merged Fenwick sweep over all lower (resp. higher) levels at once —
+/// O(n log n). Per-pair costs have no structure to exploit and fall back
+/// to O(|P|) enumeration (also the brute-force oracle the aggregated
+/// paths are tested against).
+fn aggregated_grad_coeffs(pairs: &PairSet, costs: &PairCosts, m: &[f64], mu: f64, c: &mut [f64]) {
+    let order = pairs.sorted_order();
+    if order.is_empty() {
+        return;
+    }
+    let bounds = pairs.level_bounds();
+    let nl = pairs.n_levels();
+    let mm: Vec<f64> = order.iter().map(|&i| m[i as usize]).collect();
+    match costs {
+        PairCosts::Uniform => {
+            let mut uniq = mm.clone();
+            uniq.sort_unstable_by(f64::total_cmp);
+            uniq.dedup();
+            let rank_le = |v: f64| uniq.partition_point(|&u| u <= v);
+            let rank_lt = |v: f64| uniq.partition_point(|&u| u < v);
+            // winner pass: levels ascending, the tree holds every lower level
+            let mut fw = CountSumFenwick::new(uniq.len());
+            let mut inserted = 0.0;
+            for a in 0..nl {
+                for pos in bounds[a]..bounds[a + 1] {
+                    let mi = mm[pos];
+                    let (c_lo, s_lo) = fw.prefix(rank_le(mi - 1.0));
+                    let (c_hi, s_hi) = fw.prefix(rank_lt(mi - 1.0 + mu));
+                    let (cq, sq) = (c_hi - c_lo, s_hi - s_lo);
+                    c[order[pos] as usize] += ((mi - 1.0) * cq - sq) / mu - (inserted - c_hi);
+                }
+                for pos in bounds[a]..bounds[a + 1] {
+                    fw.add(rank_lt(mm[pos]), mm[pos]);
+                    inserted += 1.0;
+                }
+            }
+            // loser pass: levels descending, the tree holds every higher level
+            let mut fl = CountSumFenwick::new(uniq.len());
+            for b in (0..nl).rev() {
+                for pos in bounds[b]..bounds[b + 1] {
+                    let mk = mm[pos];
+                    let (c_lo, s_lo) = fl.prefix(rank_le(mk + 1.0 - mu));
+                    let (c_hi, s_hi) = fl.prefix(rank_lt(mk + 1.0));
+                    let (cq, sq) = (c_hi - c_lo, s_hi - s_lo);
+                    c[order[pos] as usize] += ((mk + 1.0) * cq - sq) / mu + c_lo;
+                }
+                for pos in bounds[b]..bounds[b + 1] {
+                    fl.add(rank_lt(mm[pos]), mm[pos]);
+                }
+            }
+        }
+        PairCosts::Bucketed { levels, gaps, weights } => {
+            let lv = *levels;
+            // per-level margins sorted ascending, with prefix sums
+            let mut ms: Vec<Vec<f64>> = Vec::with_capacity(nl);
+            let mut pre: Vec<Vec<f64>> = Vec::with_capacity(nl);
+            for l in 0..nl {
+                let mut v = mm[bounds[l]..bounds[l + 1]].to_vec();
+                v.sort_unstable_by(f64::total_cmp);
+                let mut pr = Vec::with_capacity(v.len() + 1);
+                pr.push(0.0);
+                for &x in &v {
+                    pr.push(pr.last().unwrap() + x);
+                }
+                ms.push(v);
+                pre.push(pr);
+            }
+            for a in 0..nl {
+                for pos in bounds[a]..bounds[a + 1] {
+                    let mi = mm[pos];
+                    let mut acc = 0.0;
+                    // as a winner, against every lower level
+                    for b in 0..a {
+                        let (g, w) = (gaps[a * lv + b], weights[a * lv + b]);
+                        let v = &ms[b];
+                        let lo = v.partition_point(|&x| x <= mi - g);
+                        let hi = v.partition_point(|&x| x < mi - g + mu);
+                        let (cq, sq) = ((hi - lo) as f64, pre[b][hi] - pre[b][lo]);
+                        acc += w * (((mi - g) * cq - sq) / mu - (v.len() - hi) as f64);
+                    }
+                    // as a loser, against every higher level
+                    for hl in a + 1..nl {
+                        let (g, w) = (gaps[hl * lv + a], weights[hl * lv + a]);
+                        let v = &ms[hl];
+                        let lo = v.partition_point(|&x| x <= mi + g - mu);
+                        let hi = v.partition_point(|&x| x < mi + g);
+                        let (cq, sq) = ((hi - lo) as f64, pre[hl][hi] - pre[hl][lo]);
+                        acc += w * (((mi + g) * cq - sq) / mu + lo as f64);
+                    }
+                    c[order[pos] as usize] += acc;
+                }
+            }
+        }
+        PairCosts::PerPair { gaps, weights } => {
+            pairs.for_each(|t, i, k| {
+                let (g, w) = (gaps[t], weights[t]);
+                let d = m[i] - m[k];
+                let phi = if d >= g {
+                    0.0
+                } else if d > g - mu {
+                    (d - g) / mu
+                } else {
+                    -1.0
+                };
+                c[i] += w * phi;
+                c[k] -= w * phi;
+            });
+        }
+    }
+}
+
+/// The largest total pair weight any one sample participates in
+/// (`r_max = max_i Σ_{t ∋ i} w_t`) — the factor in the aggregated FOM's
+/// Lipschitz bound `‖∇²‖ ≤ 2·r_max·σ_max²(X)/μ`, since each pair's
+/// rank-one Hessian term `(x_i−x_k)(x_i−x_k)ᵀ ⪯ 2(x_ix_iᵀ + x_kx_kᵀ)`.
+/// Uniform/bucketed costs need only per-level counts; per-pair costs
+/// scatter exactly in O(|P|).
+fn max_row_weight(pairs: &PairSet, costs: &PairCosts) -> f64 {
+    let bounds = pairs.level_bounds();
+    let nl = pairs.n_levels();
+    let cnt: Vec<f64> = (0..nl).map(|l| (bounds[l + 1] - bounds[l]) as f64).collect();
+    let mut rmax = 0.0f64;
+    match costs {
+        PairCosts::Uniform => {
+            let total: f64 = cnt.iter().sum();
+            for l in 0..nl {
+                rmax = rmax.max(total - cnt[l]);
+            }
+        }
+        PairCosts::Bucketed { levels, weights, .. } => {
+            let lv = *levels;
+            for a in 0..nl {
+                let mut r = 0.0;
+                for b in 0..a {
+                    r += weights[a * lv + b] * cnt[b];
+                }
+                for hl in a + 1..nl {
+                    r += weights[hl * lv + a] * cnt[hl];
+                }
+                rmax = rmax.max(r);
+            }
+        }
+        PairCosts::PerPair { weights, .. } => {
+            let mut r: Vec<f64> = Vec::new();
+            pairs.for_each(|t, i, k| {
+                let need = i.max(k) + 1;
+                if r.len() < need {
+                    r.resize(need, 0.0);
+                }
+                r[i] += weights[t];
+                r[k] += weights[t];
+            });
+            rmax = r.iter().cloned().fold(0.0, f64::max);
+        }
+    }
+    rmax
 }
 
 /// Run a first-order method to the given accuracy on the **full** design
@@ -932,5 +1245,117 @@ mod tests {
         let b = par.seed_l1(&ds, &backend, lambda);
         assert_eq!(a.ws, b.ws, "seeds must not depend on the thread count");
         assert_eq!(a.primal.unwrap().0, b.primal.unwrap().0);
+    }
+
+    #[test]
+    fn aggregated_grad_coeffs_match_pairwise_enumeration() {
+        // ties, a NaN (unranked sample), and a smoothing width sized so
+        // margins land in all three smoothed-hinge zones
+        let y = vec![2.0, 0.0, 1.0, f64::NAN, 1.0, 2.0, 0.0, 3.0, 1.0];
+        let ps = PairSet::build(&y, PairMode::Auto);
+        let n = y.len();
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let m: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let mu = 0.37;
+        let brute = |costs: &PairCosts| {
+            let mut c = vec![0.0; n];
+            for (i, k, g, w) in crate::workloads::ranksvm::ranking_pairs_costed(&y, costs) {
+                let d = m[i] - m[k];
+                let phi = if d >= g {
+                    0.0
+                } else if d > g - mu {
+                    (d - g) / mu
+                } else {
+                    -1.0
+                };
+                c[i] += w * phi;
+                c[k] -= w * phi;
+            }
+            c
+        };
+        let check = |costs: &PairCosts| {
+            let mut c = vec![0.0; n];
+            aggregated_grad_coeffs(&ps, costs, &m, mu, &mut c);
+            let want = brute(costs);
+            for i in 0..n {
+                assert!(
+                    (c[i] - want[i]).abs() < 1e-9,
+                    "sample {i}: aggregated {} vs enumerated {} under {costs:?}",
+                    c[i],
+                    want[i]
+                );
+            }
+        };
+        check(&PairCosts::UNIFORM);
+        // non-uniform per-level-pair gaps and weights
+        let bucketed = PairCosts::bucketed_by(&ps, |a, b| {
+            (0.5 + 0.25 * (a - b) as f64, 1.0 + 0.5 * b as f64)
+        });
+        check(&bucketed);
+        // the same table expanded per pair rides the O(|P|) oracle path
+        let costed = crate::workloads::ranksvm::ranking_pairs_costed(&y, &bucketed);
+        let per = PairCosts::PerPair {
+            gaps: costed.iter().map(|c| c.2).collect(),
+            weights: costed.iter().map(|c| c.3).collect(),
+        };
+        check(&per);
+        // the NaN sample pairs with nothing: zero coefficient everywhere
+        let mut c = vec![0.0; n];
+        aggregated_grad_coeffs(&ps, &bucketed, &m, mu, &mut c);
+        assert_eq!(c[3], 0.0, "unranked samples take no gradient");
+    }
+
+    #[test]
+    fn bucketed_costs_seed_via_aggregated_fom() {
+        let spec = RankSpec { n: 24, p: 25, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(31));
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        let costs = PairCosts::bucketed_by(&pairs, |a, b| (1.0 + 0.5 * (a - b) as f64, 2.0));
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.05
+            * crate::workloads::ranksvm::lambda_max_rank_weighted(&ds, &pairs, &costs);
+        let seed = Initializer::new(InitStrategy::Fista, 8)
+            .seed_ranksvm_costed(&ds, &backend, &pairs, &costs, lambda);
+        assert_eq!(seed.strategy, InitStrategy::Fista, "bucketed costs must not fall to screening");
+        assert!(!seed.ws.cols.is_empty());
+        assert!(!seed.ws.rows.is_empty());
+        assert!(seed.ws.rows.iter().all(|&t| t < pairs.len()), "rows are pair indices");
+        let hits = seed.ws.cols.iter().filter(|&&j| j < 5).count();
+        assert!(hits >= 2, "aggregated FOM misses informative features: {:?}", seed.ws.cols);
+        let (beta, beta0) = seed.primal.unwrap();
+        assert_eq!(beta0, 0.0);
+        assert!(beta.iter().any(|v| *v != 0.0));
+        // per-pair costs have no aggregation structure: screening seeds
+        let costed = crate::workloads::ranksvm::ranking_pairs_costed(&ds.y, &costs);
+        let per = PairCosts::PerPair {
+            gaps: costed.iter().map(|c| c.2).collect(),
+            weights: costed.iter().map(|c| c.3).collect(),
+        };
+        let sper = Initializer::new(InitStrategy::Fista, 8)
+            .seed_ranksvm_costed(&ds, &backend, &pairs, &per, lambda);
+        assert_eq!(sper.strategy, InitStrategy::Screening);
+    }
+
+    #[test]
+    fn uniform_seed_beyond_pair_cap_no_longer_screens() {
+        // distinct relevance scores ⇒ |P| = n(n−1)/2 > ENUM_PAIR_CAP for
+        // n = 2100 — pre-aggregation this forced the screening fallback
+        let spec = RankSpec { n: 2100, p: 12, k0: 4, rho: 0.1, noise: 0.3, standardize: true };
+        let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(32));
+        let pairs = PairSet::build(&ds.y, PairMode::Auto);
+        assert!(
+            pairs.len() > crate::workloads::pairset::ENUM_PAIR_CAP,
+            "fixture must exceed the enumeration cap, got {}",
+            pairs.len()
+        );
+        let backend = NativeBackend::new(&ds.x);
+        let lambda = 0.05 * crate::workloads::ranksvm::lambda_max_rank(&ds, &pairs);
+        let seed =
+            Initializer::new(InitStrategy::Fista, 8).seed_ranksvm(&ds, &backend, &pairs, lambda);
+        assert_eq!(seed.strategy, InitStrategy::Fista, "aggregated FOM must take over past the cap");
+        assert!(!seed.ws.cols.is_empty());
+        assert!(!seed.ws.rows.is_empty() && seed.ws.rows.len() <= SEED_ROW_CAP);
+        let hits = seed.ws.cols.iter().filter(|&&j| j < 4).count();
+        assert!(hits >= 2, "seed {:?}", seed.ws.cols);
     }
 }

@@ -143,6 +143,36 @@ impl Default for GenParams {
     }
 }
 
+/// Target for the dynamic-λ controller (rank2plan's "dynamic
+/// regularisation"): instead of a fixed λ, the caller names the ratio
+/// `hinge(β) / ‖β‖₁` — total (weighted) slack over the L1 norm — it
+/// wants the solution to sit at, and
+/// `crate::coordinator::controller::resolve_lambda_for_ratio` bisects
+/// λ in log-space until the achieved ratio lands within `tol` of it.
+/// The ratio is monotone increasing in λ (more regularization shrinks
+/// ‖β‖₁ and grows the slack), which is what makes bisection sound.
+#[derive(Clone, Copy, Debug)]
+pub struct RatioTarget {
+    /// Desired `hinge / ‖β‖₁` ratio (must be finite and > 0).
+    pub ratio: f64,
+    /// Relative tolerance on the achieved ratio (default 0.1: accept
+    /// within ±10% of the target).
+    pub tol: f64,
+    /// Cap on controller solves, bracket endpoints included (default
+    /// 24 ≈ 22 bisection steps: λ resolved to ~1e-6 relative).
+    pub max_solves: usize,
+    /// Lower bracket endpoint as a fraction of λ_max (default 1e-4).
+    /// The upper endpoint is λ_max itself, where β = 0 and the ratio
+    /// is +∞.
+    pub lo_frac: f64,
+}
+
+impl Default for RatioTarget {
+    fn default() -> Self {
+        Self { ratio: 1.0, tol: 0.1, max_solves: 24, lo_frac: 1e-4 }
+    }
+}
+
 /// Progress counters common to all coordinators.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GenStats {
@@ -173,6 +203,13 @@ pub struct GenStats {
     /// filled by the drivers that own seeding (coordinators, serve),
     /// not by [`GenEngine::run`] itself.
     pub seed_ns: u64,
+    /// Which pair-scan strategy priced RankSVM's comparison channel
+    /// (`"uniform"`, `"bucketed"`, `"enumerated-list"`,
+    /// `"enumerated-per-pair"`; see
+    /// `crate::workloads::pairset::PairScan`). Filled by the RankSVM
+    /// drivers so callers can see *why* a weighted solve fell back to
+    /// enumeration; `None` for workloads without a pair channel.
+    pub pair_scan: Option<&'static str>,
 }
 
 /// A serializable snapshot of a restricted problem's working sets.

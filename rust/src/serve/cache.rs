@@ -232,6 +232,18 @@ impl WarmCache {
         copied
     }
 
+    /// Number of snapshots stored under `(fingerprint, workload)` across
+    /// all λ-buckets. The `update` op reports this for the pair-indexed
+    /// workloads [`WarmCache::translate_fingerprint`] must skip, so a
+    /// client learns *how much* warm state the derived dataset did not
+    /// inherit instead of silently cold-solving into it.
+    pub fn count_snapshots(&self, fingerprint: u64, workload: Workload) -> usize {
+        self.map
+            .keys()
+            .filter(|k| k.fingerprint == fingerprint && k.workload == workload)
+            .count()
+    }
+
     /// Evict least-recently-used entries while over the entry cap or the
     /// byte budget, always keeping at least one entry.
     fn evict_over_budget(&mut self) {
@@ -358,6 +370,19 @@ mod tests {
         // originals survive the translation
         assert!(c.lookup(1, Workload::L1svm, 1.0).is_some());
         assert_eq!(c.translate_fingerprint(1, 1), 0, "same-fingerprint no-op");
+    }
+
+    #[test]
+    fn count_snapshots_scopes_by_fingerprint_and_workload() {
+        let mut c = WarmCache::new(16);
+        c.insert(1, Workload::Ranksvm, entry(1.0));
+        c.insert(1, Workload::Ranksvm, entry(10.0));
+        c.insert(1, Workload::L1svm, entry(1.0));
+        c.insert(2, Workload::Ranksvm, entry(1.0));
+        assert_eq!(c.count_snapshots(1, Workload::Ranksvm), 2);
+        assert_eq!(c.count_snapshots(1, Workload::L1svm), 1);
+        assert_eq!(c.count_snapshots(2, Workload::Ranksvm), 1);
+        assert_eq!(c.count_snapshots(3, Workload::Ranksvm), 0);
     }
 
     #[test]

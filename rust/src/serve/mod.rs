@@ -110,13 +110,14 @@ use crate::coordinator::report::{
 use crate::coordinator::slope::{RestrictedSlope, SlopeProblem};
 use crate::coordinator::{GenParams, GenStats};
 use crate::engine::{
-    BackendPricer, GenEngine, InitStrategy, Initializer, PairMode, Snapshot, WorkingSet,
+    BackendPricer, GenEngine, InitStrategy, Initializer, PairMode, RatioTarget, Snapshot,
+    WorkingSet,
 };
 use crate::error::Result;
 use crate::fom::objective::bh_slope_weights;
 use crate::obs::{self, latency_bounds, stderr_line, RingSink, RoundEvent, Span, TraceSink};
 use crate::workloads::dantzig::{lambda_max_dantzig, DantzigProblem, RestrictedDantzig};
-use crate::workloads::pairset::PairSet;
+use crate::workloads::pairset::{PairCosts, PairSet};
 use crate::workloads::ranksvm::{lambda_max_rank, pair_rows_cap, RankProblem, RestrictedRank};
 use crate::{bail, ensure, err};
 
@@ -594,19 +595,31 @@ impl ServeState {
             .lock()
             .expect("cache lock")
             .translate_fingerprint(parent.fingerprint, entry.fingerprint);
-        Ok(ok_response(
-            "update",
-            vec![
-                kv("name", name),
-                kv("parent", parent_name),
-                kv("n", entry.ds.n()),
-                kv("p", entry.ds.p()),
-                kv("retired", retired),
-                kv("appended", append_rows.len()),
-                kv("fingerprint", format!("{:016x}", entry.fingerprint)),
-                kv("cache_translated", translated),
-            ],
-        ))
+        // RankSVM snapshots address the parent's canonical *pair* index
+        // space, which an edited sample set invalidates — they cannot be
+        // re-keyed. Report the skip structurally (count included) instead
+        // of letting the child silently cold-solve; see docs/serving.md.
+        let rank_skipped = parent.built_pairs().map_or(0, |pp| {
+            self.cache
+                .lock()
+                .expect("cache lock")
+                .count_snapshots(parent.fingerprint ^ pp.fingerprint(), Workload::Ranksvm)
+        });
+        let mut fields = vec![
+            kv("name", name),
+            kv("parent", parent_name),
+            kv("n", entry.ds.n()),
+            kv("p", entry.ds.p()),
+            kv("retired", retired),
+            kv("appended", append_rows.len()),
+            kv("fingerprint", format!("{:016x}", entry.fingerprint)),
+            kv("cache_translated", translated),
+        ];
+        if rank_skipped > 0 {
+            fields.push(kv("snapshot_skipped", "pair-indexed"));
+            fields.push(kv("snapshot_skipped_count", rank_skipped));
+        }
+        Ok(ok_response("update", fields))
     }
 
     fn handle_solve(&self, req: &Req, req_id: u64) -> Result<Json> {
@@ -637,6 +650,14 @@ impl ServeState {
     ) -> Result<Json> {
         let wall = Span::start();
         let workload = Workload::parse(req.str_req("workload")?)?;
+        if req.0.get("target_ratio").is_some() {
+            ensure!(
+                workload == Workload::Ranksvm,
+                "\"target_ratio\" drives the dynamic-λ controller, which applies to the ranksvm \
+                 workload only"
+            );
+            return self.solve_ratio_request(name, entry, req, deadline, req_id, wall);
+        }
         let mut gen = gen_from_req(req)?;
         gen.max_cols_per_round = req.usize_or("max_cols_per_round", 0)?;
         gen.max_rows_per_round = req.usize_or("max_rows_per_round", 0)?;
@@ -707,6 +728,10 @@ impl ServeState {
             fields.push(kv("warm_lambda", h.entry.lambda));
             fields.push(kv("bucket_distance", h.distance as f64));
         }
+        if let Some(scan) = core.stats.pair_scan {
+            fields.push(kv("pair_scan", scan));
+            self.observe_pair_scan(scan);
+        }
         // Timing fields ride along only when tracing was asked for:
         // wall clocks are nondeterministic, and untraced responses stay
         // byte-identical across runs (a documented protocol property).
@@ -728,6 +753,133 @@ impl ServeState {
         };
         self.maybe_log_slow(&ctx, wall_ns, &core.stats, ring.as_deref());
         Ok(ok_response("solve", fields))
+    }
+
+    /// One `"target_ratio"` solve: instead of taking λ, run the
+    /// dynamic-λ controller
+    /// ([`crate::coordinator::controller::resolve_lambda_for_ratio`]),
+    /// which bisects λ until the solution's weighted-hinge/‖β‖₁ ratio
+    /// lands within `"ratio_tol"` of the target. The converged working
+    /// set is cached under the **resolved** λ's bucket — exactly where a
+    /// later fixed-λ request near it will look — and the response
+    /// carries the resolved λ plus the controller's bookkeeping
+    /// (`"achieved_ratio"`, `"controller_solves"`). Available wherever
+    /// `solve` is, including `batch` items.
+    fn solve_ratio_request(
+        &self,
+        name: &str,
+        entry: &DatasetEntry,
+        req: &Req,
+        deadline: Option<&Deadline>,
+        req_id: u64,
+        wall: Span,
+    ) -> Result<Json> {
+        ensure!(
+            req.0.get("lambda").is_none() && req.0.get("lambda_frac").is_none(),
+            "\"target_ratio\" resolves λ itself; drop \"lambda\"/\"lambda_frac\""
+        );
+        let gen = gen_from_req(req)?;
+        let ratio = req
+            .0
+            .get("target_ratio")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err!("field \"target_ratio\" must be a number"))?;
+        let defaults = RatioTarget::default();
+        let target = RatioTarget {
+            ratio,
+            tol: req.f64_or("ratio_tol", defaults.tol)?,
+            max_solves: req.usize_or("max_solves", defaults.max_solves)?,
+            ..defaults
+        };
+        let use_cache = req.bool_or("cache", true)?;
+        let ds = &entry.ds;
+        let mut owned_pairs = None;
+        let pairs = pairs_for(entry, gen.pair_mode, &mut owned_pairs)?;
+        let backend = NativeBackend::new(&ds.x);
+        let stop = || {
+            if self.shutdown_requested() {
+                return true;
+            }
+            match deadline {
+                Some(d) => d.expired(),
+                None => false,
+            }
+        };
+        let out = crate::coordinator::controller::resolve_lambda_for_ratio(
+            ds,
+            &backend,
+            pairs,
+            &PairCosts::UNIFORM,
+            &target,
+            &gen,
+            Some(&stop),
+        )
+        .map_err(|e| err!("{e}"))?;
+        let fp = cache_fp(entry, Workload::Ranksvm, 1);
+        if use_cache && !out.total.timed_out {
+            self.cache_store(
+                fp,
+                Workload::Ranksvm,
+                CacheEntry {
+                    lambda: out.lambda,
+                    objective: out.solution.objective,
+                    ws: out.ws.clone(),
+                },
+            );
+        }
+        if out.total.timed_out {
+            self.observe_timeout();
+        }
+        let wall_ns = wall.elapsed_ns();
+        let mut fields = vec![
+            kv("dataset", name),
+            kv("workload", Workload::Ranksvm.as_str()),
+            kv("init", gen.init.as_str()),
+            kv("seeded_by", "controller"),
+            kv("lambda", out.lambda),
+            kv("lambda_max", out.lambda_max),
+            kv("target_ratio", ratio),
+            kv("achieved_ratio", out.achieved_ratio),
+            kv("controller_solves", out.solves),
+            kv("objective", out.solution.objective),
+            kv("support", out.solution.support_size()),
+            kv("rounds", out.total.rounds),
+            kv("cols_added", out.total.cols_added),
+            kv("rows_added", out.total.rows_added),
+            kv("simplex_iters", out.total.simplex_iters),
+            kv("converged", out.solution.stats.converged),
+            kv("timed_out", out.total.timed_out),
+            kv("working_cols", out.ws.cols.len()),
+            kv("working_rows", out.ws.rows.len()),
+            kv("warm", false),
+        ];
+        if let Some(scan) = out.total.pair_scan {
+            fields.push(kv("pair_scan", scan));
+            self.observe_pair_scan(scan);
+        }
+        let ctx = SlowLogCtx {
+            req_id,
+            op: "solve",
+            dataset: name,
+            workload: Workload::Ranksvm.as_str(),
+            lambda: out.lambda,
+        };
+        self.maybe_log_slow(&ctx, wall_ns, &out.total, None);
+        Ok(ok_response("solve", fields))
+    }
+
+    /// Count one RankSVM pricing scan by strategy (see
+    /// [`crate::workloads::pairset::PairScan`]) — how often the
+    /// sublinear bucketed/uniform sweeps carry production traffic versus
+    /// the enumeration fallbacks.
+    fn observe_pair_scan(&self, scan: &'static str) {
+        self.metrics
+            .counter(
+                "cutgen_ranksvm_pair_scans_total",
+                "RankSVM pair-channel pricing scans, by strategy.",
+                &[("scan", scan)],
+            )
+            .inc();
     }
 
     /// The `batch` op: heterogeneous `(workload, λ)` solve items against
@@ -1789,6 +1941,7 @@ fn solve_ranksvm(
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let mut stats = engine_for(gen, stop).run(&mut prob);
     stats.seed_ns = seed_ns;
+    stats.pair_scan = Some(prob.inner().pair_scan());
     let ws = prob.export_working_set();
     let report = ranksvm_report(ds, pairs, &prob.inner().beta_support(), lambda);
     Ok(SolveCore {

@@ -43,6 +43,21 @@
 //! threads exactly like [`crate::backend::par_xtv`], and is bit-identical
 //! at any thread count. See `docs/ranksvm-scaling.md` for the full
 //! derivation and when enumeration still wins.
+//!
+//! **Weighted, gapped pairs.** [`PairCosts`] attaches a margin gap `g_t`
+//! and a positive weight `w_t` to every candidate pair, turning the
+//! hinge into `w_t·max(0, g_t − (m_i − m_k))` (rank2plan's extension of
+//! the paper's uniform `g = w = 1`). Pricing stays sublinear whenever
+//! the costs are constant per *relevance-level pair*
+//! ([`PairCosts::Bucketed`]): the prefix-max sweep generalizes to one
+//! per-level-bucket max — O(n·L) for L levels — because within a bucket
+//! the violation is a fixed increasing function of the loser margin.
+//! Arbitrary per-pair costs break that monotone structure, so
+//! [`PairCosts::PerPair`] falls back to an O(|P|) enumeration of the
+//! candidate space; [`PairScan`] names which scan ran (surfaced in
+//! [`crate::engine::GenStats::pair_scan`]). Uniform costs route through
+//! the original code paths and are **bitwise identical** to the
+//! unweighted implementation.
 
 use std::collections::HashMap;
 
@@ -102,6 +117,12 @@ pub struct PairSet {
     tie_hi: Vec<u32>,
     /// Number of rankable (non-NaN) samples: `order[..ranked]`.
     ranked: usize,
+    /// Sample index → relevance-level id (tie groups numbered ascending
+    /// by `y`); `u32::MAX` for NaN responses, which sit in no level.
+    level_of: Vec<u32>,
+    /// Start position in `order` of each level's tie group plus the
+    /// `ranked` end sentinel: `level_lo[l]..level_lo[l+1]` is level `l`.
+    level_lo: Vec<usize>,
     /// `offset[i]..offset[i+1]` is winner `i`'s canonical index block.
     offset: Vec<usize>,
     /// The materialized list (canonical order) — `Some` iff enumerated.
@@ -147,20 +168,26 @@ impl PairSet {
         let mut below = vec![0u32; n];
         let mut tie_hi = vec![0u32; n];
         let mut sorted_pos = vec![0u32; n];
+        let mut level_of = vec![u32::MAX; n];
+        let mut level_lo = Vec::new();
         let mut s = 0usize;
         while s < ranked {
             let mut e = s + 1;
             while e < ranked && y[order[e] as usize] == y[order[s] as usize] {
                 e += 1;
             }
+            let lvl = level_lo.len() as u32;
+            level_lo.push(s);
             for pos in s..e {
                 let idx = order[pos] as usize;
                 below[idx] = s as u32;
                 tie_hi[idx] = e as u32;
                 sorted_pos[idx] = pos as u32;
+                level_of[idx] = lvl;
             }
             s = e;
         }
+        level_lo.push(ranked);
         for pos in ranked..n {
             let idx = order[pos] as usize;
             below[idx] = 0;
@@ -173,7 +200,19 @@ impl PairSet {
             offset.push(offset[i] + below[i] as usize);
         }
         let total = offset[n];
-        PairSet { n, total, order, sorted_pos, below, tie_hi, ranked, offset, pairs: None }
+        PairSet {
+            n,
+            total,
+            order,
+            sorted_pos,
+            below,
+            tie_hi,
+            ranked,
+            level_of,
+            level_lo,
+            offset,
+            pairs: None,
+        }
     }
 
     /// The canonical pair list: winners ascending by sample index,
@@ -202,6 +241,32 @@ impl PairSet {
     /// Number of samples `n`.
     pub fn n_samples(&self) -> usize {
         self.n
+    }
+
+    /// Number of distinct (finite) relevance levels `L`. Pairs exist
+    /// only between different levels, so `L ≤ 1` ⇔ the set is empty.
+    pub fn n_levels(&self) -> usize {
+        self.level_lo.len() - 1
+    }
+
+    /// The relevance-level id of sample `i` (levels numbered ascending
+    /// by `y`), or `None` for a NaN response.
+    pub fn level_of(&self, i: usize) -> Option<usize> {
+        (self.level_of[i] != u32::MAX).then_some(self.level_of[i] as usize)
+    }
+
+    /// Level tie-group bounds in the sorted order: `level_bounds()[l] ..
+    /// level_bounds()[l+1]` are the sorted positions of level `l`
+    /// (length [`Self::n_levels`] + 1; the last entry is the count of
+    /// rankable samples).
+    pub fn level_bounds(&self) -> &[usize] {
+        &self.level_lo
+    }
+
+    /// The samples in `(y asc, index asc)` sorted order (NaN responses
+    /// last) — the order [`Self::level_bounds`] indexes into.
+    pub fn sorted_order(&self) -> &[u32] {
+        &self.order
     }
 
     /// Whether the pair list is materialized.
@@ -509,6 +574,552 @@ impl PairSet {
         }
         acc
     }
+
+    /// Weighted, gapped pricing: for every winner `i` the most violated
+    /// non-excluded pair under `viol = w_t·(g_t − (m_i − m_k))`, keeping
+    /// the `cap` most violated winner-best pairs ordered
+    /// `(violation desc, index asc)` — the same contract as
+    /// [`Self::price`], which is exactly what uniform costs delegate to
+    /// (bitwise: `1·x = x` and `1 − d` is the unweighted expression).
+    /// The second return names the scan that ran (see [`PairScan`]):
+    /// bucketed costs keep the sweep sublinear at O(n·L); per-pair costs
+    /// on the implicit representation fall back to an O(|P|) streamed
+    /// enumeration of the candidate space.
+    pub fn price_weighted(
+        &self,
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        cap: usize,
+        threads: usize,
+        costs: &PairCosts,
+    ) -> (Vec<(usize, f64)>, PairScan) {
+        let scan = costs.scan(self);
+        if matches!(costs, PairCosts::Uniform) {
+            return (self.price(m, eps, excluded, cap, threads), scan);
+        }
+        debug_assert_eq!(m.len(), self.n);
+        debug_assert!(
+            excluded.windows(2).all(|w| w[0] < w[1]),
+            "excluded pair indices must be sorted ascending"
+        );
+        let mut cands = match (&self.pairs, costs) {
+            (Some(list), _) => winner_best_enumerated_weighted(self, list, m, eps, excluded, costs),
+            (None, PairCosts::Bucketed { levels, gaps, weights }) => {
+                self.winner_best_bucketed(m, eps, excluded, threads, *levels, gaps, weights)
+            }
+            (None, _) => self.winner_best_streamed(m, eps, excluded, costs),
+        };
+        cands.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        if cap > 0 && cands.len() > cap {
+            cands.truncate(cap);
+        }
+        (cands, scan)
+    }
+
+    /// The bucketed winner-best scan: costs are constant per
+    /// (winner level, loser level), so within one loser-level bucket the
+    /// violation is a fixed increasing function of the loser margin and
+    /// the bucket's best partner is its max-margin sample (leftmost on
+    /// ties — the smallest canonical index, matching the enumerated
+    /// scan's first-wins rule). One precomputed `(max, leftmost pos)`
+    /// per level replaces the prefix-max array; winners with working-set
+    /// exclusions query the tournament tree per bucket interval.
+    /// O(n·L) after the margin gather, chunked over `threads` exactly
+    /// like the uniform sweep (bit-identical at any thread count).
+    #[allow(clippy::too_many_arguments)]
+    fn winner_best_bucketed(
+        &self,
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        threads: usize,
+        levels: usize,
+        gaps: &[f64],
+        weights: &[f64],
+    ) -> Vec<(usize, f64)> {
+        let n = self.n;
+        if self.total == 0 {
+            return Vec::new();
+        }
+        let mm: Vec<f64> = self.order.iter().map(|&idx| m[idx as usize]).collect();
+        // per-level (max margin, leftmost sorted position)
+        let nl = self.n_levels();
+        debug_assert_eq!(levels, nl, "bucketed cost table does not match the level count");
+        let mut bbest: Vec<(f64, u32)> = vec![(f64::NEG_INFINITY, u32::MAX); nl];
+        for lvl in 0..nl {
+            for pos in self.level_lo[lvl]..self.level_lo[lvl + 1] {
+                if mm[pos] > bbest[lvl].0 {
+                    bbest[lvl] = (mm[pos], pos as u32);
+                }
+            }
+        }
+        let mut excl: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &t in excluded {
+            let i = self.winner_of(t);
+            excl.entry(i).or_default().push(t - self.offset[i]);
+        }
+        let tree = if excl.is_empty() { None } else { Some(MaxTree::build(&mm)) };
+
+        let run = |lo: usize, hi: usize| -> Vec<(usize, f64)> {
+            let mut out = Vec::new();
+            for i in lo..hi {
+                if self.below[i] == 0 {
+                    continue;
+                }
+                let a = self.level_of[i] as usize;
+                let row = a * levels;
+                let mut best: Option<(usize, f64)> = None; // (pos, viol)
+                let ex = excl.get(&i);
+                for lvl in 0..a {
+                    let hit = match ex {
+                        // ascending levels scan ascending position
+                        // ranges, so strict `>` keeps the lowest
+                        // canonical index on violation ties — the same
+                        // tie-break as the streamed per-pair scan
+                        None => {
+                            let (val, pos) = bbest[lvl];
+                            (pos != u32::MAX).then_some((pos as usize, val))
+                        }
+                        Some(ex) => best_excluding_range(
+                            tree.as_ref().expect("tree built"),
+                            self.level_lo[lvl],
+                            self.level_lo[lvl + 1],
+                            ex,
+                        ),
+                    };
+                    if let Some((pos, val)) = hit {
+                        let viol = weights[row + lvl] * (gaps[row + lvl] - (m[i] - val));
+                        let replace = match best {
+                            None => true,
+                            Some((_, bv)) => viol > bv,
+                        };
+                        if replace {
+                            best = Some((pos, viol));
+                        }
+                    }
+                }
+                if let Some((pos, viol)) = best {
+                    if viol > eps {
+                        out.push((self.offset[i] + pos, viol));
+                    }
+                }
+            }
+            out
+        };
+
+        let t = threads.max(1).min(n);
+        if t <= 1 || n < PAR_MIN_SAMPLES {
+            return run(0, n);
+        }
+        let chunk = n.div_ceil(t);
+        let parts: Vec<Vec<(usize, f64)>> = std::thread::scope(|scope| {
+            let run = &run;
+            let mut handles = Vec::with_capacity(t);
+            for c in 0..t {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                handles.push(scope.spawn(move || run(lo, hi)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pair pricing worker panicked"))
+                .collect()
+        });
+        parts.concat()
+    }
+
+    /// The enumeration fallback for per-pair costs on the implicit
+    /// representation: stream every winner's canonical block — O(|P|)
+    /// time, O(1) extra memory, no pair list. Serial by design (and
+    /// therefore trivially thread-count independent); the typed
+    /// [`PairScan::EnumeratedPerPair`] reason tells callers the
+    /// sublinear contract did not apply.
+    fn winner_best_streamed(
+        &self,
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        costs: &PairCosts,
+    ) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let mut ex = excluded.iter().peekable();
+        for i in 0..self.n {
+            let b = self.below[i] as usize;
+            if b == 0 {
+                continue;
+            }
+            let base = self.offset[i];
+            let mut best: Option<(usize, f64)> = None;
+            for r in 0..b {
+                let t = base + r;
+                if ex.peek() == Some(&&t) {
+                    ex.next();
+                    continue;
+                }
+                let k = self.order[r] as usize;
+                let (g, w) = costs.gap_weight_for(self, t, i, k);
+                let viol = w * (g - (m[i] - m[k]));
+                let replace = match best {
+                    None => true,
+                    Some((_, bv)) => viol > bv,
+                };
+                if replace {
+                    best = Some((t, viol));
+                }
+            }
+            if let Some((t, v)) = best {
+                if v > eps {
+                    out.push((t, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total weighted, gapped hinge `Σ_t w_t·max(0, g_t − (m_i − m_k))`
+    /// over ALL candidate pairs. Uniform costs route to [`Self::hinge`]
+    /// (identical arithmetic); bucketed costs on the implicit
+    /// representation aggregate per level — sorted per-level margins
+    /// with suffix sums answer each winner's per-bucket sum
+    /// `w·(S + c·(g − m_i))` over the `c` losers with `m_k > m_i − g` in
+    /// two binary searches, O(n·L·log n) total; per-pair costs stream
+    /// the canonical order in O(|P|).
+    pub fn hinge_weighted(&self, m: &[f64], costs: &PairCosts) -> f64 {
+        debug_assert_eq!(m.len(), self.n);
+        if matches!(costs, PairCosts::Uniform) {
+            return self.hinge(m);
+        }
+        if self.total == 0 {
+            return 0.0;
+        }
+        if let (None, PairCosts::Bucketed { levels, gaps, weights }) = (&self.pairs, costs) {
+            let nl = self.n_levels();
+            debug_assert_eq!(*levels, nl);
+            // per-level sorted margins (ascending) + suffix sums
+            let mut lvl_sorted: Vec<Vec<f64>> = Vec::with_capacity(nl);
+            let mut lvl_suffix: Vec<Vec<f64>> = Vec::with_capacity(nl);
+            for lvl in 0..nl {
+                let mut ms: Vec<f64> = self.order[self.level_lo[lvl]..self.level_lo[lvl + 1]]
+                    .iter()
+                    .map(|&idx| m[idx as usize])
+                    .collect();
+                ms.sort_unstable_by(f64::total_cmp);
+                let mut suf = vec![0.0; ms.len() + 1];
+                for j in (0..ms.len()).rev() {
+                    suf[j] = suf[j + 1] + ms[j];
+                }
+                lvl_sorted.push(ms);
+                lvl_suffix.push(suf);
+            }
+            let mut acc = 0.0;
+            for i in 0..self.n {
+                if self.below[i] == 0 {
+                    continue;
+                }
+                let a = self.level_of[i] as usize;
+                let row = a * nl;
+                for lvl in 0..a {
+                    let (g, w) = (gaps[row + lvl], weights[row + lvl]);
+                    let theta = m[i] - g;
+                    let ms = &lvl_sorted[lvl];
+                    let lo = ms.partition_point(|&v| v <= theta);
+                    if lo < ms.len() {
+                        let c = (ms.len() - lo) as f64;
+                        let s = lvl_suffix[lvl][lo];
+                        acc += w * (s + c * (g - m[i]));
+                    }
+                }
+            }
+            return acc;
+        }
+        // enumerated list, or per-pair costs: one pass over the
+        // canonical order (the list when materialized, streamed when not)
+        let mut acc = 0.0;
+        self.for_each(|t, i, k| {
+            let (g, w) = costs.gap_weight_for(self, t, i, k);
+            acc += w * (g - (m[i] - m[k])).max(0.0);
+        });
+        acc
+    }
+
+    /// The weighted all-ones-dual scatter: at β = 0 every pair's dual is
+    /// its weight, so `v_i = Σ_{(i,k)∈P} w − Σ_{(k,i)∈P} w` — the vector
+    /// behind the weighted λ_max and initial feature scores. Uniform
+    /// costs are [`Self::ones_dual`]; bucketed costs aggregate per level
+    /// in O(n + L²) (identical in both representations); per-pair costs
+    /// stream the canonical order in O(|P|).
+    pub fn weighted_dual(&self, costs: &PairCosts) -> Vec<f64> {
+        match costs {
+            PairCosts::Uniform => self.ones_dual(),
+            PairCosts::Bucketed { levels, weights, .. } => {
+                let nl = self.n_levels();
+                debug_assert_eq!(*levels, nl);
+                let cnt: Vec<f64> = (0..nl)
+                    .map(|l| (self.level_lo[l + 1] - self.level_lo[l]) as f64)
+                    .collect();
+                // per-level win/lose weight totals, then one O(n) scatter
+                let mut win = vec![0.0; nl];
+                let mut lose = vec![0.0; nl];
+                for a in 0..nl {
+                    for b in 0..a {
+                        let w = weights[a * nl + b];
+                        win[a] += w * cnt[b];
+                        lose[b] += w * cnt[a];
+                    }
+                }
+                (0..self.n)
+                    .map(|i| match self.level_of(i) {
+                        Some(l) => win[l] - lose[l],
+                        None => 0.0,
+                    })
+                    .collect()
+            }
+            PairCosts::PerPair { weights, .. } => {
+                let mut v = vec![0.0; self.n];
+                self.for_each(|t, i, k| {
+                    v[i] += weights[t];
+                    v[k] -= weights[t];
+                });
+                v
+            }
+        }
+    }
+}
+
+/// Per-pair gaps and weights for the weighted hinge
+/// `w_t·max(0, g_t − (m_i − m_k))`.
+///
+/// The variant encodes the *structure* of the costs, which decides the
+/// pricing complexity (see [`PairScan`]): `Uniform` is the paper's
+/// `g = w = 1` and routes through the original bitwise-identical code
+/// paths; `Bucketed` holds one `(gap, weight)` per
+/// (winner level, loser level) and keeps pricing sublinear; `PerPair`
+/// is fully general and forces an O(|P|) enumeration. Validate against
+/// the [`PairSet`] with [`PairCosts::validate`] before solving.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PairCosts {
+    /// `g_t = w_t = 1` for every pair — the unweighted problem.
+    Uniform,
+    /// Costs constant per relevance-level pair: entry `a·levels + b`
+    /// holds the (gap, weight) of every pair whose winner sits at level
+    /// `a` and loser at level `b` (levels numbered ascending by `y`;
+    /// only entries with `a > b` are ever read). `levels` must equal
+    /// [`PairSet::n_levels`].
+    Bucketed {
+        /// Number of relevance levels `L` (row stride of the tables).
+        levels: usize,
+        /// `L×L` row-major gap table `g[a][b]`, each finite and ≥ 0.
+        gaps: Vec<f64>,
+        /// `L×L` row-major weight table `w[a][b]`, each finite and > 0.
+        weights: Vec<f64>,
+    },
+    /// One (gap, weight) per candidate pair in canonical index order.
+    PerPair {
+        /// `gaps[t]` for canonical pair `t`, each finite and ≥ 0.
+        gaps: Vec<f64>,
+        /// `weights[t]` for canonical pair `t`, each finite and > 0.
+        weights: Vec<f64>,
+    },
+}
+
+/// The uniform costs as a `'static` borrow target: `&PairCosts::UNIFORM`
+/// promotes to `&'static PairCosts`, so unweighted callers thread costs
+/// through borrowing APIs without owning anything.
+impl PairCosts {
+    /// See the type docs: the unweighted `g = w = 1`.
+    pub const UNIFORM: PairCosts = PairCosts::Uniform;
+
+    /// Whether these are the uniform (unweighted) costs.
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, PairCosts::Uniform)
+    }
+
+    /// Build a bucketed table from a per-level-pair rule
+    /// `f(winner_level, loser_level) -> (gap, weight)` — evaluated only
+    /// on `a > b` (other entries hold the neutral `(1, 1)`).
+    pub fn bucketed_by(
+        pairs: &PairSet,
+        mut f: impl FnMut(usize, usize) -> (f64, f64),
+    ) -> PairCosts {
+        let nl = pairs.n_levels();
+        let mut gaps = vec![1.0; nl * nl];
+        let mut weights = vec![1.0; nl * nl];
+        for a in 0..nl {
+            for b in 0..a {
+                let (g, w) = f(a, b);
+                gaps[a * nl + b] = g;
+                weights[a * nl + b] = w;
+            }
+        }
+        PairCosts::Bucketed { levels: nl, gaps, weights }
+    }
+
+    /// Check shape and value constraints against a pair set: table sizes
+    /// match (`levels²` bucketed, `|P|` per-pair), gaps are finite and
+    /// ≥ 0, weights are finite and > 0 (a zero weight would make every
+    /// violation vanish and the leftmost tie-break meaningless).
+    pub fn validate(&self, pairs: &PairSet) -> Result<(), String> {
+        let check = |gaps: &[f64], weights: &[f64]| -> Result<(), String> {
+            for &g in gaps {
+                if !g.is_finite() || g < 0.0 {
+                    return Err(format!("pair gaps must be finite and >= 0, got {g}"));
+                }
+            }
+            for &w in weights {
+                if !w.is_finite() || w <= 0.0 {
+                    return Err(format!("pair weights must be finite and > 0, got {w}"));
+                }
+            }
+            Ok(())
+        };
+        match self {
+            PairCosts::Uniform => Ok(()),
+            PairCosts::Bucketed { levels, gaps, weights } => {
+                if *levels != pairs.n_levels() {
+                    return Err(format!(
+                        "bucketed costs built for {levels} levels, pair set has {}",
+                        pairs.n_levels()
+                    ));
+                }
+                if gaps.len() != levels * levels || weights.len() != levels * levels {
+                    return Err(format!(
+                        "bucketed tables must be {levels}x{levels} row-major, got {} gaps / {} weights",
+                        gaps.len(),
+                        weights.len()
+                    ));
+                }
+                check(gaps, weights)
+            }
+            PairCosts::PerPair { gaps, weights } => {
+                if gaps.len() != pairs.len() || weights.len() != pairs.len() {
+                    return Err(format!(
+                        "per-pair costs need one entry per candidate pair ({}), got {} gaps / {} weights",
+                        pairs.len(),
+                        gaps.len(),
+                        weights.len()
+                    ));
+                }
+                check(gaps, weights)
+            }
+        }
+    }
+
+    /// The (gap, weight) of canonical pair `t`. O(1) for uniform and
+    /// per-pair costs; bucketed costs pay one [`PairSet::pair`] lookup.
+    pub fn gap_weight(&self, pairs: &PairSet, t: usize) -> (f64, f64) {
+        match self {
+            PairCosts::Uniform => (1.0, 1.0),
+            PairCosts::PerPair { gaps, weights } => (gaps[t], weights[t]),
+            PairCosts::Bucketed { .. } => {
+                let (i, k) = pairs.pair(t);
+                self.gap_weight_for(pairs, t, i, k)
+            }
+        }
+    }
+
+    /// [`Self::gap_weight`] when the caller already knows `(i, k)`.
+    fn gap_weight_for(&self, pairs: &PairSet, t: usize, i: usize, k: usize) -> (f64, f64) {
+        match self {
+            PairCosts::Uniform => (1.0, 1.0),
+            PairCosts::PerPair { gaps, weights } => (gaps[t], weights[t]),
+            PairCosts::Bucketed { levels, gaps, weights } => {
+                let e = pairs.level_of[i] as usize * levels + pairs.level_of[k] as usize;
+                (gaps[e], weights[e])
+            }
+        }
+    }
+
+    /// Which pricing scan these costs run on `pairs` — the typed reason
+    /// surfaced in [`crate::engine::GenStats::pair_scan`].
+    pub fn scan(&self, pairs: &PairSet) -> PairScan {
+        match (self, pairs.is_enumerated()) {
+            (PairCosts::Uniform, _) => PairScan::Uniform,
+            (_, true) => PairScan::EnumeratedList,
+            (PairCosts::Bucketed { .. }, false) => PairScan::Bucketed,
+            (PairCosts::PerPair { .. }, false) => PairScan::EnumeratedPerPair,
+        }
+    }
+}
+
+/// Which pair-pricing scan ran, and why — the typed reason behind the
+/// sublinear-pricing contract of `docs/ranksvm-scaling.md` when gaps and
+/// weights are in play.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairScan {
+    /// Uniform costs: the original prefix-max sweep (implicit) or list
+    /// scan (enumerated).
+    Uniform,
+    /// Level-bucketed costs on the implicit representation: the O(n·L)
+    /// per-bucket sweep — still sublinear in |P|.
+    Bucketed,
+    /// The pair list was already materialized (|P| ≤ the enumeration
+    /// cap), so the weighted scan walks it in O(|P|).
+    EnumeratedList,
+    /// Per-pair costs on the implicit representation: no monotone
+    /// structure to exploit, so pricing streamed the full candidate
+    /// space in O(|P|) — the documented fallback.
+    EnumeratedPerPair,
+}
+
+impl PairScan {
+    /// Stable label for stats, serve responses, and metrics.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PairScan::Uniform => "uniform",
+            PairScan::Bucketed => "bucketed",
+            PairScan::EnumeratedList => "enumerated-list",
+            PairScan::EnumeratedPerPair => "enumerated-per-pair",
+        }
+    }
+}
+
+/// Weighted winner-best scan over the materialized list — the same
+/// running-best pass as [`winner_best_enumerated`] with the violation
+/// generalized to `w_t·(g_t − (m_i − m_k))`. Kept separate so the
+/// uniform path stays byte-for-byte the pre-weighting implementation.
+fn winner_best_enumerated_weighted(
+    pairs: &PairSet,
+    list: &[(u32, u32)],
+    m: &[f64],
+    eps: f64,
+    excluded: &[usize],
+    costs: &PairCosts,
+) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let mut ex = excluded.iter().peekable();
+    let mut cur: Option<(u32, usize, f64)> = None; // (winner, t, viol)
+    for (t, &(i, k)) in list.iter().enumerate() {
+        if ex.peek() == Some(&&t) {
+            ex.next();
+            continue;
+        }
+        let (g, w) = costs.gap_weight_for(pairs, t, i as usize, k as usize);
+        let viol = w * (g - (m[i as usize] - m[k as usize]));
+        match cur {
+            Some((wn, _, bv)) if wn == i => {
+                if viol > bv {
+                    cur = Some((i, t, viol));
+                }
+            }
+            Some((_, bt, bv)) => {
+                if bv > eps {
+                    out.push((bt, bv));
+                }
+                cur = Some((i, t, viol));
+            }
+            None => cur = Some((i, t, viol)),
+        }
+    }
+    if let Some((_, bt, bv)) = cur {
+        if bv > eps {
+            out.push((bt, bv));
+        }
+    }
+    out
 }
 
 /// Winner-best scan over the materialized list: the canonical order is
@@ -558,16 +1169,28 @@ fn winner_best_enumerated(
 /// ascending, all `< b`): the union of at most `|ex| + 1` intervals,
 /// each one tournament-tree query. Leftmost position on value ties.
 fn best_excluding(tree: &MaxTree, b: usize, ex: &[usize]) -> Option<(usize, f64)> {
+    best_excluding_range(tree, 0, b, ex)
+}
+
+/// [`best_excluding`] over an arbitrary window `[lo, hi)` — the bucketed
+/// sweep's per-level interval query (excluded positions outside the
+/// window are skipped, not an error).
+fn best_excluding_range(
+    tree: &MaxTree,
+    lo: usize,
+    hi: usize,
+    ex: &[usize],
+) -> Option<(usize, f64)> {
     let mut best: Option<(usize, f64)> = None;
-    let mut lo = 0usize;
-    for &e in ex {
-        if e >= b {
+    let mut l = lo;
+    for &e in &ex[ex.partition_point(|&e| e < lo)..] {
+        if e >= hi {
             break;
         }
-        take_better(tree, lo, e, &mut best);
-        lo = e + 1;
+        take_better(tree, l, e, &mut best);
+        l = e + 1;
     }
-    take_better(tree, lo, b, &mut best);
+    take_better(tree, l, hi, &mut best);
     best
 }
 
@@ -934,5 +1557,217 @@ mod tests {
         assert_eq!(best_excluding(&tree, 6, &[1, 2]), Some((4, 5.0)));
         assert_eq!(best_excluding(&tree, 3, &[1, 2]), Some((0, 1.0)));
         assert_eq!(best_excluding(&tree, 1, &[0]), None);
+        assert_eq!(best_excluding_range(&tree, 2, 5, &[0, 4]), Some((2, 5.0)));
+        assert_eq!(best_excluding_range(&tree, 3, 4, &[3]), None);
+    }
+
+    // ------------------------------------------------------------------
+    // weighted, gapped costs
+    // ------------------------------------------------------------------
+
+    /// Levels computed independently of PairSet: the rank of y_i among
+    /// the distinct finite response values, ascending.
+    fn brute_levels(y: &[f64]) -> Vec<Option<usize>> {
+        let mut vals: Vec<f64> = y.iter().copied().filter(|v| !v.is_nan()).collect();
+        vals.sort_unstable_by(f64::total_cmp);
+        vals.dedup();
+        y.iter()
+            .map(|v| (!v.is_nan()).then(|| vals.partition_point(|&u| u < *v)))
+            .collect()
+    }
+
+    /// An asymmetric per-level-pair cost rule the weighted tests share.
+    fn rule(a: usize, b: usize) -> (f64, f64) {
+        (0.5 + 0.25 * (a - b) as f64, 1.0 + 0.5 * (b % 3) as f64 + 0.125 * a as f64)
+    }
+
+    /// Brute-force weighted winner-best pricing off the reference
+    /// enumeration, with (gap, weight) from independently derived levels.
+    fn brute_force_price_weighted(
+        y: &[f64],
+        m: &[f64],
+        eps: f64,
+        excluded: &[usize],
+        gw: impl Fn(usize, usize, usize) -> (f64, f64), // (t, lvl_i, lvl_k)
+    ) -> Vec<(usize, f64)> {
+        let list = ranking_pairs(y);
+        let lv = brute_levels(y);
+        let mut best: HashMap<usize, (usize, f64)> = HashMap::new();
+        for (t, &(i, k)) in list.iter().enumerate() {
+            if excluded.binary_search(&t).is_ok() {
+                continue;
+            }
+            let (g, w) = gw(t, lv[i].unwrap(), lv[k].unwrap());
+            let viol = w * (g - (m[i] - m[k]));
+            match best.get(&i) {
+                Some(&(_, bv)) if viol <= bv => {}
+                _ => {
+                    best.insert(i, (t, viol));
+                }
+            }
+        }
+        let mut out: Vec<(usize, f64)> =
+            best.into_values().filter(|&(_, v)| v > eps).collect();
+        out.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out
+    }
+
+    #[test]
+    fn uniform_costs_are_bitwise_the_unweighted_scan() {
+        let (y, m) = tied_instance(50, 5, 71);
+        for mode in [PairMode::Enumerate, PairMode::Implicit] {
+            let ps = PairSet::build(&y, mode);
+            let excluded = ps.spread(9);
+            let (weighted, scan) =
+                ps.price_weighted(&m, 0.1, &excluded, 6, 1, &PairCosts::UNIFORM);
+            assert_eq!(scan, PairScan::Uniform);
+            assert_eq!(weighted, ps.price(&m, 0.1, &excluded, 6, 1), "{mode:?}");
+            assert_eq!(
+                ps.hinge_weighted(&m, &PairCosts::UNIFORM).to_bits(),
+                ps.hinge(&m).to_bits()
+            );
+            assert_eq!(ps.weighted_dual(&PairCosts::UNIFORM), ps.ones_dual());
+        }
+    }
+
+    #[test]
+    fn weighted_price_agrees_across_scans_and_brute_force() {
+        for seed in [81u64, 82, 83] {
+            let (mut y, m) = tied_instance(48, 4 + (seed as usize % 3), seed);
+            y[7] = f64::NAN; // NaN relevance joins no pair
+            let e = PairSet::build(&y, PairMode::Enumerate);
+            let imp = PairSet::build(&y, PairMode::Implicit);
+            if e.is_empty() {
+                continue;
+            }
+            let bucketed = PairCosts::bucketed_by(&e, rule);
+            bucketed.validate(&e).unwrap();
+            // the same costs flattened per pair: exercises both the
+            // per-pair table and the enumeration fallback
+            let mut gaps = vec![0.0; e.len()];
+            let mut weights = vec![0.0; e.len()];
+            e.for_each(|t, i, k| {
+                let (g, w) = bucketed.gap_weight_for(&e, t, i, k);
+                gaps[t] = g;
+                weights[t] = w;
+            });
+            let per_pair = PairCosts::PerPair { gaps, weights };
+            per_pair.validate(&imp).unwrap();
+
+            let mut excluded = e.spread(11);
+            excluded.extend((0..e.len().min(5)).skip(1));
+            excluded.sort_unstable();
+            excluded.dedup();
+            for eps in [0.0, 0.4] {
+                for cap in [0usize, 5] {
+                    let brute = {
+                        let mut b = brute_force_price_weighted(&y, &m, eps, &excluded, |t, a, l| {
+                            let _ = t;
+                            rule(a, l)
+                        });
+                        if cap > 0 && b.len() > cap {
+                            b.truncate(cap);
+                        }
+                        b
+                    };
+                    let (a1, s1) = e.price_weighted(&m, eps, &excluded, cap, 1, &bucketed);
+                    let (a2, s2) = imp.price_weighted(&m, eps, &excluded, cap, 1, &bucketed);
+                    let (a3, s3) = imp.price_weighted(&m, eps, &excluded, cap, 1, &per_pair);
+                    let (a4, s4) = e.price_weighted(&m, eps, &excluded, cap, 1, &per_pair);
+                    assert_eq!(s1, PairScan::EnumeratedList);
+                    assert_eq!(s2, PairScan::Bucketed);
+                    assert_eq!(s3, PairScan::EnumeratedPerPair);
+                    assert_eq!(s4, PairScan::EnumeratedList);
+                    assert_eq!(a1, brute, "enumerated+bucketed seed {seed} eps {eps}");
+                    assert_eq!(a2, brute, "implicit+bucketed seed {seed} eps {eps}");
+                    assert_eq!(a3, brute, "implicit+per-pair seed {seed} eps {eps}");
+                    assert_eq!(a4, brute, "enumerated+per-pair seed {seed} eps {eps}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_sweep_is_thread_independent() {
+        let (y, m) = tied_instance(6000, 12, 91);
+        let ps = PairSet::build(&y, PairMode::Implicit);
+        assert!(ps.n_samples() >= PAR_MIN_SAMPLES);
+        let costs = PairCosts::bucketed_by(&ps, rule);
+        let excluded = ps.spread(40);
+        let (serial, scan) = ps.price_weighted(&m, 0.0, &excluded, 0, 1, &costs);
+        assert_eq!(scan, PairScan::Bucketed);
+        assert!(!serial.is_empty());
+        for t in [2usize, 4, 7] {
+            let (par, _) = ps.price_weighted(&m, 0.0, &excluded, 0, t, &costs);
+            assert_eq!(par, serial, "{t} threads diverged");
+        }
+    }
+
+    #[test]
+    fn weighted_hinge_and_dual_match_the_pair_scatter() {
+        for seed in [95u64, 96] {
+            let (mut y, m) = tied_instance(60, 5, seed);
+            y[3] = f64::NAN;
+            let e = PairSet::build(&y, PairMode::Enumerate);
+            let imp = PairSet::build(&y, PairMode::Implicit);
+            let costs = PairCosts::bucketed_by(&e, rule);
+            let lv = brute_levels(&y);
+            let list = ranking_pairs(&y);
+            let mut want_hinge = 0.0;
+            let mut want_dual = vec![0.0; y.len()];
+            for &(i, k) in &list {
+                let (g, w) = rule(lv[i].unwrap(), lv[k].unwrap());
+                want_hinge += w * (g - (m[i] - m[k])).max(0.0);
+                want_dual[i] += w;
+                want_dual[k] -= w;
+            }
+            for ps in [&e, &imp] {
+                let h = ps.hinge_weighted(&m, &costs);
+                assert!(
+                    (h - want_hinge).abs() <= 1e-9 * want_hinge.abs().max(1.0),
+                    "seed {seed} {}: hinge {h} want {want_hinge}",
+                    ps.mode()
+                );
+                let d = ps.weighted_dual(&costs);
+                for i in 0..y.len() {
+                    assert!(
+                        (d[i] - want_dual[i]).abs() <= 1e-9,
+                        "seed {seed} {}: dual[{i}] {} want {}",
+                        ps.mode(),
+                        d[i],
+                        want_dual[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_costs_validate_rejects_bad_shapes_and_values() {
+        let (y, _) = tied_instance(20, 4, 99);
+        let ps = PairSet::build(&y, PairMode::Enumerate);
+        let nl = ps.n_levels();
+        assert!(PairCosts::UNIFORM.validate(&ps).is_ok());
+        let good = PairCosts::bucketed_by(&ps, |_, _| (1.5, 2.0));
+        assert!(good.validate(&ps).is_ok());
+        let wrong_levels = PairCosts::Bucketed {
+            levels: nl + 1,
+            gaps: vec![1.0; (nl + 1) * (nl + 1)],
+            weights: vec![1.0; (nl + 1) * (nl + 1)],
+        };
+        assert!(wrong_levels.validate(&ps).is_err());
+        let neg_gap = PairCosts::Bucketed {
+            levels: nl,
+            gaps: vec![-1.0; nl * nl],
+            weights: vec![1.0; nl * nl],
+        };
+        assert!(neg_gap.validate(&ps).is_err());
+        let zero_w = PairCosts::PerPair {
+            gaps: vec![1.0; ps.len()],
+            weights: vec![0.0; ps.len()],
+        };
+        assert!(zero_w.validate(&ps).is_err());
+        let short = PairCosts::PerPair { gaps: vec![1.0], weights: vec![1.0] };
+        assert!(short.validate(&ps).is_err());
     }
 }

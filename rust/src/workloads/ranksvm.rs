@@ -36,6 +36,17 @@
 //!   so one [`Pricer`] pass — the chunked parallel `Xᵀv` of
 //!   [`crate::engine::BackendPricer`] — prices all left-out features.
 //!
+//! **Weighted, gapped pairs** (rank2plan parity): with a
+//! [`PairCosts`] the hinge generalizes to
+//! `Σ_t w_t·max(0, g_t − (x_i − x_k)ᵀβ)` — the slack column costs `w_t`
+//! and the margin row's lower bound becomes `g_t`, so the LP shape (and
+//! the exact-path cost decomposition — gaps enter the RHS, not the
+//! cost) is unchanged. Uniform costs (`g = w = 1`) take the original
+//! code paths bitwise; bucketed per-relevance-level costs keep the
+//! implicit pricing sweep sublinear (O(n·L)); arbitrary per-pair costs
+//! fall back to enumeration, surfaced as
+//! [`crate::engine::GenStats::pair_scan`].
+//!
 //! See `docs/ranksvm-scaling.md` for the scaling story.
 
 use std::collections::HashMap;
@@ -46,7 +57,7 @@ use crate::data::Dataset;
 use crate::engine::{BackendPricer, GenEngine, Pricer, RestrictedProblem, Snapshot, WorkingSet};
 use crate::fom::screening::top_k_by_abs;
 use crate::simplex::{LpModel, SimplexSolver, Status, VarId};
-use crate::workloads::pairset::{PairSet, DEFAULT_PAIR_ROWS_PER_ROUND};
+use crate::workloads::pairset::{PairCosts, PairSet, DEFAULT_PAIR_ROWS_PER_ROUND};
 
 /// The reference enumeration of all comparison pairs `(i, k)` with
 /// `y_i > y_k`, in **canonical order**: winners ascending by sample
@@ -68,12 +79,51 @@ pub fn ranking_pairs(y: &[f64]) -> Vec<(usize, usize)> {
     out
 }
 
+/// The weighted/gapped reference enumeration: [`ranking_pairs`] with
+/// each pair's `(gap, weight)` attached, resolved from `costs` **without
+/// touching [`PairSet`]** — levels are re-derived here as the rank of
+/// `y_i` among the distinct finite responses, and per-pair tables are
+/// read at the pair's position in this (canonical-order) enumeration.
+/// The independence is the point: oracle tests compare [`PairSet`]'s
+/// cost resolution against this one. O(n²).
+pub fn ranking_pairs_costed(y: &[f64], costs: &PairCosts) -> Vec<(usize, usize, f64, f64)> {
+    let mut distinct: Vec<f64> = y.iter().copied().filter(|v| !v.is_nan()).collect();
+    distinct.sort_by(f64::total_cmp);
+    distinct.dedup_by(|a, b| a == b);
+    let level = |v: f64| distinct.partition_point(|&d| d < v);
+    ranking_pairs(y)
+        .into_iter()
+        .enumerate()
+        .map(|(t, (i, k))| {
+            let (g, w) = match costs {
+                PairCosts::Uniform => (1.0, 1.0),
+                PairCosts::Bucketed { levels, gaps, weights } => {
+                    let idx = level(y[i]) * levels + level(y[k]);
+                    (gaps[idx], weights[idx])
+                }
+                PairCosts::PerPair { gaps, weights } => (gaps[t], weights[t]),
+            };
+            (i, k, g, w)
+        })
+        .collect()
+}
+
 /// λ above which `β = 0` is optimal: `‖Xᵀv₁‖∞` with `v₁` the all-ones
 /// dual scatter ([`PairSet::ones_dual`] — at `β = 0` every pair's slack
 /// is strictly positive, so complementary slackness forces every dual
 /// to 1). O(np), never O(|P|).
 pub fn lambda_max_rank(ds: &Dataset, pairs: &PairSet) -> f64 {
-    let v = pairs.ones_dual();
+    lambda_max_rank_weighted(ds, pairs, &PairCosts::UNIFORM)
+}
+
+/// Weighted λ_max: at `β = 0` every pair's slack is `g_t > 0`, so every
+/// dual sits at its weight bound `w_t` and β stays zero exactly while
+/// `λ ≥ ‖Xᵀv_w‖∞` with `v_w` the weight scatter
+/// ([`PairSet::weighted_dual`]). Uniform costs reproduce
+/// [`lambda_max_rank`] bitwise. O(np + n·L²), never O(|P|) for
+/// bucketed costs.
+pub fn lambda_max_rank_weighted(ds: &Dataset, pairs: &PairSet, costs: &PairCosts) -> f64 {
+    let v = pairs.weighted_dual(costs);
     let mut q = vec![0.0; ds.p()];
     ds.x.tmatvec(&v, &mut q);
     q.iter().fold(0.0f64, |m, x| m.max(x.abs()))
@@ -81,7 +131,18 @@ pub fn lambda_max_rank(ds: &Dataset, pairs: &PairSet) -> f64 {
 
 /// Initial feature working set: top `k` scores `|q_j|` at `β = 0`.
 pub fn initial_rank_features(ds: &Dataset, pairs: &PairSet, k: usize) -> Vec<usize> {
-    let v = pairs.ones_dual();
+    initial_rank_features_weighted(ds, pairs, &PairCosts::UNIFORM, k)
+}
+
+/// Weighted initial feature working set: top `k` scores `|q_j|` of
+/// `q = Xᵀv_w` at `β = 0` (see [`lambda_max_rank_weighted`]).
+pub fn initial_rank_features_weighted(
+    ds: &Dataset,
+    pairs: &PairSet,
+    costs: &PairCosts,
+    k: usize,
+) -> Vec<usize> {
+    let v = pairs.weighted_dual(costs);
     let mut q = vec![0.0; ds.p()];
     ds.x.tmatvec(&v, &mut q);
     top_k_by_abs(&q, k.min(ds.p()))
@@ -110,6 +171,23 @@ pub fn pairwise_hinge_support(
     pairs.hinge(&m)
 }
 
+/// Weighted pairwise hinge `Σ_t w_t·max(0, g_t − (m_i − m_k))` of a
+/// support-sparse β over ALL candidate pairs (one margin matvec, then
+/// [`PairSet::hinge_weighted`] — O(n·L·log n) for bucketed costs on the
+/// implicit representation). Uniform costs reproduce
+/// [`pairwise_hinge_support`] bitwise.
+pub fn pairwise_hinge_support_weighted(
+    ds: &Dataset,
+    pairs: &PairSet,
+    costs: &PairCosts,
+    cols: &[usize],
+    vals: &[f64],
+) -> f64 {
+    let mut m = vec![0.0; ds.n()];
+    ds.x.matvec_cols(cols, vals, &mut m);
+    pairs.hinge_weighted(&m, costs)
+}
+
 /// Violated-pair budget per pricing round: an explicit
 /// [`GenParams::max_rows_per_round`] wins, otherwise
 /// [`DEFAULT_PAIR_ROWS_PER_ROUND`] keeps a cold large-n solve from
@@ -129,6 +207,9 @@ pub struct RestrictedRank<'p> {
     lambda: f64,
     /// The candidate pair set (the index space of the row channel).
     pairs: &'p PairSet,
+    /// Per-pair `(gap, weight)` costs — [`PairCosts::UNIFORM`] is the
+    /// original unweighted LP, bitwise.
+    costs: &'p PairCosts,
     /// Pair index handled by LP row position r.
     rows_t: Vec<usize>,
     /// pair index → LP row position (absent when t ∉ P′). A map, not a
@@ -154,7 +235,7 @@ pub struct RestrictedRank<'p> {
 
 impl<'p> RestrictedRank<'p> {
     /// Build the restricted model for the given pair / feature working
-    /// sets.
+    /// sets (uniform costs — the original unweighted RankSVM, bitwise).
     pub fn new(
         ds: &Dataset,
         pairs: &'p PairSet,
@@ -162,10 +243,28 @@ impl<'p> RestrictedRank<'p> {
         t_init: &[usize],
         j_init: &[usize],
     ) -> Self {
+        Self::new_weighted(ds, pairs, &PairCosts::UNIFORM, lambda, t_init, j_init)
+    }
+
+    /// Build the restricted model with per-pair `(gap, weight)` costs:
+    /// pair `t`'s slack column costs `w_t` and its margin row reads
+    /// `ξ_t + Σ_j (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ g_t`. The exact-path
+    /// cost decomposition stays valid (gaps land in the RHS; `cfix`
+    /// carries `w_t`).
+    pub fn new_weighted(
+        ds: &Dataset,
+        pairs: &'p PairSet,
+        costs: &'p PairCosts,
+        lambda: f64,
+        t_init: &[usize],
+        j_init: &[usize],
+    ) -> Self {
+        debug_assert!(costs.validate(pairs).is_ok(), "invalid pair costs");
         let mut me = Self {
             solver: SimplexSolver::new(LpModel::new()),
             lambda,
             pairs,
+            costs,
             rows_t: Vec::new(),
             row_pos: HashMap::new(),
             cols_j: Vec::new(),
@@ -193,14 +292,16 @@ impl<'p> RestrictedRank<'p> {
     }
 
     /// Bring pairs into P′: appends the margin rows
-    /// `ξ_ik + Σ_{j∈J} (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ 1`.
+    /// `ξ_ik + Σ_{j∈J} (x_ij − x_kj)(β⁺_j − β⁻_j) ≥ g_t` with the slack
+    /// column costed `w_t` (both 1 under uniform costs).
     pub fn add_pairs(&mut self, ds: &Dataset, ts: &[usize]) {
         for &t in ts {
             if self.row_pos.contains_key(&t) {
                 continue;
             }
             let (i, k) = self.pairs.pair(t);
-            let xi = self.solver.add_col(1.0, 0.0, f64::INFINITY, &[]);
+            let (g, w) = self.costs.gap_weight(self.pairs, t);
+            let xi = self.solver.add_col(w, 0.0, f64::INFINITY, &[]);
             let mut coefs: Vec<(VarId, f64)> = Vec::with_capacity(1 + 2 * self.cols_j.len());
             coefs.push((xi, 1.0));
             for (pos, &j) in self.cols_j.iter().enumerate() {
@@ -210,10 +311,10 @@ impl<'p> RestrictedRank<'p> {
                     coefs.push((self.bm[pos], -d));
                 }
             }
-            self.solver.add_row(1.0, f64::INFINITY, &coefs);
+            self.solver.add_row(g, f64::INFINITY, &coefs);
             self.row_pos.insert(t, self.rows_t.len());
             self.rows_t.push(t);
-            self.cfix.push(1.0);
+            self.cfix.push(w);
             self.cvar.push(0.0);
         }
     }
@@ -331,7 +432,22 @@ impl<'p> RestrictedRank<'p> {
         ds.x.matvec_cols(&cols, &vals, &mut m);
         let mut excluded = self.rows_t.clone();
         excluded.sort_unstable();
-        self.pairs.price(&m, eps, &excluded, self.pair_cap, self.threads)
+        let (cands, _scan) =
+            self.pairs
+                .price_weighted(&m, eps, &excluded, self.pair_cap, self.threads, self.costs);
+        cands
+    }
+
+    /// The pair costs this restricted model was built with.
+    pub fn costs(&self) -> &'p PairCosts {
+        self.costs
+    }
+
+    /// Which pair-scan strategy [`Self::price_pairs`] runs for this
+    /// cost/representation combination (see
+    /// [`crate::workloads::pairset::PairScan`]).
+    pub fn pair_scan(&self) -> &'static str {
+        self.costs.scan(self.pairs).as_str()
     }
 
     /// Price left-out features: scatter the pair duals into
@@ -454,8 +570,13 @@ fn finish(
     lambda: f64,
     stats: GenStats,
 ) -> SvmSolution {
-    let report =
-        crate::coordinator::report::ranksvm_report(ds, pairs, &rr.beta_support(), lambda);
+    let report = crate::coordinator::report::ranksvm_report_weighted(
+        ds,
+        pairs,
+        rr.costs(),
+        &rr.beta_support(),
+        lambda,
+    );
     let mut cols = rr.j_set().to_vec();
     cols.sort_unstable();
     let mut rows = rr.t_set().to_vec();
@@ -478,24 +599,54 @@ pub fn ranksvm_generation(
     j_init: &[usize],
     params: &GenParams,
 ) -> SvmSolution {
+    ranksvm_generation_costed(
+        ds,
+        backend,
+        pairs,
+        &PairCosts::UNIFORM,
+        lambda,
+        t_init,
+        j_init,
+        params,
+    )
+}
+
+/// [`ranksvm_generation`] with per-pair `(gap, weight)` costs: the
+/// restricted LP carries `w_t`-costed slacks and `g_t` margin RHS, the
+/// pricing sweep runs [`PairSet::price_weighted`], and the returned
+/// stats name the scan that ran
+/// ([`crate::engine::GenStats::pair_scan`]). Uniform costs reproduce
+/// [`ranksvm_generation`] bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn ranksvm_generation_costed(
+    ds: &Dataset,
+    backend: &dyn Backend,
+    pairs: &PairSet,
+    costs: &PairCosts,
+    lambda: f64,
+    t_init: &[usize],
+    j_init: &[usize],
+    params: &GenParams,
+) -> SvmSolution {
     let t_init: Vec<usize> = if t_init.is_empty() {
         pairs.spread(params.seed_budget)
     } else {
         t_init.to_vec()
     };
     let j_init: Vec<usize> = if j_init.is_empty() {
-        initial_rank_features(ds, pairs, params.seed_budget)
+        initial_rank_features_weighted(ds, pairs, costs, params.seed_budget)
     } else {
         j_init.to_vec()
     };
     let pricer = BackendPricer::new(backend, params.threads);
-    let mut rr = RestrictedRank::new(ds, pairs, lambda, &t_init, &j_init);
+    let mut rr = RestrictedRank::new_weighted(ds, pairs, costs, lambda, &t_init, &j_init);
     rr.set_threads(params.threads);
     rr.set_pair_cap(pair_rows_cap(params));
     let mut prob = RankProblem::new(rr, ds, &pricer);
     let mut stats = GenEngine::new(params).run(&mut prob);
     stats.rows_added += t_init.len();
     stats.cols_added += j_init.len();
+    stats.pair_scan = Some(costs.scan(pairs).as_str());
     finish(ds, pairs, prob.inner(), lambda, stats)
 }
 

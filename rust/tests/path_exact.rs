@@ -20,8 +20,10 @@ use cutgen::rng::Xoshiro256;
 use cutgen::serve::json::Json;
 use cutgen::serve::ServeState;
 use cutgen::workloads::dantzig::{dantzig_generation, lambda_max_dantzig};
-use cutgen::workloads::pairset::PairSet;
-use cutgen::workloads::ranksvm::{lambda_max_rank, ranksvm_generation};
+use cutgen::workloads::pairset::{PairCosts, PairSet};
+use cutgen::workloads::ranksvm::{
+    lambda_max_rank, lambda_max_rank_weighted, ranksvm_generation, ranksvm_generation_costed,
+};
 
 fn rel_err(a: f64, b: f64) -> f64 {
     (a - b).abs() / b.abs().max(1e-9)
@@ -94,6 +96,49 @@ fn ranksvm_exact_path_matches_direct_solves() {
             "λ = {lambda}: exact-interpolated {interp} vs direct {}",
             direct.objective
         );
+    }
+}
+
+/// Regression pin for the weighted-cost refactor: on this file's
+/// RankSVM fixture, uniform costs (every gap 1, every weight 1) must
+/// reproduce the pre-weighting solutions byte-identically — λ_max,
+/// objective, β, and working sets, at every grid λ the exact-path test
+/// above also visits.
+#[test]
+fn ranksvm_uniform_costs_pin_the_unweighted_fixture_bitwise() {
+    let spec = RankSpec { n: 24, p: 30, k0: 5, rho: 0.1, noise: 0.3, standardize: true };
+    let ds = generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(7));
+    let pairs = PairSet::build(&ds.y, PairMode::Auto);
+    let backend = NativeBackend::new(&ds.x);
+    let params = tight_params();
+    let lmax = lambda_max_rank(&ds, &pairs);
+    assert_eq!(
+        lmax.to_bits(),
+        lambda_max_rank_weighted(&ds, &pairs, &PairCosts::UNIFORM).to_bits()
+    );
+    for &lambda in &geometric_grid(lmax, 8, 0.9) {
+        let plain = ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params);
+        let costed = ranksvm_generation_costed(
+            &ds,
+            &backend,
+            &pairs,
+            &PairCosts::UNIFORM,
+            lambda,
+            &[],
+            &[],
+            &params,
+        );
+        assert_eq!(
+            plain.objective.to_bits(),
+            costed.objective.to_bits(),
+            "objective drifted at λ = {lambda}"
+        );
+        for (j, (a, b)) in plain.beta.iter().zip(&costed.beta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "β[{j}] drifted at λ = {lambda}");
+        }
+        assert_eq!(plain.cols, costed.cols, "column working set drifted at λ = {lambda}");
+        assert_eq!(plain.rows, costed.rows, "pair working set drifted at λ = {lambda}");
+        assert_eq!(costed.stats.pair_scan, Some("uniform"));
     }
 }
 

@@ -1,0 +1,464 @@
+//! Brute-force oracles for the weighted, gapped RankSVM pair channel
+//! and property tests for the dynamic-λ controller.
+//!
+//! The pricing oracle enumerates `ranking_pairs_costed` — the O(n²)
+//! reference that re-derives levels from `y` without touching
+//! [`PairSet`] — and replays the winner-best rule by hand; every scan
+//! the production code can pick (uniform sweep, bucketed O(n·L) sweep,
+//! enumerated-list walk, streamed per-pair fallback) must return the
+//! same violated-pair set under exclusions, caps, ties, NaN relevance,
+//! and non-uniform per-level gaps. The bucketed sweep must additionally
+//! be bit-identical at any thread count. Controller properties: the
+//! resolved λ is monotone in the target ratio, the achieved ratio is
+//! the real full-problem `hinge_w/‖β‖₁` within tolerance, and
+//! unreachable targets surface as the typed bracket-exhausted error.
+//! Uniform costs (g = 1, w = 1) must reproduce the unweighted paths
+//! bitwise. See docs/ranksvm-scaling.md.
+
+use cutgen::backend::NativeBackend;
+use cutgen::baselines::ranksvm_full::{solve_full_ranksvm, solve_full_ranksvm_weighted};
+use cutgen::coordinator::controller::{resolve_lambda_for_ratio, ControllerError};
+use cutgen::coordinator::GenParams;
+use cutgen::data::synthetic::{generate_ranksvm, RankSpec};
+use cutgen::data::Dataset;
+use cutgen::engine::{PairMode, RatioTarget};
+use cutgen::rng::Xoshiro256;
+use cutgen::workloads::pairset::{PairCosts, PairScan, PairSet};
+use cutgen::workloads::ranksvm::{
+    lambda_max_rank, lambda_max_rank_weighted, pairwise_hinge_support_weighted, ranking_pairs,
+    ranking_pairs_costed, ranksvm_generation, ranksvm_generation_costed,
+};
+
+/// Relevance vector with everything the index space must survive:
+/// tied responses (levels with several members), NaN relevance
+/// (participates in no pair), an odd level (0.5), and enough spread
+/// for 5 distinct levels.
+fn gnarly_y() -> Vec<f64> {
+    vec![
+        2.0,
+        0.0,
+        1.0,
+        f64::NAN,
+        1.0,
+        2.0,
+        0.0,
+        3.0,
+        1.0,
+        f64::NAN,
+        3.0,
+        0.5,
+        2.0,
+        1.0,
+    ]
+}
+
+/// The three cost shapes under test, built against `pairs`' level
+/// structure: uniform, a bucketed table with non-uniform per-level
+/// gaps AND weights, and a per-pair table that starts from the
+/// bucketed expansion and then perturbs every third entry so no
+/// bucket structure survives.
+fn cost_suite(y: &[f64], pairs: &PairSet) -> Vec<(&'static str, PairCosts)> {
+    let bucketed = PairCosts::bucketed_by(pairs, |a, b| {
+        (0.5 + 0.35 * (a - b) as f64, 1.0 + 0.5 * a as f64 + 0.25 * b as f64)
+    });
+    bucketed.validate(pairs).expect("bucketed table must validate");
+    let costed = ranking_pairs_costed(y, &bucketed);
+    let mut gaps: Vec<f64> = costed.iter().map(|c| c.2).collect();
+    let mut weights: Vec<f64> = costed.iter().map(|c| c.3).collect();
+    for t in (0..gaps.len()).step_by(3) {
+        gaps[t] += 0.17 * ((t % 5) as f64 + 1.0);
+        weights[t] *= 1.0 + 0.1 * ((t % 7) as f64);
+    }
+    let per_pair = PairCosts::PerPair { gaps, weights };
+    per_pair.validate(pairs).expect("per-pair table must validate");
+    vec![("uniform", PairCosts::UNIFORM), ("bucketed", bucketed), ("per-pair", per_pair)]
+}
+
+/// The O(n²) pricing oracle: replay the winner-best rule over the
+/// reference enumeration — canonical order, first-wins on violation
+/// ties, `viol > eps` threshold, global `(viol desc, t asc)` order,
+/// then the cap. Uses the same `w·(g − (m_i − m_k))` expression as
+/// every production scan, so agreement is exact up to summation-free
+/// arithmetic.
+fn brute_price(
+    y: &[f64],
+    costs: &PairCosts,
+    m: &[f64],
+    eps: f64,
+    excluded: &[usize],
+    cap: usize,
+) -> Vec<(usize, f64)> {
+    let costed = ranking_pairs_costed(y, costs);
+    let mut out: Vec<(usize, f64)> = Vec::new();
+    let mut cur: Option<(usize, usize, f64)> = None; // (winner, t, viol)
+    for (t, &(i, k, g, w)) in costed.iter().enumerate() {
+        if excluded.binary_search(&t).is_ok() {
+            continue;
+        }
+        let viol = w * (g - (m[i] - m[k]));
+        match cur {
+            Some((wn, _, bv)) if wn == i => {
+                if viol > bv {
+                    cur = Some((i, t, viol));
+                }
+            }
+            Some((_, bt, bv)) => {
+                if bv > eps {
+                    out.push((bt, bv));
+                }
+                cur = Some((i, t, viol));
+            }
+            None => cur = Some((i, t, viol)),
+        }
+    }
+    if let Some((_, bt, bv)) = cur {
+        if bv > eps {
+            out.push((bt, bv));
+        }
+    }
+    out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if cap > 0 && out.len() > cap {
+        out.truncate(cap);
+    }
+    out
+}
+
+fn assert_pricing_eq(got: &[(usize, f64)], want: &[(usize, f64)], label: &str) {
+    let gi: Vec<usize> = got.iter().map(|c| c.0).collect();
+    let wi: Vec<usize> = want.iter().map(|c| c.0).collect();
+    assert_eq!(gi, wi, "{label}: violated-pair sets differ");
+    for ((gt, gv), (_, wv)) in got.iter().zip(want) {
+        assert!(
+            (gv - wv).abs() <= 1e-12,
+            "{label}: violation of pair {gt} is {gv}, oracle says {wv}"
+        );
+    }
+}
+
+/// Every scan the dispatcher can pick — uniform sweep, bucketed
+/// sweep, enumerated-list walk, streamed per-pair fallback — agrees
+/// with the O(n²) oracle on the violated-pair set, across eps
+/// thresholds, caps, working-set exclusions, tied/NaN relevance, and
+/// non-uniform per-level gaps. The typed scan reason must name the
+/// strategy that actually applies.
+#[test]
+fn weighted_pricing_matches_the_brute_force_oracle() {
+    let y = gnarly_y();
+    let implicit = PairSet::build(&y, PairMode::Implicit);
+    let enumerated = PairSet::build(&y, PairMode::Enumerate);
+    assert!(!implicit.is_enumerated() && enumerated.is_enumerated());
+    assert_eq!(implicit.len(), ranking_pairs(&y).len(), "canonical spaces must align");
+
+    let mut rng = Xoshiro256::seed_from_u64(0x0A1B2C3D);
+    for trial in 0..6usize {
+        let m: Vec<f64> = y.iter().map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let excluded: Vec<usize> =
+            (0..implicit.len()).filter(|t| (t * 7 + trial) % 5 == 0).collect();
+        for eps in [0.0, 0.25] {
+            for cap in [0usize, 3, 1000] {
+                for (cname, costs) in cost_suite(&y, &implicit) {
+                    let want = brute_price(&y, &costs, &m, eps, &excluded, cap);
+                    let (got_i, scan_i) =
+                        implicit.price_weighted(&m, eps, &excluded, cap, 1, &costs);
+                    let (got_e, scan_e) =
+                        enumerated.price_weighted(&m, eps, &excluded, cap, 1, &costs);
+                    let label =
+                        format!("trial {trial} eps {eps} cap {cap} costs {cname}");
+                    assert_pricing_eq(&got_i, &want, &format!("{label} implicit"));
+                    assert_pricing_eq(&got_e, &want, &format!("{label} enumerated"));
+                    let want_scan_i = match &costs {
+                        PairCosts::Uniform => PairScan::Uniform,
+                        PairCosts::Bucketed { .. } => PairScan::Bucketed,
+                        PairCosts::PerPair { .. } => PairScan::EnumeratedPerPair,
+                    };
+                    assert_eq!(scan_i, want_scan_i, "{label}: implicit scan reason");
+                    let want_scan_e = if costs.is_uniform() {
+                        PairScan::Uniform
+                    } else {
+                        PairScan::EnumeratedList
+                    };
+                    assert_eq!(scan_e, want_scan_e, "{label}: enumerated scan reason");
+                }
+            }
+        }
+    }
+}
+
+/// The bucketed O(n·L) sweep chunks winners over worker threads; the
+/// per-winner result must not depend on the chunking. n is pushed past
+/// the serial cutoff so threads > 1 genuinely split the scan, and the
+/// comparison is bitwise (`to_bits`), not a tolerance.
+#[test]
+fn bucketed_sweep_is_bitwise_identical_across_thread_counts() {
+    let n = 5000usize;
+    let y: Vec<f64> = (0..n).map(|i| (i % 6) as f64).collect();
+    let ps = PairSet::build(&y, PairMode::Implicit);
+    let costs = PairCosts::bucketed_by(&ps, |a, b| {
+        (1.0 + 0.5 * (a - b) as f64, 1.0 + 0.25 * b as f64)
+    });
+    costs.validate(&ps).expect("table must validate");
+    let mut rng = Xoshiro256::seed_from_u64(0xFEED);
+    let m: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let excluded: Vec<usize> = (0..ps.len()).step_by(9973).collect();
+    let (base, scan) = ps.price_weighted(&m, 1e-6, &excluded, 64, 1, &costs);
+    assert_eq!(scan, PairScan::Bucketed);
+    assert!(!base.is_empty(), "the scan must surface violated pairs");
+    for threads in [2usize, 4] {
+        let (got, _) = ps.price_weighted(&m, 1e-6, &excluded, 64, threads, &costs);
+        assert_eq!(got.len(), base.len(), "threads {threads}: candidate count");
+        for ((gt, gv), (bt, bv)) in got.iter().zip(&base) {
+            assert_eq!(gt, bt, "threads {threads}: pair index drifted");
+            assert_eq!(
+                gv.to_bits(),
+                bv.to_bits(),
+                "threads {threads}: violation of pair {gt} not bitwise stable"
+            );
+        }
+    }
+}
+
+/// The aggregate channels agree with the reference enumeration:
+/// `hinge_weighted` with a brute-force weighted hinge sum,
+/// `weighted_dual` with the brute-force `±w_t` scatter — on both
+/// representations, all three cost shapes.
+#[test]
+fn weighted_hinge_and_dual_match_the_reference_enumeration() {
+    let y = gnarly_y();
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED);
+    let m: Vec<f64> = y.iter().map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+    for mode in [PairMode::Implicit, PairMode::Enumerate] {
+        let ps = PairSet::build(&y, mode);
+        for (cname, costs) in cost_suite(&y, &ps) {
+            let costed = ranking_pairs_costed(&y, &costs);
+            let want_hinge: f64 =
+                costed.iter().map(|&(i, k, g, w)| w * (g - (m[i] - m[k])).max(0.0)).sum();
+            let got_hinge = ps.hinge_weighted(&m, &costs);
+            assert!(
+                (got_hinge - want_hinge).abs() <= 1e-9 * want_hinge.abs().max(1.0),
+                "{mode:?} {cname}: hinge {got_hinge} vs oracle {want_hinge}"
+            );
+            let mut want_dual = vec![0.0; y.len()];
+            for &(i, k, _, w) in &costed {
+                want_dual[i] += w;
+                want_dual[k] -= w;
+            }
+            let got_dual = ps.weighted_dual(&costs);
+            for (s, (g, w)) in got_dual.iter().zip(&want_dual).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-9,
+                    "{mode:?} {cname}: dual scatter at sample {s}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+fn rank_fixture(n: usize, p: usize, seed: u64) -> Dataset {
+    let spec = RankSpec { n, p, k0: 4.min(p), rho: 0.1, noise: 0.3, standardize: true };
+    generate_ranksvm(&spec, &mut Xoshiro256::seed_from_u64(seed))
+}
+
+/// Uniform costs ARE the unweighted problem: λ_max, pricing, hinge,
+/// generation, and the full LP all reproduce their unweighted
+/// counterparts bitwise when every gap is 1 and every weight is 1.
+#[test]
+fn uniform_costs_reproduce_the_unweighted_paths_bitwise() {
+    let ds = rank_fixture(22, 24, 7);
+    let pairs = PairSet::build(&ds.y, PairMode::Auto);
+    let backend = NativeBackend::new(&ds.x);
+    let params = GenParams { eps: 1e-8, ..Default::default() };
+
+    let lmax = lambda_max_rank(&ds, &pairs);
+    assert_eq!(
+        lmax.to_bits(),
+        lambda_max_rank_weighted(&ds, &pairs, &PairCosts::UNIFORM).to_bits(),
+        "weighted λ_max must equal the unweighted one bitwise"
+    );
+
+    let mut rng = Xoshiro256::seed_from_u64(0xCAFE);
+    let m: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
+    let plain = pairs.price(&m, 1e-6, &[], 16, 1);
+    let (weighted, scan) = pairs.price_weighted(&m, 1e-6, &[], 16, 1, &PairCosts::UNIFORM);
+    assert_eq!(scan, PairScan::Uniform);
+    assert_eq!(plain.len(), weighted.len());
+    for ((pt, pv), (wt, wv)) in plain.iter().zip(&weighted) {
+        assert_eq!(pt, wt);
+        assert_eq!(pv.to_bits(), wv.to_bits(), "uniform pricing must be bitwise identical");
+    }
+    assert_eq!(
+        pairs.hinge(&m).to_bits(),
+        pairs.hinge_weighted(&m, &PairCosts::UNIFORM).to_bits(),
+        "uniform hinge must be bitwise identical"
+    );
+
+    for frac in [0.5, 0.1] {
+        let lambda = frac * lmax;
+        let a = ranksvm_generation(&ds, &backend, &pairs, lambda, &[], &[], &params);
+        let b = ranksvm_generation_costed(
+            &ds,
+            &backend,
+            &pairs,
+            &PairCosts::UNIFORM,
+            lambda,
+            &[],
+            &[],
+            &params,
+        );
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "objective at λ = {lambda}");
+        assert_eq!(a.beta.len(), b.beta.len());
+        for (j, (x, y)) in a.beta.iter().zip(&b.beta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "β[{j}] at λ = {lambda}");
+        }
+        assert_eq!(a.cols, b.cols);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(b.stats.pair_scan, Some("uniform"));
+    }
+
+    let list = ranking_pairs(&ds.y);
+    let costed: Vec<(usize, usize, f64, f64)> =
+        list.iter().map(|&(i, k)| (i, k, 1.0, 1.0)).collect();
+    let fa = solve_full_ranksvm(&ds, &list, 0.3 * lmax);
+    let fb = solve_full_ranksvm_weighted(&ds, &costed, 0.3 * lmax);
+    assert_eq!(fa.objective.to_bits(), fb.objective.to_bits(), "full-LP objective");
+    for (j, (x, y)) in fa.beta.iter().zip(&fb.beta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "full-LP β[{j}]");
+    }
+}
+
+/// Weighted/gapped generation is checked against an independent
+/// construction: the full weighted LP over the reference enumeration.
+/// Both representations of the pair channel (enumerated list walk,
+/// implicit bucketed sweep) must land on the full LP's objective.
+#[test]
+fn weighted_generation_agrees_with_the_weighted_full_lp() {
+    let ds = rank_fixture(18, 20, 19);
+    let enumerated = PairSet::build(&ds.y, PairMode::Enumerate);
+    let implicit = PairSet::build(&ds.y, PairMode::Implicit);
+    let backend = NativeBackend::new(&ds.x);
+    let params = GenParams { eps: 1e-8, ..Default::default() };
+    let costs = PairCosts::bucketed_by(&enumerated, |a, b| {
+        (1.0 + 0.4 * (a - b - 1) as f64, 1.0 + 0.3 * b as f64)
+    });
+    costs.validate(&enumerated).expect("table must validate");
+    let lmaxw = lambda_max_rank_weighted(&ds, &enumerated, &costs);
+    let reference = ranking_pairs_costed(&ds.y, &costs);
+    for frac in [0.4, 0.15] {
+        let lambda = frac * lmaxw;
+        let full = solve_full_ranksvm_weighted(&ds, &reference, lambda);
+        for (ps, want_scan) in [(&enumerated, "enumerated-list"), (&implicit, "bucketed")] {
+            let sol =
+                ranksvm_generation_costed(&ds, &backend, ps, &costs, lambda, &[], &[], &params);
+            assert_eq!(sol.stats.pair_scan, Some(want_scan));
+            let rel = (sol.objective - full.objective).abs() / full.objective.abs().max(1e-9);
+            assert!(
+                rel <= 1e-6,
+                "{want_scan} at λ = {lambda}: generation {} vs full LP {}",
+                sol.objective,
+                full.objective
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// controller properties
+// ---------------------------------------------------------------------------
+
+/// Over an increasing ladder of target ratios the resolved λ is
+/// non-decreasing (more slack per unit of ‖β‖₁ needs more
+/// regularization), and every achieved ratio really is the
+/// full-problem `hinge_w/‖β‖₁` of the returned solution, within
+/// tolerance of the target.
+#[test]
+fn controller_lambda_is_monotone_and_ratio_is_the_real_one() {
+    let ds = rank_fixture(20, 16, 44);
+    let pairs = PairSet::build(&ds.y, PairMode::Auto);
+    let backend = NativeBackend::new(&ds.x);
+    let params = GenParams { eps: 1e-8, ..Default::default() };
+    let costs = PairCosts::bucketed_by(&pairs, |a, b| (1.0 + 0.3 * (a - b) as f64, 1.25));
+    costs.validate(&pairs).expect("table must validate");
+
+    let mut resolved: Vec<(f64, f64)> = Vec::new(); // (target, λ)
+    for ratio in [0.5, 2.0, 8.0] {
+        let target = RatioTarget { ratio, tol: 0.1, ..Default::default() };
+        let out = match resolve_lambda_for_ratio(
+            &ds, &backend, &pairs, &costs, &target, &params, None,
+        ) {
+            Ok(out) => out,
+            // a target sitting on a support-change discontinuity of
+            // r(λ) may exhaust the bracket — that is the typed escape,
+            // not a landing, and the λ-monotonicity claim skips it
+            Err(ControllerError::BracketExhausted { achieved, solves, .. }) => {
+                assert!(solves >= 1 && achieved.is_finite());
+                continue;
+            }
+            Err(other) => panic!("target {ratio}: unexpected error {other}"),
+        };
+        assert!(
+            (out.achieved_ratio - ratio).abs() <= 0.1 * ratio + 1e-12,
+            "target {ratio}: achieved {}",
+            out.achieved_ratio
+        );
+        assert!(out.lambda > 0.0 && out.lambda <= out.lambda_max);
+        assert!(out.solves >= 1 && out.solves <= target.max_solves);
+        assert_eq!(out.total.pair_scan, Some("enumerated-list"));
+
+        // the achieved ratio is recomputable from the returned β
+        let cols: Vec<usize> = (0..out.solution.beta.len())
+            .filter(|&j| out.solution.beta[j] != 0.0)
+            .collect();
+        let vals: Vec<f64> = cols.iter().map(|&j| out.solution.beta[j]).collect();
+        let hinge = pairwise_hinge_support_weighted(&ds, &pairs, &costs, &cols, &vals);
+        let l1: f64 = vals.iter().map(|v| v.abs()).sum();
+        assert!(l1 > 0.0, "target {ratio}: a within-tolerance solve cannot have β = 0");
+        let recomputed = hinge / l1;
+        assert!(
+            (recomputed - out.achieved_ratio).abs() <= 1e-6 * out.achieved_ratio.max(1.0),
+            "target {ratio}: reported {} but β gives {recomputed}",
+            out.achieved_ratio
+        );
+        resolved.push((ratio, out.lambda));
+    }
+    assert!(
+        resolved.len() >= 2,
+        "at least two targets on the ladder must land: {resolved:?}"
+    );
+    for w in resolved.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1,
+            "λ must be monotone in the target: {:?} then {:?}",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+/// An unreachable target is a typed error carrying the closest probe —
+/// never a silent clamp — and its Display names the exhaustion.
+#[test]
+fn controller_types_the_bracket_exhausted_escape() {
+    let ds = rank_fixture(20, 16, 44);
+    let pairs = PairSet::build(&ds.y, PairMode::Auto);
+    let backend = NativeBackend::new(&ds.x);
+    let params = GenParams::default();
+    let target = RatioTarget { ratio: 1e-9, tol: 0.05, lo_frac: 0.9, ..Default::default() };
+    let err = resolve_lambda_for_ratio(
+        &ds,
+        &backend,
+        &pairs,
+        &PairCosts::UNIFORM,
+        &target,
+        &params,
+        None,
+    )
+    .expect_err("a target far below the bracket must be a typed error");
+    match &err {
+        ControllerError::BracketExhausted { target: t, achieved, lambda, solves } => {
+            assert_eq!(*t, 1e-9);
+            assert!(*achieved > *t, "closest probe {achieved} must overshoot");
+            assert!(*lambda > 0.0 && *solves >= 1);
+        }
+        other => panic!("expected BracketExhausted, got {other:?}"),
+    }
+    assert!(format!("{err}").contains("bracket exhausted"));
+}

@@ -706,3 +706,119 @@ fn tcp_transport_session_and_shutdown() {
         server.join().unwrap().unwrap();
     });
 }
+
+/// The dynamic-λ controller over the protocol: a `"target_ratio"` solve
+/// resolves λ itself, reports the controller bookkeeping, and caches the
+/// converged working set under the **resolved** λ — where a later
+/// fixed-λ request finds it warm.
+#[test]
+fn target_ratio_resolves_lambda_and_caches_at_it() {
+    let state = ServeState::new(64);
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"r","synthetic":{"kind":"l1","n":30,"p":40,"seed":5}}"#,
+    ))
+    .unwrap());
+    let resp = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"r","workload":"ranksvm","target_ratio":2.0,"ratio_tol":0.25,"eps":1e-6}"#,
+    ))
+    .unwrap();
+    assert_ok(&resp);
+    let lambda = get_f64(&resp, "lambda");
+    assert!(lambda > 0.0 && lambda < get_f64(&resp, "lambda_max"));
+    assert_eq!(resp.get("seeded_by").and_then(Json::as_str), Some("controller"));
+    let achieved = get_f64(&resp, "achieved_ratio");
+    assert!(
+        (achieved - 2.0).abs() <= 0.25 * 2.0,
+        "achieved ratio {achieved} outside tolerance of target 2.0"
+    );
+    assert!(get_usize(&resp, "controller_solves") >= 1);
+    assert_eq!(resp.get("pair_scan").and_then(Json::as_str), Some("uniform"));
+    assert!(!get_bool(&resp, "warm"));
+    // a fixed-λ solve at the resolved λ must hit the controller's snapshot
+    let warm = Json::parse(&state.handle_line(&format!(
+        r#"{{"op":"solve","dataset":"r","workload":"ranksvm","lambda":{lambda},"eps":1e-6}}"#
+    )))
+    .unwrap();
+    assert_ok(&warm);
+    assert!(get_bool(&warm, "warm"), "cache must be keyed on the resolved λ: {warm}");
+    let wo = get_f64(&warm, "objective");
+    let co = get_f64(&resp, "objective");
+    assert!((wo - co).abs() / co.max(1e-9) <= 1e-6, "warm {wo} vs controller {co}");
+
+    // misuse errors are typed and do not crash the session
+    let bad_wl = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"r","workload":"l1svm","target_ratio":2.0}"#,
+    ))
+    .unwrap();
+    assert!(!get_bool(&bad_wl, "ok"), "target_ratio is ranksvm-only: {bad_wl}");
+    let both = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"r","workload":"ranksvm","target_ratio":2.0,"lambda":0.5}"#,
+    ))
+    .unwrap();
+    assert!(!get_bool(&both, "ok"), "lambda and target_ratio conflict: {both}");
+    let unreachable = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"r","workload":"ranksvm","target_ratio":1e-12}"#,
+    ))
+    .unwrap();
+    assert!(!get_bool(&unreachable, "ok"));
+    let msg = unreachable.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("bracket exhausted"), "typed exhaustion reason, got {msg:?}");
+
+    // batch items may carry target_ratio too
+    let batch = Json::parse(&state.handle_line(
+        r#"{"op":"batch","dataset":"r","requests":[{"workload":"ranksvm","target_ratio":2.0,"ratio_tol":0.5},{"workload":"ranksvm","lambda_frac":0.05}]}"#,
+    ))
+    .unwrap();
+    assert_ok(&batch);
+    let results = batch.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in results {
+        assert_ok(r);
+    }
+    assert!(results[0].get("achieved_ratio").is_some());
+}
+
+/// The `update` op cannot re-key pair-indexed RankSVM snapshots (their
+/// rows address the parent's pair enumeration); it must say so
+/// structurally instead of silently cold-solving.
+#[test]
+fn update_reports_pair_indexed_snapshots_skipped() {
+    let state = ServeState::new(64);
+    for line in [
+        r#"{"op":"register","name":"p","synthetic":{"kind":"l1","n":24,"p":30,"seed":9}}"#,
+        r#"{"op":"solve","dataset":"p","workload":"l1svm","lambda_frac":0.05}"#,
+        r#"{"op":"solve","dataset":"p","workload":"ranksvm","lambda_frac":0.05}"#,
+    ] {
+        assert_ok(&Json::parse(&state.handle_line(line)).unwrap());
+    }
+    let upd = Json::parse(&state.handle_line(
+        r#"{"op":"update","dataset":"p","name":"p2","retire":[0,1]}"#,
+    ))
+    .unwrap();
+    assert_ok(&upd);
+    assert!(get_usize(&upd, "cache_translated") >= 1, "feature-indexed snapshots carry over");
+    assert_eq!(
+        upd.get("snapshot_skipped").and_then(Json::as_str),
+        Some("pair-indexed"),
+        "skipped ranksvm snapshots must be reported: {upd}"
+    );
+    assert!(get_usize(&upd, "snapshot_skipped_count") >= 1);
+    // the child really does start cold on the pair workload
+    let child = Json::parse(&state.handle_line(
+        r#"{"op":"solve","dataset":"p2","workload":"ranksvm","lambda_frac":0.05}"#,
+    ))
+    .unwrap();
+    assert_ok(&child);
+    assert!(!get_bool(&child, "warm"), "pair snapshots must not leak to the child: {child}");
+    // an update whose parent has no ranksvm snapshots omits the field
+    assert_ok(&Json::parse(&state.handle_line(
+        r#"{"op":"register","name":"q","synthetic":{"kind":"l1","n":20,"p":20,"seed":10}}"#,
+    ))
+    .unwrap());
+    let upd2 = Json::parse(&state.handle_line(
+        r#"{"op":"update","dataset":"q","name":"q2","retire":[0]}"#,
+    ))
+    .unwrap();
+    assert_ok(&upd2);
+    assert!(upd2.get("snapshot_skipped").is_none(), "no skip to report: {upd2}");
+}
